@@ -1,0 +1,72 @@
+//! A compact version of the paper's §4.1/§4.2 study on one model: sweep
+//! K2 ∈ {8,16,32} (fig 1/2 axis), then K1 ∈ {4,8} and S ∈ {2,4}
+//! (fig 3/4 axes) on cifar-sim, printing the orderings the paper reports.
+//!
+//!     cargo run --release --example cifar_sim_sweep [--backend xla|native]
+//!         [--model resnet18_sim] [--epochs N]
+
+use anyhow::Result;
+
+use hier_avg::config::{BackendKind, RunConfig};
+use hier_avg::driver;
+use hier_avg::metrics::RunRecord;
+use hier_avg::optimizer::LrSchedule;
+use hier_avg::util::cli::Args;
+
+fn cfg_for(model: &str, backend: BackendKind, epochs: usize, p: usize, s: usize, k1: u64, k2: u64) -> RunConfig {
+    let mut cfg = RunConfig::defaults(model);
+    cfg.backend = backend;
+    cfg.p = p;
+    cfg.s = s;
+    cfg.k1 = k1;
+    cfg.k2 = k2;
+    cfg.epochs = epochs;
+    cfg.train_n = 64 * p * 16; // 64 steps/epoch
+    cfg.test_n = 1024;
+    cfg.lr = LrSchedule::StepDecay { initial: 0.1, milestones: vec![(epochs * 3 / 4, 0.01)] };
+    cfg
+}
+
+fn tail_loss(r: &RunRecord) -> f64 {
+    let n = r.epochs.len();
+    let k = (n / 4).max(1);
+    r.epochs[n - k..].iter().map(|e| e.train_loss).sum::<f64>() / k as f64
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let model = args.get_or("model", "resnet18_sim").to_string();
+    let backend = BackendKind::parse(args.get_or("backend", "native"))?;
+    let epochs: usize = args.parse_or("epochs", 16)?;
+
+    println!("== K2 sweep (P=16, K1=4, S=4) on {model} ==");
+    for k2 in [8u64, 16, 32] {
+        let cfg = cfg_for(&model, backend, epochs, 16, 4, 4, k2);
+        let rec = driver::run(&cfg)?;
+        println!(
+            "  K2={k2:<3} tail_train_loss {:.4}  final_test_acc {:.4}  best {:.4}  global_reds {}",
+            tail_loss(&rec),
+            rec.final_test_acc(),
+            rec.best_test_acc(),
+            rec.comm.global_reductions
+        );
+    }
+
+    println!("== K1 sweep (P=16, K2=32, S=4) ==");
+    for k1 in [4u64, 8] {
+        let cfg = cfg_for(&model, backend, epochs, 16, 4, k1, 32);
+        let rec = driver::run(&cfg)?;
+        println!("  K1={k1:<3} tail_train_loss {:.4}", tail_loss(&rec));
+    }
+
+    println!("== S sweep (P=16, K2=32, K1=4) ==");
+    for s in [2usize, 4] {
+        let cfg = cfg_for(&model, backend, epochs, 16, s, 4, 32);
+        let rec = driver::run(&cfg)?;
+        println!("  S={s:<3}  tail_train_loss {:.4}", tail_loss(&rec));
+    }
+
+    println!("\npaper expectations: K2 larger is not worse (often better on test);");
+    println!("K1=4 < K1=8 on training loss; S=4 < S=2 on training loss.");
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Table-1 style head-to-head: K-AVG at its tuned K vs Hier-AVG at
+//! K2 = 2K with local averaging, at equal data budgets — accuracy AND the
+//! modelled communication bill (§3.5: trade local for global reductions).
+//!
+//!     cargo run --release --example kavg_vs_hier [--p 16] [--k 8]
+//!         [--backend xla|native] [--epochs N]
+
+use anyhow::Result;
+
+use hier_avg::config::{BackendKind, RunConfig};
+use hier_avg::driver;
+use hier_avg::optimizer::LrSchedule;
+use hier_avg::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let p: usize = args.parse_or("p", 16)?;
+    let k: u64 = args.parse_or("k", 8)?;
+    let backend = BackendKind::parse(args.get_or("backend", "native"))?;
+    let epochs: usize = args.parse_or("epochs", 16)?;
+
+    let mk = |s: usize, k1: u64, k2: u64| {
+        let mut cfg = RunConfig::defaults("resnet18_sim");
+        cfg.backend = backend;
+        cfg.p = p;
+        cfg.s = s;
+        cfg.k1 = k1;
+        cfg.k2 = k2;
+        cfg.epochs = epochs;
+        cfg.train_n = 64 * p * 16;
+        cfg.test_n = 1024;
+        cfg.lr =
+            LrSchedule::StepDecay { initial: 0.1, milestones: vec![(epochs * 3 / 4, 0.01)] };
+        cfg
+    };
+
+    println!("K-AVG(K={k}) vs Hier-AVG(K2={}, K1∈{{1,{}}}, S=4), P={p}", 2 * k, k / 2);
+    println!(
+        "{:<26} {:>10} {:>10} {:>12} {:>12} {:>14}",
+        "run", "test_acc", "best_acc", "glob_reds", "loc_reds", "comm_model_s"
+    );
+    let kavg = driver::run(&mk(1, k, k))?;
+    let rows: Vec<(String, RunCfgResult)> = vec![
+        ("K-AVG".into(), summarize(&kavg)),
+        ("Hier-AVG K1=1".into(), summarize(&driver::run(&mk(4, 1, 2 * k))?)),
+        (format!("Hier-AVG K1={}", (k / 2).max(1)), summarize(&driver::run(&mk(4, (k / 2).max(1), 2 * k))?)),
+    ];
+    for (name, r) in &rows {
+        println!(
+            "{:<26} {:>10.4} {:>10.4} {:>12} {:>12} {:>14.4}",
+            name, r.acc, r.best, r.glob, r.loc, r.comm_s
+        );
+    }
+    let base = &rows[0].1;
+    for (name, r) in &rows[1..] {
+        println!(
+            "{name}: {:.1}% of K-AVG's global reductions, {:.2}x modelled comm speedup, acc delta {:+.4}",
+            100.0 * r.glob as f64 / base.glob as f64,
+            base.comm_s / r.comm_s,
+            r.acc - base.acc
+        );
+    }
+    Ok(())
+}
+
+struct RunCfgResult {
+    acc: f64,
+    best: f64,
+    glob: u64,
+    loc: u64,
+    comm_s: f64,
+}
+
+fn summarize(rec: &hier_avg::metrics::RunRecord) -> RunCfgResult {
+    RunCfgResult {
+        acc: rec.final_test_acc(),
+        best: rec.best_test_acc(),
+        glob: rec.comm.global_reductions,
+        loc: rec.comm.local_reductions,
+        comm_s: rec.comm.total_seconds(),
+    }
+}

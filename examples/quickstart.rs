@@ -1,0 +1,55 @@
+//! Quickstart: train a small classifier with Hier-AVG through the full
+//! three-layer stack (Pallas kernel -> JAX graph -> HLO artifact -> PJRT).
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Falls back to the native backend when artifacts are not built.
+
+use hier_avg::config::{BackendKind, RunConfig};
+use hier_avg::driver;
+use hier_avg::optimizer::LrSchedule;
+use hier_avg::runtime::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    // Hier-AVG with P=4 learners in clusters of S=2: local averaging every
+    // K1=2 steps, global reduction every K2=8.
+    let mut cfg = RunConfig::defaults("quickstart");
+    cfg.p = 4;
+    cfg.s = 2;
+    cfg.k1 = 2;
+    cfg.k2 = 8;
+    cfg.epochs = 5;
+    cfg.train_n = 4096;
+    cfg.test_n = 512;
+    cfg.lr = LrSchedule::Constant(0.1);
+    // A gentle two-mode mixture so the quickstart converges in seconds.
+    cfg.subclusters = 2;
+    cfg.label_noise = 0.0;
+    cfg.backend = if Manifest::load_default().is_ok() {
+        BackendKind::Xla
+    } else {
+        eprintln!("artifacts/ not built; using the native backend (run `make artifacts`)");
+        BackendKind::Native
+    };
+
+    println!(
+        "Hier-AVG quickstart: P={} S={} K1={} K2={} backend={:?}",
+        cfg.p, cfg.s, cfg.k1, cfg.k2, cfg.backend
+    );
+    let rec = driver::run(&cfg)?;
+    for e in &rec.epochs {
+        println!(
+            "epoch {:>2}  train_loss {:.4}  test_acc {:.4}",
+            e.epoch, e.train_loss, e.test_acc
+        );
+    }
+    println!(
+        "\n{} steps; {} global + {} local reductions; modelled comm {:.2} ms",
+        rec.total_steps,
+        rec.comm.global_reductions,
+        rec.comm.local_reductions,
+        rec.comm.total_seconds() * 1e3,
+    );
+    println!("final test accuracy: {:.2}%", rec.final_test_acc() * 100.0);
+    Ok(())
+}

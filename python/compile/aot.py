@@ -1,0 +1,189 @@
+"""AOT lowering driver: JAX graphs -> artifacts/ for the Rust runtime.
+
+Python runs ONCE, here; it is never on the training path.  For every model
+in the registry this script emits:
+
+  <name>.train.p<P>.hlo.txt   train step (grads), stacked over P learners
+  <name>.eval.hlo.txt         eval step (sum_loss, ncorrect), single copy
+  <name>.init.bin             flat little-endian f32 initial parameters
+  avg_s<S>.hlo.txt            Pallas group-average reduction artifacts
+  manifest.json               shapes / layouts / file map for the Rust side
+
+The interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` crate binds) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly.  Lowering goes stablehlo -> XlaComputation with return_tuple=True;
+the Rust side unwraps with `to_tuple()`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import hier_avg, sgd_update
+
+AVG_GROUP_SIZES = (2, 4, 8)
+FORMAT_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)", flush=True)
+
+
+def lower_model(spec, out_dir: str, entry: dict) -> None:
+    params = M.init_params(spec)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    named = M.param_leaves_with_paths(params)
+    assert len(named) == len(leaves)
+
+    # Parameter layout: canonical tree order, contiguous in the flat buffer.
+    layout, offset = [], 0
+    for name, leaf in named:
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        layout.append(
+            {"name": name, "shape": [int(d) for d in leaf.shape],
+             "offset": offset, "size": size}
+        )
+        offset += size
+    entry["params"] = layout
+    entry["n_params"] = offset
+
+    # Initial parameters as one flat f32 blob (every learner starts from the
+    # same synchronized point, per Algorithm 1 line 1).
+    flat = np.concatenate([np.asarray(l, np.float32).reshape(-1) for l in leaves])
+    init_path = os.path.join(out_dir, f"{spec.name}.init.bin")
+    flat.astype("<f4").tofile(init_path)
+    entry["init"] = os.path.basename(init_path)
+    entry["init_sha256"] = hashlib.sha256(flat.tobytes()).hexdigest()
+    print(f"  wrote {init_path} ({flat.size} f32)", flush=True)
+
+    # Train steps, one per stacked-P variant.
+    entry["train"] = {}
+    bx, by = M.batch_specs(spec, spec.batch)
+    for p in spec.train_p:
+        f = M.make_train_step(spec, treedef, p)
+        if p == 1:
+            in_specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+            xspec, yspec = bx, by
+        else:
+            in_specs = [
+                jax.ShapeDtypeStruct((p,) + l.shape, l.dtype) for l in leaves
+            ]
+            xspec = jax.ShapeDtypeStruct((p,) + bx.shape, bx.dtype)
+            yspec = jax.ShapeDtypeStruct((p,) + by.shape, by.dtype)
+        lowered = jax.jit(f).lower(*in_specs, xspec, yspec)
+        path = os.path.join(out_dir, f"{spec.name}.train.p{p}.hlo.txt")
+        _write(path, to_hlo_text(lowered))
+        entry["train"][str(p)] = os.path.basename(path)
+
+    # Eval step (single parameter copy, eval batch).
+    ex, ey = M.batch_specs(spec, spec.eval_batch)
+    g = M.make_eval_step(spec, treedef)
+    in_specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+    lowered = jax.jit(g).lower(*in_specs, ex, ey)
+    path = os.path.join(out_dir, f"{spec.name}.eval.hlo.txt")
+    _write(path, to_hlo_text(lowered))
+    entry["eval"] = os.path.basename(path)
+
+
+def model_entry(spec) -> dict:
+    entry = {
+        "kind": spec.kind,
+        "batch": spec.batch,
+        "eval_batch": spec.eval_batch,
+        "train_p": list(spec.train_p),
+        "seed": spec.seed,
+    }
+    if spec.kind == "mlp":
+        entry.update(
+            {"dims": list(spec.dims), "activation": spec.activation,
+             "input_dim": spec.input_dim, "classes": spec.classes}
+        )
+    else:
+        entry.update(
+            {"vocab": spec.vocab, "d_model": spec.d_model,
+             "n_layers": spec.n_layers, "n_heads": spec.n_heads,
+             "seq_len": spec.seq_len}
+        )
+    return entry
+
+
+def lower_avg(out_dir: str, manifest: dict) -> None:
+    manifest["avg"] = {"chunk": hier_avg.CHUNK, "groups": {}}
+    for s in AVG_GROUP_SIZES:
+        f = lambda x: (hier_avg.group_average(x),)
+        spec = jax.ShapeDtypeStruct((s, hier_avg.CHUNK), jnp.float32)
+        lowered = jax.jit(f).lower(spec)
+        path = os.path.join(out_dir, f"avg_s{s}.hlo.txt")
+        _write(path, to_hlo_text(lowered))
+        manifest["avg"]["groups"][str(s)] = os.path.basename(path)
+
+    # Fused SGD update (one CHUNK block; the Rust side loops chunks).
+    g = lambda w, grad, lr: (sgd_update.sgd_update(w, grad, lr),)
+    vec = jax.ShapeDtypeStruct((sgd_update.CHUNK,), jnp.float32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(g).lower(vec, vec, lr)
+    path = os.path.join(out_dir, "sgd_update.hlo.txt")
+    _write(path, to_hlo_text(lowered))
+    manifest["sgd_update"] = {
+        "chunk": sgd_update.CHUNK,
+        "file": os.path.basename(path),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument(
+        "--models", default=None,
+        help="comma-separated subset of models to lower (default: all)",
+    )
+    args = ap.parse_args()
+
+    out_dir = args.out_dir or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+        "artifacts",
+    )
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = args.models.split(",") if args.models else list(M.MODELS)
+    manifest = {"format_version": FORMAT_VERSION, "models": {}}
+    for name in names:
+        spec = M.MODELS[name]
+        print(f"[aot] lowering {name} ({spec.kind})", flush=True)
+        entry = model_entry(spec)
+        lower_model(spec, out_dir, entry)
+        manifest["models"][name] = entry
+
+    print("[aot] lowering group-average kernels", flush=True)
+    lower_avg(out_dir, manifest)
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

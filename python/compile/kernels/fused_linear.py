@@ -1,0 +1,238 @@
+"""L1 Pallas kernels: tiled matmul and fused linear (matmul + bias +
+activation) with a custom VJP whose dgrad / wgrad are themselves Pallas
+matmul kernels.
+
+Hardware adaptation (paper targets P100 GPUs / cuDNN): instead of a
+threadblock + shared-memory decomposition, the kernel is tiled for the TPU
+MXU / VMEM model — MXU-shaped (128, 128) output blocks, a sequential K grid
+dimension accumulating partial products into the output block (which lives
+in VMEM for the lifetime of the (i, j) block), and the bias + activation
+epilogue fused into the final K step so the pre-activation never round-trips
+to HBM.  ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so kernels are lowered through the Pallas interpreter
+into plain HLO (see DESIGN.md §2).
+
+VMEM budget per grid point (fp32, default blocks bm=bn=bk=128):
+  x block 128*128*4 = 64 KiB, w block 64 KiB, out/acc block 64 KiB,
+  bias block 0.5 KiB  =>  ~192.5 KiB  << 16 MiB VMEM, leaving headroom for
+  double-buffering the x/w streams (2x in-flight blocks ~ 385 KiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default blocking.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+_SQRT_2_OVER_PI = 0.7978845608028654
+
+VALID_ACTIVATIONS = ("none", "relu", "gelu")
+
+
+def _apply_act(z, activation: str):
+    if activation == "none":
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "gelu":
+        # tanh approximation, matches ref.py.
+        return 0.5 * z * (1.0 + jnp.tanh(_SQRT_2_OVER_PI * (z + 0.044715 * z**3)))
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _act_grad(z, activation: str):
+    """d(act)/dz evaluated at pre-activation z."""
+    if activation == "none":
+        return jnp.ones_like(z)
+    if activation == "relu":
+        return (z > 0.0).astype(z.dtype)
+    if activation == "gelu":
+        t = jnp.tanh(_SQRT_2_OVER_PI * (z + 0.044715 * z**3))
+        dt = (1.0 - t**2) * _SQRT_2_OVER_PI * (1.0 + 3 * 0.044715 * z**2)
+        return 0.5 * (1.0 + t) + 0.5 * z * dt
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _block_dim(full: int, block: int) -> int:
+    """Pick a block size: the MXU-shaped default, shrunk (to a multiple of 8
+    where possible) when the dimension itself is smaller than one block so
+    small problems do not pay 128x padding waste."""
+    if full >= block:
+        return block
+    if full >= 8:
+        return ((full + 7) // 8) * 8
+    return full
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad2(a, rows: int, cols: int):
+    r, c = a.shape
+    if r == rows and c == cols:
+        return a
+    return jnp.pad(a, ((0, rows - r), (0, cols - c)))
+
+
+# ---------------------------------------------------------------------------
+# Plain tiled matmul (no bias / activation): used for dgrad + wgrad.
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_pallas(x, w, *, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K):
+    """Tiled Pallas matmul ``x @ w`` for fp32 2-D operands of any shape
+    (inputs are zero-padded up to block multiples; the result is sliced
+    back)."""
+    m, kx = x.shape
+    kw, n = w.shape
+    if kx != kw:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {w.shape}")
+    bm = _block_dim(m, bm)
+    bn = _block_dim(n, bn)
+    bk = _block_dim(kx, bk)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(kx, bk)
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(_pad2(x, mp, kp), _pad2(w, kp, np_))
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable tiled Pallas matmul: the VJP's dgrad / wgrad are
+    Pallas matmul kernels themselves (autodiff never enters the
+    interpreter)."""
+    return _matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, dy):
+    x, w = res
+    return _matmul_pallas(dy, w.T), _matmul_pallas(x.T, dy)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused linear forward: y = act(x @ w + b), emitting the pre-activation z
+# as a second output (the VJP residual).
+# ---------------------------------------------------------------------------
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, z_ref, y_ref, *, nk: int, activation: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    z_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        z = z_ref[...] + b_ref[...]
+        z_ref[...] = z
+        y_ref[...] = _apply_act(z, activation)
+
+
+def linear_fwd_pallas(
+    x, w, b, activation: str, *, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K
+):
+    """Fused ``act(x @ w + b)``; returns ``(z, y)`` with z the
+    pre-activation (VJP residual)."""
+    if activation not in VALID_ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    m, kx = x.shape
+    kw, n = w.shape
+    if kx != kw or b.shape != (n,):
+        raise ValueError(f"linear shape mismatch: {x.shape} @ {w.shape} + {b.shape}")
+    bm = _block_dim(m, bm)
+    bn = _block_dim(n, bn)
+    bk = _block_dim(kx, bk)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(kx, bk)
+    nk = kp // bk
+    b2 = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+    z, y = pl.pallas_call(
+        functools.partial(_linear_kernel, nk=nk, activation=activation),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        ],
+        interpret=True,
+    )(_pad2(x, mp, kp), _pad2(w, kp, np_), b2)
+    return z[:m, :n], y[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP fused linear: the building block for every L2 linear layer.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, activation: str = "relu"):
+    """``act(x @ w + b)`` as one Pallas kernel (forward) with Pallas matmul
+    dgrad / wgrad kernels (backward)."""
+    _, y = linear_fwd_pallas(x, w, b, activation)
+    return y
+
+
+def _fused_linear_fwd(x, w, b, activation):
+    z, y = linear_fwd_pallas(x, w, b, activation)
+    return y, (x, w, z)
+
+
+def _fused_linear_bwd(activation, res, dy):
+    x, w, z = res
+    dz = dy * _act_grad(z, activation)
+    dx = _matmul_pallas(dz, w.T)          # dgrad
+    dw = _matmul_pallas(x.T, dz)          # wgrad
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: hierarchical group averaging.
+
+Averages S parameter shards (one per learner in a local cluster) into the
+cluster mean — the inner reduction of Hier-AVG's local averaging step.  The
+flat parameter vector is processed in CHUNK-sized blocks so the kernel's
+VMEM footprint is independent of model size (S * CHUNK * 4 bytes per block;
+with S=8, CHUNK=4096 that is 128 KiB).
+
+The Rust coordinator has a native SIMD reduction for this on the hot path;
+this artifact is the alternate XLA-executed path (benchmarked against the
+native one in benches/reduction.rs) and the demonstration that the paper's
+reduction primitive round-trips through the three-layer stack.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 4096
+
+
+def _group_avg_kernel(x_ref, o_ref, *, s: int):
+    # x block: (s, bd) — all S shards of one chunk; o block: (bd,).
+    o_ref[...] = jnp.sum(x_ref[...], axis=0) * (1.0 / s)
+
+
+def group_average(x, *, bd: int = CHUNK):
+    """Mean over axis 0 of ``x: f32[S, D]`` via a Pallas reduction blocked
+    along D.  D is zero-padded to a multiple of ``bd``."""
+    s, d = x.shape
+    bd = min(bd, max(d, 1))
+    dp = ((d + bd - 1) // bd) * bd
+    xp = jnp.pad(x, ((0, 0), (0, dp - d)))
+    out = pl.pallas_call(
+        functools.partial(_group_avg_kernel, s=s),
+        grid=(dp // bd,),
+        in_specs=[pl.BlockSpec((s, bd), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:d]

@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: fused SGD parameter update  w' = w − lr·g.
+
+The coordinator applies updates natively on the hot path; this artifact is
+the in-graph alternative (benchmarked in rust/benches/reduction.rs against
+the native optimizer) and demonstrates an elementwise-update kernel through
+the same AOT path as the reductions.  Blocked along the flat parameter
+vector so VMEM use is constant (2 · CHUNK · 4 bytes in-flight per block).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 4096
+
+
+def _sgd_kernel(w_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = w_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def sgd_update(w, g, lr, *, bd: int = CHUNK):
+    """``w - lr * g`` for flat f32 vectors via a blocked Pallas kernel."""
+    (d,) = w.shape
+    if g.shape != (d,):
+        raise ValueError(f"shape mismatch: {w.shape} vs {g.shape}")
+    bd = min(bd, max(d, 1))
+    dp = ((d + bd - 1) // bd) * bd
+    wp = jnp.pad(w, (0, dp - d))
+    gp = jnp.pad(g, (0, dp - d))
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1)
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=True,
+    )(wp, gp, lr_arr)
+    return out[:d]
+
+
+def ref_sgd_update(w, g, lr):
+    return w - lr * g

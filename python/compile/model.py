@@ -1,0 +1,357 @@
+"""L2: the JAX compute graphs AOT-compiled for the Rust coordinator.
+
+Two model families, both built on the L1 Pallas ``fused_linear`` kernel:
+
+- **MLP classifiers** — stand-ins for the paper's four CNNs on CIFAR-10 /
+  ImageNet-1K (see DESIGN.md §1 for the substitution argument).  Four
+  variants mirror the four landscapes (ResNet-18 / GoogLeNet / MobileNet /
+  VGG19) plus a quickstart net and an "imagenet-sim" net.
+- **Decoder-only transformer LM** — the end-to-end driver workload
+  (examples/e2e_lm.rs).
+
+Each model exports two graphs:
+
+- ``train_step(params..., x, y) -> (grads..., loss, ncorrect)`` — gradients
+  only; the Rust optimizer owns the update so that LR schedules / momentum
+  live at L3, as they do in the paper's harness.
+- ``eval_step(params..., x, y) -> (sum_loss, ncorrect)`` — sums so the
+  coordinator can accumulate over evaluation shards.
+
+A "stacked" train step (leading dimension P, one XLA dispatch for all P
+simulated learners, per-learner parameters and batches) is exported for the
+P values the experiments use.  ``lax.map`` rather than ``vmap`` carries the
+learner dimension: the loop body is compiled once (compile time independent
+of P) and it sidesteps Pallas-interpreter batching.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear, matmul
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Model registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpSpec:
+    name: str
+    dims: Tuple[int, ...]          # (input, hidden..., classes)
+    batch: int                     # per-learner train mini-batch B
+    eval_batch: int
+    train_p: Tuple[int, ...]       # stacked-P variants to export
+    activation: str = "relu"
+    seed: int = 0
+
+    @property
+    def kind(self) -> str:
+        return "mlp"
+
+    @property
+    def input_dim(self) -> int:
+        return self.dims[0]
+
+    @property
+    def classes(self) -> int:
+        return self.dims[-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class LmSpec:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int
+    eval_batch: int
+    train_p: Tuple[int, ...]
+    seed: int = 0
+
+    @property
+    def kind(self) -> str:
+        return "lm"
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+# The experiment matrix (DESIGN.md §5) dictates which P variants exist:
+#   fig1/fig2: P=32 on all four CNN stand-ins
+#   fig3/fig4: P=16 on all four
+#   table1:    P=16/32/64 on resnet18-sim
+#   fig5:      P=16 on imagenet-sim
+MODELS: Dict[str, object] = {
+    s.name: s
+    for s in [
+        MlpSpec("quickstart", (32, 64, 10), batch=16, eval_batch=64, train_p=(1, 4)),
+        MlpSpec(
+            "resnet18_sim", (128, 256, 256, 10), batch=16, eval_batch=128,
+            train_p=(1, 16, 32, 64), seed=1,
+        ),
+        MlpSpec(
+            "googlenet_sim", (128, 192, 192, 192, 10), batch=16, eval_batch=128,
+            train_p=(1, 16, 32), seed=2,
+        ),
+        MlpSpec(
+            "mobilenet_sim", (128, 96, 96, 10), batch=16, eval_batch=128,
+            train_p=(1, 16, 32), seed=3,
+        ),
+        MlpSpec(
+            "vgg19_sim", (128, 512, 10), batch=16, eval_batch=128,
+            train_p=(1, 16, 32), seed=4,
+        ),
+        MlpSpec(
+            "imagenet_sim", (256, 384, 100), batch=16, eval_batch=256,
+            train_p=(1, 16), seed=5,
+        ),
+        LmSpec(
+            "lm_small", vocab=256, d_model=128, n_layers=2, n_heads=4,
+            seq_len=64, batch=8, eval_batch=16, train_p=(1, 4), seed=10,
+        ),
+        LmSpec(
+            "lm_medium", vocab=512, d_model=256, n_layers=4, n_heads=8,
+            seq_len=64, batch=8, eval_batch=16, train_p=(1, 4), seed=11,
+        ),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter pytrees.  Params are lists/dicts of arrays; flattening order is
+# jax.tree_util's canonical order and is recorded in the manifest so the
+# Rust side can slice its flat buffer identically.
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(spec: MlpSpec):
+    """He-normal weights, zero biases — matched exactly by the Rust native
+    backend (rust/src/native)."""
+    key = jax.random.PRNGKey(spec.seed)
+    params = []
+    for fan_in, fan_out in zip(spec.dims[:-1], spec.dims[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (fan_in, fan_out), jnp.float32) * jnp.sqrt(
+            2.0 / fan_in
+        )
+        params.append({"w": w, "b": jnp.zeros((fan_out,), jnp.float32)})
+    return params
+
+
+def mlp_apply(spec: MlpSpec, params, x, *, use_ref: bool = False):
+    """Forward pass -> logits.  ``use_ref`` swaps the Pallas kernel for the
+    pure-jnp oracle (the gradient-parity tests diff the two)."""
+    lin = ref.ref_linear if use_ref else fused_linear
+    h = x
+    n = len(params)
+    for i, layer in enumerate(params):
+        act = spec.activation if i + 1 < n else "none"
+        h = lin(h, layer["w"], layer["b"], act)
+    return h
+
+
+def _softmax_xent(logits, y):
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, y[..., None], axis=-1)[..., 0]
+    return nll
+
+
+def mlp_loss(spec: MlpSpec, params, x, y, *, use_ref: bool = False):
+    logits = mlp_apply(spec, params, x, use_ref=use_ref)
+    nll = _softmax_xent(logits, y)
+    ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.mean(nll), (jnp.sum(nll), ncorrect)
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM
+# ---------------------------------------------------------------------------
+
+
+def init_lm(spec: LmSpec):
+    key = jax.random.PRNGKey(spec.seed)
+    d, v, t = spec.d_model, spec.vocab, spec.seq_len
+
+    def normal(key, shape, std):
+        return jax.random.normal(key, shape, jnp.float32) * std
+
+    key, k0, k1 = jax.random.split(key, 3)
+    params = {
+        "embed": normal(k0, (v, d), 0.02),
+        "pos": normal(k1, (t, d), 0.02),
+        "blocks": [],
+        "ln_f": {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)},
+    }
+    proj_std = 0.02 / float(jnp.sqrt(2.0 * spec.n_layers))
+    for _ in range(spec.n_layers):
+        key, k0, k1, k2, k3 = jax.random.split(key, 5)
+        params["blocks"].append(
+            {
+                "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "wqkv": normal(k0, (d, 3 * d), 0.02),
+                "bqkv": jnp.zeros((3 * d,)),
+                "wo": normal(k1, (d, d), proj_std),
+                "bo": jnp.zeros((d,)),
+                "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "wi": normal(k2, (d, spec.d_ff), 0.02),
+                "bi": jnp.zeros((spec.d_ff,)),
+                "wo2": normal(k3, (spec.d_ff, d), proj_std),
+                "bo2": jnp.zeros((d,)),
+            }
+        )
+    return jax.tree_util.tree_map(lambda a: a.astype(jnp.float32), params)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(spec: LmSpec, blk, h):
+    # h: [B, T, d].  QKV / output projections go through the Pallas kernel
+    # (flattened over batch*time); the score computation stays in jnp.
+    bsz, t, d = h.shape
+    nh, hd = spec.n_heads, d // spec.n_heads
+    qkv = fused_linear(h.reshape(bsz * t, d), blk["wqkv"], blk["bqkv"], "none")
+    qkv = qkv.reshape(bsz, t, 3, nh, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # [B, T, nh, hd]
+    q = jnp.transpose(q, (0, 2, 1, 3))
+    k = jnp.transpose(k, (0, 2, 3, 1))
+    v = jnp.transpose(v, (0, 2, 1, 3))
+    scores = jnp.matmul(q, k) / jnp.sqrt(float(hd))  # [B, nh, T, T]
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    scores = jnp.where(mask, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.matmul(attn, v)  # [B, nh, T, hd]
+    out = jnp.transpose(out, (0, 2, 1, 3)).reshape(bsz * t, d)
+    out = fused_linear(out, blk["wo"], blk["bo"], "none")
+    return out.reshape(bsz, t, d)
+
+
+def _mlp_block(spec: LmSpec, blk, h):
+    bsz, t, d = h.shape
+    x = h.reshape(bsz * t, d)
+    x = fused_linear(x, blk["wi"], blk["bi"], "gelu")
+    x = fused_linear(x, blk["wo2"], blk["bo2"], "none")
+    return x.reshape(bsz, t, d)
+
+
+def lm_apply(spec: LmSpec, params, x):
+    """x: i32[B, T] -> logits f32[B, T, vocab] (tied embeddings)."""
+    h = params["embed"][x] + params["pos"][None, :, :]
+    for blk in params["blocks"]:
+        h = h + _attention(spec, blk, _layer_norm(h, blk["ln1"]["g"], blk["ln1"]["b"]))
+        h = h + _mlp_block(spec, blk, _layer_norm(h, blk["ln2"]["g"], blk["ln2"]["b"]))
+    h = _layer_norm(h, params["ln_f"]["g"], params["ln_f"]["b"])
+    bsz, t, d = h.shape
+    logits = matmul(h.reshape(bsz * t, d), params["embed"].T)
+    return logits.reshape(bsz, t, spec.vocab)
+
+
+def lm_loss(spec: LmSpec, params, x, y):
+    logits = lm_apply(spec, params, x)
+    nll = _softmax_xent(logits, y)
+    ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.mean(nll), (jnp.sum(nll), ncorrect)
+
+
+# ---------------------------------------------------------------------------
+# Exported graphs
+# ---------------------------------------------------------------------------
+
+
+def init_params(spec):
+    return init_mlp(spec) if spec.kind == "mlp" else init_lm(spec)
+
+
+def loss_fn(spec):
+    if spec.kind == "mlp":
+        return lambda params, x, y: mlp_loss(spec, params, x, y)
+    return lambda params, x, y: lm_loss(spec, params, x, y)
+
+
+def batch_specs(spec, batch: int):
+    """ShapeDtypeStructs for (x, y) at a given per-learner batch size."""
+    if spec.kind == "mlp":
+        return (
+            jax.ShapeDtypeStruct((batch, spec.input_dim), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        )
+    return (
+        jax.ShapeDtypeStruct((batch, spec.seq_len), jnp.int32),
+        jax.ShapeDtypeStruct((batch, spec.seq_len), jnp.int32),
+    )
+
+
+def make_train_step(spec, treedef, p: int):
+    """Build ``f(*param_leaves, x, y) -> (*grad_leaves, loss, ncorrect)``.
+
+    For p == 1 the leaves are per-model shapes; for p > 1 every input and
+    output carries a leading learner dimension P and the body is mapped with
+    ``lax.map`` (single compiled body, sequential over learners inside one
+    XLA program — the coordinator issues ONE dispatch per global step).
+    """
+    lf = loss_fn(spec)
+    n_leaves = treedef.num_leaves
+
+    def single(params, x, y):
+        (loss, (_, ncorrect)), grads = jax.value_and_grad(lf, has_aux=True)(
+            params, x, y
+        )
+        return grads, loss, ncorrect
+
+    def f(*args):
+        leaves, x, y = args[:n_leaves], args[n_leaves], args[n_leaves + 1]
+        if p == 1:
+            params = jax.tree_util.tree_unflatten(treedef, list(leaves))
+            grads, loss, ncorrect = single(params, x, y)
+            return tuple(jax.tree_util.tree_leaves(grads)) + (loss, ncorrect)
+
+        def body(sl):
+            sl_leaves, sx, sy = sl
+            params = jax.tree_util.tree_unflatten(treedef, list(sl_leaves))
+            grads, loss, ncorrect = single(params, sx, sy)
+            return tuple(jax.tree_util.tree_leaves(grads)), loss, ncorrect
+
+        grads, loss, ncorrect = jax.lax.map(body, (tuple(leaves), x, y))
+        return tuple(grads) + (loss, ncorrect)
+
+    return f
+
+
+def make_eval_step(spec, treedef):
+    """``f(*param_leaves, x, y) -> (sum_loss, ncorrect)``."""
+    lf = loss_fn(spec)
+    n_leaves = treedef.num_leaves
+
+    def f(*args):
+        leaves, x, y = args[:n_leaves], args[n_leaves], args[n_leaves + 1]
+        params = jax.tree_util.tree_unflatten(treedef, list(leaves))
+        _, (sum_loss, ncorrect) = lf(params, x, y)
+        return sum_loss, ncorrect
+
+    return f
+
+
+def param_leaves_with_paths(params) -> List[Tuple[str, jax.Array]]:
+    """(name, leaf) pairs in canonical tree order; names become manifest
+    entries the Rust `ParamLayout` mirrors."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((name, leaf))
+    return out

@@ -1,0 +1,102 @@
+"""AOT pipeline: lowering produces parseable HLO text, the manifest is
+internally consistent, and (when artifacts are built) the on-disk manifest
+matches the model registry."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)))), "artifacts")
+
+
+def test_hlo_text_lowering_smoke():
+    spec = M.MODELS["quickstart"]
+    params = M.init_params(spec)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    f = M.make_train_step(spec, treedef, 1)
+    in_specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+    bx, by = M.batch_specs(spec, spec.batch)
+    lowered = jax.jit(f).lower(*in_specs, bx, by)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # Tuple return with n_leaves + 2 elements.
+    assert "->" in text
+
+
+def test_model_entry_fields():
+    e = aot.model_entry(M.MODELS["resnet18_sim"])
+    assert e["kind"] == "mlp"
+    assert e["dims"] == [128, 256, 256, 10]
+    assert e["classes"] == 10
+    e = aot.model_entry(M.MODELS["lm_small"])
+    assert e["kind"] == "lm"
+    assert e["vocab"] == 256
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    @classmethod
+    def setup_class(cls):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            cls.manifest = json.load(f)
+
+    def test_format_version(self):
+        assert self.manifest["format_version"] == aot.FORMAT_VERSION
+
+    def test_every_model_in_registry(self):
+        for name, entry in self.manifest["models"].items():
+            assert name in M.MODELS
+            spec = M.MODELS[name]
+            assert entry["batch"] == spec.batch
+            assert entry["train_p"] == list(spec.train_p)
+
+    def test_layout_matches_init_blob(self):
+        for name, entry in self.manifest["models"].items():
+            total = sum(p["size"] for p in entry["params"])
+            assert total == entry["n_params"], name
+            blob = os.path.join(ARTIFACTS, entry["init"])
+            assert os.path.getsize(blob) == 4 * total, name
+            # offsets are contiguous
+            off = 0
+            for p in entry["params"]:
+                assert p["offset"] == off, (name, p["name"])
+                assert p["size"] == int(np.prod(p["shape"])) if p["shape"] else 1
+                off += p["size"]
+
+    def test_init_blob_matches_live_init(self):
+        # The blob on disk must equal re-running init (same PRNG seed).
+        name = "quickstart"
+        entry = self.manifest["models"][name]
+        blob = np.fromfile(os.path.join(ARTIFACTS, entry["init"]), dtype="<f4")
+        leaves = jax.tree_util.tree_leaves(M.init_params(M.MODELS[name]))
+        flat = np.concatenate([np.asarray(l).reshape(-1) for l in leaves])
+        np.testing.assert_array_equal(blob, flat)
+
+    def test_artifact_files_exist_and_are_hlo(self):
+        for name, entry in self.manifest["models"].items():
+            files = list(entry["train"].values()) + [entry["eval"]]
+            for f in files:
+                path = os.path.join(ARTIFACTS, f)
+                assert os.path.exists(path), path
+                with open(path) as fh:
+                    head = fh.read(64)
+                assert head.startswith("HloModule"), path
+
+    def test_avg_artifacts(self):
+        avg = self.manifest["avg"]
+        assert avg["chunk"] == 4096
+        for s, f in avg["groups"].items():
+            assert os.path.exists(os.path.join(ARTIFACTS, f)), f
+            assert int(s) in (2, 4, 8)

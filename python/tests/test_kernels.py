@@ -1,0 +1,178 @@
+"""L1 correctness: the Pallas kernels vs the pure-jnp oracles, swept over
+shapes / activations with hypothesis.  This is the core kernel signal the
+AOT artifacts inherit."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_linear import (
+    fused_linear,
+    linear_fwd_pallas,
+    matmul,
+    _act_grad,
+)
+from compile.kernels.hier_avg import group_average
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.integers(min_value=1, max_value=200)
+ACTS = st.sampled_from(["none", "relu", "gelu"])
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS)
+def test_matmul_matches_ref(m, k, n):
+    x = rand(m * 7919 + k, m, k)
+    w = rand(n * 104729 + k, k, n)
+    np.testing.assert_allclose(
+        matmul(x, w), ref.ref_matmul(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+def test_matmul_exact_block_multiples():
+    # No padding path: dims exactly at the MXU block size.
+    x = rand(1, 128, 256)
+    w = rand(2, 256, 128)
+    np.testing.assert_allclose(
+        matmul(x, w), ref.ref_matmul(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_grad_matches_ref():
+    x = rand(3, 24, 40)
+    w = rand(4, 40, 8)
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.sin(matmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(ref.ref_matmul(x, w)))
+
+    gx_p, gw_p = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw_p, gw_r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused linear
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, act=ACTS)
+def test_fused_linear_matches_ref(m, k, n, act):
+    x = rand(m + 1, m, k)
+    w = rand(k + 2, k, n)
+    b = rand(n + 3, n)
+    np.testing.assert_allclose(
+        fused_linear(x, w, b, act), ref.ref_linear(x, w, b, act), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(act=ACTS)
+def test_fused_linear_emits_preactivation(act):
+    x = rand(10, 16, 33)
+    w = rand(11, 33, 20)
+    b = rand(12, 20)
+    z, y = linear_fwd_pallas(x, w, b, act)
+    np.testing.assert_allclose(z, ref.ref_matmul(x, w) + b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y, ref.ref_act(z, act), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64), act=ACTS)
+def test_fused_linear_vjp_matches_ref(m, k, n, act):
+    x = rand(m, m, k)
+    w = rand(k, k, n)
+    b = rand(n, n)
+
+    def f_pallas(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, act) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.ref_linear(x, w, b, act) ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(gp, gr):
+        np.testing.assert_allclose(a, c, rtol=2e-3, atol=2e-3)
+
+
+def test_act_grad_matches_autodiff():
+    z = jnp.linspace(-3.0, 3.0, 101)
+    for act in ["none", "relu", "gelu"]:
+        if act == "relu":
+            z_test = z + 0.005  # stay off the kink
+        else:
+            z_test = z
+        auto = jax.vmap(jax.grad(lambda v: ref.ref_act(v, act)))(z_test)
+        np.testing.assert_allclose(_act_grad(z_test, act), auto, rtol=1e-4, atol=1e-5)
+
+
+def test_unknown_activation_raises():
+    with pytest.raises(ValueError):
+        fused_linear(jnp.zeros((2, 2)), jnp.zeros((2, 2)), jnp.zeros(2), "swish")
+
+
+# ---------------------------------------------------------------------------
+# group average
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(1, 8), d=st.integers(1, 10000))
+def test_group_average_matches_ref(s, d):
+    x = rand(s * 31 + d, s, d)
+    np.testing.assert_allclose(
+        group_average(x), ref.ref_group_average(x), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_group_average_constant_is_identity():
+    x = jnp.ones((4, 5000)) * 3.25
+    np.testing.assert_array_equal(group_average(x), jnp.full((5000,), 3.25))
+
+
+# ---------------------------------------------------------------------------
+# sgd update
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(1, 20000), lr=st.floats(1e-4, 1.0))
+def test_sgd_update_matches_ref(d, lr):
+    from compile.kernels.sgd_update import sgd_update, ref_sgd_update
+
+    w = rand(d, d)
+    g = rand(d + 1, d)
+    np.testing.assert_allclose(
+        sgd_update(w, g, lr), ref_sgd_update(w, g, lr), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_sgd_update_zero_lr_is_identity():
+    from compile.kernels.sgd_update import sgd_update
+
+    w = rand(5, 1000)
+    g = rand(6, 1000)
+    np.testing.assert_array_equal(sgd_update(w, g, 0.0), w)

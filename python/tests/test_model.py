@@ -1,0 +1,164 @@
+"""L2 correctness: the Pallas-backed models vs kernel-free references,
+plus the exported step functions' shapes/semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def mlp_spec():
+    return M.MODELS["quickstart"]
+
+
+def batch_for(spec, key=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(key))
+    if spec.kind == "mlp":
+        x = jax.random.normal(kx, (spec.batch, spec.input_dim), jnp.float32)
+        y = jax.random.randint(ky, (spec.batch,), 0, spec.classes)
+    else:
+        x = jax.random.randint(kx, (spec.batch, spec.seq_len), 0, spec.vocab)
+        y = jax.random.randint(ky, (spec.batch, spec.seq_len), 0, spec.vocab)
+    return x, y
+
+
+def test_mlp_pallas_matches_jnp_reference():
+    spec = mlp_spec()
+    params = M.init_params(spec)
+    x, _ = batch_for(spec)
+    lp = M.mlp_apply(spec, params, x)
+    lr = M.mlp_apply(spec, params, x, use_ref=True)
+    np.testing.assert_allclose(lp, lr, rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_gradients_match_reference_model():
+    spec = mlp_spec()
+    params = M.init_params(spec)
+    x, y = batch_for(spec)
+
+    def loss_pallas(p):
+        return M.mlp_loss(spec, p, x, y)[0]
+
+    def loss_ref(p):
+        return M.mlp_loss(spec, p, x, y, use_ref=True)[0]
+
+    gp = jax.grad(loss_pallas)(params)
+    gr = jax.grad(loss_ref)(params)
+    for a, b in zip(jax.tree_util.tree_leaves(gp), jax.tree_util.tree_leaves(gr)):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4)
+
+
+def test_train_step_signature_and_order():
+    spec = mlp_spec()
+    params = M.init_params(spec)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    f = M.make_train_step(spec, treedef, 1)
+    x, y = batch_for(spec)
+    out = f(*leaves, x, y)
+    assert len(out) == len(leaves) + 2
+    for g, l in zip(out[: len(leaves)], leaves):
+        assert g.shape == l.shape
+    loss, ncorrect = out[-2], out[-1]
+    assert loss.shape == () and float(loss) > 0
+    assert 0 <= float(ncorrect) <= spec.batch
+
+
+def test_stacked_step_matches_singletons():
+    spec = mlp_spec()
+    params = M.init_params(spec)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    f1 = M.make_train_step(spec, treedef, 1)
+    f4 = M.make_train_step(spec, treedef, 4)
+    # Four learners with different params and batches.
+    stacked_leaves = [
+        jnp.stack([l + 0.01 * i for i in range(4)], axis=0) for l in leaves
+    ]
+    xs, ys = zip(*[batch_for(spec, key=i) for i in range(4)])
+    sx, sy = jnp.stack(xs), jnp.stack(ys)
+    out4 = f4(*stacked_leaves, sx, sy)
+    for i in range(4):
+        leaves_i = [l + 0.01 * i for l in leaves]
+        out1 = f1(*leaves_i, xs[i], ys[i])
+        np.testing.assert_allclose(out4[-2][i], out1[-2], rtol=1e-5, atol=1e-6)
+        for g4, g1 in zip(out4[: len(leaves)], out1[: len(leaves)]):
+            np.testing.assert_allclose(g4[i], g1, rtol=1e-4, atol=1e-5)
+
+
+def test_eval_step_sums():
+    spec = mlp_spec()
+    params = M.init_params(spec)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    g = M.make_eval_step(spec, treedef)
+    x, y = batch_for(spec)
+    sum_loss, ncorrect = g(*leaves, x, y)
+    mean_loss, (sum_loss2, ncorrect2) = M.mlp_loss(spec, params, x, y)
+    np.testing.assert_allclose(sum_loss, sum_loss2, rtol=1e-6)
+    np.testing.assert_allclose(float(mean_loss) * spec.batch, float(sum_loss), rtol=1e-5)
+    assert float(ncorrect) == float(ncorrect2)
+
+
+def test_lm_shapes_and_loss():
+    spec = M.MODELS["lm_small"]
+    params = M.init_params(spec)
+    x, y = batch_for(spec)
+    logits = M.lm_apply(spec, params, x)
+    assert logits.shape == (spec.batch, spec.seq_len, spec.vocab)
+    loss, (sum_loss, ncorrect) = M.lm_loss(spec, params, x, y)
+    # At init the loss must be close to uniform ln(V).
+    assert abs(float(loss) - np.log(spec.vocab)) < 0.5
+    assert 0 <= float(ncorrect) <= spec.batch * spec.seq_len
+    np.testing.assert_allclose(
+        float(sum_loss), float(loss) * spec.batch * spec.seq_len, rtol=1e-5
+    )
+
+
+def test_lm_causality():
+    # Changing a future token must not change earlier logits.
+    spec = M.MODELS["lm_small"]
+    params = M.init_params(spec)
+    x, _ = batch_for(spec)
+    base = M.lm_apply(spec, params, x)
+    x2 = x.at[:, -1].set((x[:, -1] + 1) % spec.vocab)
+    pert = M.lm_apply(spec, params, x2)
+    np.testing.assert_allclose(base[:, :-1], pert[:, :-1], rtol=1e-4, atol=1e-5)
+    assert not np.allclose(base[:, -1], pert[:, -1], atol=1e-5)
+
+
+def test_param_names_are_unique_and_ordered():
+    for name in ["quickstart", "lm_small"]:
+        spec = M.MODELS[name]
+        params = M.init_params(spec)
+        named = M.param_leaves_with_paths(params)
+        names = [n for n, _ in named]
+        assert len(names) == len(set(names))
+        leaves = jax.tree_util.tree_leaves(params)
+        assert len(leaves) == len(named)
+        for (_, a), b in zip(named, leaves):
+            assert a.shape == b.shape
+
+
+def test_registry_dims_match_rust_mirror():
+    # rust/src/driver/mod.rs MODEL_DIMS must mirror this registry.
+    expect = {
+        "quickstart": (32, 64, 10),
+        "resnet18_sim": (128, 256, 256, 10),
+        "googlenet_sim": (128, 192, 192, 192, 10),
+        "mobilenet_sim": (128, 96, 96, 10),
+        "vgg19_sim": (128, 512, 10),
+        "imagenet_sim": (256, 384, 100),
+    }
+    for name, dims in expect.items():
+        assert M.MODELS[name].dims == dims, name
+
+
+@pytest.mark.parametrize("name", ["quickstart", "lm_small"])
+def test_init_is_deterministic(name):
+    spec = M.MODELS[name]
+    a = jax.tree_util.tree_leaves(M.init_params(spec))
+    b = jax.tree_util.tree_leaves(M.init_params(spec))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)

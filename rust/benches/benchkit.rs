@@ -1,0 +1,131 @@
+//! A small criterion-style micro-benchmark harness (criterion is not
+//! available in this offline environment).
+//!
+//! Usage from a `harness = false` bench target:
+//! ```ignore
+//! mod benchkit;
+//! fn main() {
+//!     let mut b = benchkit::Bench::new("reduction");
+//!     b.bench("mean/4x100k", || { ... });
+//!     b.finish();
+//! }
+//! ```
+//!
+//! Each benchmark is auto-calibrated to ~80 ms per sample, 15 samples are
+//! collected, and min / median / mean / p95 plus derived throughput are
+//! printed in a stable, grep-friendly format.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    group: String,
+    filter: Option<String>,
+    results: Vec<(String, Stats)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub iters_per_sample: u64,
+}
+
+const TARGET_SAMPLE: Duration = Duration::from_millis(80);
+const SAMPLES: usize = 15;
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        // `cargo bench -- <filter>` forwards the filter in argv.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-') && a != "--bench");
+        println!("== bench group: {group} ==");
+        Bench { group: group.to_string(), filter, results: Vec::new() }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
+        self.bench_with_throughput(name, 0, f)
+    }
+
+    /// `bytes_per_iter > 0` additionally reports GiB/s.
+    pub fn bench_with_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        bytes_per_iter: usize,
+        mut f: F,
+    ) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) && !self.group.contains(filter.as_str()) {
+                return;
+            }
+        }
+        // Warmup + calibration: find iters such that a sample ≈ TARGET.
+        let mut iters: u64 = 1;
+        loop {
+            let start = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let el = start.elapsed();
+            if el >= Duration::from_millis(20) || iters >= 1 << 24 {
+                let per = el.as_nanos().max(1) as f64 / iters as f64;
+                iters = ((TARGET_SAMPLE.as_nanos() as f64 / per).ceil() as u64).max(1);
+                break;
+            }
+            iters *= 4;
+        }
+        let mut samples: Vec<f64> = Vec::with_capacity(SAMPLES);
+        for _ in 0..SAMPLES {
+            let start = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(start.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            min_ns: samples[0],
+            median_ns: samples[SAMPLES / 2],
+            mean_ns: samples.iter().sum::<f64>() / SAMPLES as f64,
+            p95_ns: samples[(SAMPLES as f64 * 0.95) as usize - 1],
+            iters_per_sample: iters,
+        };
+        let thr = if bytes_per_iter > 0 {
+            format!(
+                "  {:>8.3} GiB/s",
+                bytes_per_iter as f64 / stats.median_ns * 1e9 / (1u64 << 30) as f64
+            )
+        } else {
+            String::new()
+        };
+        println!(
+            "{:<44} min {:>12}  med {:>12}  mean {:>12}  p95 {:>12}{}",
+            format!("{}/{}", self.group, name),
+            fmt_ns(stats.min_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p95_ns),
+            thr
+        );
+        self.results.push((name.to_string(), stats));
+    }
+
+    pub fn finish(self) -> Vec<(String, Stats)> {
+        println!("== {} done ({} benchmarks) ==", self.group, self.results.len());
+        self.results
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}

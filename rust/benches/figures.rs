@@ -1,0 +1,82 @@
+//! End-to-end miniatures of every paper figure/table: each benchmark runs
+//! the exact experiment code path (config grid -> trainer -> metrics) at a
+//! micro scale, giving a per-figure wall-clock cost and guarding the repro
+//! harness against regressions.  The full-size regeneration is
+//! `hier-avg repro <exp>` (see EXPERIMENTS.md for recorded outputs).
+
+mod benchkit;
+
+use hier_avg::config::{BackendKind, RunConfig};
+use hier_avg::driver;
+use hier_avg::optimizer::LrSchedule;
+use hier_avg::theory::{self, BoundParams};
+
+fn micro_cfg(model: &str, p: usize, s: usize, k1: u64, k2: u64) -> RunConfig {
+    let mut cfg = RunConfig::defaults(model);
+    cfg.backend = BackendKind::Native;
+    cfg.p = p;
+    cfg.s = s;
+    cfg.k1 = k1;
+    cfg.k2 = k2;
+    cfg.epochs = 2;
+    cfg.train_n = p * 16 * 8; // 8 steps/epoch
+    cfg.test_n = 512;
+    cfg.lr = LrSchedule::Constant(0.1);
+    cfg
+}
+
+fn main() {
+    let mut b = benchkit::Bench::new("figures");
+
+    // fig1/fig2 micro: one (model, K2) cell, P=32, K1=4, S=4.
+    b.bench("fig1_cell/resnet18_sim/p32", || {
+        let cfg = micro_cfg("resnet18_sim", 32, 4, 4, 32);
+        std::hint::black_box(driver::run(&cfg).unwrap());
+    });
+
+    // fig3 micro: K1 variation cell, P=16.
+    b.bench("fig3_cell/googlenet_sim/p16", || {
+        let cfg = micro_cfg("googlenet_sim", 16, 4, 8, 32);
+        std::hint::black_box(driver::run(&cfg).unwrap());
+    });
+
+    // fig4 micro: S variation cell.
+    b.bench("fig4_cell/mobilenet_sim/p16s2", || {
+        let cfg = micro_cfg("mobilenet_sim", 16, 2, 4, 32);
+        std::hint::black_box(driver::run(&cfg).unwrap());
+    });
+
+    // table1 micro: the P=64 row (the most expensive).
+    b.bench("table1_row/resnet18_sim/p64", || {
+        let cfg = micro_cfg("resnet18_sim", 64, 4, 1, 8);
+        std::hint::black_box(driver::run(&cfg).unwrap());
+    });
+
+    // fig5 micro: imagenet-sim cell with the ragged (43, 20) schedule.
+    b.bench("fig5_cell/imagenet_sim/p16", || {
+        let cfg = micro_cfg("imagenet_sim", 16, 4, 20, 43);
+        std::hint::black_box(driver::run(&cfg).unwrap());
+    });
+
+    // Theory reproductions (thm34/35/36 grids are pure math).
+    let p = BoundParams::default();
+    b.bench("thm34_grid/k2_1_to_128", || {
+        let mut acc = 0.0;
+        for k2 in 1..=128u64 {
+            acc += theory::thm34_budget_bound(&p, 20_000, 1, k2, 4);
+        }
+        std::hint::black_box(acc);
+    });
+    b.bench("thm36_grid/full_paper_range", || {
+        let mut acc = 0.0;
+        for k in 2..=64u64 {
+            for a in [0.0, 0.2, 0.4, 0.6] {
+                let (h, x) = theory::thm36_pair(&p, 10_000, k, a);
+                acc += h / x;
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,97 @@
+//! L3 reduction hot path: native group averaging at realistic model sizes
+//! and group shapes, versus the Pallas group-average artifact through XLA
+//! (the alternate path), plus the analytic cost model itself.
+//!
+//! The native reducer is the one on the training hot path; its target is
+//! memory-bandwidth-bound throughput (§Perf in EXPERIMENTS.md).
+
+mod benchkit;
+
+use hier_avg::comm::{CostModel, ReduceStrategy, Reducer};
+use hier_avg::runtime::xla_backend::XlaGroupAvg;
+use hier_avg::runtime::Manifest;
+use hier_avg::topology::Topology;
+use hier_avg::util::rng::Pcg32;
+
+fn replicas(p: usize, n: usize, rng: &mut Pcg32) -> Vec<Vec<f32>> {
+    (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect()
+}
+
+fn main() {
+    let mut b = benchkit::Bench::new("reduction");
+    let mut rng = Pcg32::seeded(42);
+
+    // resnet18-sim (101k params) and lm_medium-class (3.4M params).
+    for &(label, n) in &[("100k", 101_386usize), ("3.4M", 3_400_000usize)] {
+        for &s in &[2usize, 4, 8] {
+            let mut r = replicas(s, n, &mut rng);
+            let topo = Topology::new(s, s).unwrap();
+            let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
+            // bytes touched per reduction: read S + write S buffers
+            let bytes = 2 * s * n * 4;
+            b.bench_with_throughput(&format!("native/group_avg/{label}/s{s}"), bytes, || {
+                red.global_average(&mut r, &topo);
+            });
+        }
+    }
+
+    // Global average at P=64 (table-1 regime).
+    {
+        let n = 101_386;
+        let mut r = replicas(64, n, &mut rng);
+        let topo = Topology::new(64, 4).unwrap();
+        let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
+        b.bench_with_throughput("native/global_avg/100k/p64", 2 * 64 * n * 4, || {
+            red.global_average(&mut r, &topo);
+        });
+        b.bench_with_throughput("native/local_avg/100k/p64s4", 2 * 64 * n * 4, || {
+            red.local_average(&mut r, &topo);
+        });
+    }
+
+    // The Pallas group-average + SGD-update artifacts (XLA path), if built.
+    if let Ok(m) = Manifest::load_default() {
+        if let Ok(mut avg) = XlaGroupAvg::load(&m, 4) {
+            let n = 101_386;
+            let shards = replicas(4, n, &mut rng);
+            let refs: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+            let mut out = vec![0.0f32; n];
+            b.bench_with_throughput("xla/pallas_group_avg/100k/s4", 2 * 4 * n * 4, || {
+                avg.average(&refs, &mut out).unwrap();
+            });
+        }
+        if let Ok(mut upd) = hier_avg::runtime::xla_backend::XlaSgdUpdate::load(&m) {
+            let n = 101_386;
+            let mut w: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let g: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            b.bench_with_throughput("xla/pallas_sgd_update/100k", 2 * n * 4, || {
+                upd.apply(&mut w, &g, 1e-7).unwrap();
+            });
+            let mut opt = hier_avg::optimizer::Sgd::plain();
+            b.bench_with_throughput("native/sgd_update/100k", 2 * n * 4, || {
+                opt.apply(&mut w, &g, 1e-7);
+            });
+        }
+    } else {
+        eprintln!("(artifacts not built; skipping XLA reduction benches)");
+    }
+
+    // Analytic cost model evaluation (used inside every reduction event).
+    {
+        let cm = CostModel::default();
+        let mut acc = 0.0f64;
+        b.bench("cost_model/allreduce_seconds", || {
+            for p in [4usize, 16, 64] {
+                acc += cm.allreduce_seconds(
+                    p,
+                    400_000,
+                    hier_avg::topology::LinkClass::InterNode,
+                    ReduceStrategy::Ring,
+                );
+            }
+        });
+        std::hint::black_box(acc);
+    }
+
+    b.finish();
+}

@@ -1,0 +1,138 @@
+//! Step execution throughput: the XLA train-step artifacts (singleton and
+//! stacked dispatch) and the native backend, plus the optimizer update.
+//! These are the per-step costs that multiply into every experiment.
+
+mod benchkit;
+
+use hier_avg::backend::{StepBackend, StepOut};
+use hier_avg::data::{BatchBuf, ClassifyData, DataSource, MixtureSpec};
+use hier_avg::driver;
+use hier_avg::native::NativeMlp;
+use hier_avg::optimizer::Sgd;
+use hier_avg::runtime::{Manifest, XlaBackend};
+use hier_avg::util::rng::Pcg32;
+
+fn mk_data(dim: usize, classes: usize) -> ClassifyData {
+    ClassifyData::generate(MixtureSpec {
+        dim,
+        classes,
+        train_n: 4096,
+        test_n: 256,
+        radius: 1.0,
+        noise: 1.2,
+        subclusters: 1,
+        label_noise: 0.0,
+        seed: 3,
+    })
+}
+
+fn bench_backend(
+    b: &mut benchkit::Bench,
+    label: &str,
+    backend: &mut dyn StepBackend,
+    p: usize,
+    dim: usize,
+    classes: usize,
+    init: &[f32],
+) {
+    let data = mk_data(dim, classes);
+    let mut rng = Pcg32::seeded(9);
+    let mut batch = BatchBuf::default();
+    for _ in 0..p {
+        data.fill_train(&mut rng, backend.train_batch(), &mut batch);
+    }
+    let replicas = vec![init.to_vec(); p];
+    let mut grads = vec![vec![0.0f32; backend.n_params()]; p];
+    let mut outs = vec![StepOut::default(); p];
+    b.bench(label, || {
+        backend.grads(&replicas, &batch, &mut grads, &mut outs).unwrap();
+    });
+}
+
+fn main() {
+    let mut b = benchkit::Bench::new("step");
+
+    // Native MLP backend.
+    for &(name, p) in &[("resnet18_sim", 1usize), ("resnet18_sim", 16)] {
+        let (dims, batch, eval_b) = driver::model_dims(name).unwrap();
+        let mut backend = NativeMlp::new(dims, batch, eval_b).unwrap();
+        let init = backend.init(&mut Pcg32::seeded(1));
+        let dim = dims[0];
+        let classes = *dims.last().unwrap();
+        bench_backend(
+            &mut b,
+            &format!("native/{name}/p{p}"),
+            &mut backend,
+            p,
+            dim,
+            classes,
+            &init,
+        );
+    }
+
+    // XLA backends (artifacts required).
+    match Manifest::load_default() {
+        Ok(m) => {
+            for &(name, p) in &[
+                ("quickstart", 1usize),
+                ("quickstart", 4),
+                ("resnet18_sim", 16),
+                ("resnet18_sim", 32),
+            ] {
+                let entry = m.model(name).unwrap();
+                let (dim, classes) =
+                    (entry.input_dim().unwrap(), entry.classes().unwrap());
+                let init = m.load_init(entry).unwrap();
+                let mut backend = XlaBackend::load(&m, name, p).unwrap();
+                bench_backend(
+                    &mut b,
+                    &format!("xla/{name}/p{p}"),
+                    &mut backend,
+                    p,
+                    dim,
+                    classes,
+                    &init,
+                );
+            }
+            // LM step (the e2e driver's inner loop).
+            if m.model("lm_small").is_ok() {
+                let entry = m.model("lm_small").unwrap();
+                let init = m.load_init(entry).unwrap();
+                let mut backend = XlaBackend::load(&m, "lm_small", 4).unwrap();
+                let data = hier_avg::data::TokenData::generate(
+                    hier_avg::data::TokenSpec::tiny_corpus(256, 64),
+                );
+                let mut rng = Pcg32::seeded(5);
+                let mut batch = BatchBuf::default();
+                for _ in 0..4 {
+                    data.fill_train(&mut rng, backend.train_batch(), &mut batch);
+                }
+                let replicas = vec![init.clone(); 4];
+                let mut grads = vec![vec![0.0f32; backend.n_params()]; 4];
+                let mut outs = vec![StepOut::default(); 4];
+                b.bench("xla/lm_small/p4", || {
+                    backend.grads(&replicas, &batch, &mut grads, &mut outs).unwrap();
+                });
+            }
+        }
+        Err(e) => eprintln!("(skipping XLA step benches: {e})"),
+    }
+
+    // Optimizer update at model scale.
+    {
+        let n = 101_386;
+        let mut rng = Pcg32::seeded(2);
+        let mut w: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.01).collect();
+        let mut plain = Sgd::plain();
+        b.bench_with_throughput("sgd/plain/100k", 2 * n * 4, || {
+            plain.apply(&mut w, &g, 1e-6);
+        });
+        let mut mom = Sgd::new(0.9, 1e-4, n);
+        b.bench_with_throughput("sgd/momentum_wd/100k", 3 * n * 4, || {
+            mom.apply(&mut w, &g, 1e-6);
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,30 @@
+//! Bound-evaluator micro-benchmarks: the theory module is called inside
+//! sweep loops (optimal-K2 searches over large grids), so its evaluators
+//! should be allocation-free and nanosecond-scale.
+
+mod benchkit;
+
+use hier_avg::theory::{self, BoundParams};
+
+fn main() {
+    let mut b = benchkit::Bench::new("theory");
+    let p = BoundParams::default();
+
+    b.bench("thm31_bound", || {
+        std::hint::black_box(theory::thm31_bound(&p, 100_000, 32));
+    });
+    b.bench("thm32_bound", || {
+        std::hint::black_box(theory::thm32_bound(&p, 1_000, 4, 32, 4));
+    });
+    b.bench("thm34_budget_bound", || {
+        std::hint::black_box(theory::thm34_budget_bound(&p, 20_000, 4, 32, 4));
+    });
+    b.bench("optimal_k2/search_to_1024", || {
+        std::hint::black_box(theory::optimal_k2(&p, 20_000, 1, 4, 1024));
+    });
+    b.bench("thm36_pair", || {
+        std::hint::black_box(theory::thm36_pair(&p, 10_000, 32, 0.4));
+    });
+
+    b.finish();
+}

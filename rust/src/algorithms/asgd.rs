@@ -1,0 +1,243 @@
+//! Simulated asynchronous SGD with a (sharded) parameter server — the
+//! baseline family the paper's introduction argues against (Recht et al.
+//! 2011; Dean et al. 2012; Li et al. 2014).
+//!
+//! Execution model: workers compute gradients against the parameter copy
+//! they last *fetched*; the server applies gradient pushes one at a time.
+//! With P workers pushing round-robin, a gradient is applied `P−1` ticks
+//! after its fetch — the classic staleness-∝-P behaviour (§1: "the
+//! staleness of gradients ... is proportional to the number of learners").
+//! The server's serialization is also what limits throughput: every push +
+//! pull crosses the inter-node link and queues at the server, so modelled
+//! time grows linearly in P while Hier-AVG's reductions amortize over K2
+//! steps.  `repro asgd` reproduces that comparison.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::backend::{StepBackend, StepOut};
+use crate::comm::CostModel;
+use crate::config::RunConfig;
+use crate::data::{BatchBuf, DataSource};
+use crate::metrics::{EpochStats, RunRecord};
+use crate::optimizer::Sgd;
+use crate::params::FlatParams;
+use crate::topology::LinkClass;
+use crate::util::rng::Pcg32;
+
+pub struct AsgdTrainer<'a> {
+    pub cfg: &'a RunConfig,
+    pub backend: Box<dyn StepBackend>,
+    pub data: Box<dyn DataSource>,
+    pub init: FlatParams,
+    /// Server shards (Li et al. 2014): pushes to distinct shards proceed
+    /// concurrently; bytes per message shrink accordingly.
+    pub shards: usize,
+}
+
+impl<'a> AsgdTrainer<'a> {
+    pub fn new(
+        cfg: &'a RunConfig,
+        backend: Box<dyn StepBackend>,
+        data: Box<dyn DataSource>,
+        init: FlatParams,
+        shards: usize,
+    ) -> Result<AsgdTrainer<'a>> {
+        anyhow::ensure!(shards >= 1, "shards must be >= 1");
+        anyhow::ensure!(
+            init.len() == backend.n_params(),
+            "init/backend parameter count mismatch"
+        );
+        Ok(AsgdTrainer { cfg, backend, data, init, shards })
+    }
+
+    /// Server ticks per epoch: the same sample budget as the synchronous
+    /// trainers (train_n samples per epoch; each tick consumes one
+    /// mini-batch of B).
+    pub fn ticks_per_epoch(&self) -> usize {
+        (self.data.train_n() / self.backend.train_batch()).max(1)
+    }
+
+    pub fn run(&mut self) -> Result<RunRecord> {
+        let cfg = self.cfg;
+        let p = cfg.p;
+        let b = self.backend.train_batch();
+        let n = self.backend.n_params();
+        let cost: &CostModel = &cfg.cost;
+
+        // Server state + per-worker stale snapshots.
+        let mut server: FlatParams = self.init.clone();
+        let mut snapshots: Vec<FlatParams> = vec![self.init.clone(); p];
+        let mut opt = Sgd::new(cfg.momentum, cfg.weight_decay, n);
+
+        let mut root = Pcg32::new(cfg.seed, 0x41534744); // "ASGD"
+        let mut rngs: Vec<Pcg32> = (0..p).map(|j| root.fork(j as u64)).collect();
+
+        let mut record =
+            RunRecord { label: format!("asgd-{}-p{}", cfg.model, p), ..Default::default() };
+        let tpe = self.ticks_per_epoch();
+        // Modelled compute: each worker's fwd+bwd overlaps with others, so
+        // per *round* of P ticks one step-time elapses; the server
+        // serializes the message handling on top of that.
+        const DEVICE_FLOPS: f64 = 10.6e12;
+        let step_secs = 6.0 * b as f64 * n as f64 / DEVICE_FLOPS;
+        let msg_bytes = n * 4 / self.shards;
+        // push (grad) + pull (params): two inter-node messages, queued at
+        // the server => serialized across workers within a round.
+        let msg_secs = 2.0 * (cost.alpha_inter + msg_bytes as f64 * cost.beta_inter);
+
+        let mut batch = BatchBuf::default();
+        let mut grads = vec![vec![0.0f32; n]];
+        let mut outs = vec![StepOut::default()];
+        let units = self.backend.units_per_row() as f64;
+        let started = Instant::now();
+        let mut ticks: u64 = 0;
+
+        for epoch in 0..cfg.epochs {
+            let lr = cfg.lr.lr_at(epoch);
+            let mut ep_loss = 0.0f64;
+            let mut ep_correct = 0.0f64;
+            for tick in 0..tpe {
+                let j = tick % p; // round-robin pusher
+                batch.clear();
+                self.data.fill_train(&mut rngs[j], b, &mut batch);
+                // Gradient at the STALE snapshot (fetched ~P-1 ticks ago).
+                let replicas = std::slice::from_ref(&snapshots[j]);
+                self.backend.grads(replicas, &batch, &mut grads, &mut outs)?;
+                // Server applies, worker pulls fresh params.
+                opt.apply(&mut server, &grads[0], lr);
+                snapshots[j].copy_from_slice(&server);
+                ticks += 1;
+                record.comm.global_reductions += 1;
+                record.comm.global_bytes += 2 * msg_bytes as u64;
+                record.comm.global_seconds += msg_secs;
+                ep_loss += outs[0].loss as f64;
+                ep_correct += outs[0].ncorrect as f64;
+                if cfg.record_steps {
+                    record.step_loss.push(outs[0].loss);
+                }
+            }
+            // P workers compute concurrently: tpe ticks = tpe/P rounds.
+            record.sim_compute_seconds += (tpe as f64 / p as f64) * step_secs;
+
+            let (test_loss, test_acc) = if epoch % cfg.eval_every.max(1) == 0
+                || epoch + 1 == cfg.epochs
+            {
+                evaluate(self.backend.as_mut(), self.data.as_ref(), &server)?
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            record.epochs.push(EpochStats {
+                epoch,
+                train_loss: ep_loss / tpe as f64,
+                train_acc: ep_correct / (tpe * b) as f64 / units,
+                test_loss,
+                test_acc,
+                sim_seconds: record.sim_compute_seconds + record.comm.total_seconds(),
+                wall_seconds: started.elapsed().as_secs_f64(),
+            });
+        }
+        record.total_steps = ticks;
+        Ok(record)
+    }
+}
+
+/// Shared eval helper (same contract as `Trainer::evaluate`).
+pub fn evaluate(
+    backend: &mut dyn StepBackend,
+    data: &dyn DataSource,
+    params: &FlatParams,
+) -> Result<(f64, f64)> {
+    let eb = backend.eval_batch();
+    let units = backend.units_per_row() as f64;
+    let n_batches = data.eval_n() / eb;
+    anyhow::ensure!(n_batches > 0, "eval set smaller than eval batch");
+    let mut buf = BatchBuf::default();
+    let (mut sum_loss, mut ncorrect) = (0.0f64, 0.0f64);
+    for i in 0..n_batches {
+        buf.clear();
+        data.fill_eval(i * eb, eb, &mut buf);
+        let (l, c) = backend.eval_batch_stats(params, &buf, eb)?;
+        sum_loss += l as f64;
+        ncorrect += c as f64;
+    }
+    let rows = (n_batches * eb) as f64;
+    Ok((sum_loss / (rows * units), ncorrect / (rows * units)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+    use crate::data::{ClassifyData, MixtureSpec};
+    use crate::native::NativeMlp;
+
+    fn mk(cfg: &RunConfig) -> AsgdTrainer<'_> {
+        let backend = NativeMlp::new(&[16, 32, 4], 8, 32).unwrap();
+        let data = ClassifyData::generate(MixtureSpec {
+            dim: 16,
+            classes: 4,
+            train_n: cfg.train_n,
+            test_n: cfg.test_n,
+            radius: 1.0,
+            noise: 0.6,
+            subclusters: 1,
+            label_noise: 0.0,
+            seed: 5,
+        });
+        let mut rng = Pcg32::seeded(cfg.seed);
+        let init = backend.init(&mut rng);
+        AsgdTrainer::new(cfg, Box::new(backend), Box::new(data), init, 1).unwrap()
+    }
+
+    fn cfg() -> RunConfig {
+        let mut cfg = RunConfig::defaults("asgd-test");
+        cfg.backend = BackendKind::Native;
+        cfg.p = 4;
+        cfg.epochs = 4;
+        cfg.train_n = 1024;
+        cfg.test_n = 128;
+        cfg.lr = crate::optimizer::LrSchedule::Constant(0.05);
+        cfg
+    }
+
+    #[test]
+    fn asgd_learns_despite_staleness() {
+        let cfg = cfg();
+        let rec = mk(&cfg).run().unwrap();
+        let last = rec.epochs.last().unwrap();
+        assert!(last.test_acc > 0.8, "acc = {}", last.test_acc);
+        assert!(last.train_loss < rec.epochs[0].train_loss);
+    }
+
+    #[test]
+    fn asgd_message_count_is_per_tick() {
+        let cfg = cfg();
+        let mut t = mk(&cfg);
+        let tpe = t.ticks_per_epoch();
+        let rec = t.run().unwrap();
+        assert_eq!(rec.total_steps, (tpe * cfg.epochs) as u64);
+        assert_eq!(rec.comm.global_reductions, rec.total_steps);
+    }
+
+    #[test]
+    fn asgd_deterministic() {
+        let cfg = cfg();
+        let a = mk(&cfg).run().unwrap();
+        let b = mk(&cfg).run().unwrap();
+        assert_eq!(a.epochs.last().unwrap().train_loss, b.epochs.last().unwrap().train_loss);
+    }
+
+    #[test]
+    fn sharding_cuts_message_time() {
+        let cfg = cfg();
+        let mut one = mk(&cfg);
+        one.shards = 1;
+        let r1 = one.run().unwrap();
+        let mut four = mk(&cfg);
+        four.shards = 4;
+        let r4 = four.run().unwrap();
+        assert!(r4.comm.global_seconds < r1.comm.global_seconds);
+    }
+}

@@ -1,0 +1,185 @@
+//! Averaging schedules: when, after each local SGD step, does a learner
+//! reduce — locally (within its cluster of S) or globally (all P)?
+//!
+//! `HierAvgSchedule { k1, k2 }` is Algorithm 1 of the paper.  It reproduces
+//! the classical synchronous variants exactly (paper §3.1):
+//!
+//! - `K2 = K1 = 1, S = 1`  ⇒ synchronous parallel SGD (Zinkevich et al.)
+//! - `K1 = K2` or `S = 1`  ⇒ K-AVG (Zhou & Cong 2018) with K = K2
+//!
+//! Both identities are enforced by tests here and property tests in
+//! rust/tests/proptests.rs.
+
+pub mod asgd;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceEvent {
+    /// Keep running local SGD.
+    None,
+    /// Average within each local cluster (line "local averaging" of Alg. 1).
+    Local,
+    /// Average across all P learners (line "global averaging" of Alg. 1).
+    Global,
+}
+
+/// The Hier-AVG schedule.  `k1` = local averaging interval, `k2` = global
+/// averaging interval.  The paper's *analysis* assumes `k2 = β·k1` with
+/// integer β (§3.1), but notes the implementation "can be implemented at
+/// the practitioner's will"; like the paper's own ImageNet run
+/// (K2=43, K1=20) we accept any `k1 ≤ k2` and expose
+/// [`HierAvgSchedule::is_integer_beta`] for analysis-faithful checks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HierAvgSchedule {
+    pub k1: u64,
+    pub k2: u64,
+}
+
+impl HierAvgSchedule {
+    pub fn new(k1: u64, k2: u64) -> Result<HierAvgSchedule> {
+        if k1 == 0 || k2 == 0 {
+            bail!("K1 and K2 must be >= 1 (got K1={k1}, K2={k2})");
+        }
+        if k2 < k1 {
+            bail!("K2 must be >= K1 (got K1={k1}, K2={k2})");
+        }
+        Ok(HierAvgSchedule { k1, k2 })
+    }
+
+    /// Whether the analysis assumption K2 = β·K1 (β integer) holds.
+    pub fn is_integer_beta(&self) -> bool {
+        self.k2 % self.k1 == 0
+    }
+
+    /// K-AVG with interval K: local averaging degenerates.
+    pub fn k_avg(k: u64) -> Result<HierAvgSchedule> {
+        HierAvgSchedule::new(k, k)
+    }
+
+    /// Synchronous parallel SGD: global reduction after every step.
+    pub fn sync_sgd() -> HierAvgSchedule {
+        HierAvgSchedule { k1: 1, k2: 1 }
+    }
+
+    /// β = K2 / K1: local averaging rounds per global interval.
+    pub fn beta(&self) -> u64 {
+        self.k2 / self.k1
+    }
+
+    /// The reduction event after completing step `t` (1-based: the t-th
+    /// local SGD step just finished).  A global boundary subsumes the local
+    /// one that coincides with it.
+    pub fn event_after(&self, t: u64) -> ReduceEvent {
+        debug_assert!(t >= 1);
+        if t % self.k2 == 0 {
+            ReduceEvent::Global
+        } else if t % self.k1 == 0 {
+            ReduceEvent::Local
+        } else {
+            ReduceEvent::None
+        }
+    }
+
+    /// Number of global / local reductions incurred over `t` steps.
+    /// (A step that is a multiple of both intervals counts only as global.)
+    pub fn reduction_counts(&self, t: u64) -> (u64, u64) {
+        let global = t / self.k2;
+        let both = t / lcm(self.k1, self.k2);
+        (global, t / self.k1 - both)
+    }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 { a } else { gcd(b, a % b) }
+}
+
+fn lcm(a: u64, b: u64) -> u64 {
+    a / gcd(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates() {
+        assert!(HierAvgSchedule::new(0, 4).is_err());
+        assert!(HierAvgSchedule::new(4, 0).is_err());
+        assert!(HierAvgSchedule::new(8, 4).is_err());
+        // Non-integer β is accepted (paper's own ImageNet run uses 43/20)
+        // but flagged for the analysis.
+        let ragged = HierAvgSchedule::new(3, 8).unwrap();
+        assert!(!ragged.is_integer_beta());
+        assert!(HierAvgSchedule::new(4, 32).unwrap().is_integer_beta());
+    }
+
+    #[test]
+    fn ragged_counts_match_events() {
+        let s = HierAvgSchedule::new(20, 43).unwrap();
+        let t = 10_000;
+        let (mut g, mut l) = (0, 0);
+        for i in 1..=t {
+            match s.event_after(i) {
+                ReduceEvent::Global => g += 1,
+                ReduceEvent::Local => l += 1,
+                ReduceEvent::None => {}
+            }
+        }
+        assert_eq!(s.reduction_counts(t), (g, l));
+    }
+
+    #[test]
+    fn hier_schedule_pattern() {
+        let s = HierAvgSchedule::new(2, 6).unwrap();
+        let events: Vec<_> = (1..=12).map(|t| s.event_after(t)).collect();
+        use ReduceEvent::*;
+        assert_eq!(
+            events,
+            vec![None, Local, None, Local, None, Global, None, Local, None, Local, None, Global]
+        );
+    }
+
+    #[test]
+    fn k_avg_identity() {
+        // K1 == K2: no pure-local events ever fire.
+        let s = HierAvgSchedule::k_avg(4).unwrap();
+        for t in 1..=64 {
+            assert_ne!(s.event_after(t), ReduceEvent::Local);
+            assert_eq!(s.event_after(t) == ReduceEvent::Global, t % 4 == 0);
+        }
+    }
+
+    #[test]
+    fn sync_sgd_identity() {
+        let s = HierAvgSchedule::sync_sgd();
+        for t in 1..=16 {
+            assert_eq!(s.event_after(t), ReduceEvent::Global);
+        }
+    }
+
+    #[test]
+    fn reduction_counts_match_events() {
+        let s = HierAvgSchedule::new(4, 32).unwrap();
+        let t = 1000;
+        let (mut g, mut l) = (0, 0);
+        for i in 1..=t {
+            match s.event_after(i) {
+                ReduceEvent::Global => g += 1,
+                ReduceEvent::Local => l += 1,
+                ReduceEvent::None => {}
+            }
+        }
+        assert_eq!(s.reduction_counts(t), (g, l));
+    }
+
+    #[test]
+    fn paper_comparison_counts() {
+        // §4.3: K2 = 2*K_opt halves the number of global reductions vs
+        // K-AVG at K_opt over the same number of steps.
+        let kavg = HierAvgSchedule::k_avg(32).unwrap();
+        let hier = HierAvgSchedule::new(4, 64).unwrap();
+        let t = 12800;
+        assert_eq!(kavg.reduction_counts(t).0, 2 * hier.reduction_counts(t).0);
+    }
+}

@@ -1,0 +1,63 @@
+//! The step-execution backend interface.
+//!
+//! Two implementations:
+//! - `runtime::XlaBackend` — loads the AOT-lowered HLO artifacts (JAX L2 +
+//!   Pallas L1) and executes them through the PJRT CPU client.  The
+//!   production path.
+//! - `native::NativeMlp` — a pure-Rust MLP with hand-written backprop.
+//!   A substrate for tests (exact cross-validation of the XLA numerics),
+//!   property sweeps, and fast large-P experiments.
+
+use anyhow::Result;
+
+use crate::data::BatchBuf;
+use crate::params::FlatParams;
+
+/// Per-learner outputs of one training step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepOut {
+    /// Mean loss over the learner's mini-batch.
+    pub loss: f32,
+    /// Correct predictions in the mini-batch (classification) or over all
+    /// tokens (LM).
+    pub ncorrect: f32,
+}
+
+// Not `Send`: the XLA implementation holds PJRT handles (raw pointers).
+// The trainer is single-threaded over the backend; parallelism lives
+// inside the backend (stacked dispatch) and in the reducer.
+pub trait StepBackend {
+    /// Per-learner train mini-batch size B.
+    fn train_batch(&self) -> usize;
+    /// Eval batch size.
+    fn eval_batch(&self) -> usize;
+    /// Flat parameter count.
+    fn n_params(&self) -> usize;
+
+    /// Compute gradients for all P learners.  `batch` holds P·B rows in
+    /// learner order; `grads_out[j]` receives learner j's flat gradient.
+    fn grads(
+        &mut self,
+        replicas: &[FlatParams],
+        batch: &BatchBuf,
+        grads_out: &mut [FlatParams],
+        outs: &mut [StepOut],
+    ) -> Result<()>;
+
+    /// Evaluate one batch on a single parameter vector; returns
+    /// (sum_loss, ncorrect) over the `n` valid rows (the batch may be
+    /// padded up to `eval_batch()` rows — implementations must ignore the
+    /// padding rows).
+    fn eval_batch_stats(
+        &mut self,
+        params: &FlatParams,
+        batch: &BatchBuf,
+        n: usize,
+    ) -> Result<(f32, f32)>;
+
+    /// Units per row for loss/accuracy normalization (1 for classification,
+    /// seq_len for LM token-level metrics).
+    fn units_per_row(&self) -> usize {
+        1
+    }
+}

@@ -1,0 +1,142 @@
+//! Parameter snapshots: save / load flat parameter vectors (plus a JSON
+//! sidecar describing the layout) for warm starts, cross-run comparisons,
+//! and exporting trained models.
+//!
+//! Format: `<path>` is a little-endian f32 blob identical to the AOT
+//! `*.init.bin` convention; `<path>.json` records the layout, the model
+//! name, and a checksum so mismatched loads fail loudly.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::params::{FlatParams, ParamLayout};
+use crate::util::json::Json;
+
+/// FNV-1a over the raw bytes — cheap integrity check.
+fn checksum(params: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for v in params {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+pub fn save(path: &Path, model: &str, layout: &ParamLayout, params: &FlatParams) -> Result<()> {
+    if params.len() != layout.total {
+        bail!("params len {} != layout total {}", params.len(), layout.total);
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let bytes: Vec<u8> = params.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(path, &bytes).with_context(|| format!("writing {}", path.display()))?;
+
+    let mut tensors = Vec::new();
+    for e in &layout.entries {
+        let mut o = Json::obj();
+        o.set("name", Json::from(e.name.as_str()))
+            .set("shape", Json::Arr(e.shape.iter().map(|&d| Json::from(d)).collect()))
+            .set("offset", Json::from(e.offset))
+            .set("size", Json::from(e.size));
+        tensors.push(o);
+    }
+    let mut meta = Json::obj();
+    meta.set("model", Json::from(model))
+        .set("n_params", Json::from(layout.total))
+        .set("checksum", Json::from(format!("{:016x}", checksum(params))))
+        .set("params", Json::Arr(tensors));
+    std::fs::write(sidecar(path), meta.pretty())?;
+    Ok(())
+}
+
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub model: String,
+    pub layout: ParamLayout,
+    pub params: FlatParams,
+}
+
+pub fn load(path: &Path) -> Result<Snapshot> {
+    let meta_text = std::fs::read_to_string(sidecar(path))
+        .with_context(|| format!("reading sidecar {}", sidecar(path).display()))?;
+    let meta = Json::parse(&meta_text)?;
+    let layout = ParamLayout::from_json(meta.req("params")?)?;
+    let model = meta.req("model")?.as_str()?.to_string();
+    let params = crate::params::load_init_blob(path, &layout)?;
+    let expect = meta.req("checksum")?.as_str()?.to_string();
+    let got = format!("{:016x}", checksum(&params));
+    if got != expect {
+        bail!("checkpoint {} corrupt: checksum {got} != {expect}", path.display());
+    }
+    Ok(Snapshot { model, layout, params })
+}
+
+fn sidecar(path: &Path) -> std::path::PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".json");
+    std::path::PathBuf::from(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamEntry;
+
+    fn layout() -> ParamLayout {
+        ParamLayout::from_entries(vec![
+            ParamEntry { name: "0/w".into(), shape: vec![2, 3], offset: 0, size: 6 },
+            ParamEntry { name: "0/b".into(), shape: vec![3], offset: 6, size: 3 },
+        ])
+        .unwrap()
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hier_avg_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let l = layout();
+        let params: Vec<f32> = (0..9).map(|i| i as f32 * 0.25).collect();
+        let p = tmp("a.bin");
+        save(&p, "test-model", &l, &params).unwrap();
+        let snap = load(&p).unwrap();
+        assert_eq!(snap.model, "test-model");
+        assert_eq!(snap.layout, l);
+        assert_eq!(snap.params, params);
+    }
+
+    #[test]
+    fn corrupt_blob_detected() {
+        let l = layout();
+        let params = vec![1.0f32; 9];
+        let p = tmp("b.bin");
+        save(&p, "m", &l, &params).unwrap();
+        // Flip a byte.
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[5] ^= 0xff;
+        std::fs::write(&p, bytes).unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("checksum"));
+    }
+
+    #[test]
+    fn wrong_length_detected() {
+        let l = layout();
+        let p = tmp("c.bin");
+        save(&p, "m", &l, &vec![0.5f32; 9]).unwrap();
+        std::fs::write(&p, [0u8; 8]).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn save_rejects_mismatched_params() {
+        let l = layout();
+        assert!(save(&tmp("d.bin"), "m", &l, &vec![0.0; 5]).is_err());
+    }
+}

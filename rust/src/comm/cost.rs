@@ -1,0 +1,208 @@
+//! α–β cost model for hierarchical reductions.
+//!
+//! A message of M bytes over a link costs `α + M·β` seconds.  Defaults are
+//! calibrated to the paper's platform (IBM Minsky: NVLink ~40 GB/s intra
+//! node, EDR Infiniband ~10 GB/s inter node, α ≈ 5 µs / 20 µs).
+
+use crate::topology::LinkClass;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Per-message latency on an intra-node link (seconds).
+    pub alpha_intra: f64,
+    /// Per-byte time on an intra-node link (seconds/byte).
+    pub beta_intra: f64,
+    /// Per-message latency on an inter-node link (seconds).
+    pub alpha_inter: f64,
+    /// Per-byte time on an inter-node link (seconds/byte).
+    pub beta_inter: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            alpha_intra: 5e-6,
+            beta_intra: 1.0 / 40e9,
+            alpha_inter: 20e-6,
+            beta_inter: 1.0 / 10e9,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReduceStrategy {
+    /// Gather everything to a root, then broadcast: 2(n−1) sequential
+    /// messages of the full payload.
+    Naive,
+    /// Binomial tree reduce + broadcast: 2·ceil(log2 n) rounds.
+    Tree,
+    /// Ring allreduce: 2(n−1) rounds of M/n-sized chunks.
+    #[default]
+    Ring,
+}
+
+impl ReduceStrategy {
+    pub fn parse(s: &str) -> Option<ReduceStrategy> {
+        match s {
+            "naive" => Some(ReduceStrategy::Naive),
+            "tree" => Some(ReduceStrategy::Tree),
+            "ring" => Some(ReduceStrategy::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceStrategy::Naive => "naive",
+            ReduceStrategy::Tree => "tree",
+            ReduceStrategy::Ring => "ring",
+        }
+    }
+}
+
+impl CostModel {
+    fn link_params(&self, link: LinkClass) -> (f64, f64) {
+        match link {
+            LinkClass::IntraNode => (self.alpha_intra, self.beta_intra),
+            LinkClass::InterNode => (self.alpha_inter, self.beta_inter),
+        }
+    }
+
+    /// Modelled wall time of an allreduce over `n` participants exchanging
+    /// `bytes` each, on links of class `link`.
+    pub fn allreduce_seconds(
+        &self,
+        n: usize,
+        bytes: usize,
+        link: LinkClass,
+        strategy: ReduceStrategy,
+    ) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let (alpha, beta) = self.link_params(link);
+        let m = bytes as f64;
+        match strategy {
+            ReduceStrategy::Naive => 2.0 * (n as f64 - 1.0) * (alpha + m * beta),
+            ReduceStrategy::Tree => {
+                let rounds = (n as f64).log2().ceil();
+                2.0 * rounds * (alpha + m * beta)
+            }
+            ReduceStrategy::Ring => {
+                let n_f = n as f64;
+                2.0 * (n_f - 1.0) * alpha + 2.0 * ((n_f - 1.0) / n_f) * m * beta
+            }
+        }
+    }
+
+    /// Bytes crossing the network for one allreduce (per participant,
+    /// counting sends).
+    pub fn allreduce_bytes(&self, n: usize, bytes: usize, strategy: ReduceStrategy) -> u64 {
+        if n <= 1 {
+            return 0;
+        }
+        let m = bytes as u64;
+        match strategy {
+            ReduceStrategy::Naive => 2 * (n as u64 - 1) * m,
+            ReduceStrategy::Tree => 2 * (n as u64 - 1) * m,
+            ReduceStrategy::Ring => {
+                // each rank sends 2(n-1) chunks of m/n
+                2 * (n as u64 - 1) * (m / n as u64) * n as u64
+            }
+        }
+    }
+}
+
+/// Running communication account for one training run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    pub local_reductions: u64,
+    pub global_reductions: u64,
+    pub local_bytes: u64,
+    pub global_bytes: u64,
+    pub local_seconds: f64,
+    pub global_seconds: f64,
+}
+
+impl CommStats {
+    pub fn total_seconds(&self) -> f64 {
+        self.local_seconds + self.global_seconds
+    }
+
+    pub fn merge(&mut self, other: &CommStats) {
+        self.local_reductions += other.local_reductions;
+        self.global_reductions += other.global_reductions;
+        self.local_bytes += other.local_bytes;
+        self.global_bytes += other.global_bytes;
+        self.local_seconds += other.local_seconds;
+        self.global_seconds += other.global_seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::LinkClass::*;
+
+    #[test]
+    fn single_participant_is_free() {
+        let cm = CostModel::default();
+        for s in [ReduceStrategy::Naive, ReduceStrategy::Tree, ReduceStrategy::Ring] {
+            assert_eq!(cm.allreduce_seconds(1, 1 << 20, InterNode, s), 0.0);
+        }
+    }
+
+    #[test]
+    fn ring_beats_naive_for_large_payloads() {
+        let cm = CostModel::default();
+        let bytes = 400 << 20; // 100M params
+        let naive = cm.allreduce_seconds(16, bytes, InterNode, ReduceStrategy::Naive);
+        let ring = cm.allreduce_seconds(16, bytes, InterNode, ReduceStrategy::Ring);
+        assert!(ring < naive / 8.0, "ring={ring} naive={naive}");
+    }
+
+    #[test]
+    fn tree_beats_naive_latency() {
+        let cm = CostModel::default();
+        // tiny payload => latency dominated
+        let naive = cm.allreduce_seconds(64, 4, InterNode, ReduceStrategy::Naive);
+        let tree = cm.allreduce_seconds(64, 4, InterNode, ReduceStrategy::Tree);
+        assert!(tree < naive);
+    }
+
+    #[test]
+    fn intra_is_cheaper_than_inter() {
+        let cm = CostModel::default();
+        let bytes = 4 << 20;
+        for s in [ReduceStrategy::Naive, ReduceStrategy::Tree, ReduceStrategy::Ring] {
+            assert!(
+                cm.allreduce_seconds(4, bytes, IntraNode, s)
+                    < cm.allreduce_seconds(4, bytes, InterNode, s)
+            );
+        }
+    }
+
+    #[test]
+    fn cost_monotone_in_participants_and_bytes() {
+        let cm = CostModel::default();
+        for s in [ReduceStrategy::Naive, ReduceStrategy::Tree, ReduceStrategy::Ring] {
+            assert!(
+                cm.allreduce_seconds(8, 1 << 20, InterNode, s)
+                    <= cm.allreduce_seconds(16, 1 << 20, InterNode, s)
+            );
+            assert!(
+                cm.allreduce_seconds(8, 1 << 20, InterNode, s)
+                    < cm.allreduce_seconds(8, 1 << 22, InterNode, s)
+            );
+        }
+    }
+
+    #[test]
+    fn stats_merge() {
+        let mut a = CommStats { local_reductions: 1, global_seconds: 0.5, ..Default::default() };
+        let b = CommStats { local_reductions: 2, global_seconds: 1.0, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.local_reductions, 3);
+        assert!((a.global_seconds - 1.5).abs() < 1e-12);
+    }
+}

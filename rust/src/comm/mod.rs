@@ -1,0 +1,19 @@
+//! Simulated collectives over flat parameter buffers + the hierarchical
+//! communication cost model.
+//!
+//! The averaging *algebra* is executed for real (replicas' buffers are
+//! reduced and synchronized exactly as CUDA-aware MPI would), so training
+//! dynamics are exact.  The *time* of each reduction is charged to an α–β
+//! model with distinct intra-node (NVLink-class) and inter-node
+//! (Infiniband-class) links — this is the quantity the paper argues about
+//! but could not measure (§4.3: their PyTorch stack lacked GPU-direct).
+//!
+//! Three allreduce schedules are modelled (naive gather+broadcast, binary
+//! tree, ring); all compute the identical arithmetic mean (summation order
+//! is fixed), only the charged time differs.
+
+pub mod cost;
+pub mod reduce;
+
+pub use cost::{CommStats, CostModel, ReduceStrategy};
+pub use reduce::Reducer;

@@ -1,0 +1,224 @@
+//! The reducer: in-place group averaging over learner replicas, with cost
+//! accounting against the topology's link classes.
+//!
+//! This is the L3 hot path (profiled in benches/reduction.rs).  The mean is
+//! accumulated into a reusable scratch buffer with a fixed summation order
+//! (learner-index ascending), so results are identical across reduce
+//! strategies and across runs.
+
+use crate::comm::cost::{CommStats, CostModel, ReduceStrategy};
+use crate::params::FlatParams;
+use crate::topology::{LinkClass, Topology};
+
+pub struct Reducer {
+    pub cost: CostModel,
+    pub strategy: ReduceStrategy,
+    pub stats: CommStats,
+    scratch: Vec<f32>,
+}
+
+impl Reducer {
+    pub fn new(cost: CostModel, strategy: ReduceStrategy, n_params: usize) -> Reducer {
+        Reducer { cost, strategy, stats: CommStats::default(), scratch: vec![0.0; n_params] }
+    }
+
+    /// Average the replicas in `group` (indices into `replicas`) and write
+    /// the mean back into every member.  Returns the modelled seconds.
+    pub fn average_group(
+        &mut self,
+        replicas: &mut [FlatParams],
+        group: std::ops::Range<usize>,
+        link: LinkClass,
+    ) -> f64 {
+        let n = group.len();
+        debug_assert!(n >= 1);
+        let bytes = self.scratch.len() * 4;
+        mean_into(&mut self.scratch, replicas, group.clone());
+        // Broadcast the mean back to every member.  §Perf note: a threaded
+        // fan-out was tried here and reverted — this image exposes a single
+        // hardware thread, so the copies are already at memcpy speed.
+        for j in group.clone() {
+            replicas[j].copy_from_slice(&self.scratch);
+        }
+        let secs = self.cost.allreduce_seconds(n, bytes, link, self.strategy);
+        let moved = self.cost.allreduce_bytes(n, bytes, self.strategy);
+        match link {
+            LinkClass::IntraNode => {
+                self.stats.local_reductions += 1;
+                self.stats.local_bytes += moved;
+                self.stats.local_seconds += secs;
+            }
+            LinkClass::InterNode => {
+                self.stats.global_reductions += 1;
+                self.stats.global_bytes += moved;
+                self.stats.global_seconds += secs;
+            }
+        }
+        secs
+    }
+
+    /// Local averaging step: average within every cluster of the topology.
+    /// All clusters reduce concurrently in the modelled time (max over
+    /// clusters = any one cluster, since they are symmetric), so only one
+    /// cluster's time is charged, but every cluster's event/bytes are
+    /// counted.
+    pub fn local_average(&mut self, replicas: &mut [FlatParams], topo: &Topology) -> f64 {
+        if topo.s <= 1 {
+            return 0.0;
+        }
+        let mut max_secs: f64 = 0.0;
+        let mut total_secs: f64 = 0.0;
+        for c in 0..topo.n_clusters() {
+            let secs =
+                self.average_group(replicas, topo.cluster_members(c), LinkClass::IntraNode);
+            max_secs = max_secs.max(secs);
+            total_secs += secs;
+        }
+        // Clusters are concurrent: subtract the serialized surplus.
+        self.stats.local_seconds -= total_secs - max_secs;
+        max_secs
+    }
+
+    /// Global averaging: one allreduce over all P learners (inter-node
+    /// fabric).
+    pub fn global_average(&mut self, replicas: &mut [FlatParams], topo: &Topology) -> f64 {
+        self.average_group(replicas, 0..topo.p, LinkClass::InterNode)
+    }
+
+    /// Compute the mean across ALL replicas into `out` without touching the
+    /// replicas (used to evaluate the paper's w̃ mid-interval).
+    pub fn mean_of(&self, replicas: &[FlatParams], out: &mut FlatParams) {
+        out.resize(self.scratch.len(), 0.0);
+        mean_into(out, replicas, 0..replicas.len());
+    }
+}
+
+/// Cache-block size for the accumulation loop (floats; 16 KiB fits L1 with
+/// room for two source streams).  §Perf: the naive formulation makes S
+/// full passes over `out` (S+1 streams of DRAM traffic); blocking keeps the
+/// accumulator chunk resident so `out` is written once, which measured
+/// 1.6-2.3x faster at 3.4M params (see EXPERIMENTS.md §Perf).
+const MEAN_BLOCK: usize = 4096;
+
+/// `out = mean(replicas[group])` with fixed (index-ascending) summation
+/// order.  Hot loop: blocked accumulation, auto-vectorized inner loops.
+fn mean_into(out: &mut [f32], replicas: &[FlatParams], group: std::ops::Range<usize>) {
+    let n = group.len();
+    let first = group.start;
+    if n == 1 {
+        out.copy_from_slice(&replicas[first]);
+        return;
+    }
+    let inv = 1.0 / n as f32;
+    let len = out.len();
+    let mut start = 0usize;
+    while start < len {
+        let end = (start + MEAN_BLOCK).min(len);
+        let blk = &mut out[start..end];
+        blk.copy_from_slice(&replicas[first][start..end]);
+        let mut rest = first + 1..group.end;
+        // Pairs of sources per pass: halves the accumulator re-reads.
+        while rest.len() >= 2 {
+            let a = rest.next().unwrap();
+            let b = rest.next().unwrap();
+            let (sa, sb) = (&replicas[a][start..end], &replicas[b][start..end]);
+            for ((o, x), y) in blk.iter_mut().zip(sa).zip(sb) {
+                *o += *x + *y;
+            }
+        }
+        if let Some(a) = rest.next() {
+            for (o, x) in blk.iter_mut().zip(&replicas[a][start..end]) {
+                *o += *x;
+            }
+        }
+        for o in blk.iter_mut() {
+            *o *= inv;
+        }
+        start = end;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn replicas(p: usize, n: usize) -> Vec<FlatParams> {
+        (0..p).map(|j| (0..n).map(|i| (j * n + i) as f32).collect()).collect()
+    }
+
+    #[test]
+    fn group_mean_exact() {
+        let mut r = replicas(4, 8);
+        let expect: Vec<f32> =
+            (0..8).map(|i| (0..4).map(|j| (j * 8 + i) as f32).sum::<f32>() / 4.0).collect();
+        let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 8);
+        let topo = Topology::new(4, 4).unwrap();
+        red.global_average(&mut r, &topo);
+        for j in 0..4 {
+            assert_eq!(r[j], expect);
+        }
+        assert_eq!(red.stats.global_reductions, 1);
+        assert!(red.stats.global_seconds > 0.0);
+    }
+
+    #[test]
+    fn local_average_only_touches_clusters() {
+        let mut r = replicas(4, 4);
+        let topo = Topology::new(4, 2).unwrap();
+        let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Tree, 4);
+        red.local_average(&mut r, &topo);
+        assert_eq!(r[0], r[1]);
+        assert_eq!(r[2], r[3]);
+        assert_ne!(r[0], r[2]);
+        assert_eq!(red.stats.local_reductions, 2);
+    }
+
+    #[test]
+    fn s1_local_average_is_noop() {
+        let mut r = replicas(3, 4);
+        let before = r.clone();
+        let topo = Topology::new(3, 1).unwrap();
+        let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 4);
+        let secs = red.local_average(&mut r, &topo);
+        assert_eq!(secs, 0.0);
+        assert_eq!(r, before);
+        assert_eq!(red.stats.local_reductions, 0);
+    }
+
+    #[test]
+    fn strategies_agree_numerically() {
+        let topo = Topology::new(8, 4).unwrap();
+        let mut outs = Vec::new();
+        for s in [ReduceStrategy::Naive, ReduceStrategy::Tree, ReduceStrategy::Ring] {
+            let mut r = replicas(8, 16);
+            let mut red = Reducer::new(CostModel::default(), s, 16);
+            red.local_average(&mut r, &topo);
+            red.global_average(&mut r, &topo);
+            outs.push(r);
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
+    }
+
+    #[test]
+    fn mean_of_does_not_mutate() {
+        let r = replicas(3, 4);
+        let before = r.clone();
+        let red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 4);
+        let mut out = Vec::new();
+        red.mean_of(&r, &mut out);
+        assert_eq!(r, before);
+        assert_eq!(out[0], (0.0 + 4.0 + 8.0) / 3.0);
+    }
+
+    #[test]
+    fn concurrent_cluster_time_charged_once() {
+        let topo = Topology::new(8, 4).unwrap();
+        let mut r = replicas(8, 1024);
+        let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 1024);
+        let secs = red.local_average(&mut r, &topo);
+        // Two symmetric clusters run concurrently: charged time equals one
+        // cluster's allreduce, not two.
+        assert!((red.stats.local_seconds - secs).abs() < 1e-12);
+    }
+}

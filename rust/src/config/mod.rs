@@ -1,0 +1,262 @@
+//! Typed run configuration: the single description of a training run the
+//! CLI, examples, repro harness and tests all share.  Loadable from a JSON
+//! config file (configs/*.json) with CLI overrides.
+
+use anyhow::{bail, Context, Result};
+
+use crate::algorithms::HierAvgSchedule;
+use crate::comm::{CostModel, ReduceStrategy};
+use crate::optimizer::LrSchedule;
+use crate::topology::Topology;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO artifacts through PJRT (the production path).
+    Xla,
+    /// Pure-Rust MLP (tests / fast sweeps).
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "xla" => Ok(BackendKind::Xla),
+            "native" => Ok(BackendKind::Native),
+            _ => bail!("unknown backend {s:?} (xla|native)"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Model name from artifacts/manifest.json (or native dims for the
+    /// native backend).
+    pub model: String,
+    pub p: usize,
+    pub s: usize,
+    pub k1: u64,
+    pub k2: u64,
+    pub epochs: usize,
+    /// Nominal training-set size; steps/epoch = train_n / (P·B).
+    pub train_n: usize,
+    pub test_n: usize,
+    pub lr: LrSchedule,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub backend: BackendKind,
+    pub strategy: ReduceStrategy,
+    pub seed: u64,
+    /// Dataset difficulty (classification).
+    pub noise: f32,
+    pub radius: f32,
+    /// Sub-clusters per class (non-convex structure; see data::MixtureSpec).
+    pub subclusters: usize,
+    /// Label-noise probability (keeps gradient variance M > 0).
+    pub label_noise: f32,
+    /// Adaptive-K2 milestones (paper §3.3: "adaptive choice of K2 may be
+    /// better"): at each (epoch, k2) the global interval switches to k2.
+    pub k2_schedule: Vec<(usize, u64)>,
+    /// Evaluate every `eval_every` epochs (always at the last).
+    pub eval_every: usize,
+    /// Record the per-step loss curve.
+    pub record_steps: bool,
+    /// Record every reduction event (step, kind, modelled seconds).
+    pub record_trace: bool,
+    /// Keep the final averaged parameters in the RunRecord (for
+    /// checkpointing / warm starts).
+    pub keep_final_params: bool,
+    /// Warm-start from a checkpoint saved with `checkpoint::save`.
+    pub init_params: Option<String>,
+    pub cost: CostModel,
+}
+
+impl RunConfig {
+    pub fn defaults(model: &str) -> RunConfig {
+        RunConfig {
+            model: model.to_string(),
+            p: 16,
+            s: 4,
+            k1: 4,
+            k2: 32,
+            epochs: 20,
+            train_n: 4096,
+            test_n: 1024,
+            lr: LrSchedule::StepDecay { initial: 0.1, milestones: vec![(15, 0.01)] },
+            momentum: 0.0,
+            weight_decay: 0.0,
+            backend: BackendKind::Xla,
+            strategy: ReduceStrategy::Ring,
+            seed: 42,
+            noise: 1.4,
+            radius: 1.0,
+            subclusters: 8,
+            label_noise: 0.05,
+            k2_schedule: Vec::new(),
+            eval_every: 1,
+            record_steps: false,
+            record_trace: false,
+            keep_final_params: false,
+            init_params: None,
+            cost: CostModel::default(),
+        }
+    }
+
+    pub fn topology(&self) -> Result<Topology> {
+        Topology::new(self.p, self.s)
+    }
+
+    pub fn schedule(&self) -> Result<HierAvgSchedule> {
+        HierAvgSchedule::new(self.k1, self.k2)
+    }
+
+    /// Effective K2 at an epoch under the adaptive schedule.
+    pub fn k2_at(&self, epoch: usize) -> u64 {
+        let mut k2 = self.k2;
+        for &(e, v) in &self.k2_schedule {
+            if epoch >= e {
+                k2 = v;
+            }
+        }
+        k2
+    }
+
+    /// Effective averaging schedule at an epoch (K1 clamps to K2).
+    pub fn schedule_at(&self, epoch: usize) -> Result<HierAvgSchedule> {
+        let k2 = self.k2_at(epoch);
+        HierAvgSchedule::new(self.k1.min(k2), k2)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.topology()?;
+        self.schedule()?;
+        for &(e, _) in &self.k2_schedule {
+            self.schedule_at(e)?;
+        }
+        if self.epochs == 0 || self.train_n == 0 {
+            bail!("epochs and train_n must be positive");
+        }
+        Ok(())
+    }
+
+    /// A short identifier for logs and CSV columns.
+    pub fn label(&self) -> String {
+        format!(
+            "{}-p{}-s{}-k1_{}-k2_{}",
+            self.model, self.p, self.s, self.k1, self.k2
+        )
+    }
+
+    /// Load from a JSON file then apply `apply_json` overrides.
+    pub fn from_json_file(path: &std::path::Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let model = j.req("model")?.as_str()?.to_string();
+        let mut cfg = RunConfig::defaults(&model);
+        cfg.apply_json(&j)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let obj = j.as_obj()?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "model" => self.model = v.as_str()?.to_string(),
+                "p" => self.p = v.as_usize()?,
+                "s" => self.s = v.as_usize()?,
+                "k1" => self.k1 = v.as_usize()? as u64,
+                "k2" => self.k2 = v.as_usize()? as u64,
+                "epochs" => self.epochs = v.as_usize()?,
+                "train_n" => self.train_n = v.as_usize()?,
+                "test_n" => self.test_n = v.as_usize()?,
+                "lr" => self.lr = LrSchedule::parse(v.as_str()?)?,
+                "momentum" => self.momentum = v.as_f64()? as f32,
+                "weight_decay" => self.weight_decay = v.as_f64()? as f32,
+                "backend" => self.backend = BackendKind::parse(v.as_str()?)?,
+                "strategy" => {
+                    self.strategy = ReduceStrategy::parse(v.as_str()?)
+                        .ok_or_else(|| anyhow::anyhow!("bad strategy"))?
+                }
+                "seed" => self.seed = v.as_usize()? as u64,
+                "noise" => self.noise = v.as_f64()? as f32,
+                "radius" => self.radius = v.as_f64()? as f32,
+                "subclusters" => self.subclusters = v.as_usize()?,
+                "label_noise" => self.label_noise = v.as_f64()? as f32,
+                "k2_schedule" => {
+                    self.k2_schedule = v
+                        .as_arr()?
+                        .iter()
+                        .map(|m| {
+                            let pair = m.as_arr()?;
+                            anyhow::ensure!(pair.len() == 2, "k2_schedule entries are [epoch, k2]");
+                            Ok((pair[0].as_usize()?, pair[1].as_usize()? as u64))
+                        })
+                        .collect::<Result<Vec<_>>>()?
+                }
+                "eval_every" => self.eval_every = v.as_usize()?,
+                "record_steps" => self.record_steps = v.as_bool()?,
+                "record_trace" => self.record_trace = v.as_bool()?,
+                "init_params" => self.init_params = Some(v.as_str()?.to_string()),
+                "alpha_intra" => self.cost.alpha_intra = v.as_f64()?,
+                "beta_intra" => self.cost.beta_intra = v.as_f64()?,
+                "alpha_inter" => self.cost.alpha_inter = v.as_f64()?,
+                "beta_inter" => self.cost.beta_inter = v.as_f64()?,
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::defaults("resnet18_sim").validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_combinations_rejected() {
+        let mut c = RunConfig::defaults("m");
+        c.p = 10;
+        c.s = 4;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::defaults("m");
+        c.k1 = 9;
+        c.k2 = 8;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_override() {
+        let mut c = RunConfig::defaults("m");
+        let j = Json::parse(
+            r#"{"p": 32, "k1": 2, "k2": 8, "lr": "const:0.05", "backend": "native",
+                "strategy": "tree", "record_steps": true}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.p, 32);
+        assert_eq!(c.k2, 8);
+        assert_eq!(c.lr, LrSchedule::Constant(0.05));
+        assert_eq!(c.backend, BackendKind::Native);
+        assert_eq!(c.strategy, ReduceStrategy::Tree);
+        assert!(c.record_steps);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = RunConfig::defaults("m");
+        let j = Json::parse(r#"{"bogus": 1}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn label_is_stable() {
+        let c = RunConfig::defaults("resnet18_sim");
+        assert_eq!(c.label(), "resnet18_sim-p16-s4-k1_4-k2_32");
+    }
+}

@@ -1,0 +1,290 @@
+//! The trainer: Algorithm 1 of the paper, orchestrated at L3.
+//!
+//! Owns the P learner replicas, their optimizer states and PRNG streams,
+//! the averaging schedule, the reducer (+ cost model), and the metrics
+//! sink.  One `step` = every learner takes one local SGD step (one stacked
+//! backend dispatch), then the schedule decides whether clusters average
+//! locally or all P average globally.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::algorithms::ReduceEvent;
+use crate::backend::{StepBackend, StepOut};
+use crate::comm::Reducer;
+use crate::config::RunConfig;
+use crate::data::{BatchBuf, DataSource};
+use crate::metrics::{EpochStats, RunRecord};
+use crate::optimizer::Sgd;
+use crate::params::FlatParams;
+use crate::util::rng::Pcg32;
+
+pub struct Trainer<'a> {
+    pub cfg: &'a RunConfig,
+    pub backend: Box<dyn StepBackend>,
+    pub data: Box<dyn DataSource>,
+    pub init: FlatParams,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(
+        cfg: &'a RunConfig,
+        backend: Box<dyn StepBackend>,
+        data: Box<dyn DataSource>,
+        init: FlatParams,
+    ) -> Result<Trainer<'a>> {
+        cfg.validate()?;
+        if init.len() != backend.n_params() {
+            bail!("init has {} params, backend expects {}", init.len(), backend.n_params());
+        }
+        Ok(Trainer { cfg, backend, data, init })
+    }
+
+    /// Steps per epoch: one epoch processes `train_n` samples across all
+    /// P·B per-step samples (matching the paper's fixed-data budget).
+    pub fn steps_per_epoch(&self) -> usize {
+        (self.data.train_n() / (self.cfg.p * self.backend.train_batch())).max(1)
+    }
+
+    /// Per-step modelled compute seconds for the simulated cluster: all P
+    /// learners step concurrently; fwd+bwd ≈ 6·B·n_params flops on a
+    /// P100-class device (DESIGN.md §1: modelled, not measured).
+    fn sim_step_seconds(&self) -> f64 {
+        const DEVICE_FLOPS: f64 = 10.6e12; // P100 fp32 peak
+        6.0 * self.backend.train_batch() as f64 * self.backend.n_params() as f64 / DEVICE_FLOPS
+    }
+
+    pub fn run(&mut self) -> Result<RunRecord> {
+        let cfg = self.cfg;
+        let topo = cfg.topology()?;
+        let p = cfg.p;
+        let b = self.backend.train_batch();
+        let n_params = self.backend.n_params();
+
+        let mut replicas: Vec<FlatParams> = vec![self.init.clone(); p];
+        let mut grads: Vec<FlatParams> = vec![vec![0.0; n_params]; p];
+        let mut outs: Vec<StepOut> = vec![StepOut::default(); p];
+        let mut opts: Vec<Sgd> =
+            (0..p).map(|_| Sgd::new(cfg.momentum, cfg.weight_decay, n_params)).collect();
+        let mut root = Pcg32::new(cfg.seed, 0x48494552); // "HIER"
+        let mut rngs: Vec<Pcg32> = (0..p).map(|j| root.fork(j as u64)).collect();
+        let mut reducer = Reducer::new(cfg.cost, cfg.strategy, n_params);
+
+        let mut record = RunRecord { label: cfg.label(), ..Default::default() };
+        let spe = self.steps_per_epoch();
+        let step_secs = self.sim_step_seconds();
+        let units = self.backend.units_per_row() as f64;
+        let started = Instant::now();
+        let mut batch = BatchBuf::default();
+        let mut wbar: FlatParams = Vec::new();
+        let mut t: u64 = 0;
+
+        for epoch in 0..cfg.epochs {
+            let lr = cfg.lr.lr_at(epoch);
+            // Adaptive K2 (paper §3.3): the schedule may change per epoch.
+            let sched = cfg.schedule_at(epoch)?;
+            let mut ep_loss = 0.0f64;
+            let mut ep_correct = 0.0f64;
+            for _ in 0..spe {
+                batch.clear();
+                for rng in rngs.iter_mut() {
+                    self.data.fill_train(rng, b, &mut batch);
+                }
+                self.backend.grads(&replicas, &batch, &mut grads, &mut outs)?;
+                for j in 0..p {
+                    opts[j].apply(&mut replicas[j], &grads[j], lr);
+                }
+                t += 1;
+                match sched.event_after(t) {
+                    ReduceEvent::Local => {
+                        let secs = reducer.local_average(&mut replicas, &topo);
+                        if cfg.record_trace {
+                            record.trace.push(crate::metrics::TraceEvent {
+                                step: t,
+                                kind: 'L',
+                                seconds: secs,
+                            });
+                        }
+                    }
+                    ReduceEvent::Global => {
+                        let secs = reducer.global_average(&mut replicas, &topo);
+                        if cfg.record_trace {
+                            record.trace.push(crate::metrics::TraceEvent {
+                                step: t,
+                                kind: 'G',
+                                seconds: secs,
+                            });
+                        }
+                    }
+                    ReduceEvent::None => {}
+                }
+                let mean_loss =
+                    outs.iter().map(|o| o.loss as f64).sum::<f64>() / p as f64;
+                ep_loss += mean_loss;
+                ep_correct += outs.iter().map(|o| o.ncorrect as f64).sum::<f64>();
+                if cfg.record_steps {
+                    record.step_loss.push(mean_loss as f32);
+                }
+            }
+            record.sim_compute_seconds += spe as f64 * step_secs;
+
+            let do_eval = epoch % cfg.eval_every.max(1) == 0 || epoch + 1 == cfg.epochs;
+            let (test_loss, test_acc) = if do_eval {
+                // Evaluate the paper's w̃: the global mean of all replicas
+                // (without perturbing them if t is mid-interval).
+                reducer.mean_of(&replicas, &mut wbar);
+                self.evaluate(&wbar)?
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+
+            record.epochs.push(EpochStats {
+                epoch,
+                train_loss: ep_loss / spe as f64,
+                train_acc: ep_correct / (spe * p * b) as f64 / units,
+                test_loss,
+                test_acc,
+                sim_seconds: record.sim_compute_seconds + reducer.stats.total_seconds(),
+                wall_seconds: started.elapsed().as_secs_f64(),
+            });
+        }
+
+        record.comm = reducer.stats;
+        record.total_steps = t;
+        if cfg.keep_final_params {
+            let mut final_params = Vec::new();
+            reducer.mean_of(&replicas, &mut final_params);
+            record.final_params = Some(final_params);
+        }
+        Ok(record)
+    }
+
+    /// Mean loss + accuracy of one parameter vector over the full eval set
+    /// (full batches only — the XLA eval artifact has a fixed batch shape).
+    pub fn evaluate(&mut self, params: &FlatParams) -> Result<(f64, f64)> {
+        let eb = self.backend.eval_batch();
+        let units = self.backend.units_per_row() as f64;
+        let n_total = self.data.eval_n();
+        let n_batches = n_total / eb;
+        if n_batches == 0 {
+            bail!("eval set ({n_total}) smaller than eval batch ({eb})");
+        }
+        let mut buf = BatchBuf::default();
+        let mut sum_loss = 0.0f64;
+        let mut ncorrect = 0.0f64;
+        for i in 0..n_batches {
+            buf.clear();
+            let filled = self.data.fill_eval(i * eb, eb, &mut buf);
+            debug_assert_eq!(filled, eb);
+            let (l, c) = self.backend.eval_batch_stats(params, &buf, eb)?;
+            sum_loss += l as f64;
+            ncorrect += c as f64;
+        }
+        let rows = (n_batches * eb) as f64;
+        Ok((sum_loss / (rows * units), ncorrect / (rows * units)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+    use crate::data::{ClassifyData, MixtureSpec};
+    use crate::native::NativeMlp;
+
+    fn quick_cfg() -> RunConfig {
+        let mut cfg = RunConfig::defaults("native-test");
+        cfg.p = 4;
+        cfg.s = 2;
+        cfg.k1 = 2;
+        cfg.k2 = 4;
+        cfg.epochs = 4;
+        cfg.train_n = 512;
+        cfg.test_n = 128;
+        cfg.backend = BackendKind::Native;
+        cfg.lr = crate::optimizer::LrSchedule::Constant(0.1);
+        cfg.noise = 0.6;
+        cfg
+    }
+
+    fn make_trainer(cfg: &RunConfig) -> Trainer<'_> {
+        let dims = [16usize, 32, 4];
+        let backend = NativeMlp::new(&dims, 8, 32).unwrap();
+        let data = ClassifyData::generate(MixtureSpec {
+            dim: 16,
+            classes: 4,
+            train_n: cfg.train_n,
+            test_n: cfg.test_n,
+            radius: cfg.radius,
+            noise: cfg.noise,
+            subclusters: 1,
+            label_noise: 0.0,
+            seed: cfg.seed,
+        });
+        let mut rng = Pcg32::seeded(cfg.seed);
+        let init = backend.init(&mut rng);
+        Trainer::new(cfg, Box::new(backend), Box::new(data), init).unwrap()
+    }
+
+    #[test]
+    fn training_learns() {
+        let cfg = quick_cfg();
+        let mut tr = make_trainer(&cfg);
+        let rec = tr.run().unwrap();
+        assert_eq!(rec.epochs.len(), 4);
+        let first = rec.epochs.first().unwrap();
+        let last = rec.epochs.last().unwrap();
+        assert!(last.train_loss < first.train_loss);
+        assert!(last.test_acc > 0.5, "test_acc={}", last.test_acc);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let cfg = quick_cfg();
+        let a = make_trainer(&cfg).run().unwrap();
+        let b = make_trainer(&cfg).run().unwrap();
+        assert_eq!(a.epochs.len(), b.epochs.len());
+        for (x, y) in a.epochs.iter().zip(&b.epochs) {
+            assert_eq!(x.train_loss, y.train_loss);
+            assert_eq!(x.test_acc, y.test_acc);
+        }
+    }
+
+    #[test]
+    fn comm_counts_match_schedule() {
+        let cfg = quick_cfg();
+        let mut tr = make_trainer(&cfg);
+        let rec = tr.run().unwrap();
+        let sched = cfg.schedule().unwrap();
+        let (g, l) = sched.reduction_counts(rec.total_steps);
+        assert_eq!(rec.comm.global_reductions, g);
+        // Each Local event fires one reduction per cluster.
+        let clusters = (cfg.p / cfg.s) as u64;
+        assert_eq!(rec.comm.local_reductions, l * clusters);
+    }
+
+    #[test]
+    fn sync_sgd_keeps_replicas_identical() {
+        let mut cfg = quick_cfg();
+        cfg.k1 = 1;
+        cfg.k2 = 1;
+        cfg.s = 1;
+        let mut tr = make_trainer(&cfg);
+        let rec = tr.run().unwrap();
+        // After every step a global average runs: loss should decrease as a
+        // large-batch SGD.
+        assert!(rec.epochs.last().unwrap().train_loss < rec.epochs[0].train_loss);
+        assert_eq!(rec.comm.global_reductions, rec.total_steps);
+    }
+
+    #[test]
+    fn record_steps_collects_curve() {
+        let mut cfg = quick_cfg();
+        cfg.record_steps = true;
+        let mut tr = make_trainer(&cfg);
+        let spe = tr.steps_per_epoch();
+        let rec = tr.run().unwrap();
+        assert_eq!(rec.step_loss.len(), spe * cfg.epochs);
+    }
+}

@@ -1,0 +1,434 @@
+//! Synthetic datasets + sharded sampling.
+//!
+//! Substitutes for the paper's data (DESIGN.md §1):
+//! - `ClassifyData` — anisotropic Gaussian-mixture classification
+//!   ("cifar-sim" / "imagenet-sim").  Learnable but non-trivial for an MLP;
+//!   gradient variance (the paper's M) is controlled by `noise`.
+//! - `TokenData` — a noisy-deterministic Markov token stream for the
+//!   transformer LM end-to-end driver.
+//!
+//! Sampling follows the paper's model: each learner draws i.i.d. mini-
+//! batches (with replacement) from the training distribution using its own
+//! PRNG stream; an "epoch" is the step count at which P·B·steps equals one
+//! pass over the training set.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataKind {
+    Classify { dim: usize, classes: usize },
+    Tokens { vocab: usize, seq_len: usize },
+}
+
+/// A (possibly stacked) batch: MLP models use `xf`, LM models use `xi`.
+#[derive(Debug, Clone, Default)]
+pub struct BatchBuf {
+    pub xf: Vec<f32>,
+    pub xi: Vec<i32>,
+    pub y: Vec<i32>,
+    /// Rows currently held (across all learners for stacked batches).
+    pub rows: usize,
+}
+
+impl BatchBuf {
+    pub fn clear(&mut self) {
+        self.xf.clear();
+        self.xi.clear();
+        self.y.clear();
+        self.rows = 0;
+    }
+}
+
+pub trait DataSource: Send + Sync {
+    fn kind(&self) -> DataKind;
+    /// Append `b` i.i.d. training samples drawn with `rng`.
+    fn fill_train(&self, rng: &mut Pcg32, b: usize, out: &mut BatchBuf);
+    /// Size of the held-out evaluation set.
+    fn eval_n(&self) -> usize;
+    /// Append evaluation samples `[start, start+b)` (clamped); returns the
+    /// number appended.
+    fn fill_eval(&self, start: usize, b: usize, out: &mut BatchBuf) -> usize;
+    /// Nominal training-set size (defines the epoch length).
+    fn train_n(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// Gaussian-mixture classification
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MixtureSpec {
+    pub dim: usize,
+    pub classes: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+    /// Class-center radius (signal).
+    pub radius: f32,
+    /// Within-class noise std per coordinate.
+    pub noise: f32,
+    /// Sub-clusters per class (> 1 makes the decision boundary non-convex,
+    /// so the MLP's hidden layer is actually needed and training takes
+    /// many epochs — mirroring CIFAR-style difficulty).
+    pub subclusters: usize,
+    /// Probability a training/test label is resampled uniformly: caps the
+    /// reachable accuracy at (1−p) + p/C and keeps gradient variance (the
+    /// paper's M) bounded away from zero through the whole run.
+    pub label_noise: f32,
+    pub seed: u64,
+}
+
+impl MixtureSpec {
+    /// Default "cifar-sim" difficulty for a given model input/classes.
+    pub fn cifar_sim(dim: usize, classes: usize, train_n: usize, test_n: usize) -> MixtureSpec {
+        MixtureSpec {
+            dim,
+            classes,
+            train_n,
+            test_n,
+            radius: 1.0,
+            noise: 1.4,
+            subclusters: 8,
+            label_noise: 0.05,
+            seed: 1234,
+        }
+    }
+}
+
+pub struct ClassifyData {
+    pub spec: MixtureSpec,
+    centers: Vec<f32>, // classes * dim
+    train_x: Vec<f32>, // train_n * dim
+    train_y: Vec<i32>,
+    test_x: Vec<f32>,
+    test_y: Vec<i32>,
+}
+
+impl ClassifyData {
+    pub fn generate(spec: MixtureSpec) -> ClassifyData {
+        assert!(spec.subclusters >= 1, "subclusters must be >= 1");
+        let mut rng = Pcg32::new(spec.seed, 77);
+        let d = spec.dim;
+        let m = spec.subclusters;
+        // Sub-cluster centers: random Gaussian directions scaled so
+        // ||center|| = radius·sqrt(d) (per-coordinate scale `radius`,
+        // comparable to the per-coordinate noise).
+        let mut centers = vec![0.0f32; spec.classes * m * d];
+        for c in 0..spec.classes * m {
+            let row = &mut centers[c * d..(c + 1) * d];
+            let mut norm = 0.0f32;
+            for v in row.iter_mut() {
+                *v = rng.next_normal();
+                norm += *v * *v;
+            }
+            let scale = spec.radius * (d as f32).sqrt() / norm.sqrt().max(1e-12);
+            for v in row.iter_mut() {
+                *v *= scale;
+            }
+        }
+        let gen_split = |n: usize, rng: &mut Pcg32| {
+            let mut xs = vec![0.0f32; n * d];
+            let mut ys = vec![0i32; n];
+            for i in 0..n {
+                let c = rng.next_below(spec.classes as u32) as usize;
+                let sub = rng.next_below(m as u32) as usize;
+                // Label noise: resample the label uniformly with prob p.
+                ys[i] = if spec.label_noise > 0.0 && rng.next_f32() < spec.label_noise {
+                    rng.next_below(spec.classes as u32) as i32
+                } else {
+                    c as i32
+                };
+                let center = &centers[(c * m + sub) * d..(c * m + sub + 1) * d];
+                let row = &mut xs[i * d..(i + 1) * d];
+                for (x, mu) in row.iter_mut().zip(center) {
+                    *x = mu + spec.noise * rng.next_normal();
+                }
+            }
+            (xs, ys)
+        };
+        let mut train_rng = rng.fork(1);
+        let mut test_rng = rng.fork(2);
+        let (train_x, train_y) = gen_split(spec.train_n, &mut train_rng);
+        let (test_x, test_y) = gen_split(spec.test_n, &mut test_rng);
+        ClassifyData { spec, centers, train_x, train_y, test_x, test_y }
+    }
+
+    pub fn center(&self, c: usize) -> &[f32] {
+        &self.centers[c * self.spec.dim..(c + 1) * self.spec.dim]
+    }
+}
+
+impl DataSource for ClassifyData {
+    fn kind(&self) -> DataKind {
+        DataKind::Classify { dim: self.spec.dim, classes: self.spec.classes }
+    }
+
+    fn fill_train(&self, rng: &mut Pcg32, b: usize, out: &mut BatchBuf) {
+        let d = self.spec.dim;
+        for _ in 0..b {
+            let i = rng.next_below(self.spec.train_n as u32) as usize;
+            out.xf.extend_from_slice(&self.train_x[i * d..(i + 1) * d]);
+            out.y.push(self.train_y[i]);
+        }
+        out.rows += b;
+    }
+
+    fn eval_n(&self) -> usize {
+        self.spec.test_n
+    }
+
+    fn fill_eval(&self, start: usize, b: usize, out: &mut BatchBuf) -> usize {
+        let d = self.spec.dim;
+        let end = (start + b).min(self.spec.test_n);
+        for i in start..end {
+            out.xf.extend_from_slice(&self.test_x[i * d..(i + 1) * d]);
+            out.y.push(self.test_y[i]);
+        }
+        let n = end.saturating_sub(start);
+        out.rows += n;
+        n
+    }
+
+    fn train_n(&self) -> usize {
+        self.spec.train_n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Markov token stream (LM)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TokenSpec {
+    pub vocab: usize,
+    pub seq_len: usize,
+    /// Probability the deterministic successor rule fires (vs uniform
+    /// noise).  The LM's achievable loss is the entropy of this channel.
+    pub determinism: f32,
+    /// Nominal corpus size in sequences (epoch bookkeeping).
+    pub train_n: usize,
+    pub test_n: usize,
+    pub seed: u64,
+}
+
+impl TokenSpec {
+    pub fn tiny_corpus(vocab: usize, seq_len: usize) -> TokenSpec {
+        TokenSpec { vocab, seq_len, determinism: 0.85, train_n: 4096, test_n: 256, seed: 99 }
+    }
+}
+
+pub struct TokenData {
+    pub spec: TokenSpec,
+    test_x: Vec<i32>, // test_n * seq_len
+    test_y: Vec<i32>,
+}
+
+impl TokenData {
+    pub fn generate(spec: TokenSpec) -> TokenData {
+        let mut rng = Pcg32::new(spec.seed, 13);
+        let n = spec.test_n;
+        let t = spec.seq_len;
+        let mut test_x = vec![0i32; n * t];
+        let mut test_y = vec![0i32; n * t];
+        for i in 0..n {
+            Self::fill_seq(&spec, &mut rng, &mut test_x[i * t..(i + 1) * t], &mut test_y[i * t..(i + 1) * t]);
+        }
+        TokenData { spec, test_x, test_y }
+    }
+
+    /// Markov rule: successor(v) = (31·v + 7) mod V with prob `determinism`,
+    /// else uniform.  An LM that learns the rule reaches
+    /// H = −p·log p − (1−p)·log((1−p)/V) nats.
+    fn fill_seq(spec: &TokenSpec, rng: &mut Pcg32, x: &mut [i32], y: &mut [i32]) {
+        let v = spec.vocab as u32;
+        let mut tok = rng.next_below(v);
+        for i in 0..x.len() {
+            x[i] = tok as i32;
+            let next = if rng.next_f32() < spec.determinism {
+                (tok.wrapping_mul(31).wrapping_add(7)) % v
+            } else {
+                rng.next_below(v)
+            };
+            y[i] = next as i32;
+            tok = next;
+        }
+    }
+
+    /// The per-token cross entropy (nats) of the generating channel — the
+    /// LM's information-theoretic floor.
+    pub fn entropy_floor(&self) -> f64 {
+        let p = self.spec.determinism as f64;
+        let v = self.spec.vocab as f64;
+        // With prob (1-p) the next token is uniform over V (which includes
+        // the deterministic successor with prob 1/V).
+        let p_succ = p + (1.0 - p) / v;
+        let p_other = (1.0 - p) / v;
+        -(p_succ * p_succ.ln() + (v - 1.0) * p_other * p_other.ln())
+    }
+}
+
+impl DataSource for TokenData {
+    fn kind(&self) -> DataKind {
+        DataKind::Tokens { vocab: self.spec.vocab, seq_len: self.spec.seq_len }
+    }
+
+    fn fill_train(&self, rng: &mut Pcg32, b: usize, out: &mut BatchBuf) {
+        let t = self.spec.seq_len;
+        let base_x = out.xi.len();
+        let base_y = out.y.len();
+        out.xi.resize(base_x + b * t, 0);
+        out.y.resize(base_y + b * t, 0);
+        for i in 0..b {
+            Self::fill_seq(
+                &self.spec,
+                rng,
+                &mut out.xi[base_x + i * t..base_x + (i + 1) * t],
+                &mut out.y[base_y + i * t..base_y + (i + 1) * t],
+            );
+        }
+        out.rows += b;
+    }
+
+    fn eval_n(&self) -> usize {
+        self.spec.test_n
+    }
+
+    fn fill_eval(&self, start: usize, b: usize, out: &mut BatchBuf) -> usize {
+        let t = self.spec.seq_len;
+        let end = (start + b).min(self.spec.test_n);
+        for i in start..end {
+            out.xi.extend_from_slice(&self.test_x[i * t..(i + 1) * t]);
+            out.y.extend_from_slice(&self.test_y[i * t..(i + 1) * t]);
+        }
+        let n = end.saturating_sub(start);
+        out.rows += n;
+        n
+    }
+
+    fn train_n(&self) -> usize {
+        self.spec.train_n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_mixture() -> ClassifyData {
+        ClassifyData::generate(MixtureSpec {
+            dim: 8,
+            classes: 3,
+            train_n: 100,
+            test_n: 40,
+            radius: 1.0,
+            noise: 0.5,
+            subclusters: 1,
+            label_noise: 0.0,
+            seed: 1,
+        })
+    }
+
+    #[test]
+    fn mixture_shapes() {
+        let d = small_mixture();
+        assert_eq!(d.train_x.len(), 800);
+        assert_eq!(d.test_y.len(), 40);
+        assert!(d.train_y.iter().all(|&y| (0..3).contains(&y)));
+    }
+
+    #[test]
+    fn mixture_deterministic() {
+        let a = small_mixture();
+        let b = small_mixture();
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.test_y, b.test_y);
+    }
+
+    #[test]
+    fn mixture_classes_are_separated() {
+        // Samples must be closer (on average) to their own center.
+        let d = small_mixture();
+        let dim = d.spec.dim;
+        let mut own = 0.0f64;
+        let mut other = 0.0f64;
+        let mut n_other = 0.0f64;
+        for i in 0..d.spec.train_n {
+            let x = &d.train_x[i * dim..(i + 1) * dim];
+            for c in 0..3 {
+                let mu = d.center(c);
+                let dist: f32 = x.iter().zip(mu).map(|(a, b)| (a - b) * (a - b)).sum();
+                if c as i32 == d.train_y[i] {
+                    own += dist as f64;
+                } else {
+                    other += dist as f64;
+                    n_other += 1.0;
+                }
+            }
+        }
+        assert!(own / (d.spec.train_n as f64) < other / n_other);
+    }
+
+    #[test]
+    fn batch_fill_appends() {
+        let d = small_mixture();
+        let mut rng = Pcg32::seeded(5);
+        let mut buf = BatchBuf::default();
+        d.fill_train(&mut rng, 4, &mut buf);
+        d.fill_train(&mut rng, 4, &mut buf);
+        assert_eq!(buf.rows, 8);
+        assert_eq!(buf.xf.len(), 8 * 8);
+        assert_eq!(buf.y.len(), 8);
+    }
+
+    #[test]
+    fn eval_fill_clamps() {
+        let d = small_mixture();
+        let mut buf = BatchBuf::default();
+        assert_eq!(d.fill_eval(36, 16, &mut buf), 4);
+        assert_eq!(buf.rows, 4);
+        assert_eq!(d.fill_eval(40, 16, &mut buf), 0);
+    }
+
+    #[test]
+    fn token_rule_mostly_holds() {
+        let td = TokenData::generate(TokenSpec::tiny_corpus(64, 32));
+        let mut rng = Pcg32::seeded(3);
+        let mut buf = BatchBuf::default();
+        td.fill_train(&mut rng, 64, &mut buf);
+        let t = 32;
+        let mut hits = 0;
+        let mut total = 0;
+        for i in 0..64 {
+            for j in 0..t {
+                let x = buf.xi[i * t + j] as u32;
+                let y = buf.y[i * t + j] as u32;
+                if (x.wrapping_mul(31).wrapping_add(7)) % 64 == y {
+                    hits += 1;
+                }
+                total += 1;
+            }
+        }
+        let rate = hits as f64 / total as f64;
+        assert!(rate > 0.8 && rate < 0.95, "rate={rate}");
+    }
+
+    #[test]
+    fn token_targets_shift_by_one() {
+        // y[i] must equal x[i+1] within a sequence.
+        let td = TokenData::generate(TokenSpec::tiny_corpus(32, 16));
+        let mut buf = BatchBuf::default();
+        td.fill_eval(0, 4, &mut buf);
+        for s in 0..4 {
+            for i in 0..15 {
+                assert_eq!(buf.y[s * 16 + i], buf.xi[s * 16 + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn entropy_floor_sane() {
+        let td = TokenData::generate(TokenSpec::tiny_corpus(256, 32));
+        let h = td.entropy_floor();
+        // Between 0 (deterministic) and ln(256) (uniform).
+        assert!(h > 0.3 && h < (256f64).ln(), "h={h}");
+    }
+}

@@ -1,0 +1,205 @@
+//! Assembles a `Trainer` from a `RunConfig`: picks the backend (XLA
+//! artifacts or native), builds the matching synthetic dataset, and loads
+//! the synchronized initial parameters.
+
+use anyhow::{bail, Result};
+
+use crate::backend::StepBackend;
+use crate::config::{BackendKind, RunConfig};
+use crate::coordinator::Trainer;
+use crate::data::{ClassifyData, DataSource, MixtureSpec, TokenData, TokenSpec};
+use crate::metrics::RunRecord;
+use crate::native::NativeMlp;
+use crate::params::{FlatParams, ParamLayout};
+use crate::runtime::{Manifest, ModelKind, XlaBackend};
+use crate::util::rng::Pcg32;
+
+/// Model registry mirror (python/compile/model.py MODELS) so the native
+/// backend can run without artifacts: name -> (dims, batch, eval_batch).
+pub const MODEL_DIMS: &[(&str, &[usize], usize, usize)] = &[
+    ("quickstart", &[32, 64, 10], 16, 64),
+    ("resnet18_sim", &[128, 256, 256, 10], 16, 128),
+    ("googlenet_sim", &[128, 192, 192, 192, 10], 16, 128),
+    ("mobilenet_sim", &[128, 96, 96, 10], 16, 128),
+    ("vgg19_sim", &[128, 512, 10], 16, 128),
+    ("imagenet_sim", &[256, 384, 100], 16, 256),
+];
+
+pub fn model_dims(name: &str) -> Option<(&'static [usize], usize, usize)> {
+    MODEL_DIMS.iter().find(|(n, ..)| *n == name).map(|&(_, d, b, eb)| (d, b, eb))
+}
+
+/// Copy parameters between two layouts matching tensors by name (the JAX
+/// manifest flattens dicts in sorted-key order — b before w — while the
+/// native layout is w, b; names like "0/w" agree across both).
+pub fn remap_by_name(
+    src_layout: &ParamLayout,
+    src: &[f32],
+    dst_layout: &ParamLayout,
+) -> Result<FlatParams> {
+    let mut out = vec![0.0f32; dst_layout.total];
+    for (i, d) in dst_layout.entries.iter().enumerate() {
+        let Some((j, s)) =
+            src_layout.entries.iter().enumerate().find(|(_, s)| s.name == d.name)
+        else {
+            bail!("tensor {:?} missing from source layout", d.name);
+        };
+        if s.size != d.size {
+            bail!("tensor {:?} size mismatch: {} vs {}", d.name, s.size, d.size);
+        }
+        out[d.offset..d.offset + d.size].copy_from_slice(src_layout.slice(j, src));
+        let _ = i;
+    }
+    Ok(out)
+}
+
+fn build_data(cfg: &RunConfig, kind: &ModelKind) -> Box<dyn DataSource> {
+    match kind {
+        ModelKind::Mlp { dims, .. } => Box::new(ClassifyData::generate(MixtureSpec {
+            dim: dims[0],
+            classes: *dims.last().unwrap(),
+            train_n: cfg.train_n,
+            test_n: cfg.test_n,
+            radius: cfg.radius,
+            noise: cfg.noise,
+            subclusters: cfg.subclusters,
+            label_noise: cfg.label_noise,
+            seed: cfg.seed ^ 0x5eed,
+        })),
+        ModelKind::Lm { vocab, seq_len, .. } => {
+            let mut spec = TokenSpec::tiny_corpus(*vocab, *seq_len);
+            spec.train_n = cfg.train_n;
+            spec.test_n = cfg.test_n;
+            spec.seed = cfg.seed ^ 0x70c3;
+            Box::new(TokenData::generate(spec))
+        }
+    }
+}
+
+/// Build backend + data + init for a config (the pieces of a `Trainer`).
+pub fn build(cfg: &RunConfig) -> Result<(Box<dyn StepBackend>, Box<dyn DataSource>, FlatParams)> {
+    match cfg.backend {
+        BackendKind::Xla => {
+            let manifest = Manifest::load_default()?;
+            let entry = manifest.model(&cfg.model)?;
+            let data = build_data(cfg, &entry.kind);
+            let init = manifest.load_init(entry)?;
+            let backend = XlaBackend::load(&manifest, &cfg.model, cfg.p)?;
+            Ok((Box::new(backend), data, init))
+        }
+        BackendKind::Native => {
+            let Some((dims, batch, eval_batch)) = model_dims(&cfg.model) else {
+                bail!(
+                    "model {:?} is not a native MLP (native supports: {:?})",
+                    cfg.model,
+                    MODEL_DIMS.iter().map(|m| m.0).collect::<Vec<_>>()
+                );
+            };
+            // Parallel lanes pay off once several learners step per
+            // dispatch; below that the thread fan-out overhead dominates.
+            let backend: Box<dyn StepBackend> = if cfg.p >= 8 {
+                Box::new(crate::native::ParallelNativeMlp::new(
+                    dims,
+                    batch,
+                    eval_batch,
+                    cfg.p.min(8),
+                )?)
+            } else {
+                Box::new(NativeMlp::new(dims, batch, eval_batch)?)
+            };
+            let kind = ModelKind::Mlp { dims: dims.to_vec(), activation: "relu".into() };
+            let data = build_data(cfg, &kind);
+            // Prefer the artifact's init blob (exact parity with the XLA
+            // path); fall back to a seeded he-init when artifacts are
+            // absent.  A throwaway serial instance provides layout/init.
+            let proto = NativeMlp::new(dims, batch, eval_batch)?;
+            let init = match Manifest::load_default() {
+                Ok(m) => match m.model(&cfg.model) {
+                    Ok(entry) => {
+                        let blob = m.load_init(entry)?;
+                        remap_by_name(&entry.layout, &blob, proto.layout())?
+                    }
+                    Err(_) => proto.init(&mut Pcg32::seeded(cfg.seed)),
+                },
+                Err(_) => proto.init(&mut Pcg32::seeded(cfg.seed)),
+            };
+            Ok((backend, data, init))
+        }
+    }
+}
+
+/// The parameter layout a config's backend uses (manifest layout for XLA,
+/// the native w/b-per-layer layout otherwise).
+pub fn layout_for(cfg: &RunConfig) -> Result<ParamLayout> {
+    match cfg.backend {
+        BackendKind::Xla => Ok(Manifest::load_default()?.model(&cfg.model)?.layout.clone()),
+        BackendKind::Native => {
+            let Some((dims, batch, eval_batch)) = model_dims(&cfg.model) else {
+                bail!("unknown native model {:?}", cfg.model);
+            };
+            Ok(NativeMlp::new(dims, batch, eval_batch)?.layout().clone())
+        }
+    }
+}
+
+/// Run one training job end to end.
+pub fn run(cfg: &RunConfig) -> Result<RunRecord> {
+    let (backend, data, mut init) = build(cfg)?;
+    if let Some(path) = &cfg.init_params {
+        // Warm start: remap the snapshot into this backend's layout.
+        let snap = crate::checkpoint::load(std::path::Path::new(path))?;
+        init = remap_by_name(&snap.layout, &snap.params, &layout_for(cfg)?)?;
+    }
+    let mut trainer = Trainer::new(cfg, backend, data, init)?;
+    trainer.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamEntry;
+
+    #[test]
+    fn remap_swaps_order() {
+        let src = ParamLayout::from_entries(vec![
+            ParamEntry { name: "0/b".into(), shape: vec![2], offset: 0, size: 2 },
+            ParamEntry { name: "0/w".into(), shape: vec![3], offset: 2, size: 3 },
+        ])
+        .unwrap();
+        let dst = ParamLayout::from_entries(vec![
+            ParamEntry { name: "0/w".into(), shape: vec![3], offset: 0, size: 3 },
+            ParamEntry { name: "0/b".into(), shape: vec![2], offset: 3, size: 2 },
+        ])
+        .unwrap();
+        let flat = vec![1.0, 2.0, 10.0, 11.0, 12.0];
+        let out = remap_by_name(&src, &flat, &dst).unwrap();
+        assert_eq!(out, vec![10.0, 11.0, 12.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn remap_rejects_missing() {
+        let src = ParamLayout::from_entries(vec![ParamEntry {
+            name: "a".into(),
+            shape: vec![1],
+            offset: 0,
+            size: 1,
+        }])
+        .unwrap();
+        let dst = ParamLayout::from_entries(vec![ParamEntry {
+            name: "b".into(),
+            shape: vec![1],
+            offset: 0,
+            size: 1,
+        }])
+        .unwrap();
+        assert!(remap_by_name(&src, &[0.0], &dst).is_err());
+    }
+
+    #[test]
+    fn registry_mirrors_python() {
+        let (dims, b, eb) = model_dims("resnet18_sim").unwrap();
+        assert_eq!(dims, &[128, 256, 256, 10]);
+        assert_eq!((b, eb), (16, 128));
+        assert!(model_dims("nope").is_none());
+    }
+}

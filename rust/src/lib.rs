@@ -1,0 +1,64 @@
+//! # Hier-AVG
+//!
+//! A production-style reproduction of *"A Distributed Hierarchical
+//! Averaging SGD Algorithm: Trading Local Reductions for Global
+//! Reductions"* (Zhou & Cong, 2019) as a three-layer Rust + JAX + Pallas
+//! distributed-training framework:
+//!
+//! - **L3 (this crate)** — the hierarchical-averaging coordinator
+//!   (Algorithm 1): P learner replicas in clusters of S, local averaging
+//!   every K1 steps, global reduction every K2; plus the substrates it
+//!   needs (cluster/topology model, simulated collectives with an α–β
+//!   hierarchical cost model, optimizers, synthetic datasets, metrics, and
+//!   the paper's bounds in `theory`).
+//! - **L2 (python/compile/model.py, build-time)** — JAX model graphs
+//!   (MLP classifiers + a transformer LM) AOT-lowered to HLO text.
+//! - **L1 (python/compile/kernels, build-time)** — Pallas kernels (fused
+//!   linear + group averaging) called by L2.
+//!
+//! At run time the coordinator executes the artifacts through the `xla`
+//! crate's PJRT CPU client (`runtime`); Python is never on the training
+//! path.  See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! the measured reproductions.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use hier_avg::config::{BackendKind, RunConfig};
+//! use hier_avg::driver;
+//!
+//! let mut cfg = RunConfig::defaults("quickstart");
+//! cfg.p = 4;
+//! cfg.s = 2;
+//! cfg.k1 = 2;
+//! cfg.k2 = 8;
+//! cfg.backend = BackendKind::Xla; // or Native
+//! let record = driver::run(&cfg).unwrap();
+//! println!("final test acc = {:.3}", record.final_test_acc());
+//! ```
+
+pub mod algorithms;
+pub mod backend;
+pub mod checkpoint;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod driver;
+pub mod metrics;
+pub mod native;
+pub mod optimizer;
+pub mod params;
+pub mod runtime;
+pub mod theory;
+pub mod topology;
+pub mod util;
+
+pub use algorithms::{HierAvgSchedule, ReduceEvent};
+pub use comm::{CommStats, CostModel, ReduceStrategy, Reducer};
+pub use config::{BackendKind, RunConfig};
+pub use coordinator::Trainer;
+pub use metrics::{EpochStats, RunRecord};
+pub use params::{FlatParams, ParamLayout};
+pub use topology::Topology;
+pub mod repro;

@@ -1,0 +1,181 @@
+//! `hier-avg` CLI: train / repro / list / info.
+
+use anyhow::{bail, Result};
+
+use hier_avg::config::{BackendKind, RunConfig};
+use hier_avg::optimizer::LrSchedule;
+use hier_avg::runtime::Manifest;
+use hier_avg::util::cli::Args;
+use hier_avg::{driver, repro};
+
+const USAGE: &str = "\
+hier-avg — distributed hierarchical averaging SGD (Zhou & Cong 2019)
+
+USAGE:
+  hier-avg train  [--config f.json] [--model M] [--backend xla|native]
+                  [--p N] [--s N] [--k1 N] [--k2 N] [--epochs N]
+                  [--train-n N] [--test-n N] [--lr SCHED] [--seed N]
+                  [--noise F] [--radius F] [--strategy ring|tree|naive]
+                  [--out results/run.json] [--record-steps]
+                  [--save-params ckpt.bin] [--init-params ckpt.bin]
+                  [--trace results/trace.jsonl]
+  hier-avg repro  <fig1|fig2|fig3|fig4|fig5|table1|thm34|thm35|thm36|comm|
+                   asgd|adaptive|all>
+                  [--scale small|full] [--backend xla|native] [--out DIR]
+  hier-avg list                      # models in the artifact manifest
+  hier-avg info   --model M          # manifest entry details
+
+LR schedules: const:0.05 | step:0.1@150=0.01 | cosine:0.1->0.001@200 |
+              warmcos:0.1->0.001@5/200
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env(&["record-steps", "help"])?;
+    if args.has("help") || args.positional.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "train" => cmd_train(&args),
+        "repro" => repro::cmd_repro(&args),
+        "list" => cmd_list(),
+        "info" => cmd_info(&args),
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+pub fn config_from_args(args: &Args) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        RunConfig::from_json_file(std::path::Path::new(path))?
+    } else {
+        RunConfig::defaults(args.get_or("model", "resnet18_sim"))
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
+    cfg.p = args.parse_or("p", cfg.p)?;
+    cfg.s = args.parse_or("s", cfg.s)?;
+    cfg.k1 = args.parse_or("k1", cfg.k1)?;
+    cfg.k2 = args.parse_or("k2", cfg.k2)?;
+    cfg.epochs = args.parse_or("epochs", cfg.epochs)?;
+    cfg.train_n = args.parse_or("train-n", cfg.train_n)?;
+    cfg.test_n = args.parse_or("test-n", cfg.test_n)?;
+    cfg.seed = args.parse_or("seed", cfg.seed)?;
+    cfg.noise = args.parse_or("noise", cfg.noise)?;
+    cfg.radius = args.parse_or("radius", cfg.radius)?;
+    cfg.momentum = args.parse_or("momentum", cfg.momentum)?;
+    if let Some(lr) = args.get("lr") {
+        cfg.lr = LrSchedule::parse(lr)?;
+    }
+    if let Some(s) = args.get("strategy") {
+        cfg.strategy = hier_avg::ReduceStrategy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown strategy {s:?}"))?;
+    }
+    if args.has("record-steps") {
+        cfg.record_steps = true;
+    }
+    if let Some(p) = args.get("init-params") {
+        cfg.init_params = Some(p.to_string());
+    }
+    if args.get("save-params").is_some() {
+        cfg.keep_final_params = true;
+    }
+    if args.get("trace").is_some() {
+        cfg.record_trace = true;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    eprintln!(
+        "[train] {} backend={:?} P={} S={} K1={} K2={} epochs={}",
+        cfg.model, cfg.backend, cfg.p, cfg.s, cfg.k1, cfg.k2, cfg.epochs
+    );
+    let rec = driver::run(&cfg)?;
+    for e in &rec.epochs {
+        println!(
+            "epoch {:>3}  train_loss {:.4}  train_acc {:.4}  test_loss {:.4}  test_acc {:.4}  sim_s {:.3}",
+            e.epoch, e.train_loss, e.train_acc, e.test_loss, e.test_acc, e.sim_seconds
+        );
+    }
+    println!(
+        "done: steps={} global_reductions={} local_reductions={} comm_s={:.4} (global {:.4} / local {:.4})",
+        rec.total_steps,
+        rec.comm.global_reductions,
+        rec.comm.local_reductions,
+        rec.comm.total_seconds(),
+        rec.comm.global_seconds,
+        rec.comm.local_seconds,
+    );
+    if let Some(out) = args.get("out") {
+        rec.write_json(std::path::Path::new(out))?;
+        eprintln!("wrote {out}");
+    }
+    if let Some(path) = args.get("save-params") {
+        let params = rec
+            .final_params
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("final params were not kept"))?;
+        let layout = driver::layout_for(&cfg)?;
+        hier_avg::checkpoint::save(std::path::Path::new(path), &cfg.model, &layout, params)?;
+        eprintln!("saved parameters to {path}");
+    }
+    if let Some(path) = args.get("trace") {
+        rec.write_trace_jsonl(std::path::Path::new(path))?;
+        eprintln!("wrote trace to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let m = Manifest::load_default()?;
+    println!("{:<16} {:<6} {:>10} {:>7} {:>10}  train_p", "model", "kind", "params", "batch", "eval_batch");
+    for (name, e) in &m.models {
+        let kind = match &e.kind {
+            hier_avg::runtime::ModelKind::Mlp { .. } => "mlp",
+            hier_avg::runtime::ModelKind::Lm { .. } => "lm",
+        };
+        let ps: Vec<String> = e.train_files.keys().map(|p| p.to_string()).collect();
+        println!(
+            "{:<16} {:<6} {:>10} {:>7} {:>10}  [{}]",
+            name,
+            kind,
+            e.layout.total,
+            e.batch,
+            e.eval_batch,
+            ps.join(",")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let m = Manifest::load_default()?;
+    let e = m.model(args.require("model")?)?;
+    println!("model: {}", e.name);
+    println!("kind: {:?}", e.kind);
+    println!("batch: {}  eval_batch: {}  n_params: {}", e.batch, e.eval_batch, e.layout.total);
+    println!("train artifacts:");
+    for (p, f) in &e.train_files {
+        println!("  P={p}: {f}");
+    }
+    println!("eval: {}", e.eval_file);
+    println!("init: {}", e.init_file);
+    println!("tensors:");
+    for t in &e.layout.entries {
+        println!("  {:<24} {:?} @ {}", t.name, t.shape, t.offset);
+    }
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! Run records: per-epoch curves, communication accounting, CSV/JSON emit.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::comm::CommStats;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// Modelled (simulated-cluster) seconds elapsed so far, compute + comm.
+    pub sim_seconds: f64,
+    /// Real wall seconds spent so far in this process.
+    pub wall_seconds: f64,
+}
+
+/// One reduction event on the modelled cluster timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub step: u64,
+    /// 'L' local (per-cluster), 'G' global.
+    pub kind: char,
+    /// Modelled seconds this event cost.
+    pub seconds: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RunRecord {
+    pub label: String,
+    pub epochs: Vec<EpochStats>,
+    /// Optional per-step training loss (mean across learners) for
+    /// fine-grained curves (the e2e example logs this).
+    pub step_loss: Vec<f32>,
+    pub comm: CommStats,
+    pub total_steps: u64,
+    pub sim_compute_seconds: f64,
+    /// Reduction-event trace (populated when `record_trace` is set).
+    pub trace: Vec<TraceEvent>,
+    /// Final averaged parameters (populated when `keep_final_params`).
+    pub final_params: Option<crate::params::FlatParams>,
+}
+
+impl RunRecord {
+    pub fn last(&self) -> Option<&EpochStats> {
+        self.epochs.last()
+    }
+
+    pub fn best_test_acc(&self) -> f64 {
+        self.epochs.iter().map(|e| e.test_acc).fold(0.0, f64::max)
+    }
+
+    pub fn final_test_acc(&self) -> f64 {
+        self.last().map(|e| e.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn final_train_loss(&self) -> f64 {
+        self.last().map(|e| e.train_loss).unwrap_or(f64::NAN)
+    }
+
+    /// Modelled total time = compute + communication.
+    pub fn sim_total_seconds(&self) -> f64 {
+        self.sim_compute_seconds + self.comm.total_seconds()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut epochs = Vec::new();
+        for e in &self.epochs {
+            let mut o = Json::obj();
+            o.set("epoch", Json::from(e.epoch))
+                .set("train_loss", Json::from(e.train_loss))
+                .set("train_acc", Json::from(e.train_acc))
+                .set("test_loss", Json::from(e.test_loss))
+                .set("test_acc", Json::from(e.test_acc))
+                .set("sim_seconds", Json::from(e.sim_seconds))
+                .set("wall_seconds", Json::from(e.wall_seconds));
+            epochs.push(o);
+        }
+        let mut comm = Json::obj();
+        comm.set("local_reductions", Json::from(self.comm.local_reductions as usize))
+            .set("global_reductions", Json::from(self.comm.global_reductions as usize))
+            .set("local_bytes", Json::from(self.comm.local_bytes as usize))
+            .set("global_bytes", Json::from(self.comm.global_bytes as usize))
+            .set("local_seconds", Json::from(self.comm.local_seconds))
+            .set("global_seconds", Json::from(self.comm.global_seconds));
+        let mut o = Json::obj();
+        o.set("label", Json::from(self.label.as_str()))
+            .set("epochs", Json::Arr(epochs))
+            .set("comm", comm)
+            .set("total_steps", Json::from(self.total_steps as usize))
+            .set("sim_compute_seconds", Json::from(self.sim_compute_seconds))
+            .set("sim_total_seconds", Json::from(self.sim_total_seconds()))
+            .set(
+                "step_loss",
+                Json::Arr(self.step_loss.iter().map(|&l| Json::Num(l as f64)).collect()),
+            );
+        o
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Write the reduction trace as JSON-lines (one event per line).
+    pub fn write_trace_jsonl(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::new();
+        for e in &self.trace {
+            let mut o = Json::obj();
+            o.set("step", Json::from(e.step as usize))
+                .set("kind", Json::from(e.kind.to_string()))
+                .set("seconds", Json::from(e.seconds));
+            o.write_compact(&mut out);
+            out.push('\n');
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(
+            f,
+            "epoch,train_loss,train_acc,test_loss,test_acc,sim_seconds,wall_seconds"
+        )?;
+        for e in &self.epochs {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.3}",
+                e.epoch, e.train_loss, e.train_acc, e.test_loss, e.test_acc, e.sim_seconds,
+                e.wall_seconds
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Write a set of runs as one wide CSV keyed by epoch (for figure series).
+pub fn write_series_csv(path: &Path, runs: &[&RunRecord], column: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    let mut header = String::from("epoch");
+    for r in runs {
+        header.push(',');
+        header.push_str(&r.label);
+    }
+    writeln!(f, "{header}")?;
+    let n = runs.iter().map(|r| r.epochs.len()).max().unwrap_or(0);
+    for i in 0..n {
+        let mut line = format!("{}", i);
+        for r in runs {
+            line.push(',');
+            if let Some(e) = r.epochs.get(i) {
+                let v = match column {
+                    "train_loss" => e.train_loss,
+                    "train_acc" => e.train_acc,
+                    "test_loss" => e.test_loss,
+                    "test_acc" => e.test_acc,
+                    "sim_seconds" => e.sim_seconds,
+                    _ => f64::NAN,
+                };
+                line.push_str(&format!("{v:.6}"));
+            }
+        }
+        writeln!(f, "{line}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(label: &str, n: usize) -> RunRecord {
+        RunRecord {
+            label: label.into(),
+            epochs: (0..n)
+                .map(|i| EpochStats {
+                    epoch: i,
+                    train_loss: 1.0 / (i + 1) as f64,
+                    test_acc: 0.5 + i as f64 * 0.1,
+                    ..Default::default()
+                })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn best_and_final() {
+        let r = record("a", 4);
+        assert!((r.best_test_acc() - 0.8).abs() < 1e-12);
+        assert!((r.final_test_acc() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let r = record("x", 3);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.req("label").unwrap().as_str().unwrap(), "x");
+        assert_eq!(parsed.req("epochs").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn csv_files() {
+        let dir = std::env::temp_dir().join("hier_avg_metrics_test");
+        let r = record("a", 2);
+        let p = dir.join("run.csv");
+        r.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.lines().count() == 3);
+        let r2 = record("b", 2);
+        let sp = dir.join("series.csv");
+        write_series_csv(&sp, &[&r, &r2], "test_acc").unwrap();
+        let s = std::fs::read_to_string(&sp).unwrap();
+        assert!(s.starts_with("epoch,a,b"));
+    }
+}

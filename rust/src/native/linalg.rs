@@ -1,0 +1,138 @@
+//! Dense f32 kernels for the native backend: row-major matmuls in the three
+//! orientations backprop needs, written as ikj loops over contiguous rows
+//! so the compiler auto-vectorizes the inner accumulation.
+
+/// c[n,fo] = a[n,fi] @ b[fi,fo]   (all row-major)
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo: usize) {
+    debug_assert!(a.len() >= n * fi && b.len() >= fi * fo && c.len() >= n * fo);
+    c[..n * fo].fill(0.0);
+    for i in 0..n {
+        let arow = &a[i * fi..(i + 1) * fi];
+        let crow = &mut c[i * fo..(i + 1) * fo];
+        for (k, &aik) in arow.iter().enumerate() {
+            let brow = &b[k * fo..(k + 1) * fo];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// c[fi,fo] = a[n,fi]^T @ b[n,fo]   (wgrad)
+pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo: usize) {
+    debug_assert!(a.len() >= n * fi && b.len() >= n * fo && c.len() >= fi * fo);
+    c[..fi * fo].fill(0.0);
+    for i in 0..n {
+        let arow = &a[i * fi..(i + 1) * fi];
+        let brow = &b[i * fo..(i + 1) * fo];
+        for (k, &aik) in arow.iter().enumerate() {
+            let crow = &mut c[k * fo..(k + 1) * fo];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// c[n,fi] = a[n,fo] @ b[fi,fo]^T   (dgrad; b is the row-major weight)
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fo: usize, fi: usize) {
+    debug_assert!(a.len() >= n * fo && b.len() >= fi * fo && c.len() >= n * fi);
+    for i in 0..n {
+        let arow = &a[i * fo..(i + 1) * fo];
+        let crow = &mut c[i * fi..(i + 1) * fi];
+        for (k, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[k * fo..(k + 1) * fo];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+}
+
+/// z[n,fo] += broadcast bias[fo]
+pub fn add_bias(z: &mut [f32], bias: &[f32], n: usize, fo: usize) {
+    for i in 0..n {
+        let row = &mut z[i * fo..(i + 1) * fo];
+        for (zv, &bv) in row.iter_mut().zip(bias) {
+            *zv += bv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &[f32], b: &[f32], n: usize, fi: usize, fo: usize) -> Vec<f32> {
+        let mut c = vec![0.0; n * fo];
+        for i in 0..n {
+            for j in 0..fo {
+                for k in 0..fi {
+                    c[i * fo + j] += a[i * fi + k] * b[k * fo + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let (n, fi, fo) = (5, 7, 3);
+        let a: Vec<f32> = (0..n * fi).map(|i| (i as f32 * 0.13).sin()).collect();
+        let b: Vec<f32> = (0..fi * fo).map(|i| (i as f32 * 0.29).cos()).collect();
+        let mut c = vec![0.0; n * fo];
+        matmul(&a, &b, &mut c, n, fi, fo);
+        let expect = naive(&a, &b, n, fi, fo);
+        for (x, y) in c.iter().zip(&expect) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn at_b_is_transpose_product() {
+        let (n, fi, fo) = (6, 4, 5);
+        let a: Vec<f32> = (0..n * fi).map(|i| (i as f32 * 0.7).sin()).collect();
+        let b: Vec<f32> = (0..n * fo).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut c = vec![0.0; fi * fo];
+        matmul_at_b(&a, &b, &mut c, n, fi, fo);
+        // reference: transpose a then multiply
+        let mut at = vec![0.0; fi * n];
+        for i in 0..n {
+            for k in 0..fi {
+                at[k * n + i] = a[i * fi + k];
+            }
+        }
+        let expect = naive(&at, &b, fi, n, fo);
+        for (x, y) in c.iter().zip(&expect) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn a_bt_is_transpose_product() {
+        let (n, fo, fi) = (3, 6, 4);
+        let a: Vec<f32> = (0..n * fo).map(|i| (i as f32 * 0.11).sin()).collect();
+        let b: Vec<f32> = (0..fi * fo).map(|i| (i as f32 * 0.17).cos()).collect();
+        let mut c = vec![0.0; n * fi];
+        matmul_a_bt(&a, &b, &mut c, n, fo, fi);
+        let mut bt = vec![0.0; fo * fi];
+        for k in 0..fi {
+            for j in 0..fo {
+                bt[j * fi + k] = b[k * fo + j];
+            }
+        }
+        let expect = naive(&a, &bt, n, fo, fi);
+        for (x, y) in c.iter().zip(&expect) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let mut z = vec![0.0; 6];
+        add_bias(&mut z, &[1.0, 2.0, 3.0], 2, 3);
+        assert_eq!(z, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,399 @@
+//! Pure-Rust MLP backend: forward, softmax cross-entropy, and hand-written
+//! backprop, numerically identical (up to fp reassociation) to the JAX L2
+//! model with the Pallas L1 kernel.
+//!
+//! Exists as a substrate (per DESIGN.md): it cross-validates the XLA
+//! artifacts' numerics in integration tests, runs property sweeps fast, and
+//! powers large-P experiments without XLA in the loop.
+
+pub mod linalg;
+pub mod parallel;
+
+pub use parallel::ParallelNativeMlp;
+
+use anyhow::{bail, Result};
+
+use crate::backend::{StepBackend, StepOut};
+use crate::data::BatchBuf;
+use crate::params::{FlatParams, ParamEntry, ParamLayout};
+use crate::util::rng::Pcg32;
+
+use linalg::{add_bias, matmul, matmul_at_b, matmul_a_bt};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    None,
+}
+
+/// MLP: dims = (input, hidden..., classes); ReLU on hidden layers, linear
+/// head, softmax cross-entropy loss — matching `python/compile/model.py`.
+pub struct NativeMlp {
+    pub dims: Vec<usize>,
+    pub batch: usize,
+    pub eval_batch_size: usize,
+    layout: ParamLayout,
+    // Scratch (per-learner forward/backward workspaces are reused).
+    acts: Vec<Vec<f32>>,   // activations per layer (post-act), acts[0] = input copy
+    zs: Vec<Vec<f32>>,     // pre-activations
+    dz: Vec<f32>,
+    dh: Vec<f32>,
+}
+
+impl NativeMlp {
+    pub fn new(dims: &[usize], batch: usize, eval_batch_size: usize) -> Result<NativeMlp> {
+        if dims.len() < 2 {
+            bail!("MLP needs at least (input, classes) dims");
+        }
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        for (i, (&fi, &fo)) in dims.iter().zip(&dims[1..]).enumerate() {
+            entries.push(ParamEntry {
+                name: format!("{i}/w"),
+                shape: vec![fi, fo],
+                offset,
+                size: fi * fo,
+            });
+            offset += fi * fo;
+            entries.push(ParamEntry {
+                name: format!("{i}/b"),
+                shape: vec![fo],
+                offset,
+                size: fo,
+            });
+            offset += fo;
+        }
+        // NOTE: manifest order is w,b per layer in tree order; JAX flattens
+        // dicts by sorted key ("b" < "w"), so artifact order is b,w.  The
+        // native layout is standalone; parity tests map by name.
+        let layout = ParamLayout::from_entries(entries)?;
+        let max_b = batch.max(eval_batch_size);
+        let acts = dims.iter().map(|&d| vec![0.0; max_b * d]).collect();
+        let zs = dims[1..].iter().map(|&d| vec![0.0; max_b * d]).collect();
+        let max_width = *dims.iter().max().unwrap();
+        Ok(NativeMlp {
+            dims: dims.to_vec(),
+            batch,
+            eval_batch_size,
+            layout,
+            acts,
+            zs,
+            dz: vec![0.0; max_b * max_width],
+            dh: vec![0.0; max_b * max_width],
+        })
+    }
+
+    pub fn layout(&self) -> &ParamLayout {
+        &self.layout
+    }
+
+    /// He-normal init (matches model.py's scheme; exact values differ since
+    /// the PRNGs differ — parity tests load the artifact blob instead).
+    pub fn init(&self, rng: &mut Pcg32) -> FlatParams {
+        let mut p = vec![0.0f32; self.layout.total];
+        for (i, (&fi, _fo)) in self.dims.iter().zip(&self.dims[1..]).enumerate() {
+            let std = (2.0 / fi as f32).sqrt();
+            let w = self.layout.slice_mut(2 * i, &mut p);
+            for v in w.iter_mut() {
+                *v = std * rng.next_normal();
+            }
+            // biases stay zero
+        }
+        p
+    }
+
+    fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    fn w<'a>(&self, l: usize, params: &'a [f32]) -> &'a [f32] {
+        self.layout.slice(2 * l, params)
+    }
+
+    fn b<'a>(&self, l: usize, params: &'a [f32]) -> &'a [f32] {
+        self.layout.slice(2 * l + 1, params)
+    }
+
+    /// Forward through all layers for `n` rows starting at `x`.
+    /// Leaves activations/pre-activations in scratch; returns nothing.
+    fn forward(&mut self, params: &[f32], x: &[f32], n: usize) {
+        let d0 = self.dims[0];
+        self.acts[0][..n * d0].copy_from_slice(&x[..n * d0]);
+        for l in 0..self.n_layers() {
+            let (fi, fo) = (self.dims[l], self.dims[l + 1]);
+            // z = a_l @ w + b
+            let (head, tail) = self.acts.split_at_mut(l + 1);
+            let a_in = &head[l][..n * fi];
+            let z = &mut self.zs[l][..n * fo];
+            matmul(a_in, self.layout.slice(2 * l, params), z, n, fi, fo);
+            add_bias(z, self.layout.slice(2 * l + 1, params), n, fo);
+            let a_out = &mut tail[0][..n * fo];
+            if l + 1 < self.dims.len() - 1 {
+                for (a, &zv) in a_out.iter_mut().zip(z.iter()) {
+                    *a = zv.max(0.0);
+                }
+            } else {
+                a_out.copy_from_slice(z);
+            }
+        }
+    }
+
+    /// Softmax CE on the logits left by `forward`; returns
+    /// (sum_loss, ncorrect) and, if `dlogits` is Some, writes
+    /// d(mean loss)/dlogits into it.
+    fn loss_from_logits(
+        &self,
+        y: &[i32],
+        n: usize,
+        mean_denom: usize,
+        mut dlogits: Option<&mut [f32]>,
+    ) -> (f32, f32) {
+        let c = *self.dims.last().unwrap();
+        let logits = &self.acts[self.n_layers()];
+        let mut sum_loss = 0.0f64;
+        let mut ncorrect = 0.0f32;
+        for i in 0..n {
+            let row = &logits[i * c..(i + 1) * c];
+            let label = y[i] as usize;
+            let mut maxv = f32::NEG_INFINITY;
+            let mut argmax = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > maxv {
+                    maxv = v;
+                    argmax = j;
+                }
+            }
+            if argmax == label {
+                ncorrect += 1.0;
+            }
+            let mut sumexp = 0.0f32;
+            for &v in row {
+                sumexp += (v - maxv).exp();
+            }
+            let logz = maxv + sumexp.ln();
+            sum_loss += (logz - row[label]) as f64;
+            if let Some(dl) = dlogits.as_deref_mut() {
+                let drow = &mut dl[i * c..(i + 1) * c];
+                let inv = 1.0 / mean_denom as f32;
+                for (j, (&v, dv)) in row.iter().zip(drow.iter_mut()).enumerate() {
+                    let p = (v - logz).exp();
+                    *dv = (p - if j == label { 1.0 } else { 0.0 }) * inv;
+                }
+            }
+        }
+        (sum_loss as f32, ncorrect)
+    }
+
+    /// Backprop (after `forward`); writes the flat gradient.
+    fn backward(&mut self, params: &[f32], n: usize, grads: &mut [f32]) {
+        let nl = self.n_layers();
+        for l in (0..nl).rev() {
+            let (fi, fo) = (self.dims[l], self.dims[l + 1]);
+            // dz currently holds dL/dz_l for n x fo.
+            // dw = a_l^T @ dz ; db = colsum(dz)
+            let a_in = &self.acts[l][..n * fi];
+            let dz = &self.dz[..n * fo];
+            matmul_at_b(a_in, dz, self.layout.slice_mut(2 * l, grads), n, fi, fo);
+            {
+                let db = self.layout.slice_mut(2 * l + 1, grads);
+                db.fill(0.0);
+                for i in 0..n {
+                    for (j, dbj) in db.iter_mut().enumerate() {
+                        *dbj += dz[i * fo + j];
+                    }
+                }
+            }
+            if l > 0 {
+                // dh = dz @ w^T, then through ReLU of layer l-1.
+                let w = self.w(l, params);
+                matmul_a_bt(dz, w, &mut self.dh[..n * fi], n, fo, fi);
+                let z_prev = &self.zs[l - 1][..n * fi];
+                for (d, (&h, &z)) in self.dz[..n * fi]
+                    .iter_mut()
+                    .zip(self.dh[..n * fi].iter().zip(z_prev.iter()))
+                {
+                    *d = if z > 0.0 { h } else { 0.0 };
+                }
+            }
+        }
+    }
+
+    /// One learner's grads + stats from a contiguous batch slice.
+    pub fn grads_single(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        n: usize,
+        grads: &mut [f32],
+    ) -> StepOut {
+        self.forward(params, x, n);
+        let c = *self.dims.last().unwrap();
+        // dlogits into dz scratch
+        let (sum_loss, ncorrect) = {
+            let mut dl = std::mem::take(&mut self.dz);
+            let r = self.loss_from_logits(y, n, n, Some(&mut dl[..n * c]));
+            self.dz = dl;
+            r
+        };
+        self.backward(params, n, grads);
+        StepOut { loss: sum_loss / n as f32, ncorrect }
+    }
+}
+
+impl StepBackend for NativeMlp {
+    fn train_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.eval_batch_size
+    }
+
+    fn n_params(&self) -> usize {
+        self.layout.total
+    }
+
+    fn grads(
+        &mut self,
+        replicas: &[FlatParams],
+        batch: &BatchBuf,
+        grads_out: &mut [FlatParams],
+        outs: &mut [StepOut],
+    ) -> Result<()> {
+        let p = replicas.len();
+        let b = self.batch;
+        let d = self.dims[0];
+        if batch.rows != p * b {
+            bail!("batch rows {} != P*B = {}", batch.rows, p * b);
+        }
+        for j in 0..p {
+            let x = &batch.xf[j * b * d..(j + 1) * b * d];
+            let y = &batch.y[j * b..(j + 1) * b];
+            outs[j] = self.grads_single(&replicas[j], x, y, b, &mut grads_out[j]);
+        }
+        Ok(())
+    }
+
+    fn eval_batch_stats(
+        &mut self,
+        params: &FlatParams,
+        batch: &BatchBuf,
+        n: usize,
+    ) -> Result<(f32, f32)> {
+        let d = self.dims[0];
+        self.forward(params, &batch.xf[..n * d], n);
+        Ok(self.loss_from_logits(&batch.y, n, n, None))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> NativeMlp {
+        NativeMlp::new(&[4, 8, 3], 4, 8).unwrap()
+    }
+
+    #[test]
+    fn layout_total() {
+        let m = tiny();
+        assert_eq!(m.n_params(), 4 * 8 + 8 + 8 * 3 + 3);
+    }
+
+    #[test]
+    fn loss_decreases_under_sgd() {
+        let mut m = NativeMlp::new(&[6, 16, 3], 8, 8).unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let mut params = m.init(&mut rng);
+        let data = crate::data::ClassifyData::generate(crate::data::MixtureSpec {
+            dim: 6,
+            classes: 3,
+            train_n: 200,
+            test_n: 50,
+            radius: 1.5,
+            noise: 0.4,
+            subclusters: 1,
+            label_noise: 0.0,
+            seed: 2,
+        });
+        use crate::data::DataSource;
+        let mut grads = vec![0.0f32; params.len()];
+        let mut first = 0.0;
+        let mut last = 0.0;
+        let mut buf = crate::data::BatchBuf::default();
+        for step in 0..200 {
+            buf.clear();
+            data.fill_train(&mut rng, 8, &mut buf);
+            let out = m.grads_single(&params, &buf.xf, &buf.y, 8, &mut grads);
+            if step == 0 {
+                first = out.loss;
+            }
+            last = out.loss;
+            for (w, g) in params.iter_mut().zip(&grads) {
+                *w -= 0.1 * g;
+            }
+        }
+        assert!(last < first * 0.6, "first={first} last={last}");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut m = tiny();
+        let mut rng = Pcg32::seeded(7);
+        let params = m.init(&mut rng);
+        let x: Vec<f32> = (0..16).map(|_| rng.next_normal()).collect();
+        let y = vec![0i32, 1, 2, 1];
+        let mut grads = vec![0.0f32; params.len()];
+        m.grads_single(&params, &x, &y, 4, &mut grads);
+
+        let mut loss_at = |p: &[f32]| {
+            m.forward(p, &x, 4);
+            let (sum, _) = m.loss_from_logits(&y, 4, 4, None);
+            sum / 4.0
+        };
+        let eps = 1e-3f32;
+        // Check a spread of coordinates (weights of both layers + biases).
+        for &idx in &[0usize, 5, 31, 33, 40, 55, 58] {
+            let mut p2 = params.clone();
+            p2[idx] += eps;
+            let up = loss_at(&p2);
+            p2[idx] -= 2.0 * eps;
+            let dn = loss_at(&p2);
+            let fd = (up - dn) / (2.0 * eps);
+            assert!(
+                (fd - grads[idx]).abs() < 2e-3 * (1.0 + fd.abs()),
+                "idx={idx} fd={fd} grad={}",
+                grads[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn eval_counts_correct() {
+        let mut m = tiny();
+        let mut rng = Pcg32::seeded(3);
+        let params = m.init(&mut rng);
+        let mut buf = BatchBuf::default();
+        buf.xf = (0..8 * 4).map(|_| rng.next_normal()).collect();
+        buf.y = vec![0, 1, 2, 0, 1, 2, 0, 1];
+        buf.rows = 8;
+        let (sum_loss, ncorrect) = m.eval_batch_stats(&params, &buf, 8).unwrap();
+        assert!(sum_loss.is_finite() && sum_loss > 0.0);
+        assert!((0.0..=8.0).contains(&ncorrect));
+    }
+
+    #[test]
+    fn deterministic_grads() {
+        let mut m = tiny();
+        let mut rng = Pcg32::seeded(9);
+        let params = m.init(&mut rng);
+        let x: Vec<f32> = (0..16).map(|_| rng.next_normal()).collect();
+        let y = vec![1i32, 0, 2, 2];
+        let mut g1 = vec![0.0f32; params.len()];
+        let mut g2 = vec![0.0f32; params.len()];
+        m.grads_single(&params, &x, &y, 4, &mut g1);
+        m.grads_single(&params, &x, &y, 4, &mut g2);
+        assert_eq!(g1, g2);
+    }
+}

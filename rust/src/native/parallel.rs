@@ -1,0 +1,175 @@
+//! Thread-parallel native backend: learners are split across OS threads,
+//! each with its own `NativeMlp` scratch (the forward/backward workspaces
+//! are not shareable).  Exact same numerics as the serial backend — the
+//! per-learner computation is untouched; only the loop is parallel.
+
+use anyhow::{bail, Result};
+
+use crate::backend::{StepBackend, StepOut};
+use crate::data::BatchBuf;
+use crate::params::FlatParams;
+
+use super::NativeMlp;
+
+pub struct ParallelNativeMlp {
+    lanes: Vec<NativeMlp>,
+    dims: Vec<usize>,
+    batch: usize,
+    eval_batch_size: usize,
+}
+
+impl ParallelNativeMlp {
+    /// `threads` worker lanes (clamped to available parallelism).
+    pub fn new(
+        dims: &[usize],
+        batch: usize,
+        eval_batch_size: usize,
+        threads: usize,
+    ) -> Result<ParallelNativeMlp> {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let lanes = threads.clamp(1, hw.max(1));
+        Ok(ParallelNativeMlp {
+            lanes: (0..lanes)
+                .map(|_| NativeMlp::new(dims, batch, eval_batch_size))
+                .collect::<Result<_>>()?,
+            dims: dims.to_vec(),
+            batch,
+            eval_batch_size,
+        })
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+}
+
+impl StepBackend for ParallelNativeMlp {
+    fn train_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.eval_batch_size
+    }
+
+    fn n_params(&self) -> usize {
+        self.lanes[0].n_params()
+    }
+
+    fn grads(
+        &mut self,
+        replicas: &[FlatParams],
+        batch: &BatchBuf,
+        grads_out: &mut [FlatParams],
+        outs: &mut [StepOut],
+    ) -> Result<()> {
+        let p = replicas.len();
+        let b = self.batch;
+        let d = self.dims[0];
+        if batch.rows != p * b {
+            bail!("batch rows {} != P*B = {}", batch.rows, p * b);
+        }
+        let n_lanes = self.lanes.len().min(p).max(1);
+        let per_lane = p.div_ceil(n_lanes);
+        // Split the output slices into per-lane chunks and fan out.
+        let grad_chunks: Vec<&mut [FlatParams]> = grads_out.chunks_mut(per_lane).collect();
+        let out_chunks: Vec<&mut [StepOut]> = outs.chunks_mut(per_lane).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (lane_idx, (lane, (gchunk, ochunk))) in self
+                .lanes
+                .iter_mut()
+                .zip(grad_chunks.into_iter().zip(out_chunks))
+                .enumerate()
+            {
+                let start = lane_idx * per_lane;
+                let xf = &batch.xf;
+                let y = &batch.y;
+                handles.push(scope.spawn(move || {
+                    for (i, (g, o)) in gchunk.iter_mut().zip(ochunk.iter_mut()).enumerate() {
+                        let j = start + i;
+                        let x = &xf[j * b * d..(j + 1) * b * d];
+                        let ys = &y[j * b..(j + 1) * b];
+                        *o = lane.grads_single(&replicas[j], x, ys, b, g);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("native lane panicked");
+            }
+        });
+        Ok(())
+    }
+
+    fn eval_batch_stats(
+        &mut self,
+        params: &FlatParams,
+        batch: &BatchBuf,
+        n: usize,
+    ) -> Result<(f32, f32)> {
+        self.lanes[0].eval_batch_stats(params, batch, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{ClassifyData, DataSource, MixtureSpec};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn parallel_matches_serial_exactly() {
+        let dims = [12usize, 24, 5];
+        let b = 8;
+        let p = 7; // deliberately not a multiple of the lane count
+        let mut serial = NativeMlp::new(&dims, b, 16).unwrap();
+        let mut par = ParallelNativeMlp::new(&dims, b, 16, 3).unwrap();
+
+        let mut rng = Pcg32::seeded(1);
+        let init = serial.init(&mut rng);
+        let mut replicas = vec![init; p];
+        for (j, r) in replicas.iter_mut().enumerate() {
+            for v in r.iter_mut() {
+                *v += 0.003 * j as f32;
+            }
+        }
+        let data = ClassifyData::generate(MixtureSpec {
+            dim: 12,
+            classes: 5,
+            train_n: 256,
+            test_n: 32,
+            radius: 1.0,
+            noise: 0.7,
+            subclusters: 1,
+            label_noise: 0.0,
+            seed: 3,
+        });
+        let mut batch = BatchBuf::default();
+        let mut brng = Pcg32::seeded(9);
+        for _ in 0..p {
+            data.fill_train(&mut brng, b, &mut batch);
+        }
+
+        let n = serial.n_params();
+        let mut gs = vec![vec![0.0f32; n]; p];
+        let mut os = vec![StepOut::default(); p];
+        serial.grads(&replicas, &batch, &mut gs, &mut os).unwrap();
+
+        let mut gp = vec![vec![0.0f32; n]; p];
+        let mut op = vec![StepOut::default(); p];
+        par.grads(&replicas, &batch, &mut gp, &mut op).unwrap();
+
+        for j in 0..p {
+            assert_eq!(gs[j], gp[j], "learner {j} grads");
+            assert_eq!(os[j].loss, op[j].loss);
+            assert_eq!(os[j].ncorrect, op[j].ncorrect);
+        }
+    }
+
+    #[test]
+    fn lane_count_clamps() {
+        let par = ParallelNativeMlp::new(&[4, 4, 2], 2, 4, 10_000).unwrap();
+        assert!(par.n_lanes() >= 1);
+        assert!(par.n_lanes() <= 10_000);
+    }
+}

@@ -1,0 +1,231 @@
+//! Local optimizer (applied by each learner between reductions) and
+//! learning-rate schedules.
+//!
+//! The AOT train-step artifacts return *gradients*; the update lives here
+//! at L3 so schedules / momentum / weight decay are coordinator concerns,
+//! matching the paper's harness (plain SGD, step-decayed LR: 0.1 → 0.01
+//! after 150 of 200 epochs, §4).
+
+use anyhow::{bail, Result};
+
+/// Plain SGD with optional Polyak momentum and decoupled weight decay.
+/// Momentum buffers are per-learner (they are NOT averaged by reductions —
+/// only parameters are exchanged, as in the paper and standard local-SGD
+/// implementations).
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: Option<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(momentum: f32, weight_decay: f32, n_params: usize) -> Sgd {
+        let velocity = if momentum != 0.0 { Some(vec![0.0; n_params]) } else { None };
+        Sgd { momentum, weight_decay, velocity }
+    }
+
+    pub fn plain() -> Sgd {
+        Sgd { momentum: 0.0, weight_decay: 0.0, velocity: None }
+    }
+
+    /// One update: `w -= lr * (g + wd*w)` (or the momentum form).
+    /// Hot loop — plain slice arithmetic, auto-vectorized.
+    pub fn apply(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        debug_assert_eq!(params.len(), grads.len());
+        let wd = self.weight_decay;
+        match &mut self.velocity {
+            None => {
+                if wd == 0.0 {
+                    for (w, g) in params.iter_mut().zip(grads) {
+                        *w -= lr * g;
+                    }
+                } else {
+                    for (w, g) in params.iter_mut().zip(grads) {
+                        *w -= lr * (g + wd * *w);
+                    }
+                }
+            }
+            Some(v) => {
+                let mu = self.momentum;
+                for ((w, g), vel) in params.iter_mut().zip(grads).zip(v.iter_mut()) {
+                    let eff = g + wd * *w;
+                    *vel = mu * *vel + eff;
+                    *w -= lr * *vel;
+                }
+            }
+        }
+    }
+}
+
+/// Learning-rate schedules, indexed by epoch (the paper schedules per
+/// epoch).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    Constant(f32),
+    /// Start at `initial`; at each `(epoch, lr)` milestone switch to `lr`.
+    StepDecay { initial: f32, milestones: Vec<(usize, f32)> },
+    /// Cosine from `initial` to `final_lr` over `total_epochs`.
+    Cosine { initial: f32, final_lr: f32, total_epochs: usize },
+    /// Linear warmup over `warmup_epochs` then cosine decay.
+    WarmupCosine { peak: f32, final_lr: f32, warmup_epochs: usize, total_epochs: usize },
+}
+
+impl LrSchedule {
+    /// The paper's CIFAR-10 schedule (§4): 0.1, dropped to 0.01 at epoch 150.
+    pub fn paper_cifar() -> LrSchedule {
+        LrSchedule::StepDecay { initial: 0.1, milestones: vec![(150, 0.01)] }
+    }
+
+    pub fn lr_at(&self, epoch: usize) -> f32 {
+        match self {
+            LrSchedule::Constant(lr) => *lr,
+            LrSchedule::StepDecay { initial, milestones } => {
+                let mut lr = *initial;
+                for (e, v) in milestones {
+                    if epoch >= *e {
+                        lr = *v;
+                    }
+                }
+                lr
+            }
+            LrSchedule::Cosine { initial, final_lr, total_epochs } => {
+                let t = (epoch as f32 / (*total_epochs).max(1) as f32).min(1.0);
+                final_lr + 0.5 * (initial - final_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+            LrSchedule::WarmupCosine { peak, final_lr, warmup_epochs, total_epochs } => {
+                if epoch < *warmup_epochs {
+                    peak * (epoch + 1) as f32 / *warmup_epochs as f32
+                } else {
+                    let span = total_epochs.saturating_sub(*warmup_epochs).max(1);
+                    let t = ((epoch - warmup_epochs) as f32 / span as f32).min(1.0);
+                    final_lr
+                        + 0.5 * (peak - final_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+                }
+            }
+        }
+    }
+
+    /// Parse "const:0.05", "step:0.1@150=0.01", "cosine:0.1->0.001@200",
+    /// "warmcos:0.1->0.001@5/200".
+    pub fn parse(s: &str) -> Result<LrSchedule> {
+        if let Some(v) = s.strip_prefix("const:") {
+            return Ok(LrSchedule::Constant(v.parse()?));
+        }
+        if let Some(rest) = s.strip_prefix("step:") {
+            let mut parts = rest.split('@');
+            let initial: f32 = parts.next().unwrap_or("").parse()?;
+            let mut milestones = Vec::new();
+            for m in parts {
+                let (e, v) = m
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("bad step milestone {m:?}"))?;
+                milestones.push((e.parse()?, v.parse()?));
+            }
+            return Ok(LrSchedule::StepDecay { initial, milestones });
+        }
+        if let Some(rest) = s.strip_prefix("cosine:") {
+            let (lrs, te) = rest
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("cosine needs @total_epochs"))?;
+            let (a, b) =
+                lrs.split_once("->").ok_or_else(|| anyhow::anyhow!("cosine needs a->b"))?;
+            return Ok(LrSchedule::Cosine {
+                initial: a.parse()?,
+                final_lr: b.parse()?,
+                total_epochs: te.parse()?,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("warmcos:") {
+            let (lrs, sched) = rest
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("warmcos needs @warm/total"))?;
+            let (a, b) =
+                lrs.split_once("->").ok_or_else(|| anyhow::anyhow!("warmcos needs a->b"))?;
+            let (w, t) = sched
+                .split_once('/')
+                .ok_or_else(|| anyhow::anyhow!("warmcos needs warm/total"))?;
+            return Ok(LrSchedule::WarmupCosine {
+                peak: a.parse()?,
+                final_lr: b.parse()?,
+                warmup_epochs: w.parse()?,
+                total_epochs: t.parse()?,
+            });
+        }
+        bail!("unknown LR schedule {s:?} (const:/step:/cosine:/warmcos:)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_update() {
+        let mut opt = Sgd::plain();
+        let mut w = vec![1.0, 2.0];
+        opt.apply(&mut w, &[0.5, -1.0], 0.1);
+        assert_eq!(w, vec![0.95, 2.1]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Sgd::new(0.9, 0.0, 1);
+        let mut w = vec![0.0];
+        opt.apply(&mut w, &[1.0], 1.0); // v=1, w=-1
+        opt.apply(&mut w, &[1.0], 1.0); // v=1.9, w=-2.9
+        assert!((w[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_shrinks() {
+        let mut opt = Sgd::new(0.0, 0.1, 1);
+        let mut w = vec![10.0];
+        opt.apply(&mut w, &[0.0], 0.5);
+        assert!((w[0] - 9.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn paper_schedule() {
+        let s = LrSchedule::paper_cifar();
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(149), 0.1);
+        assert_eq!(s.lr_at(150), 0.01);
+        assert_eq!(s.lr_at(199), 0.01);
+    }
+
+    #[test]
+    fn cosine_endpoints_and_monotone() {
+        let s = LrSchedule::Cosine { initial: 0.1, final_lr: 0.001, total_epochs: 100 };
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(100) - 0.001).abs() < 1e-6);
+        for e in 0..100 {
+            assert!(s.lr_at(e) >= s.lr_at(e + 1));
+        }
+    }
+
+    #[test]
+    fn warmup_rises_then_falls() {
+        let s = LrSchedule::WarmupCosine {
+            peak: 0.1,
+            final_lr: 0.0,
+            warmup_epochs: 5,
+            total_epochs: 50,
+        };
+        assert!(s.lr_at(0) < s.lr_at(4));
+        assert!((s.lr_at(4) - 0.1).abs() < 1e-3 || s.lr_at(5) >= s.lr_at(6));
+        assert!(s.lr_at(49) < 0.01);
+    }
+
+    #[test]
+    fn parses() {
+        assert_eq!(LrSchedule::parse("const:0.05").unwrap(), LrSchedule::Constant(0.05));
+        assert_eq!(
+            LrSchedule::parse("step:0.1@150=0.01").unwrap(),
+            LrSchedule::StepDecay { initial: 0.1, milestones: vec![(150, 0.01)] }
+        );
+        assert!(LrSchedule::parse("cosine:0.1->0.001@200").is_ok());
+        assert!(LrSchedule::parse("warmcos:0.1->0.001@5/200").is_ok());
+        assert!(LrSchedule::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Flat parameter buffers and their tensor layout.
+//!
+//! Every learner replica holds one contiguous `Vec<f32>` with all model
+//! parameters.  `ParamLayout` (mirroring `artifacts/manifest.json`) maps
+//! tensor names to (shape, offset, len) so the XLA runtime can slice the
+//! buffer into per-tensor literals in exactly the order the AOT-lowered
+//! graph expects, and averaging/optimizer code can treat the whole model as
+//! one dense vector.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamLayout {
+    pub entries: Vec<ParamEntry>,
+    pub total: usize,
+}
+
+impl ParamLayout {
+    pub fn from_entries(entries: Vec<ParamEntry>) -> Result<ParamLayout> {
+        let mut expect = 0usize;
+        for e in &entries {
+            if e.offset != expect {
+                bail!("layout hole: {} at offset {} (expected {})", e.name, e.offset, expect);
+            }
+            let numel: usize = e.shape.iter().product::<usize>().max(1);
+            if numel != e.size {
+                bail!("layout size mismatch for {}: shape {:?} vs size {}", e.name, e.shape, e.size);
+            }
+            expect += e.size;
+        }
+        Ok(ParamLayout { entries, total: expect })
+    }
+
+    pub fn from_json(v: &Json) -> Result<ParamLayout> {
+        let mut entries = Vec::new();
+        for e in v.as_arr()? {
+            entries.push(ParamEntry {
+                name: e.req("name")?.as_str()?.to_string(),
+                shape: e.req("shape")?.usize_arr()?,
+                offset: e.req("offset")?.as_usize()?,
+                size: e.req("size")?.as_usize()?,
+            });
+        }
+        ParamLayout::from_entries(entries)
+    }
+
+    /// Tensor `i`'s slice of a flat buffer.
+    pub fn slice<'a>(&self, i: usize, flat: &'a [f32]) -> &'a [f32] {
+        let e = &self.entries[i];
+        &flat[e.offset..e.offset + e.size]
+    }
+
+    pub fn slice_mut<'a>(&self, i: usize, flat: &'a mut [f32]) -> &'a mut [f32] {
+        let e = &self.entries[i];
+        &mut flat[e.offset..e.offset + e.size]
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// One learner's parameters as a dense vector.
+pub type FlatParams = Vec<f32>;
+
+/// Load an `<name>.init.bin` blob (little-endian f32) and validate its
+/// length against the layout.
+pub fn load_init_blob(path: &std::path::Path, layout: &ParamLayout) -> Result<FlatParams> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != layout.total * 4 {
+        bail!(
+            "init blob {} has {} bytes, layout expects {}",
+            path.display(),
+            bytes.len(),
+            layout.total * 4
+        );
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout2() -> ParamLayout {
+        ParamLayout::from_entries(vec![
+            ParamEntry { name: "w".into(), shape: vec![2, 3], offset: 0, size: 6 },
+            ParamEntry { name: "b".into(), shape: vec![3], offset: 6, size: 3 },
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn slicing() {
+        let l = layout2();
+        assert_eq!(l.total, 9);
+        let flat: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        assert_eq!(l.slice(0, &flat), &[0., 1., 2., 3., 4., 5.]);
+        assert_eq!(l.slice(1, &flat), &[6., 7., 8.]);
+    }
+
+    #[test]
+    fn rejects_holes_and_mismatches() {
+        assert!(ParamLayout::from_entries(vec![ParamEntry {
+            name: "w".into(),
+            shape: vec![2],
+            offset: 4,
+            size: 2
+        }])
+        .is_err());
+        assert!(ParamLayout::from_entries(vec![ParamEntry {
+            name: "w".into(),
+            shape: vec![2, 2],
+            offset: 0,
+            size: 3
+        }])
+        .is_err());
+    }
+
+    #[test]
+    fn from_json() {
+        let j = Json::parse(
+            r#"[{"name":"w","shape":[2,3],"offset":0,"size":6},
+                {"name":"b","shape":[3],"offset":6,"size":3}]"#,
+        )
+        .unwrap();
+        assert_eq!(ParamLayout::from_json(&j).unwrap(), layout2());
+    }
+
+    #[test]
+    fn init_blob_roundtrip() {
+        let l = layout2();
+        let dir = std::env::temp_dir().join("hier_avg_test_blob");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.init.bin");
+        let vals: Vec<f32> = (0..9).map(|i| i as f32 * 0.5).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(load_init_blob(&p, &l).unwrap(), vals);
+        std::fs::write(&p, [0u8; 7]).unwrap();
+        assert!(load_init_blob(&p, &l).is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! The reproduction harness: one entry per paper table/figure
+//! (DESIGN.md §5).  Each experiment builds its `RunConfig` grid, runs the
+//! trainer, prints the same rows/series the paper reports, and writes
+//! results/<exp>/*.csv + .json.
+
+pub mod experiments;
+pub mod scale;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+pub use scale::Scale;
+
+pub fn cmd_repro(args: &Args) -> Result<()> {
+    let Some(exp) = args.positional.get(1) else {
+        bail!("repro needs an experiment id (fig1..fig5, table1, thm34..thm36, comm, all)");
+    };
+    let scale = Scale::parse(args.get_or("scale", "small"))?;
+    let backend = match args.get("backend") {
+        Some(b) => crate::config::BackendKind::parse(b)?,
+        None => crate::config::BackendKind::Xla,
+    };
+    let out = std::path::PathBuf::from(args.get_or("out", "results"));
+    let ctx = experiments::ReproCtx { scale, backend, out };
+    match exp.as_str() {
+        "fig1" => experiments::fig1_fig2(&ctx),
+        "fig2" => experiments::fig1_fig2(&ctx),
+        "fig3" => experiments::fig3(&ctx),
+        "fig4" => experiments::fig4(&ctx),
+        "fig5" => experiments::fig5(&ctx),
+        "table1" => experiments::table1(&ctx),
+        "thm34" => experiments::thm34(&ctx),
+        "thm35" => experiments::thm35(&ctx),
+        "thm36" => experiments::thm36(&ctx),
+        "comm" => experiments::comm(&ctx),
+        "asgd" => experiments::asgd(&ctx),
+        "adaptive" => experiments::adaptive(&ctx),
+        "all" => {
+            experiments::thm34(&ctx)?;
+            experiments::thm35(&ctx)?;
+            experiments::thm36(&ctx)?;
+            experiments::comm(&ctx)?;
+            experiments::fig1_fig2(&ctx)?;
+            experiments::fig3(&ctx)?;
+            experiments::fig4(&ctx)?;
+            experiments::table1(&ctx)?;
+            experiments::fig5(&ctx)?;
+            experiments::asgd(&ctx)?;
+            experiments::adaptive(&ctx)
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+}

@@ -1,0 +1,73 @@
+//! Experiment scale: `full` uses the paper's parameters (P, epochs, data
+//! volume); `small` shrinks epochs / dataset so the whole suite runs on a
+//! laptop-class CPU in tens of minutes while preserving every *relative*
+//! comparison (same P, S, K1, K2 grids).  EXPERIMENTS.md records which
+//! scale produced each table.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Small,
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Result<Scale> {
+        match s {
+            "small" => Ok(Scale::Small),
+            "full" => Ok(Scale::Full),
+            _ => bail!("unknown scale {s:?} (small|full)"),
+        }
+    }
+
+    /// Training epochs (paper: 200 on CIFAR-10, 90 on ImageNet).
+    pub fn epochs(&self, paper: usize) -> usize {
+        match self {
+            Scale::Full => paper,
+            // ~10x shorter, LR milestones rescaled by the caller.
+            Scale::Small => (paper / 10).max(8),
+        }
+    }
+
+    /// Steps per epoch (paper CIFAR: 50k/(P·64); we hold this at a level
+    /// where K2 ≤ 32 fires several times per epoch).
+    pub fn steps_per_epoch(&self, paper: usize) -> usize {
+        match self {
+            Scale::Full => paper,
+            Scale::Small => 64,
+        }
+    }
+
+    pub fn test_n(&self, paper: usize) -> usize {
+        match self {
+            Scale::Full => paper,
+            Scale::Small => (paper / 8).clamp(512, 2048),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses() {
+        assert_eq!(Scale::parse("small").unwrap(), Scale::Small);
+        assert_eq!(Scale::parse("full").unwrap(), Scale::Full);
+        assert!(Scale::parse("huge").is_err());
+    }
+
+    #[test]
+    fn full_is_identity() {
+        assert_eq!(Scale::Full.epochs(200), 200);
+        assert_eq!(Scale::Full.steps_per_epoch(780), 780);
+    }
+
+    #[test]
+    fn small_shrinks() {
+        assert!(Scale::Small.epochs(200) < 40);
+        assert!(Scale::Small.steps_per_epoch(780) <= 128);
+        assert!(Scale::Small.test_n(10_000) <= 2048);
+    }
+}

@@ -1,0 +1,223 @@
+//! artifacts/manifest.json — the contract between the Python compile path
+//! and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::params::{load_init_blob, FlatParams, ParamLayout};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelKind {
+    Mlp { dims: Vec<usize>, activation: String },
+    Lm { vocab: usize, d_model: usize, n_layers: usize, n_heads: usize, seq_len: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: ModelKind,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub layout: ParamLayout,
+    /// P -> train artifact file (relative to the artifacts dir).
+    pub train_files: BTreeMap<usize, String>,
+    pub eval_file: String,
+    pub init_file: String,
+    pub seed: u64,
+}
+
+impl ModelEntry {
+    pub fn input_dim(&self) -> Option<usize> {
+        match &self.kind {
+            ModelKind::Mlp { dims, .. } => Some(dims[0]),
+            ModelKind::Lm { .. } => None,
+        }
+    }
+
+    pub fn classes(&self) -> Option<usize> {
+        match &self.kind {
+            ModelKind::Mlp { dims, .. } => dims.last().copied(),
+            ModelKind::Lm { .. } => None,
+        }
+    }
+
+    /// Largest exported stacked-P variant `<= p`, used when the exact P is
+    /// unavailable (the runtime then loops the variant).
+    pub fn best_train_p(&self, p: usize) -> Option<usize> {
+        self.train_files.keys().copied().filter(|&k| k <= p && p % k == 0).max()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    /// Group-average artifacts: S -> file, plus the chunk length.
+    pub avg_groups: BTreeMap<usize, String>,
+    pub avg_chunk: usize,
+    /// Optional fused-SGD-update artifact (chunk, file).
+    pub sgd_update: Option<(usize, String)>,
+}
+
+impl Manifest {
+    /// Default artifacts directory: $HIER_AVG_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("HIER_AVG_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> Result<Manifest> {
+        Manifest::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} (run `make artifacts` first)", path.display())
+        })?;
+        let j = Json::parse(&text)?;
+        let version = j.req("format_version")?.as_usize()?;
+        if version != 1 {
+            bail!("unsupported manifest format_version {version}");
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj()? {
+            let kind = match m.req("kind")?.as_str()? {
+                "mlp" => ModelKind::Mlp {
+                    dims: m.req("dims")?.usize_arr()?,
+                    activation: m.req("activation")?.as_str()?.to_string(),
+                },
+                "lm" => ModelKind::Lm {
+                    vocab: m.req("vocab")?.as_usize()?,
+                    d_model: m.req("d_model")?.as_usize()?,
+                    n_layers: m.req("n_layers")?.as_usize()?,
+                    n_heads: m.req("n_heads")?.as_usize()?,
+                    seq_len: m.req("seq_len")?.as_usize()?,
+                },
+                k => bail!("unknown model kind {k:?}"),
+            };
+            let mut train_files = BTreeMap::new();
+            for (p, f) in m.req("train")?.as_obj()? {
+                train_files.insert(p.parse::<usize>()?, f.as_str()?.to_string());
+            }
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    kind,
+                    batch: m.req("batch")?.as_usize()?,
+                    eval_batch: m.req("eval_batch")?.as_usize()?,
+                    layout: ParamLayout::from_json(m.req("params")?)?,
+                    train_files,
+                    eval_file: m.req("eval")?.as_str()?.to_string(),
+                    init_file: m.req("init")?.as_str()?.to_string(),
+                    seed: m.req("seed")?.as_usize()? as u64,
+                },
+            );
+        }
+        let avg = j.req("avg")?;
+        let mut avg_groups = BTreeMap::new();
+        for (s, f) in avg.req("groups")?.as_obj()? {
+            avg_groups.insert(s.parse::<usize>()?, f.as_str()?.to_string());
+        }
+        let sgd_update = match j.get("sgd_update") {
+            Some(v) => Some((
+                v.req("chunk")?.as_usize()?,
+                v.req("file")?.as_str()?.to_string(),
+            )),
+            None => None,
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+            avg_groups,
+            avg_chunk: avg.req("chunk")?.as_usize()?,
+            sgd_update,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn file(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+
+    /// Load a model's synchronized initial parameters.
+    pub fn load_init(&self, entry: &ModelEntry) -> Result<FlatParams> {
+        load_init_blob(&self.file(&entry.init_file), &entry.layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load_default().unwrap();
+        assert!(m.models.contains_key("quickstart"));
+        let e = m.model("resnet18_sim").unwrap();
+        match &e.kind {
+            ModelKind::Mlp { dims, .. } => assert_eq!(dims[0], 128),
+            _ => panic!("resnet18_sim should be an MLP"),
+        }
+        assert!(e.train_files.contains_key(&1));
+        assert!(e.layout.total > 0);
+        // init blob parses and matches the layout
+        let init = m.load_init(e).unwrap();
+        assert_eq!(init.len(), e.layout.total);
+        // weights are non-degenerate
+        let nz = init.iter().filter(|v| **v != 0.0).count();
+        assert!(nz > init.len() / 4);
+    }
+
+    #[test]
+    fn best_train_p() {
+        let mut e = ModelEntry {
+            name: "x".into(),
+            kind: ModelKind::Mlp { dims: vec![2, 2], activation: "relu".into() },
+            batch: 1,
+            eval_batch: 1,
+            layout: crate::params::ParamLayout::from_entries(vec![]).unwrap(),
+            train_files: BTreeMap::new(),
+            eval_file: String::new(),
+            init_file: String::new(),
+            seed: 0,
+        };
+        e.train_files.insert(1, "a".into());
+        e.train_files.insert(16, "b".into());
+        assert_eq!(e.best_train_p(16), Some(16));
+        assert_eq!(e.best_train_p(32), Some(16));
+        assert_eq!(e.best_train_p(8), Some(1));
+        assert_eq!(e.best_train_p(3), Some(1));
+    }
+
+    #[test]
+    fn missing_model_error_lists_names() {
+        if !artifacts_available() {
+            return;
+        }
+        let m = Manifest::load_default().unwrap();
+        let err = m.model("nope").unwrap_err().to_string();
+        assert!(err.contains("quickstart"));
+    }
+}

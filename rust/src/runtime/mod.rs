@@ -1,0 +1,12 @@
+//! The XLA/PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! HLO **text** is the interchange format (see aot.py's module docs): the
+//! text parser reassigns instruction ids, sidestepping xla_extension
+//! 0.5.1's 32-bit id limit on jax ≥ 0.5 protos.
+
+pub mod manifest;
+pub mod xla_backend;
+
+pub use manifest::{Manifest, ModelEntry, ModelKind};
+pub use xla_backend::{XlaBackend, XlaRuntime};

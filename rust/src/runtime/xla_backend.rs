@@ -1,0 +1,414 @@
+//! PJRT-backed `StepBackend`: packs learner state into XLA literals,
+//! executes the AOT train/eval artifacts, and scatters gradients back into
+//! the coordinator's flat buffers.
+//!
+//! One *stacked* dispatch carries `train_p` learners (leading dimension P
+//! in every input/output); when the run's P exceeds the largest exported
+//! variant the backend loops over chunks.  Python is never invoked.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::{StepBackend, StepOut};
+use crate::data::BatchBuf;
+use crate::params::FlatParams;
+use crate::runtime::manifest::{Manifest, ModelEntry, ModelKind};
+
+thread_local! {
+    /// One PJRT CPU client + compiled-executable cache per thread: sweeps
+    /// (the repro harness runs dozens of configs in one process) pay HLO
+    /// compilation once per artifact instead of once per run.
+    static RUNTIME: RefCell<Option<XlaRuntime>> = const { RefCell::new(None) };
+}
+
+/// Shared PJRT client + artifact loader with a compile cache.
+#[derive(Clone)]
+pub struct XlaRuntime {
+    pub client: xla::PjRtClient,
+    cache: Rc<RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>>,
+}
+
+impl XlaRuntime {
+    /// Fresh client (no sharing).  Prefer [`XlaRuntime::cpu_shared`].
+    pub fn cpu() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client, cache: Rc::new(RefCell::new(HashMap::new())) })
+    }
+
+    /// The thread's shared client + compile cache.
+    pub fn cpu_shared() -> Result<XlaRuntime> {
+        RUNTIME.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(XlaRuntime::cpu()?);
+            }
+            Ok(slot.as_ref().unwrap().clone())
+        })
+    }
+
+    /// Host -> device buffer (f32).  NOTE: all executions go through
+    /// `execute_b` with caller-owned buffers: the crate's literal-based
+    /// `execute` leaks its input device buffers (the C++ shim `release()`s
+    /// them and never frees — verified empirically, ~input-size bytes per
+    /// call), so it must not be used on the hot path.
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Host -> device buffer (i32).
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Load an HLO-text artifact and compile it (cached by path).
+    pub fn load_hlo(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+}
+
+pub struct XlaBackend {
+    runtime: XlaRuntime,
+    pub entry: ModelEntry,
+    train_exe: Rc<xla::PjRtLoadedExecutable>,
+    /// Learners per stacked dispatch.
+    train_p: usize,
+    eval_exe: Rc<xla::PjRtLoadedExecutable>,
+    /// Packing scratch, reused across steps.
+    pack: Vec<f32>,
+}
+
+impl XlaBackend {
+    /// Load the best stacked-train variant for `p` learners plus the eval
+    /// artifact for `model`.
+    pub fn load(manifest: &Manifest, model: &str, p: usize) -> Result<XlaBackend> {
+        let entry = manifest.model(model)?.clone();
+        let train_p = entry.best_train_p(p).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no stacked train artifact divides P={p} for {model} (have {:?})",
+                entry.train_files.keys().collect::<Vec<_>>()
+            )
+        })?;
+        let runtime = XlaRuntime::cpu_shared()?;
+        let train_exe = runtime.load_hlo(&manifest.file(&entry.train_files[&train_p]))?;
+        let eval_exe = runtime.load_hlo(&manifest.file(&entry.eval_file))?;
+        Ok(XlaBackend { runtime, entry, train_exe, train_p, eval_exe, pack: Vec::new() })
+    }
+
+    pub fn train_p(&self) -> usize {
+        self.train_p
+    }
+
+    pub fn runtime(&self) -> &XlaRuntime {
+        &self.runtime
+    }
+
+    fn is_lm(&self) -> bool {
+        matches!(self.entry.kind, ModelKind::Lm { .. })
+    }
+
+    fn seq_len(&self) -> usize {
+        match &self.entry.kind {
+            ModelKind::Lm { seq_len, .. } => *seq_len,
+            _ => 1,
+        }
+    }
+
+    fn input_dim(&self) -> usize {
+        match &self.entry.kind {
+            ModelKind::Mlp { dims, .. } => dims[0],
+            ModelKind::Lm { seq_len, .. } => *seq_len,
+        }
+    }
+
+    /// Stacked device buffer for tensor `i` of layout over learners
+    /// `chunk_start..chunk_start+pc`.
+    fn pack_param(
+        &mut self,
+        replicas: &[FlatParams],
+        chunk_start: usize,
+        pc: usize,
+        i: usize,
+    ) -> Result<xla::PjRtBuffer> {
+        let e = &self.entry.layout.entries[i];
+        self.pack.clear();
+        for j in chunk_start..chunk_start + pc {
+            self.pack.extend_from_slice(&replicas[j][e.offset..e.offset + e.size]);
+        }
+        let mut dims: Vec<usize> = Vec::with_capacity(e.shape.len() + 1);
+        if pc > 1 || self.train_p > 1 {
+            dims.push(pc);
+        }
+        dims.extend_from_slice(&e.shape);
+        self.runtime.buf_f32(&self.pack, &dims)
+    }
+
+    fn single_param(&self, params: &FlatParams, i: usize) -> Result<xla::PjRtBuffer> {
+        let e = &self.entry.layout.entries[i];
+        self.runtime.buf_f32(&params[e.offset..e.offset + e.size], &e.shape)
+    }
+
+    /// Batch device buffers (x, y) for `pc` learners × `b` rows.
+    fn batch_buffers(
+        &self,
+        batch: &BatchBuf,
+        row_start: usize,
+        pc: usize,
+        b: usize,
+        stacked: bool,
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let t = self.seq_len();
+        let rows = pc * b;
+        if self.is_lm() {
+            let xs = &batch.xi[row_start * t..(row_start + rows) * t];
+            let ys = &batch.y[row_start * t..(row_start + rows) * t];
+            let dims: Vec<usize> =
+                if stacked { vec![pc, b, t] } else { vec![b, t] };
+            Ok((self.runtime.buf_i32(xs, &dims)?, self.runtime.buf_i32(ys, &dims)?))
+        } else {
+            let d = self.input_dim();
+            let xs = &batch.xf[row_start * d..(row_start + rows) * d];
+            let ys = &batch.y[row_start..row_start + rows];
+            let (xd, yd): (Vec<usize>, Vec<usize>) = if stacked {
+                (vec![pc, b, d], vec![pc, b])
+            } else {
+                (vec![b, d], vec![b])
+            };
+            Ok((self.runtime.buf_f32(xs, &xd)?, self.runtime.buf_i32(ys, &yd)?))
+        }
+    }
+
+    /// Execute one stacked chunk and scatter outputs.
+    fn run_chunk(
+        &mut self,
+        replicas: &[FlatParams],
+        batch: &BatchBuf,
+        chunk_start: usize,
+        pc: usize,
+        grads_out: &mut [FlatParams],
+        outs: &mut [StepOut],
+    ) -> Result<()> {
+        let n_tensors = self.entry.layout.n_tensors();
+        let b = self.entry.batch;
+        let mut inputs: Vec<xla::PjRtBuffer> = Vec::with_capacity(n_tensors + 2);
+        for i in 0..n_tensors {
+            inputs.push(self.pack_param(replicas, chunk_start, pc, i)?);
+        }
+        let (x, y) = self.batch_buffers(batch, chunk_start * b, pc, b, self.train_p > 1)?;
+        inputs.push(x);
+        inputs.push(y);
+
+        let result = self.train_exe.execute_b::<xla::PjRtBuffer>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != n_tensors + 2 {
+            bail!("train artifact returned {} outputs, expected {}", parts.len(), n_tensors + 2);
+        }
+        // Scatter gradients.
+        for (i, part) in parts[..n_tensors].iter().enumerate() {
+            let e = &self.entry.layout.entries[i];
+            let vals = part.to_vec::<f32>()?;
+            if vals.len() != pc * e.size {
+                bail!("grad {} has {} values, expected {}", e.name, vals.len(), pc * e.size);
+            }
+            for (c, chunk) in vals.chunks_exact(e.size).enumerate() {
+                grads_out[chunk_start + c][e.offset..e.offset + e.size].copy_from_slice(chunk);
+            }
+        }
+        let losses = parts[n_tensors].to_vec::<f32>()?;
+        let ncorrect = parts[n_tensors + 1].to_vec::<f32>()?;
+        for c in 0..pc {
+            outs[chunk_start + c] =
+                StepOut { loss: losses[c.min(losses.len() - 1)], ncorrect: ncorrect[c.min(ncorrect.len() - 1)] };
+        }
+        Ok(())
+    }
+}
+
+impl StepBackend for XlaBackend {
+    fn train_batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.entry.eval_batch
+    }
+
+    fn n_params(&self) -> usize {
+        self.entry.layout.total
+    }
+
+    fn units_per_row(&self) -> usize {
+        self.seq_len()
+    }
+
+    fn grads(
+        &mut self,
+        replicas: &[FlatParams],
+        batch: &BatchBuf,
+        grads_out: &mut [FlatParams],
+        outs: &mut [StepOut],
+    ) -> Result<()> {
+        let p = replicas.len();
+        if p % self.train_p != 0 {
+            bail!("P={p} not a multiple of the loaded stacked variant ({})", self.train_p);
+        }
+        if batch.rows != p * self.entry.batch {
+            bail!("batch rows {} != P*B = {}", batch.rows, p * self.entry.batch);
+        }
+        for chunk in 0..p / self.train_p {
+            self.run_chunk(replicas, batch, chunk * self.train_p, self.train_p, grads_out, outs)?;
+        }
+        Ok(())
+    }
+
+    fn eval_batch_stats(
+        &mut self,
+        params: &FlatParams,
+        batch: &BatchBuf,
+        n: usize,
+    ) -> Result<(f32, f32)> {
+        if n != self.entry.eval_batch {
+            bail!("XLA eval requires full batches of {} rows (got {n})", self.entry.eval_batch);
+        }
+        let n_tensors = self.entry.layout.n_tensors();
+        let mut inputs: Vec<xla::PjRtBuffer> = Vec::with_capacity(n_tensors + 2);
+        for i in 0..n_tensors {
+            inputs.push(self.single_param(params, i)?);
+        }
+        let t = self.seq_len();
+        let (x, y) = if self.is_lm() {
+            (
+                self.runtime.buf_i32(&batch.xi[..n * t], &[n, t])?,
+                self.runtime.buf_i32(&batch.y[..n * t], &[n, t])?,
+            )
+        } else {
+            let d = self.input_dim();
+            (
+                self.runtime.buf_f32(&batch.xf[..n * d], &[n, d])?,
+                self.runtime.buf_i32(&batch.y[..n], &[n])?,
+            )
+        };
+        inputs.push(x);
+        inputs.push(y);
+        let result =
+            self.eval_exe.execute_b::<xla::PjRtBuffer>(&inputs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 2 {
+            bail!("eval artifact returned {} outputs, expected 2", parts.len());
+        }
+        Ok((parts[0].get_first_element::<f32>()?, parts[1].get_first_element::<f32>()?))
+    }
+}
+
+/// The Pallas group-average artifact (avg_s<S>.hlo.txt): averages S
+/// parameter shards chunk-by-chunk through XLA.  The alternate reduction
+/// path benchmarked against the native reducer in benches/reduction.rs.
+pub struct XlaGroupAvg {
+    runtime: XlaRuntime,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub s: usize,
+    pub chunk: usize,
+    pack: Vec<f32>,
+}
+
+impl XlaGroupAvg {
+    pub fn load(manifest: &Manifest, s: usize) -> Result<XlaGroupAvg> {
+        let file = manifest
+            .avg_groups
+            .get(&s)
+            .ok_or_else(|| anyhow::anyhow!("no avg artifact for S={s}"))?;
+        let runtime = XlaRuntime::cpu_shared()?;
+        let exe = runtime.load_hlo(&manifest.file(file))?;
+        Ok(XlaGroupAvg { runtime, exe, s, chunk: manifest.avg_chunk, pack: Vec::new() })
+    }
+
+    /// out = mean of `shards` (each len n), processed in CHUNK blocks.
+    /// Tails shorter than a chunk are zero-padded (mean of padding is
+    /// discarded).
+    pub fn average(&mut self, shards: &[&[f32]], out: &mut [f32]) -> Result<()> {
+        if shards.len() != self.s {
+            bail!("expected {} shards, got {}", self.s, shards.len());
+        }
+        let n = out.len();
+        let c = self.chunk;
+        let mut start = 0usize;
+        while start < n {
+            let len = c.min(n - start);
+            self.pack.clear();
+            for sh in shards {
+                self.pack.extend_from_slice(&sh[start..start + len]);
+                self.pack.extend(std::iter::repeat(0.0).take(c - len));
+            }
+            let buf = self.runtime.buf_f32(&self.pack, &[self.s, c])?;
+            let result =
+                self.exe.execute_b::<xla::PjRtBuffer>(&[buf])?[0][0].to_literal_sync()?;
+            let mean = result.to_tuple1()?.to_vec::<f32>()?;
+            out[start..start + len].copy_from_slice(&mean[..len]);
+            start += len;
+        }
+        let _ = &self.runtime;
+        Ok(())
+    }
+}
+
+/// The fused Pallas SGD-update artifact: `w -= lr * g` chunk by chunk
+/// through XLA.  Alternate path to the native `optimizer::Sgd`, compared in
+/// benches/reduction.rs.
+pub struct XlaSgdUpdate {
+    runtime: XlaRuntime,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub chunk: usize,
+}
+
+impl XlaSgdUpdate {
+    pub fn load(manifest: &Manifest) -> Result<XlaSgdUpdate> {
+        let Some((chunk, file)) = &manifest.sgd_update else {
+            bail!("manifest has no sgd_update artifact (rebuild artifacts)");
+        };
+        let runtime = XlaRuntime::cpu_shared()?;
+        let exe = runtime.load_hlo(&manifest.file(file))?;
+        Ok(XlaSgdUpdate { runtime, exe, chunk: *chunk })
+    }
+
+    /// In-place `w -= lr * g` (tail chunks zero-padded).
+    pub fn apply(&mut self, w: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        anyhow::ensure!(w.len() == g.len(), "w/g length mismatch");
+        let c = self.chunk;
+        let mut start = 0usize;
+        let mut wpad = vec![0.0f32; c];
+        let mut gpad = vec![0.0f32; c];
+        while start < w.len() {
+            let len = c.min(w.len() - start);
+            wpad[..len].copy_from_slice(&w[start..start + len]);
+            wpad[len..].fill(0.0);
+            gpad[..len].copy_from_slice(&g[start..start + len]);
+            gpad[len..].fill(0.0);
+            let wl = self.runtime.buf_f32(&wpad, &[c])?;
+            let gl = self.runtime.buf_f32(&gpad, &[c])?;
+            let lr_buf = self.runtime.buf_f32(std::slice::from_ref(&lr), &[])?;
+            let result = self.exe.execute_b::<xla::PjRtBuffer>(&[wl, gl, lr_buf])?[0][0]
+                .to_literal_sync()?;
+            let out = result.to_tuple1()?.to_vec::<f32>()?;
+            w[start..start + len].copy_from_slice(&out[..len]);
+            start += len;
+        }
+        let _ = &self.runtime;
+        Ok(())
+    }
+}

@@ -1,0 +1,273 @@
+//! The paper's non-asymptotic bounds, implemented as evaluable functions.
+//!
+//! These power the analysis reproductions (`repro thm34|thm35|thm36`): the
+//! claims of §3.3–§3.5 are statements about the bound's shape (optimum
+//! K2 > 1, monotone in K1 / S, Hier-AVG < K-AVG) which we verify
+//! numerically over grids, and compare qualitatively against the measured
+//! training runs.
+//!
+//! Notation (paper §2):  L Lipschitz constant, M gradient-variance bound
+//! (Asm. 4), M_G second-moment bound (Asm. 5), γ step size, B batch, P
+//! learners, S cluster size, K1/K2 averaging intervals,
+//! δ = L²γ²(1 + δ_{∇F,w}) ∈ (0,1).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoundParams {
+    pub l: f64,
+    pub m: f64,
+    pub mg: f64,
+    /// F(w̃₁) − F*  (initial suboptimality).
+    pub f_gap: f64,
+    pub gamma: f64,
+    pub b: f64,
+    pub p: f64,
+    /// δ_{∇F,w} (paper's intermediate-gradient constant,
+    /// 0 < δ_{∇F,w} ≤ K2(K2−1)/2 − 1).
+    pub delta_grad: f64,
+}
+
+impl Default for BoundParams {
+    fn default() -> Self {
+        // A representative regime: strongly non-convex start (large gap),
+        // moderate smoothness, small constant step.
+        BoundParams {
+            l: 10.0,
+            m: 1.0,
+            mg: 1.0,
+            f_gap: 10.0,
+            gamma: 5e-3,
+            b: 64.0,
+            p: 16.0,
+            delta_grad: 1.0,
+        }
+    }
+}
+
+impl BoundParams {
+    /// δ = L²γ²(1 + δ_{∇F,w}); the theorems need δ ∈ (0,1).
+    pub fn delta(&self) -> f64 {
+        self.l * self.l * self.gamma * self.gamma * (1.0 + self.delta_grad)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.delta() > 0.0 && self.delta() < 1.0) {
+            bail!("δ = {} must lie in (0,1); shrink γ or δ_grad", self.delta());
+        }
+        if self.l <= 0.0 || self.gamma <= 0.0 || self.b <= 0.0 || self.p <= 0.0 {
+            bail!("L, γ, B, P must be positive");
+        }
+        Ok(())
+    }
+
+    /// Condition (3.5)/(3.7): step-size constraint of Theorems 3.2/3.3.
+    pub fn condition_35(&self, k2: u64) -> bool {
+        let lg = self.l * self.gamma;
+        let k2f = k2 as f64;
+        1.0 - lg * lg * (k2f * (k2f - 1.0) / 2.0 - 1.0 - self.delta_grad) - lg * k2f >= 0.0
+    }
+}
+
+/// The local-deviation polynomial Φ(K1,K2,S) from (3.6)'s third term:
+/// `(K2−K1)(4K2+K1−3)/S + (K1−1)(3K2+K1−2)`.
+pub fn phi(k1: u64, k2: u64, s: u64) -> f64 {
+    let (k1, k2, s) = (k1 as f64, k2 as f64, s as f64);
+    (k2 - k1) * (4.0 * k2 + k1 - 3.0) / s + (k1 - 1.0) * (3.0 * k2 + k1 - 2.0)
+}
+
+/// Theorem 3.1, eq. (3.2): per-step metric bound after T total steps.
+pub fn thm31_bound(p: &BoundParams, t: u64, k2: u64) -> f64 {
+    let t = t as f64;
+    let k2 = k2 as f64;
+    2.0 * p.f_gap / (p.gamma * t)
+        + 4.0 * p.l * p.l * p.gamma * p.gamma * k2 * k2 * p.mg * p.mg
+        + p.l * p.gamma * p.m / (p.p * p.b)
+}
+
+/// Theorem 3.1 with the prescribed scalings (3.3):
+/// γ = sqrt(PB/T), K2 = T^{1/4}/(PB)^{3/4} — the standard-rate form (3.4).
+pub fn thm31_scaled_bound(p: &BoundParams, t: u64) -> f64 {
+    let t = t as f64;
+    let pb = p.p * p.b;
+    (2.0 * p.f_gap + 4.0 * p.l * p.l * p.mg * p.mg + p.l * p.m) / (pb * t).sqrt()
+}
+
+/// Theorem 3.2, eq. (3.6): per-global-update metric bound after N global
+/// rounds of Hier-AVG(K1, K2, S).
+pub fn thm32_bound(p: &BoundParams, n: u64, k1: u64, k2: u64, s: u64) -> f64 {
+    let d = p.delta();
+    let n = n as f64;
+    let k2f = k2 as f64;
+    let denom = k2f - d;
+    2.0 * p.f_gap / (n * denom * p.gamma)
+        + p.l * p.gamma * p.m * k2f * k2f / (p.p * p.b * denom)
+        + p.l * p.l * p.gamma * p.gamma * p.m * k2f / (12.0 * p.b * denom) * phi(k1, k2, s)
+}
+
+/// §3.3 / Theorem 3.4 setting: total step budget T = N·K2 fixed.
+/// B(K2) = f(K2)·g(K2) with
+///   f = α + β·K2 + η·Φ(K1,K2,S),  g = K2/(K2−δ),
+///   α = 2(F(w̃₁)−F*)/(Tγ),  β = LγM/(PB),  η = L²γ²M/(12B).
+pub fn thm34_budget_bound(p: &BoundParams, t: u64, k1: u64, k2: u64, s: u64) -> f64 {
+    let d = p.delta();
+    let alpha = 2.0 * p.f_gap / (t as f64 * p.gamma);
+    let beta = p.l * p.gamma * p.m / (p.p * p.b);
+    let eta = p.l * p.l * p.gamma * p.gamma * p.m / (12.0 * p.b);
+    let k2f = k2 as f64;
+    let f = alpha + beta * k2f + eta * phi(k1.min(k2), k2, s);
+    let g = k2f / (k2f - d);
+    f * g
+}
+
+/// Condition (3.11): when it holds, some K2 > 1 beats K2 = 1 (B(2) < B(1)).
+pub fn thm34_condition(p: &BoundParams, t: u64, s: u64) -> bool {
+    let d = p.delta();
+    let alpha = 2.0 * p.f_gap / (t as f64 * p.gamma);
+    let beta = p.l * p.gamma * p.m / (p.p * p.b);
+    let eta = p.l * p.l * p.gamma * p.gamma * p.m / (12.0 * p.b);
+    d * alpha / (1.0 - d) > 2.0 * beta + 12.0 * eta / s as f64
+}
+
+/// argmin over K2 ∈ {multiples of K1} ∪ {1..} of the fixed-budget bound.
+pub fn optimal_k2(p: &BoundParams, t: u64, k1: u64, s: u64, k2_max: u64) -> u64 {
+    let mut best = (f64::INFINITY, 1u64);
+    let mut k2 = k1.max(1);
+    while k2 <= k2_max {
+        let v = thm34_budget_bound(p, t, k1, k2, s);
+        if v < best.0 {
+            best = (v, k2);
+        }
+        k2 += k1.max(1);
+    }
+    best.1
+}
+
+/// Theorem 3.6 comparison.  Hier-AVG with K2=(1+a)K, K1=1, S=4 (bound
+/// H(K)) vs K-AVG with interval K (bound χ(K)), both after the same data
+/// budget; the second (1/PB) term is dropped per the theorem's LγP ≫ 1
+/// regime.  Returns (hier, kavg).
+pub fn thm36_pair(p: &BoundParams, t: u64, k: u64, a: f64) -> (f64, f64) {
+    let d = p.delta();
+    let alpha = 2.0 * p.f_gap / (t as f64 * p.gamma);
+    let eta = p.l * p.l * p.gamma * p.gamma * p.m / (6.0 * p.b);
+    let kk = k as f64;
+    let k2 = (1.0 + a) * kk;
+    let f1 = alpha + eta * (k2 - 1.0) * (2.0 * k2 - 1.0) / 4.0;
+    let g1 = k2 / (k2 - d);
+    let f2 = alpha + eta * (kk - 1.0) * (2.0 * kk - 1.0);
+    let g2 = kk / (kk - d);
+    (f1 * g1, f2 * g2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> BoundParams {
+        let p = BoundParams::default();
+        p.validate().unwrap();
+        p
+    }
+
+    #[test]
+    fn phi_special_cases() {
+        // K-AVG identity (K1 = K2 = K): Φ = 2(K−1)(2K−1), independent of S.
+        for k in [1u64, 2, 8, 32] {
+            let kf = k as f64;
+            for s in [1u64, 2, 4] {
+                assert!((phi(k, k, s) - 2.0 * (kf - 1.0) * (2.0 * kf - 1.0)).abs() < 1e-9);
+            }
+        }
+        // Sync SGD: Φ(1,1,·) = 0.
+        assert_eq!(phi(1, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn thm31_standard_rate() {
+        // The scaled bound decays like 1/sqrt(PBT): quadrupling T halves it.
+        let pp = p();
+        let b1 = thm31_scaled_bound(&pp, 10_000);
+        let b4 = thm31_scaled_bound(&pp, 40_000);
+        assert!((b1 / b4 - 2.0).abs() < 1e-9);
+        // and increasing P at fixed T also tightens it
+        let mut p2 = pp;
+        p2.p = 64.0;
+        assert!(thm31_scaled_bound(&p2, 10_000) < b1);
+    }
+
+    #[test]
+    fn thm35_monotone_in_k1() {
+        // Bound (3.6) monotone increasing in K1 for K1 >= 2, S > 1, fixed K2.
+        let pp = p();
+        for s in [2u64, 4, 8] {
+            let mut prev = thm32_bound(&pp, 100, 2, 32, s);
+            for k1 in [4u64, 8, 16, 32] {
+                let cur = thm32_bound(&pp, 100, k1, 32, s);
+                assert!(cur >= prev, "k1={k1} s={s}: {cur} < {prev}");
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn thm35_monotone_in_s() {
+        let pp = p();
+        let mut prev = thm32_bound(&pp, 100, 4, 32, 1);
+        for s in [2u64, 4, 8, 16] {
+            let cur = thm32_bound(&pp, 100, 4, 32, s);
+            assert!(cur <= prev, "s={s}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn thm34_condition_implies_k2_gt_1() {
+        // Build a regime where (3.11) holds (huge initial gap, small T).
+        let mut pp = p();
+        pp.f_gap = 1000.0;
+        let t = 1_000;
+        assert!(thm34_condition(&pp, t, 4));
+        let b1 = thm34_budget_bound(&pp, t, 1, 1, 4);
+        let b2 = thm34_budget_bound(&pp, t, 1, 2, 4);
+        assert!(b2 < b1, "B(2)={b2} !< B(1)={b1}");
+        assert!(optimal_k2(&pp, t, 1, 4, 64) > 1);
+    }
+
+    #[test]
+    fn thm34_condition_false_prefers_k2_1() {
+        // Tiny gap, long horizon: frequent averaging wins.
+        let mut pp = p();
+        pp.f_gap = 1e-4;
+        let t = 10_000_000;
+        assert!(!thm34_condition(&pp, t, 4));
+        assert_eq!(optimal_k2(&pp, t, 1, 4, 64), 1);
+    }
+
+    #[test]
+    fn thm36_hier_beats_kavg() {
+        let pp = p();
+        for k in [2u64, 4, 8, 16, 32, 64] {
+            for a in [0.0, 0.2, 0.4, 0.6] {
+                let (h, kavg) = thm36_pair(&pp, 10_000, k, a);
+                assert!(h < kavg, "k={k} a={a}: hier={h} kavg={kavg}");
+            }
+        }
+    }
+
+    #[test]
+    fn condition_35_shrinks_with_k2() {
+        let pp = p();
+        assert!(pp.condition_35(2));
+        // With a big enough K2 the condition must eventually fail for a
+        // fixed gamma.
+        assert!(!pp.condition_35(100_000));
+    }
+
+    #[test]
+    fn validate_rejects_big_gamma() {
+        let mut pp = p();
+        pp.gamma = 1.0;
+        assert!(pp.validate().is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Cluster topology: P learners arranged into local clusters of S.
+//!
+//! Mirrors the paper's platform model (§1, §3.4): a node hosts S GPUs with
+//! high intra-node bandwidth; P/S nodes are interconnected by a slower
+//! fabric.  Hier-AVG's local averaging runs within a cluster, global
+//! averaging across all P learners.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    /// GPU-to-GPU within a node (NVLink-class).
+    IntraNode,
+    /// Node-to-node fabric (Infiniband-class).
+    InterNode,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// Total learner count (paper's P).
+    pub p: usize,
+    /// Learners per local cluster (paper's S); S must divide P.
+    pub s: usize,
+}
+
+impl Topology {
+    pub fn new(p: usize, s: usize) -> Result<Topology> {
+        if p == 0 || s == 0 {
+            bail!("topology requires p >= 1 and s >= 1 (got p={p}, s={s})");
+        }
+        if p % s != 0 {
+            bail!("S must divide P (paper assumption S|P): p={p}, s={s}");
+        }
+        Ok(Topology { p, s })
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.p / self.s
+    }
+
+    /// Cluster id of learner j.
+    pub fn cluster_of(&self, j: usize) -> usize {
+        debug_assert!(j < self.p);
+        j / self.s
+    }
+
+    /// Learner ids in cluster c (contiguous block assignment, matching the
+    /// paper's "each group of S workers" and typical MPI rank placement).
+    pub fn cluster_members(&self, c: usize) -> std::ops::Range<usize> {
+        debug_assert!(c < self.n_clusters());
+        c * self.s..(c + 1) * self.s
+    }
+
+    pub fn clusters(&self) -> impl Iterator<Item = std::ops::Range<usize>> + '_ {
+        (0..self.n_clusters()).map(|c| self.cluster_members(c))
+    }
+
+    /// Link class between two learners.
+    pub fn link(&self, a: usize, b: usize) -> LinkClass {
+        if self.cluster_of(a) == self.cluster_of(b) {
+            LinkClass::IntraNode
+        } else {
+            LinkClass::InterNode
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_exact() {
+        let t = Topology::new(16, 4).unwrap();
+        assert_eq!(t.n_clusters(), 4);
+        let mut seen = vec![false; 16];
+        for c in t.clusters() {
+            for j in c {
+                assert!(!seen[j]);
+                seen[j] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn cluster_of_matches_members() {
+        let t = Topology::new(24, 3).unwrap();
+        for j in 0..24 {
+            assert!(t.cluster_members(t.cluster_of(j)).contains(&j));
+        }
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(Topology::new(10, 4).is_err());
+        assert!(Topology::new(0, 1).is_err());
+        assert!(Topology::new(4, 0).is_err());
+    }
+
+    #[test]
+    fn degenerate_shapes_ok() {
+        // S=1: every learner its own cluster (K-AVG).  S=P: one cluster.
+        let t1 = Topology::new(8, 1).unwrap();
+        assert_eq!(t1.n_clusters(), 8);
+        let t2 = Topology::new(8, 8).unwrap();
+        assert_eq!(t2.n_clusters(), 1);
+        assert_eq!(t2.link(0, 7), LinkClass::IntraNode);
+    }
+
+    #[test]
+    fn link_classes() {
+        let t = Topology::new(8, 4).unwrap();
+        assert_eq!(t.link(0, 3), LinkClass::IntraNode);
+        assert_eq!(t.link(0, 4), LinkClass::InterNode);
+    }
+}

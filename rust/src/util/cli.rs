@@ -1,0 +1,132 @@
+//! Minimal CLI flag parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [--flag value]... [--switch]... [positional]...`
+//! Flags may be given as `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    known_switches: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name).  `switches` lists flag
+    /// names that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        switches: &[&'static str],
+    ) -> Result<Args> {
+        let mut out = Args { known_switches: switches.to_vec(), ..Default::default() };
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if switches.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} expects a value"))?;
+                    out.flags.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(switches: &[&'static str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), switches)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        debug_assert!(self.known_switches.contains(&switch) || self.flags.contains_key(switch));
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow!("invalid value for --{key}: {e}")),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    /// Reject unknown flags (call after reading everything you accept).
+    pub fn check_known(&self, accepted: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !accepted.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (accepted: {accepted:?})");
+            }
+        }
+        for s in &self.switches {
+            if !accepted.contains(&s.as_str()) {
+                bail!("unknown switch --{s}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn basic() {
+        let a = Args::parse(sv(&["train", "--p", "16", "--full", "--k2=32"]), &["full"])
+            .unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("p"), Some("16"));
+        assert_eq!(a.get("k2"), Some("32"));
+        assert!(a.has("full"));
+        assert_eq!(a.parse_or("p", 1usize).unwrap(), 16);
+        assert_eq!(a.parse_or("absent", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(sv(&["--p"]), &[]).is_err());
+    }
+
+    #[test]
+    fn check_known_rejects() {
+        let a = Args::parse(sv(&["--bogus", "1"]), &[]).unwrap();
+        assert!(a.check_known(&["p", "k2"]).is_err());
+        assert!(a.check_known(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = Args::parse(sv(&["--p", "xyz"]), &[]).unwrap();
+        assert!(a.parse_or("p", 0usize).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities standing in for crates that are not
+//! available in this offline environment (see Cargo.toml note): a PCG32
+//! RNG, a minimal JSON parser/writer, and a flag-style CLI parser.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Pcg32;

@@ -1,0 +1,272 @@
+//! Integration tests over the native backend: full training runs,
+//! algorithm identities, and schedule/metric consistency — no artifacts
+//! needed.
+
+use hier_avg::config::{BackendKind, RunConfig};
+use hier_avg::coordinator::Trainer;
+use hier_avg::data::{ClassifyData, MixtureSpec};
+use hier_avg::metrics::RunRecord;
+use hier_avg::native::NativeMlp;
+use hier_avg::optimizer::LrSchedule;
+use hier_avg::util::rng::Pcg32;
+
+/// Run the native trainer on a self-contained mixture task.
+fn run_native(cfg: &RunConfig, dims: &[usize], batch: usize) -> RunRecord {
+    let backend = NativeMlp::new(dims, batch, 64).unwrap();
+    let data = ClassifyData::generate(MixtureSpec {
+        dim: dims[0],
+        classes: *dims.last().unwrap(),
+        train_n: cfg.train_n,
+        test_n: cfg.test_n,
+        radius: cfg.radius,
+        noise: cfg.noise,
+        subclusters: 1,
+        label_noise: 0.0,
+        seed: cfg.seed ^ 0x5eed,
+    });
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let init = backend.init(&mut rng);
+    Trainer::new(cfg, Box::new(backend), Box::new(data), init).unwrap().run().unwrap()
+}
+
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::defaults("native");
+    cfg.backend = BackendKind::Native;
+    cfg.p = 8;
+    cfg.s = 4;
+    cfg.k1 = 2;
+    cfg.k2 = 8;
+    cfg.epochs = 6;
+    cfg.train_n = 2048;
+    cfg.test_n = 512;
+    cfg.lr = LrSchedule::Constant(0.1);
+    cfg.noise = 0.8;
+    cfg
+}
+
+const DIMS: &[usize] = &[24, 48, 6];
+
+#[test]
+fn hier_avg_trains_to_high_accuracy() {
+    let cfg = base_cfg();
+    let rec = run_native(&cfg, DIMS, 8);
+    let last = rec.epochs.last().unwrap();
+    assert!(last.test_acc > 0.8, "test_acc = {}", last.test_acc);
+    assert!(last.train_loss < rec.epochs[0].train_loss * 0.7);
+}
+
+#[test]
+fn kavg_equals_hier_with_degenerate_locals() {
+    // K-AVG(K) == Hier-AVG(K1=K, K2=K) == Hier-AVG(S=1, K2=K): all three
+    // must produce bit-identical trajectories for the same seed.
+    let mut a = base_cfg();
+    a.k1 = 8;
+    a.k2 = 8;
+    a.s = 4; // local avg coincides with global, so S irrelevant
+    let mut b = base_cfg();
+    b.k1 = 2;
+    b.k2 = 8;
+    b.s = 1; // S=1: local averaging is a no-op
+    let mut c = base_cfg();
+    c.k1 = 8;
+    c.k2 = 8;
+    c.s = 1;
+    let ra = run_native(&a, DIMS, 8);
+    let rb = run_native(&b, DIMS, 8);
+    let rc = run_native(&c, DIMS, 8);
+    for ((x, y), z) in ra.epochs.iter().zip(&rb.epochs).zip(&rc.epochs) {
+        assert_eq!(x.train_loss, y.train_loss);
+        assert_eq!(y.train_loss, z.train_loss);
+        assert_eq!(x.test_acc, z.test_acc);
+    }
+}
+
+#[test]
+fn local_averaging_changes_trajectory() {
+    // ... but with K1 < K2 and S > 1 the trajectory must differ from K-AVG.
+    let hier = base_cfg();
+    let mut kavg = base_cfg();
+    kavg.k1 = 8;
+    let rh = run_native(&hier, DIMS, 8);
+    let rk = run_native(&kavg, DIMS, 8);
+    assert_ne!(rh.epochs.last().unwrap().train_loss, rk.epochs.last().unwrap().train_loss);
+    // and it must add local reductions
+    assert!(rh.comm.local_reductions > 0);
+    assert_eq!(rk.comm.local_reductions, 0);
+}
+
+#[test]
+fn sync_sgd_is_hier_with_k_one() {
+    let mut cfg = base_cfg();
+    cfg.k1 = 1;
+    cfg.k2 = 1;
+    cfg.s = 1;
+    let rec = run_native(&cfg, DIMS, 8);
+    assert_eq!(rec.comm.global_reductions, rec.total_steps);
+    assert!(rec.epochs.last().unwrap().test_acc > 0.8);
+}
+
+#[test]
+fn larger_s_lowers_training_loss_here() {
+    // Theorem 3.5 shape check on real training: S=4 should not train
+    // slower than S=2 (same K1/K2/P, same data), measured at the tail.
+    let mut s2 = base_cfg();
+    s2.s = 2;
+    s2.epochs = 8;
+    let mut s4 = base_cfg();
+    s4.s = 4;
+    s4.epochs = 8;
+    let r2 = run_native(&s2, DIMS, 8);
+    let r4 = run_native(&s4, DIMS, 8);
+    let tail = |r: &RunRecord| {
+        let n = r.epochs.len();
+        r.epochs[n - 2..].iter().map(|e| e.train_loss).sum::<f64>() / 2.0
+    };
+    // Allow a small tolerance: this is a stochastic ordering, not exact.
+    assert!(
+        tail(&r4) <= tail(&r2) * 1.10,
+        "S=4 tail loss {} vs S=2 {}",
+        tail(&r4),
+        tail(&r2)
+    );
+}
+
+#[test]
+fn momentum_and_schedules_run() {
+    let mut cfg = base_cfg();
+    cfg.momentum = 0.9;
+    cfg.weight_decay = 1e-4;
+    cfg.lr = LrSchedule::WarmupCosine {
+        peak: 0.05,
+        final_lr: 0.001,
+        warmup_epochs: 2,
+        total_epochs: 6,
+    };
+    let rec = run_native(&cfg, DIMS, 8);
+    assert!(rec.epochs.last().unwrap().test_acc > 0.7);
+}
+
+#[test]
+fn eval_every_skips_intermediate_epochs() {
+    let mut cfg = base_cfg();
+    cfg.eval_every = 3;
+    let rec = run_native(&cfg, DIMS, 8);
+    assert!(rec.epochs[1].test_acc.is_nan());
+    assert!(rec.epochs[0].test_acc.is_finite());
+    assert!(rec.epochs.last().unwrap().test_acc.is_finite());
+}
+
+#[test]
+fn comm_accounting_scales_with_frequency() {
+    // Halving K2 should double global reductions (same steps).
+    let mut hi = base_cfg();
+    hi.k1 = 4;
+    hi.k2 = 16;
+    let mut lo = base_cfg();
+    lo.k1 = 4;
+    lo.k2 = 8;
+    let rh = run_native(&hi, DIMS, 8);
+    let rl = run_native(&lo, DIMS, 8);
+    assert_eq!(rh.total_steps, rl.total_steps);
+    assert_eq!(rl.comm.global_reductions, 2 * rh.comm.global_reductions);
+    assert!(rl.comm.global_seconds > rh.comm.global_seconds);
+}
+
+#[test]
+fn run_record_serializes() {
+    let cfg = base_cfg();
+    let rec = run_native(&cfg, DIMS, 8);
+    let dir = std::env::temp_dir().join("hier_avg_itest");
+    rec.write_json(&dir.join("r.json")).unwrap();
+    rec.write_csv(&dir.join("r.csv")).unwrap();
+    let parsed =
+        hier_avg::util::json::Json::parse(&std::fs::read_to_string(dir.join("r.json")).unwrap())
+            .unwrap();
+    assert_eq!(
+        parsed.req("epochs").unwrap().as_arr().unwrap().len(),
+        rec.epochs.len()
+    );
+}
+
+#[test]
+fn warm_start_resumes_from_checkpoint() {
+    // Train, save the averaged params, warm-start a second run: its first
+    // epoch must start from a much better loss than a cold run's.
+    let dir = std::env::temp_dir().join("hier_avg_warm_test");
+    let ckpt = dir.join("warm.bin");
+
+    let mut cfg = base_cfg();
+    cfg.model = "quickstart".into();
+    cfg.keep_final_params = true;
+    let rec = hier_avg::driver::run(&cfg).unwrap();
+    let params = rec.final_params.clone().unwrap();
+    let layout = hier_avg::driver::layout_for(&cfg).unwrap();
+    hier_avg::checkpoint::save(&ckpt, &cfg.model, &layout, &params).unwrap();
+
+    let mut warm = cfg.clone();
+    warm.keep_final_params = false;
+    warm.init_params = Some(ckpt.to_string_lossy().to_string());
+    warm.epochs = 2;
+    let wrec = hier_avg::driver::run(&warm).unwrap();
+
+    let mut cold = warm.clone();
+    cold.init_params = None;
+    let crec = hier_avg::driver::run(&cold).unwrap();
+
+    assert!(
+        wrec.epochs[0].train_loss < crec.epochs[0].train_loss * 0.7,
+        "warm {} vs cold {}",
+        wrec.epochs[0].train_loss,
+        crec.epochs[0].train_loss
+    );
+}
+
+#[test]
+fn adaptive_k2_switches_frequency() {
+    let mut cfg = base_cfg();
+    cfg.k1 = 2;
+    cfg.k2 = 16;
+    cfg.epochs = 6;
+    cfg.k2_schedule = vec![(3, 4)];
+    let rec = run_native(&cfg, DIMS, 8);
+    // steps/epoch = train_n / (P*B) = 2048 / 64 = 32.
+    let spe = (cfg.train_n / (cfg.p * 8)) as u64;
+    assert_eq!(rec.total_steps, spe * 6);
+    // Epochs 0-2 at K2=16, epochs 3-5 at K2=4.
+    let expect = 3 * spe / 16 + 3 * spe / 4;
+    assert_eq!(rec.comm.global_reductions, expect);
+}
+
+#[test]
+fn asgd_slower_than_hier_in_modelled_time() {
+    // At the same sample budget ASGD's serialized server messages cost more
+    // modelled time than Hier-AVG's amortized reductions.
+    use hier_avg::algorithms::asgd::AsgdTrainer;
+    let cfg = base_cfg();
+    let hier = run_native(&cfg, DIMS, 8);
+
+    let backend = NativeMlp::new(DIMS, 8, 64).unwrap();
+    let data = ClassifyData::generate(MixtureSpec {
+        dim: DIMS[0],
+        classes: *DIMS.last().unwrap(),
+        train_n: cfg.train_n,
+        test_n: cfg.test_n,
+        radius: cfg.radius,
+        noise: cfg.noise,
+        subclusters: 1,
+        label_noise: 0.0,
+        seed: cfg.seed ^ 0x5eed,
+    });
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let init = backend.init(&mut rng);
+    let mut asgd = AsgdTrainer::new(&cfg, Box::new(backend), Box::new(data), init, 1).unwrap();
+    let arec = asgd.run().unwrap();
+    assert!(
+        arec.comm.global_seconds > hier.comm.total_seconds(),
+        "asgd comm {} vs hier {}",
+        arec.comm.global_seconds,
+        hier.comm.total_seconds()
+    );
+    // both still learn
+    assert!(arec.epochs.last().unwrap().test_acc > 0.7);
+}

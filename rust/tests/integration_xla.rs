@@ -1,0 +1,276 @@
+//! Integration tests over the XLA/PJRT path: artifact loading, gradient
+//! parity against the native backend, the Pallas group-average artifact,
+//! and short end-to-end training runs.
+//!
+//! These tests require `make artifacts`; they skip (with a message) when
+//! the artifacts directory is absent so `cargo test` stays green on a
+//! fresh checkout.
+
+use hier_avg::backend::{StepBackend, StepOut};
+use hier_avg::config::{BackendKind, RunConfig};
+use hier_avg::data::{BatchBuf, ClassifyData, DataSource, MixtureSpec};
+use hier_avg::driver;
+use hier_avg::native::NativeMlp;
+use hier_avg::optimizer::LrSchedule;
+use hier_avg::runtime::{Manifest, XlaBackend};
+use hier_avg::runtime::xla_backend::XlaGroupAvg;
+use hier_avg::util::rng::Pcg32;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load_default() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping XLA test (artifacts missing): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn quickstart_trains_with_xla() {
+    if manifest().is_none() {
+        return;
+    }
+    let mut cfg = RunConfig::defaults("quickstart");
+    cfg.backend = BackendKind::Xla;
+    cfg.p = 4;
+    cfg.s = 2;
+    cfg.k1 = 2;
+    cfg.k2 = 4;
+    cfg.epochs = 3;
+    cfg.train_n = 2048;
+    cfg.test_n = 256;
+    cfg.lr = LrSchedule::Constant(0.1);
+    // Easy single-cluster mixture: this test checks the XLA plumbing, not
+    // optimization difficulty.
+    cfg.subclusters = 1;
+    cfg.label_noise = 0.0;
+    let rec = driver::run(&cfg).unwrap();
+    let last = rec.epochs.last().unwrap();
+    assert!(last.test_acc > 0.8, "test_acc = {}", last.test_acc);
+    assert!(last.train_loss < rec.epochs[0].train_loss);
+}
+
+/// The core cross-validation: the AOT-lowered JAX+Pallas train step and the
+/// hand-written Rust backprop must produce the same gradients on the same
+/// parameters and batch.
+#[test]
+fn xla_and_native_gradients_agree() {
+    let Some(m) = manifest() else { return };
+    let entry = m.model("quickstart").unwrap().clone();
+    let (dims, batch, eval_b) = driver::model_dims("quickstart").unwrap();
+    let mut xla = XlaBackend::load(&m, "quickstart", 1).unwrap();
+    let mut native = NativeMlp::new(dims, batch, eval_b).unwrap();
+
+    // Shared params: the artifact init blob, remapped into each layout.
+    let blob = m.load_init(&entry).unwrap();
+    let native_init = driver::remap_by_name(&entry.layout, &blob, native.layout()).unwrap();
+
+    // Shared batch.
+    let data = ClassifyData::generate(MixtureSpec {
+        dim: dims[0],
+        classes: *dims.last().unwrap(),
+        train_n: 256,
+        test_n: 64,
+        radius: 1.0,
+        noise: 1.0,
+        subclusters: 1,
+        label_noise: 0.0,
+        seed: 7,
+    });
+    let mut rng = Pcg32::seeded(3);
+    let mut buf = BatchBuf::default();
+    data.fill_train(&mut rng, batch, &mut buf);
+
+    // XLA grads (manifest layout).
+    let replicas = vec![blob.clone()];
+    let mut gx = vec![vec![0.0f32; entry.layout.total]];
+    let mut outs = vec![StepOut::default()];
+    xla.grads(&replicas, &buf, &mut gx, &mut outs).unwrap();
+
+    // Native grads (native layout).
+    let nreplicas = vec![native_init.clone()];
+    let mut gn = vec![vec![0.0f32; native.n_params()]];
+    let mut nouts = vec![StepOut::default()];
+    native.grads(&nreplicas, &buf, &mut gn, &mut nouts).unwrap();
+
+    // Compare in the native layout.
+    let gx_native = driver::remap_by_name(&entry.layout, &gx[0], native.layout()).unwrap();
+    let mut max_abs = 0.0f32;
+    let mut max_rel = 0.0f32;
+    for (a, b) in gx_native.iter().zip(&gn[0]) {
+        let abs = (a - b).abs();
+        max_abs = max_abs.max(abs);
+        max_rel = max_rel.max(abs / (a.abs().max(b.abs()).max(1e-3)));
+    }
+    assert!(
+        max_abs < 2e-4 && max_rel < 2e-2,
+        "gradient mismatch: max_abs={max_abs} max_rel={max_rel}"
+    );
+    assert!(
+        (outs[0].loss - nouts[0].loss).abs() < 1e-4,
+        "loss mismatch: xla={} native={}",
+        outs[0].loss,
+        nouts[0].loss
+    );
+    assert_eq!(outs[0].ncorrect, nouts[0].ncorrect);
+}
+
+#[test]
+fn xla_eval_matches_native() {
+    let Some(m) = manifest() else { return };
+    let entry = m.model("quickstart").unwrap().clone();
+    let (dims, batch, eval_b) = driver::model_dims("quickstart").unwrap();
+    let mut xla = XlaBackend::load(&m, "quickstart", 1).unwrap();
+    let mut native = NativeMlp::new(dims, batch, eval_b).unwrap();
+    let blob = m.load_init(&entry).unwrap();
+    let native_init = driver::remap_by_name(&entry.layout, &blob, native.layout()).unwrap();
+
+    let data = ClassifyData::generate(MixtureSpec {
+        dim: dims[0],
+        classes: *dims.last().unwrap(),
+        train_n: 256,
+        test_n: eval_b,
+        radius: 1.0,
+        noise: 1.0,
+        subclusters: 1,
+        label_noise: 0.0,
+        seed: 11,
+    });
+    let mut buf = BatchBuf::default();
+    assert_eq!(data.fill_eval(0, eval_b, &mut buf), eval_b);
+    let (lx, cx) = xla.eval_batch_stats(&blob, &buf, eval_b).unwrap();
+    let (ln, cn) = native.eval_batch_stats(&native_init, &buf, eval_b).unwrap();
+    assert!((lx - ln).abs() / ln.abs().max(1.0) < 1e-3, "xla={lx} native={ln}");
+    assert_eq!(cx, cn);
+}
+
+#[test]
+fn stacked_variant_matches_singleton() {
+    // The P=4 stacked artifact must produce the same per-learner grads as
+    // four singleton dispatches.
+    let Some(m) = manifest() else { return };
+    let entry = m.model("quickstart").unwrap().clone();
+    let batch = entry.batch;
+    let mut xla1 = XlaBackend::load(&m, "quickstart", 1).unwrap();
+    let mut xla4 = XlaBackend::load(&m, "quickstart", 4).unwrap();
+    assert_eq!(xla4.train_p(), 4);
+
+    let blob = m.load_init(&entry).unwrap();
+    // Give each learner slightly different params.
+    let mut replicas = vec![blob.clone(); 4];
+    for (j, r) in replicas.iter_mut().enumerate() {
+        for v in r.iter_mut() {
+            *v += 0.01 * (j as f32);
+        }
+    }
+    let data = ClassifyData::generate(MixtureSpec {
+        dim: entry.input_dim().unwrap(),
+        classes: entry.classes().unwrap(),
+        train_n: 512,
+        test_n: 64,
+        radius: 1.0,
+        noise: 1.0,
+        subclusters: 1,
+        label_noise: 0.0,
+        seed: 5,
+    });
+    let mut rng = Pcg32::seeded(9);
+    let mut buf = BatchBuf::default();
+    for _ in 0..4 {
+        data.fill_train(&mut rng, batch, &mut buf);
+    }
+
+    let mut g4 = vec![vec![0.0f32; entry.layout.total]; 4];
+    let mut o4 = vec![StepOut::default(); 4];
+    xla4.grads(&replicas, &buf, &mut g4, &mut o4).unwrap();
+
+    let mut g1 = vec![vec![0.0f32; entry.layout.total]; 4];
+    let mut o1 = vec![StepOut::default(); 4];
+    // Chunked through the P=1 artifact (XlaBackend loops 4 chunks).
+    xla1.grads(&replicas, &buf, &mut g1, &mut o1).unwrap();
+
+    for j in 0..4 {
+        assert!((o4[j].loss - o1[j].loss).abs() < 1e-5, "learner {j} loss");
+        let max_abs = g4[j]
+            .iter()
+            .zip(&g1[j])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_abs < 1e-4, "learner {j}: max grad diff {max_abs}");
+    }
+}
+
+#[test]
+fn pallas_group_avg_artifact_matches_native_mean() {
+    let Some(m) = manifest() else { return };
+    let mut avg = match XlaGroupAvg::load(&m, 4) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let mut rng = Pcg32::seeded(21);
+    let n = 10_000usize; // not a multiple of the chunk: exercises the tail
+    let shards: Vec<Vec<f32>> =
+        (0..4).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+    let refs: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+    let mut out = vec![0.0f32; n];
+    avg.average(&refs, &mut out).unwrap();
+    for i in 0..n {
+        let expect = (shards[0][i] + shards[1][i] + shards[2][i] + shards[3][i]) / 4.0;
+        assert!((out[i] - expect).abs() < 1e-5, "i={i}");
+    }
+}
+
+#[test]
+fn lm_artifact_runs_and_learns_a_little() {
+    let Some(m) = manifest() else { return };
+    if m.model("lm_small").is_err() {
+        return;
+    }
+    let mut cfg = RunConfig::defaults("lm_small");
+    cfg.backend = BackendKind::Xla;
+    cfg.p = 4;
+    cfg.s = 2;
+    cfg.k1 = 2;
+    cfg.k2 = 4;
+    cfg.epochs = 2;
+    cfg.train_n = 512; // 16 steps/epoch at P=4, B=8
+    cfg.test_n = 64;
+    cfg.lr = LrSchedule::Constant(0.3);
+    cfg.record_steps = true;
+    let rec = driver::run(&cfg).unwrap();
+    let first = rec.step_loss.first().copied().unwrap();
+    let last = rec.epochs.last().unwrap();
+    assert!(
+        last.train_loss < first as f64,
+        "LM loss should drop: first step {first}, last epoch {}",
+        last.train_loss
+    );
+    // token-level accuracy should beat uniform chance (1/256)
+    assert!(last.test_acc > 0.01, "acc = {}", last.test_acc);
+}
+
+#[test]
+fn pallas_sgd_update_artifact_matches_native() {
+    let Some(m) = manifest() else { return };
+    let mut upd = match hier_avg::runtime::xla_backend::XlaSgdUpdate::load(&m) {
+        Ok(u) => u,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let mut rng = Pcg32::seeded(33);
+    let n = 9_000usize; // exercises the padded tail
+    let mut w: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+    let mut expect = w.clone();
+    hier_avg::optimizer::Sgd::plain().apply(&mut expect, &g, 0.05);
+    upd.apply(&mut w, &g, 0.05).unwrap();
+    for (a, b) in w.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,327 @@
+//! Property tests as seeded randomized sweeps (proptest is unavailable in
+//! this offline environment; each property draws hundreds of random cases
+//! from a fixed-seed PCG and asserts an invariant, printing the failing
+//! case on violation).
+
+use hier_avg::algorithms::{HierAvgSchedule, ReduceEvent};
+use hier_avg::comm::{CostModel, ReduceStrategy, Reducer};
+use hier_avg::optimizer::{LrSchedule, Sgd};
+use hier_avg::params::{ParamEntry, ParamLayout};
+use hier_avg::theory::{self, BoundParams};
+use hier_avg::topology::Topology;
+use hier_avg::util::json::Json;
+use hier_avg::util::rng::Pcg32;
+
+const CASES: usize = 300;
+
+#[test]
+fn prop_schedule_counts_equal_event_scan() {
+    let mut rng = Pcg32::seeded(0xA11CE);
+    for case in 0..CASES {
+        let k1 = 1 + rng.next_below(16) as u64;
+        let k2 = k1 + rng.next_below(48) as u64;
+        let t = 1 + rng.next_below(2000) as u64;
+        let s = HierAvgSchedule::new(k1, k2).unwrap();
+        let (mut g, mut l) = (0u64, 0u64);
+        for i in 1..=t {
+            match s.event_after(i) {
+                ReduceEvent::Global => g += 1,
+                ReduceEvent::Local => l += 1,
+                ReduceEvent::None => {}
+            }
+        }
+        assert_eq!(
+            s.reduction_counts(t),
+            (g, l),
+            "case {case}: k1={k1} k2={k2} t={t}"
+        );
+    }
+}
+
+#[test]
+fn prop_schedule_global_subsumes_local() {
+    // No step may be both; at multiples of k2 the event is always Global.
+    let mut rng = Pcg32::seeded(0xBEE);
+    for _ in 0..CASES {
+        let k1 = 1 + rng.next_below(12) as u64;
+        let k2 = k1 * (1 + rng.next_below(8) as u64);
+        let s = HierAvgSchedule::new(k1, k2).unwrap();
+        for t in 1..=(4 * k2) {
+            let e = s.event_after(t);
+            if t % k2 == 0 {
+                assert_eq!(e, ReduceEvent::Global);
+            } else if t % k1 == 0 {
+                assert_eq!(e, ReduceEvent::Local);
+            } else {
+                assert_eq!(e, ReduceEvent::None);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_topology_partition() {
+    // cluster_of is consistent with cluster_members and covers 0..P once.
+    let mut rng = Pcg32::seeded(0x70_70);
+    for _ in 0..CASES {
+        let s = 1 + rng.next_below(8) as usize;
+        let clusters = 1 + rng.next_below(16) as usize;
+        let p = s * clusters;
+        let topo = Topology::new(p, s).unwrap();
+        let mut count = vec![0usize; p];
+        for c in 0..topo.n_clusters() {
+            for j in topo.cluster_members(c) {
+                assert_eq!(topo.cluster_of(j), c);
+                count[j] += 1;
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1));
+    }
+}
+
+#[test]
+fn prop_group_average_preserves_global_sum() {
+    // Averaging any cluster preserves the global mean of all replicas
+    // (conservation: reduction must neither create nor destroy mass).
+    let mut rng = Pcg32::seeded(0x5EED5);
+    for case in 0..100 {
+        let s = 1 + rng.next_below(4) as usize;
+        let clusters = 1 + rng.next_below(4) as usize;
+        let p = s * clusters;
+        let n = 1 + rng.next_below(64) as usize;
+        let topo = Topology::new(p, s).unwrap();
+        let mut replicas: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.next_normal()).collect())
+            .collect();
+        let before: f64 = replicas.iter().flatten().map(|&v| v as f64).sum();
+        let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
+        red.local_average(&mut replicas, &topo);
+        let after: f64 = replicas.iter().flatten().map(|&v| v as f64).sum();
+        assert!(
+            (before - after).abs() < 1e-3 * (1.0 + before.abs()),
+            "case {case}: {before} -> {after}"
+        );
+    }
+}
+
+#[test]
+fn prop_averaging_is_idempotent() {
+    let mut rng = Pcg32::seeded(0x1D3);
+    for _ in 0..100 {
+        let p = 2 + rng.next_below(8) as usize;
+        let n = 1 + rng.next_below(32) as usize;
+        let topo = Topology::new(p, p).unwrap();
+        let mut replicas: Vec<Vec<f32>> =
+            (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+        let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Tree, n);
+        red.global_average(&mut replicas, &topo);
+        let snapshot = replicas.clone();
+        red.global_average(&mut replicas, &topo);
+        // Idempotent up to one rounding step: the mean is computed as
+        // sum * (1/n), and n·a * (1/n) can be one ulp off a for n not a
+        // power of two.
+        for (r, s) in replicas.iter().flatten().zip(snapshot.iter().flatten()) {
+            assert!(
+                (r - s).abs() <= 2.0 * f32::EPSILON * s.abs().max(1.0),
+                "{r} vs {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_layout_roundtrip() {
+    // Random layouts: slices tile the flat buffer exactly.
+    let mut rng = Pcg32::seeded(0x1A_0);
+    for _ in 0..CASES {
+        let n_tensors = 1 + rng.next_below(8) as usize;
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        for i in 0..n_tensors {
+            let r = 1 + rng.next_below(8) as usize;
+            let c = 1 + rng.next_below(8) as usize;
+            entries.push(ParamEntry {
+                name: format!("t{i}"),
+                shape: vec![r, c],
+                offset,
+                size: r * c,
+            });
+            offset += r * c;
+        }
+        let layout = ParamLayout::from_entries(entries).unwrap();
+        let flat: Vec<f32> = (0..layout.total).map(|i| i as f32).collect();
+        let mut covered = 0usize;
+        for i in 0..layout.n_tensors() {
+            let s = layout.slice(i, &flat);
+            assert_eq!(s[0] as usize, covered);
+            covered += s.len();
+        }
+        assert_eq!(covered, layout.total);
+    }
+}
+
+#[test]
+fn prop_sgd_momentum_zero_equals_plain() {
+    let mut rng = Pcg32::seeded(0x0517);
+    for _ in 0..CASES {
+        let n = 1 + rng.next_below(32) as usize;
+        let mut w1: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let mut w2 = w1.clone();
+        let g: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let lr = rng.next_f32() * 0.1;
+        Sgd::plain().apply(&mut w1, &g, lr);
+        Sgd::new(0.0, 0.0, n).apply(&mut w2, &g, lr);
+        assert_eq!(w1, w2);
+    }
+}
+
+#[test]
+fn prop_lr_schedules_positive_and_bounded() {
+    let mut rng = Pcg32::seeded(0x77);
+    for _ in 0..CASES {
+        let peak = 0.001 + rng.next_f32();
+        let total = 1 + rng.next_below(300) as usize;
+        let scheds = [
+            LrSchedule::Constant(peak),
+            LrSchedule::StepDecay { initial: peak, milestones: vec![(total / 2, peak * 0.1)] },
+            LrSchedule::Cosine { initial: peak, final_lr: peak * 0.01, total_epochs: total },
+            LrSchedule::WarmupCosine {
+                peak,
+                final_lr: peak * 0.01,
+                warmup_epochs: (total / 10).max(1),
+                total_epochs: total,
+            },
+        ];
+        for s in &scheds {
+            for e in 0..total {
+                let lr = s.lr_at(e);
+                assert!(lr > 0.0 && lr <= peak * 1.0001, "{s:?} at {e}: {lr}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f32() < 0.5),
+            2 => Json::Num((rng.next_f64() * 2e6).round() / 1e3 - 1e3),
+            3 => Json::Str(
+                (0..rng.next_below(12))
+                    .map(|_| {
+                        let c = rng.next_below(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.next_below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.next_below(5) {
+                    m.insert(format!("k{i}"), gen(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    let mut rng = Pcg32::seeded(0x150);
+    for case in 0..CASES {
+        let v = gen(&mut rng, 3);
+        let s = v.to_string();
+        let p = Json::parse(&s).unwrap_or_else(|e| panic!("case {case}: {e}\n{s}"));
+        assert_eq!(p, v, "case {case}: {s}");
+        let pretty = Json::parse(&v.pretty()).unwrap();
+        assert_eq!(pretty, v);
+    }
+}
+
+#[test]
+fn prop_thm35_monotonicity_random_regimes() {
+    // Theorem 3.5 must hold for any valid parameter regime, not just the
+    // defaults: bound ↑ in K1 (K1 ≥ 2), ↓ in S.
+    let mut rng = Pcg32::seeded(0x7434);
+    let mut tested = 0;
+    for _ in 0..CASES {
+        let p = BoundParams {
+            l: 0.5 + rng.next_f64() * 20.0,
+            m: 0.1 + rng.next_f64() * 5.0,
+            mg: 1.0,
+            f_gap: 0.01 + rng.next_f64() * 100.0,
+            gamma: 1e-4 + rng.next_f64() * 5e-3,
+            b: 8.0 + rng.next_below(120) as f64,
+            p: 2.0 + rng.next_below(126) as f64,
+            delta_grad: rng.next_f64() * 3.0,
+        };
+        if p.validate().is_err() {
+            continue;
+        }
+        tested += 1;
+        let k2 = 8 + 4 * rng.next_below(16) as u64;
+        let n = 10 + rng.next_below(500) as u64;
+        // monotone in K1
+        let mut prev = theory::thm32_bound(&p, n, 2, k2, 4);
+        let mut k1 = 4;
+        while k1 <= k2 {
+            let cur = theory::thm32_bound(&p, n, k1, k2, 4);
+            assert!(cur >= prev - 1e-12, "k1={k1} k2={k2} {cur} < {prev}");
+            prev = cur;
+            k1 *= 2;
+        }
+        // monotone in S
+        let mut prev = theory::thm32_bound(&p, n, 4, k2, 1);
+        for s in [2u64, 4, 8, 16] {
+            let cur = theory::thm32_bound(&p, n, 4, k2, s);
+            assert!(cur <= prev + 1e-12, "s={s}");
+            prev = cur;
+        }
+    }
+    assert!(tested > CASES / 4, "too few valid regimes: {tested}");
+}
+
+#[test]
+fn prop_thm36_holds_in_paper_range() {
+    let mut rng = Pcg32::seeded(0x7436);
+    let mut tested = 0;
+    for _ in 0..CASES {
+        let p = BoundParams {
+            l: 0.5 + rng.next_f64() * 10.0,
+            gamma: 1e-4 + rng.next_f64() * 3e-3,
+            f_gap: 0.1 + rng.next_f64() * 50.0,
+            ..BoundParams::default()
+        };
+        if p.validate().is_err() {
+            continue;
+        }
+        tested += 1;
+        let k = 2 + rng.next_below(63) as u64;
+        let a = rng.next_f64() * 0.6;
+        let t = 1000 + rng.next_below(100_000) as u64;
+        let (h, x) = theory::thm36_pair(&p, t, k, a);
+        assert!(h < x, "k={k} a={a:.3}: hier={h} kavg={x}");
+    }
+    assert!(tested > CASES / 4);
+}
+
+#[test]
+fn prop_cost_model_strategy_orderings() {
+    // For any payload/participants: ring ≤ naive on bytes-dominated
+    // payloads; tree ≤ naive always on rounds.
+    let mut rng = Pcg32::seeded(0xC057);
+    let cm = CostModel::default();
+    for _ in 0..CASES {
+        let n = 2 + rng.next_below(255) as usize;
+        let bytes = 1 << (10 + rng.next_below(18)); // 1 KiB .. 128 MiB
+        for link in
+            [hier_avg::topology::LinkClass::IntraNode, hier_avg::topology::LinkClass::InterNode]
+        {
+            let naive = cm.allreduce_seconds(n, bytes, link, ReduceStrategy::Naive);
+            let tree = cm.allreduce_seconds(n, bytes, link, ReduceStrategy::Tree);
+            let ring = cm.allreduce_seconds(n, bytes, link, ReduceStrategy::Ring);
+            assert!(tree <= naive + 1e-12);
+            assert!(ring <= naive + 1e-12);
+            assert!(naive >= 0.0 && tree >= 0.0 && ring >= 0.0);
+        }
+    }
+}
