@@ -1,5 +1,5 @@
 //! Averaging schedules: when, after each local SGD step, does a learner
-//! reduce — locally (within its cluster of S) or globally (all P)?
+//! reduce — and at which tier of the hierarchy?
 //!
 //! `HierAvgSchedule { k1, k2 }` is Algorithm 1 of the paper.  It reproduces
 //! the classical synchronous variants exactly (paper §3.1):
@@ -7,8 +7,13 @@
 //! - `K2 = K1 = 1, S = 1`  ⇒ synchronous parallel SGD (Zinkevich et al.)
 //! - `K1 = K2` or `S = 1`  ⇒ K-AVG (Zhou & Cong 2018) with K = K2
 //!
-//! Both identities are enforced by tests here and property tests in
-//! rust/tests/proptests.rs.
+//! [`HierSchedule`] generalizes it to per-level intervals
+//! `K = [k_1 ≤ k_2 ≤ … ≤ k_L]` over an N-level [`crate::topology::HierTopology`]:
+//! after step t the *outermost* level whose interval divides t reduces
+//! (subsuming every inner boundary that coincides), exactly as the paper's
+//! global boundary subsumes the local one.  `HierSchedule::two_level(k1, k2)`
+//! reproduces `HierAvgSchedule` bit-for-bit — enforced by tests here and
+//! property tests in rust/tests/hierarchy.rs.
 
 pub mod asgd;
 
@@ -90,12 +95,130 @@ impl HierAvgSchedule {
     }
 }
 
+/// Per-level averaging intervals for an N-level hierarchy.
+///
+/// `intervals[l]` is the number of local SGD steps between reductions at
+/// level `l` (0 = innermost, last = outermost/global).  Intervals are
+/// non-decreasing outward, mirroring the paper's `K1 ≤ K2`.  Identities:
+///
+/// - all intervals 1 (and every group size 1 below the top) ⇒ sync SGD;
+/// - `[k, k]` ⇒ K-AVG with interval k (inner boundaries always subsumed);
+/// - `[k1, k2]` ⇒ the paper's `HierAvgSchedule { k1, k2 }`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HierSchedule {
+    intervals: Vec<u64>,
+}
+
+impl HierSchedule {
+    pub fn new(intervals: Vec<u64>) -> Result<HierSchedule> {
+        if intervals.is_empty() {
+            bail!("schedule needs at least one interval");
+        }
+        if intervals.len() > crate::topology::MAX_LEVELS {
+            bail!(
+                "schedule has {} levels (max {})",
+                intervals.len(),
+                crate::topology::MAX_LEVELS
+            );
+        }
+        for (l, &k) in intervals.iter().enumerate() {
+            if k == 0 {
+                bail!("interval at level {l} must be >= 1");
+            }
+        }
+        for l in 0..intervals.len() - 1 {
+            if intervals[l] > intervals[l + 1] {
+                bail!(
+                    "intervals must be non-decreasing outward (K1 <= K2 <= ...): \
+                     level {l} has {} > {}",
+                    intervals[l],
+                    intervals[l + 1]
+                );
+            }
+        }
+        Ok(HierSchedule { intervals })
+    }
+
+    /// The paper's two-level schedule.
+    pub fn two_level(k1: u64, k2: u64) -> Result<HierSchedule> {
+        let legacy = HierAvgSchedule::new(k1, k2)?;
+        Ok(HierSchedule::from(legacy))
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.intervals.len()
+    }
+
+    pub fn intervals(&self) -> &[u64] {
+        &self.intervals
+    }
+
+    /// Whether every interval divides the next (the analysis-faithful
+    /// integer-β chain; cf. `HierAvgSchedule::is_integer_beta`).
+    pub fn is_integer_chain(&self) -> bool {
+        self.intervals.windows(2).all(|w| w[1] % w[0] == 0)
+    }
+
+    /// The level that reduces after completing step `t` (1-based), if any:
+    /// the outermost level whose interval divides t, subsuming all inner
+    /// boundaries that coincide with it.
+    pub fn event_after(&self, t: u64) -> Option<usize> {
+        debug_assert!(t >= 1);
+        (0..self.intervals.len()).rev().find(|&l| t % self.intervals[l] == 0)
+    }
+
+    /// Number of reduction events per level over `t` steps.  A step on
+    /// several boundaries counts only for the outermost level (matching
+    /// [`HierSchedule::event_after`]); computed by inclusion–exclusion
+    /// rather than an O(t) scan.
+    pub fn reduction_counts(&self, t: u64) -> Vec<u64> {
+        let n = self.intervals.len();
+        (0..n)
+            .map(|lev| {
+                // Multiples of k[lev] that are multiples of no outer
+                // interval: inclusion–exclusion over subsets of the outer
+                // levels on the lcm.
+                let outers = &self.intervals[lev + 1..];
+                let mut count: i64 = 0;
+                for mask in 0u32..(1u32 << outers.len()) {
+                    let mut m = Some(self.intervals[lev]);
+                    for (i, &o) in outers.iter().enumerate() {
+                        if mask >> i & 1 == 1 {
+                            m = m.and_then(|v| lcm_capped(v, o, t));
+                        }
+                    }
+                    let term = m.map_or(0, |v| (t / v) as i64);
+                    if mask.count_ones() % 2 == 0 {
+                        count += term;
+                    } else {
+                        count -= term;
+                    }
+                }
+                count.max(0) as u64
+            })
+            .collect()
+    }
+}
+
+impl From<HierAvgSchedule> for HierSchedule {
+    fn from(s: HierAvgSchedule) -> HierSchedule {
+        HierSchedule { intervals: vec![s.k1, s.k2] }
+    }
+}
+
 fn gcd(a: u64, b: u64) -> u64 {
     if b == 0 { a } else { gcd(b, a % b) }
 }
 
 fn lcm(a: u64, b: u64) -> u64 {
     a / gcd(a, b) * b
+}
+
+/// lcm(a, b), or None when it exceeds `cap` (such a period contributes no
+/// multiples within the horizon; the u128 widening avoids overflow).
+fn lcm_capped(a: u64, b: u64, cap: u64) -> Option<u64> {
+    let l = (a / gcd(a, b)) as u128 * b as u128;
+    if l > cap as u128 { None } else { Some(l as u64) }
 }
 
 #[cfg(test)]
@@ -171,6 +294,64 @@ mod tests {
             }
         }
         assert_eq!(s.reduction_counts(t), (g, l));
+    }
+
+    #[test]
+    fn hier_schedule_two_level_matches_legacy() {
+        for (k1, k2) in [(1u64, 1u64), (2, 6), (4, 32), (20, 43), (3, 8)] {
+            let legacy = HierAvgSchedule::new(k1, k2).unwrap();
+            let hier = HierSchedule::two_level(k1, k2).unwrap();
+            for t in 1..=200 {
+                let expect = match legacy.event_after(t) {
+                    ReduceEvent::Global => Some(1),
+                    ReduceEvent::Local => Some(0),
+                    ReduceEvent::None => None,
+                };
+                assert_eq!(hier.event_after(t), expect, "k1={k1} k2={k2} t={t}");
+            }
+            let (g, l) = legacy.reduction_counts(10_000);
+            assert_eq!(hier.reduction_counts(10_000), vec![l, g]);
+        }
+    }
+
+    #[test]
+    fn hier_schedule_validates() {
+        assert!(HierSchedule::new(vec![]).is_err());
+        assert!(HierSchedule::new(vec![0, 4]).is_err());
+        assert!(HierSchedule::new(vec![8, 4]).is_err());
+        assert!(HierSchedule::new(vec![2, 4, 3]).is_err());
+        let s = HierSchedule::new(vec![2, 4, 16]).unwrap();
+        assert!(s.is_integer_chain());
+        assert!(!HierSchedule::new(vec![2, 3, 7]).unwrap().is_integer_chain());
+    }
+
+    #[test]
+    fn hier_schedule_three_level_counts_match_scan() {
+        for intervals in [vec![2u64, 4, 16], vec![2, 3, 7], vec![1, 1, 1], vec![5, 5, 10]] {
+            let s = HierSchedule::new(intervals.clone()).unwrap();
+            let t = 2_000u64;
+            let mut scan = vec![0u64; s.n_levels()];
+            for i in 1..=t {
+                if let Some(lev) = s.event_after(i) {
+                    scan[lev] += 1;
+                }
+            }
+            assert_eq!(s.reduction_counts(t), scan, "intervals {intervals:?}");
+        }
+    }
+
+    #[test]
+    fn hier_schedule_outermost_subsumes() {
+        let s = HierSchedule::new(vec![2, 4, 8]).unwrap();
+        assert_eq!(s.event_after(8), Some(2));
+        assert_eq!(s.event_after(4), Some(1));
+        assert_eq!(s.event_after(2), Some(0));
+        assert_eq!(s.event_after(3), None);
+        // equal intervals: the inner level never fires on its own
+        let dup = HierSchedule::new(vec![4, 4]).unwrap();
+        let counts = dup.reduction_counts(1000);
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[1], 250);
     }
 
     #[test]

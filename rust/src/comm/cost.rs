@@ -113,6 +113,16 @@ impl CostModel {
     }
 }
 
+/// Per-hierarchy-level communication account (one entry per
+/// `HierTopology` level; seconds follow the concurrent-groups convention
+/// of `Reducer::reduce_level` — the max over a level's symmetric groups).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LevelStats {
+    pub reductions: u64,
+    pub bytes: u64,
+    pub seconds: f64,
+}
+
 /// Running communication account for one training run.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommStats {

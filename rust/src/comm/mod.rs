@@ -1,19 +1,25 @@
 //! Simulated collectives over flat parameter buffers + the hierarchical
 //! communication cost model.
 //!
-//! The averaging *algebra* is executed for real (replicas' buffers are
-//! reduced and synchronized exactly as CUDA-aware MPI would), so training
-//! dynamics are exact.  The *time* of each reduction is charged to an α–β
-//! model with distinct intra-node (NVLink-class) and inter-node
-//! (Infiniband-class) links — this is the quantity the paper argues about
-//! but could not measure (§4.3: their PyTorch stack lacked GPU-direct).
+//! Three layers, independently pluggable:
 //!
-//! Three allreduce schedules are modelled (naive gather+broadcast, binary
-//! tree, ring); all compute the identical arithmetic mean (summation order
-//! is fixed), only the charged time differs.
+//! - [`collective`] — *how bytes move*: the [`Collective`] trait with a
+//!   single-thread simulated engine and a thread-parallel sharded engine
+//!   (reduce-scatter/all-gather over OS threads).  All engines compute the
+//!   identical arithmetic mean (summation order is fixed), so training
+//!   dynamics are exact and engine choice is a pure throughput knob.
+//! - [`reduce`] — *what a reduction does to the run*: in-place group
+//!   averaging plus aggregate and per-hierarchy-level accounting.
+//! - [`cost`] — *what a reduction costs*: an α–β model with distinct
+//!   intra-node (NVLink-class) and inter-node (Infiniband-class) links —
+//!   the quantity the paper argues about but could not measure (§4.3:
+//!   their PyTorch stack lacked GPU-direct).  Three allreduce schedules
+//!   are modelled (naive gather+broadcast, binary tree, ring).
 
+pub mod collective;
 pub mod cost;
 pub mod reduce;
 
-pub use cost::{CommStats, CostModel, ReduceStrategy};
+pub use collective::{Collective, CollectiveKind, ShardedCollective, SimulatedCollective};
+pub use cost::{CommStats, CostModel, LevelStats, ReduceStrategy};
 pub use reduce::Reducer;

@@ -1,47 +1,92 @@
-//! The reducer: in-place group averaging over learner replicas, with cost
-//! accounting against the topology's link classes.
+//! The reducer: group averaging over learner replicas with cost accounting
+//! against the topology's link classes.
 //!
-//! This is the L3 hot path (profiled in benches/reduction.rs).  The mean is
-//! accumulated into a reusable scratch buffer with a fixed summation order
-//! (learner-index ascending), so results are identical across reduce
-//! strategies and across runs.
+//! This is the L3 hot path (profiled in benches/reduction.rs).  The
+//! *arithmetic* is delegated to a pluggable [`Collective`] (simulated
+//! single-thread, or thread-parallel sharded); both keep a fixed summation
+//! order (learner-index ascending), so results are identical across
+//! collectives, reduce strategies, and runs.  The reducer owns what the
+//! collective does not: the α–β cost model, the aggregate [`CommStats`],
+//! and per-hierarchy-level [`LevelStats`].
 
-use crate::comm::cost::{CommStats, CostModel, ReduceStrategy};
+use crate::comm::collective::{Collective, SimulatedCollective};
+use crate::comm::cost::{CommStats, CostModel, LevelStats, ReduceStrategy};
 use crate::params::FlatParams;
-use crate::topology::{LinkClass, Topology};
+use crate::topology::{HierTopology, LinkClass, Topology};
 
 pub struct Reducer {
     pub cost: CostModel,
     pub strategy: ReduceStrategy,
     pub stats: CommStats,
+    collective: Box<dyn Collective>,
     scratch: Vec<f32>,
+    level_stats: Vec<LevelStats>,
 }
 
 impl Reducer {
+    /// A reducer on the default (simulated, single-thread) collective.
     pub fn new(cost: CostModel, strategy: ReduceStrategy, n_params: usize) -> Reducer {
-        Reducer { cost, strategy, stats: CommStats::default(), scratch: vec![0.0; n_params] }
+        Reducer::with_collective(cost, strategy, n_params, Box::new(SimulatedCollective))
     }
 
-    /// Average the replicas in `group` (indices into `replicas`) and write
-    /// the mean back into every member.  Returns the modelled seconds.
-    pub fn average_group(
+    pub fn with_collective(
+        cost: CostModel,
+        strategy: ReduceStrategy,
+        n_params: usize,
+        collective: Box<dyn Collective>,
+    ) -> Reducer {
+        Reducer {
+            cost,
+            strategy,
+            stats: CommStats::default(),
+            collective,
+            scratch: vec![0.0; n_params],
+            level_stats: Vec::new(),
+        }
+    }
+
+    pub fn collective_name(&self) -> &'static str {
+        self.collective.name()
+    }
+
+    /// Pre-size the per-level accounts (one per hierarchy level) so the
+    /// vector has a stable length even for levels that never fire.
+    pub fn reserve_levels(&mut self, n_levels: usize) {
+        if self.level_stats.len() < n_levels {
+            self.level_stats.resize(n_levels, LevelStats::default());
+        }
+    }
+
+    /// Per-hierarchy-level accounts (filled by [`Reducer::reduce_level`]).
+    pub fn level_stats(&self) -> &[LevelStats] {
+        &self.level_stats
+    }
+
+    /// Execute one group reduction (data movement + modelled cost), without
+    /// touching any statistics.
+    fn group_once(
         &mut self,
         replicas: &mut [FlatParams],
         group: std::ops::Range<usize>,
         link: LinkClass,
-    ) -> f64 {
+    ) -> (f64, u64) {
         let n = group.len();
         debug_assert!(n >= 1);
         let bytes = self.scratch.len() * 4;
-        mean_into(&mut self.scratch, replicas, group.clone());
-        // Broadcast the mean back to every member.  §Perf note: a threaded
-        // fan-out was tried here and reverted — this image exposes a single
-        // hardware thread, so the copies are already at memcpy speed.
-        for j in group.clone() {
-            replicas[j].copy_from_slice(&self.scratch);
-        }
+        self.collective.average_group(replicas, group, &mut self.scratch);
         let secs = self.cost.allreduce_seconds(n, bytes, link, self.strategy);
         let moved = self.cost.allreduce_bytes(n, bytes, self.strategy);
+        (secs, moved)
+    }
+
+    /// One group reduction charged to the aggregate stats.
+    fn charged_group(
+        &mut self,
+        replicas: &mut [FlatParams],
+        group: std::ops::Range<usize>,
+        link: LinkClass,
+    ) -> (f64, u64) {
+        let (secs, moved) = self.group_once(replicas, group, link);
         match link {
             LinkClass::IntraNode => {
                 self.stats.local_reductions += 1;
@@ -54,93 +99,88 @@ impl Reducer {
                 self.stats.global_seconds += secs;
             }
         }
-        secs
+        (secs, moved)
     }
 
-    /// Local averaging step: average within every cluster of the topology.
-    /// All clusters reduce concurrently in the modelled time (max over
-    /// clusters = any one cluster, since they are symmetric), so only one
-    /// cluster's time is charged, but every cluster's event/bytes are
-    /// counted.
-    pub fn local_average(&mut self, replicas: &mut [FlatParams], topo: &Topology) -> f64 {
-        if topo.s <= 1 {
+    /// Average the replicas in `group` (indices into `replicas`) and write
+    /// the mean back into every member.  Returns the modelled seconds.
+    pub fn average_group(
+        &mut self,
+        replicas: &mut [FlatParams],
+        group: std::ops::Range<usize>,
+        link: LinkClass,
+    ) -> f64 {
+        self.charged_group(replicas, group, link).0
+    }
+
+    /// Reduce every group at `level` of the hierarchy.  Groups at one level
+    /// are symmetric and reduce concurrently in the modelled time (max over
+    /// groups = any one group), so only one group's time is charged, but
+    /// every group's event/bytes are counted.
+    ///
+    /// Size-1 levels below the top are no-ops (the legacy `local_average`
+    /// S=1 behaviour); the outermost level always counts its event, even
+    /// for the degenerate P=1 run (legacy `global_average` behaviour).
+    pub fn reduce_level(
+        &mut self,
+        replicas: &mut [FlatParams],
+        topo: &HierTopology,
+        level: usize,
+    ) -> f64 {
+        let size = topo.size(level);
+        if size <= 1 && level + 1 < topo.n_levels() {
             return 0.0;
         }
+        let link = topo.link(level);
         let mut max_secs: f64 = 0.0;
         let mut total_secs: f64 = 0.0;
-        for c in 0..topo.n_clusters() {
-            let secs =
-                self.average_group(replicas, topo.cluster_members(c), LinkClass::IntraNode);
+        let mut reductions = 0u64;
+        let mut bytes = 0u64;
+        for g in 0..topo.n_groups(level) {
+            let (secs, moved) = self.charged_group(replicas, topo.group_members(level, g), link);
             max_secs = max_secs.max(secs);
             total_secs += secs;
+            reductions += 1;
+            bytes += moved;
         }
-        // Clusters are concurrent: subtract the serialized surplus.
-        self.stats.local_seconds -= total_secs - max_secs;
+        // Groups are concurrent: subtract the serialized surplus.
+        let surplus = total_secs - max_secs;
+        match link {
+            LinkClass::IntraNode => self.stats.local_seconds -= surplus,
+            LinkClass::InterNode => self.stats.global_seconds -= surplus,
+        }
+        self.reserve_levels(level + 1);
+        let ls = &mut self.level_stats[level];
+        ls.reductions += reductions;
+        ls.bytes += bytes;
+        ls.seconds += max_secs;
         max_secs
     }
 
+    /// Local averaging step: average within every cluster of the two-level
+    /// topology (level 0 of the hierarchy).
+    pub fn local_average(&mut self, replicas: &mut [FlatParams], topo: &Topology) -> f64 {
+        self.reduce_level(replicas, &topo.to_hier(), 0)
+    }
+
     /// Global averaging: one allreduce over all P learners (inter-node
-    /// fabric).
+    /// fabric; the outermost hierarchy level).
     pub fn global_average(&mut self, replicas: &mut [FlatParams], topo: &Topology) -> f64 {
-        self.average_group(replicas, 0..topo.p, LinkClass::InterNode)
+        self.reduce_level(replicas, &topo.to_hier(), 1)
     }
 
     /// Compute the mean across ALL replicas into `out` without touching the
     /// replicas (used to evaluate the paper's w̃ mid-interval).
     pub fn mean_of(&self, replicas: &[FlatParams], out: &mut FlatParams) {
         out.resize(self.scratch.len(), 0.0);
-        mean_into(out, replicas, 0..replicas.len());
-    }
-}
-
-/// Cache-block size for the accumulation loop (floats; 16 KiB fits L1 with
-/// room for two source streams).  §Perf: the naive formulation makes S
-/// full passes over `out` (S+1 streams of DRAM traffic); blocking keeps the
-/// accumulator chunk resident so `out` is written once, which measured
-/// 1.6-2.3x faster at 3.4M params (see EXPERIMENTS.md §Perf).
-const MEAN_BLOCK: usize = 4096;
-
-/// `out = mean(replicas[group])` with fixed (index-ascending) summation
-/// order.  Hot loop: blocked accumulation, auto-vectorized inner loops.
-fn mean_into(out: &mut [f32], replicas: &[FlatParams], group: std::ops::Range<usize>) {
-    let n = group.len();
-    let first = group.start;
-    if n == 1 {
-        out.copy_from_slice(&replicas[first]);
-        return;
-    }
-    let inv = 1.0 / n as f32;
-    let len = out.len();
-    let mut start = 0usize;
-    while start < len {
-        let end = (start + MEAN_BLOCK).min(len);
-        let blk = &mut out[start..end];
-        blk.copy_from_slice(&replicas[first][start..end]);
-        let mut rest = first + 1..group.end;
-        // Pairs of sources per pass: halves the accumulator re-reads.
-        while rest.len() >= 2 {
-            let a = rest.next().unwrap();
-            let b = rest.next().unwrap();
-            let (sa, sb) = (&replicas[a][start..end], &replicas[b][start..end]);
-            for ((o, x), y) in blk.iter_mut().zip(sa).zip(sb) {
-                *o += *x + *y;
-            }
-        }
-        if let Some(a) = rest.next() {
-            for (o, x) in blk.iter_mut().zip(&replicas[a][start..end]) {
-                *o += *x;
-            }
-        }
-        for o in blk.iter_mut() {
-            *o *= inv;
-        }
-        start = end;
+        self.collective.mean_of(replicas, 0..replicas.len(), out);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::collective::ShardedCollective;
 
     fn replicas(p: usize, n: usize) -> Vec<FlatParams> {
         (0..p).map(|j| (0..n).map(|i| (j * n + i) as f32).collect()).collect()
@@ -201,6 +241,28 @@ mod tests {
     }
 
     #[test]
+    fn collectives_agree_bitwise() {
+        let topo = Topology::new(8, 4).unwrap();
+        let mut a = replicas(8, 4099); // not a multiple of the shard size
+        let mut b = a.clone();
+        let mut sim = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 4099);
+        let mut sh = Reducer::with_collective(
+            CostModel::default(),
+            ReduceStrategy::Ring,
+            4099,
+            Box::new(ShardedCollective::new(3)),
+        );
+        sim.local_average(&mut a, &topo);
+        sim.global_average(&mut a, &topo);
+        sh.local_average(&mut b, &topo);
+        sh.global_average(&mut b, &topo);
+        assert_eq!(a, b);
+        assert_eq!(sim.stats, sh.stats);
+        assert_eq!(sim.level_stats(), sh.level_stats());
+        assert_eq!(sh.collective_name(), "sharded");
+    }
+
+    #[test]
     fn mean_of_does_not_mutate() {
         let r = replicas(3, 4);
         let before = r.clone();
@@ -220,5 +282,30 @@ mod tests {
         // Two symmetric clusters run concurrently: charged time equals one
         // cluster's allreduce, not two.
         assert!((red.stats.local_seconds - secs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn three_level_reduce_counts_per_level() {
+        let topo = HierTopology::new(vec![2, 4, 8]).unwrap();
+        let mut r = replicas(8, 16);
+        let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 16);
+        red.reserve_levels(topo.n_levels());
+        red.reduce_level(&mut r, &topo, 0); // 4 groups of 2, intra
+        red.reduce_level(&mut r, &topo, 1); // 2 groups of 4, inter
+        red.reduce_level(&mut r, &topo, 2); // 1 group of 8, inter
+        let ls = red.level_stats();
+        assert_eq!(ls.len(), 3);
+        assert_eq!(ls[0].reductions, 4);
+        assert_eq!(ls[1].reductions, 2);
+        assert_eq!(ls[2].reductions, 1);
+        assert_eq!(red.stats.local_reductions, 4);
+        assert_eq!(red.stats.global_reductions, 3);
+        // after the top-level reduction all replicas agree
+        for j in 1..8 {
+            assert_eq!(r[0], r[j]);
+        }
+        // concurrent-group convention: aggregate seconds equal the per-level maxima
+        let total: f64 = ls.iter().map(|l| l.seconds).sum();
+        assert!((red.stats.total_seconds() - total).abs() < 1e-12);
     }
 }

@@ -2,12 +2,13 @@
 //! CLI, examples, repro harness and tests all share.  Loadable from a JSON
 //! config file (configs/*.json) with CLI overrides.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::algorithms::HierAvgSchedule;
-use crate::comm::{CostModel, ReduceStrategy};
+use crate::algorithms::{HierAvgSchedule, HierSchedule};
+use crate::comm::{CollectiveKind, CostModel, ReduceStrategy};
 use crate::optimizer::LrSchedule;
-use crate::topology::Topology;
+use crate::topology::{HierTopology, Topology};
+use crate::util::cli::Args;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,6 +38,14 @@ pub struct RunConfig {
     pub s: usize,
     pub k1: u64,
     pub k2: u64,
+    /// N-level hierarchy: group sizes per level (innermost first, last
+    /// entry = P).  Empty = the paper's two-level `[s, p]` shape.
+    pub levels: Vec<usize>,
+    /// Per-level averaging intervals matching `levels` (non-decreasing
+    /// outward).  Empty = the two-level `[k1, k2]`.
+    pub ks: Vec<u64>,
+    /// Which collective engine executes reductions.
+    pub collective: CollectiveKind,
     pub epochs: usize,
     /// Nominal training-set size; steps/epoch = train_n / (P·B).
     pub train_n: usize,
@@ -79,6 +88,9 @@ impl RunConfig {
             s: 4,
             k1: 4,
             k2: 32,
+            levels: Vec::new(),
+            ks: Vec::new(),
+            collective: CollectiveKind::Simulated,
             epochs: 20,
             train_n: 4096,
             test_n: 1024,
@@ -102,17 +114,48 @@ impl RunConfig {
         }
     }
 
+    /// The paper's two-level view (valid for any config; N-level runs keep
+    /// `s = levels[0]` and `p = levels.last()` in sync).
     pub fn topology(&self) -> Result<Topology> {
         Topology::new(self.p, self.s)
+    }
+
+    /// The run's reduction hierarchy: `levels` when set, else the
+    /// two-level `[s, p]`.
+    pub fn hierarchy(&self) -> Result<HierTopology> {
+        if self.levels.is_empty() {
+            Ok(self.topology()?.to_hier())
+        } else {
+            let topo = HierTopology::new(self.levels.clone())?;
+            if topo.p() != self.p {
+                bail!(
+                    "hierarchy {:?} ends at {} learners but p = {}",
+                    self.levels,
+                    topo.p(),
+                    self.p
+                );
+            }
+            Ok(topo)
+        }
     }
 
     pub fn schedule(&self) -> Result<HierAvgSchedule> {
         HierAvgSchedule::new(self.k1, self.k2)
     }
 
-    /// Effective K2 at an epoch under the adaptive schedule.
+    /// The run's base per-level intervals: `ks` when set, else `[k1, k2]`.
+    pub fn base_intervals(&self) -> Vec<u64> {
+        if self.ks.is_empty() { vec![self.k1, self.k2] } else { self.ks.clone() }
+    }
+
+    pub fn hier_schedule(&self) -> Result<HierSchedule> {
+        HierSchedule::new(self.base_intervals())
+    }
+
+    /// Effective K2 (the outermost interval) at an epoch under the
+    /// adaptive schedule.
     pub fn k2_at(&self, epoch: usize) -> u64 {
-        let mut k2 = self.k2;
+        let mut k2 = *self.base_intervals().last().unwrap();
         for &(e, v) in &self.k2_schedule {
             if epoch >= e {
                 k2 = v;
@@ -127,11 +170,48 @@ impl RunConfig {
         HierAvgSchedule::new(self.k1.min(k2), k2)
     }
 
+    /// Effective N-level schedule at an epoch: the adaptive K2 replaces the
+    /// outermost interval and clamps every inner interval down to it (the
+    /// N-level generalization of `schedule_at`'s `K1.min(K2)`).
+    pub fn hier_schedule_at(&self, epoch: usize) -> Result<HierSchedule> {
+        let k2 = self.k2_at(epoch);
+        let mut ks = self.base_intervals();
+        let last = ks.len() - 1;
+        ks[last] = k2;
+        for k in ks[..last].iter_mut() {
+            *k = (*k).min(k2);
+        }
+        HierSchedule::new(ks)
+    }
+
     pub fn validate(&self) -> Result<()> {
-        self.topology()?;
-        self.schedule()?;
+        let topo = self.hierarchy()?;
+        let sched = self.hier_schedule()?;
+        if sched.n_levels() != topo.n_levels() {
+            bail!(
+                "{} averaging intervals for a {}-level hierarchy",
+                sched.n_levels(),
+                topo.n_levels()
+            );
+        }
+        if !self.levels.is_empty() && self.s != self.levels[0] {
+            bail!(
+                "s = {} out of sync with the hierarchy's innermost level {:?} (set levels via \
+                 set_levels/CLI/JSON so the two-level mirrors stay aligned)",
+                self.s,
+                self.levels
+            );
+        }
+        if !self.ks.is_empty() && (self.k1 != self.ks[0] || self.k2 != *self.ks.last().unwrap()) {
+            bail!(
+                "k1/k2 ({}, {}) out of sync with ks {:?} (set ks via the CLI/JSON so they stay aligned)",
+                self.k1,
+                self.k2,
+                self.ks
+            );
+        }
         for &(e, _) in &self.k2_schedule {
-            self.schedule_at(e)?;
+            self.hier_schedule_at(e)?;
         }
         if self.epochs == 0 || self.train_n == 0 {
             bail!("epochs and train_n must be positive");
@@ -139,12 +219,39 @@ impl RunConfig {
         Ok(())
     }
 
-    /// A short identifier for logs and CSV columns.
+    /// A short identifier for logs and CSV columns (the two-level form is
+    /// kept stable for existing results directories).
     pub fn label(&self) -> String {
-        format!(
-            "{}-p{}-s{}-k1_{}-k2_{}",
-            self.model, self.p, self.s, self.k1, self.k2
-        )
+        if self.levels.len() > 2 {
+            let sizes: Vec<String> = self.levels.iter().map(|s| s.to_string()).collect();
+            let ks: Vec<String> = self.base_intervals().iter().map(|k| k.to_string()).collect();
+            format!("{}-h{}-k{}", self.model, sizes.join("x"), ks.join("_"))
+        } else {
+            format!(
+                "{}-p{}-s{}-k1_{}-k2_{}",
+                self.model, self.p, self.s, self.k1, self.k2
+            )
+        }
+    }
+
+    /// Set an N-level hierarchy, keeping the two-level mirrors (`p`, `s`)
+    /// in sync.
+    pub fn set_levels(&mut self, levels: Vec<usize>) {
+        if let (Some(&first), Some(&last)) = (levels.first(), levels.last()) {
+            self.s = first;
+            self.p = last;
+        }
+        self.levels = levels;
+    }
+
+    /// Set per-level intervals, keeping the two-level mirrors (`k1`, `k2`)
+    /// in sync.
+    pub fn set_ks(&mut self, ks: Vec<u64>) {
+        if let (Some(&first), Some(&last)) = (ks.first(), ks.last()) {
+            self.k1 = first;
+            self.k2 = last;
+        }
+        self.ks = ks;
     }
 
     /// Load from a JSON file then apply `apply_json` overrides.
@@ -167,6 +274,16 @@ impl RunConfig {
                 "s" => self.s = v.as_usize()?,
                 "k1" => self.k1 = v.as_usize()? as u64,
                 "k2" => self.k2 = v.as_usize()? as u64,
+                "levels" => self.set_levels(v.usize_arr()?),
+                "ks" => {
+                    let ks = v
+                        .as_arr()?
+                        .iter()
+                        .map(|k| Ok(k.as_usize()? as u64))
+                        .collect::<Result<Vec<_>>>()?;
+                    self.set_ks(ks);
+                }
+                "collective" => self.collective = CollectiveKind::parse(v.as_str()?)?,
                 "epochs" => self.epochs = v.as_usize()?,
                 "train_n" => self.train_n = v.as_usize()?,
                 "test_n" => self.test_n = v.as_usize()?,
@@ -207,6 +324,80 @@ impl RunConfig {
         }
         Ok(())
     }
+
+    /// Build a run config from CLI flags (the `train` subcommand's
+    /// grammar; see the usage text in main.rs).  A `--config` file is
+    /// loaded first, then individual flags override it.
+    pub fn from_args(args: &Args) -> Result<RunConfig> {
+        let mut cfg = if let Some(path) = args.get("config") {
+            RunConfig::from_json_file(std::path::Path::new(path))?
+        } else {
+            RunConfig::defaults(args.get_or("model", "resnet18_sim"))
+        };
+        if let Some(m) = args.get("model") {
+            cfg.model = m.to_string();
+        }
+        if let Some(b) = args.get("backend") {
+            cfg.backend = BackendKind::parse(b)?;
+        }
+        // N-level flags come first so --p / --s / --k1 / --k2 can still
+        // override (validate() catches inconsistent combinations).
+        if let Some(ls) = args.get("levels") {
+            cfg.set_levels(parse_list::<usize>(ls, "levels")?);
+        }
+        if let Some(ks) = args.get("ks") {
+            cfg.set_ks(parse_list::<u64>(ks, "ks")?);
+        }
+        if let Some(c) = args.get("collective") {
+            cfg.collective = CollectiveKind::parse(c)?;
+        }
+        cfg.p = args.parse_or("p", cfg.p)?;
+        cfg.s = args.parse_or("s", cfg.s)?;
+        cfg.k1 = args.parse_or("k1", cfg.k1)?;
+        cfg.k2 = args.parse_or("k2", cfg.k2)?;
+        cfg.epochs = args.parse_or("epochs", cfg.epochs)?;
+        cfg.train_n = args.parse_or("train-n", cfg.train_n)?;
+        cfg.test_n = args.parse_or("test-n", cfg.test_n)?;
+        cfg.seed = args.parse_or("seed", cfg.seed)?;
+        cfg.noise = args.parse_or("noise", cfg.noise)?;
+        cfg.radius = args.parse_or("radius", cfg.radius)?;
+        cfg.momentum = args.parse_or("momentum", cfg.momentum)?;
+        if let Some(lr) = args.get("lr") {
+            cfg.lr = LrSchedule::parse(lr)?;
+        }
+        if let Some(s) = args.get("strategy") {
+            cfg.strategy =
+                ReduceStrategy::parse(s).ok_or_else(|| anyhow!("unknown strategy {s:?}"))?;
+        }
+        if args.has("record-steps") {
+            cfg.record_steps = true;
+        }
+        if let Some(p) = args.get("init-params") {
+            cfg.init_params = Some(p.to_string());
+        }
+        if args.get("save-params").is_some() {
+            cfg.keep_final_params = true;
+        }
+        if args.get("trace").is_some() {
+            cfg.record_trace = true;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Parse a comma-separated list flag value (e.g. `--levels 2,8,32`).
+fn parse_list<T: std::str::FromStr>(s: &str, flag: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    s.split(',')
+        .map(|x| {
+            x.trim()
+                .parse::<T>()
+                .map_err(|e| anyhow!("invalid --{flag} entry {x:?}: {e}"))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -258,5 +449,81 @@ mod tests {
     fn label_is_stable() {
         let c = RunConfig::defaults("resnet18_sim");
         assert_eq!(c.label(), "resnet18_sim-p16-s4-k1_4-k2_32");
+    }
+
+    #[test]
+    fn two_level_hierarchy_defaults() {
+        let c = RunConfig::defaults("m");
+        let h = c.hierarchy().unwrap();
+        assert_eq!(h.sizes(), &[4, 16]);
+        let s = c.hier_schedule().unwrap();
+        assert_eq!(s.intervals(), &[4, 32]);
+    }
+
+    #[test]
+    fn n_level_config_via_json() {
+        let mut c = RunConfig::defaults("m");
+        let j = Json::parse(
+            r#"{"levels": [2, 8, 32], "ks": [2, 8, 32], "collective": "sharded:4",
+                "backend": "native"}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.p, 32);
+        assert_eq!(c.s, 2);
+        assert_eq!(c.k1, 2);
+        assert_eq!(c.k2, 32);
+        assert_eq!(c.collective, CollectiveKind::Sharded { threads: 4 });
+        c.validate().unwrap();
+        assert_eq!(c.hierarchy().unwrap().n_levels(), 3);
+        assert_eq!(c.label(), "m-h2x8x32-k2_8_32");
+    }
+
+    #[test]
+    fn n_level_mismatch_rejected() {
+        let mut c = RunConfig::defaults("m");
+        c.set_levels(vec![2, 8, 32]);
+        // 2 intervals for 3 levels
+        assert!(c.validate().is_err());
+        c.set_ks(vec![2, 8, 32]);
+        c.validate().unwrap();
+        // later --p override that contradicts the chain
+        c.p = 64;
+        assert!(c.validate().is_err());
+        // later --s override that contradicts the innermost level
+        let mut c = RunConfig::defaults("m");
+        c.set_levels(vec![2, 8, 32]);
+        c.set_ks(vec![2, 8, 32]);
+        c.s = 8;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn adaptive_k2_clamps_all_levels() {
+        let mut c = RunConfig::defaults("m");
+        c.set_levels(vec![2, 8, 32]);
+        c.set_ks(vec![4, 8, 32]);
+        c.k2_schedule = vec![(5, 2)];
+        c.validate().unwrap();
+        assert_eq!(c.hier_schedule_at(0).unwrap().intervals(), &[4, 8, 32]);
+        assert_eq!(c.hier_schedule_at(5).unwrap().intervals(), &[2, 2, 2]);
+    }
+
+    #[test]
+    fn from_args_parses_n_level_flags() {
+        use crate::util::cli::Args;
+        let argv: Vec<String> = [
+            "train", "--model", "quickstart", "--backend", "native", "--levels", "2,4,8",
+            "--ks", "2,4,8", "--collective", "sharded", "--epochs", "2",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.p, 8);
+        assert_eq!(cfg.hierarchy().unwrap().sizes(), &[2, 4, 8]);
+        assert_eq!(cfg.hier_schedule().unwrap().intervals(), &[2, 4, 8]);
+        assert_eq!(cfg.collective, CollectiveKind::Sharded { threads: 0 });
     }
 }

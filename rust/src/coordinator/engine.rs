@@ -1,0 +1,151 @@
+//! The learner engine: owns the replicated learner state and drives one
+//! synchronous step at a time through the three pluggable layers —
+//! topology ([`HierTopology`]: who reduces with whom), schedule
+//! ([`HierSchedule`]: when each tier reduces), and collective (inside the
+//! [`Reducer`]: how the bytes move).
+//!
+//! The engine is deliberately backend- and epoch-agnostic: `Trainer`
+//! (coordinator/mod.rs) keeps the epoch loop, evaluation, and record
+//! assembly, and calls [`Engine::step`] once per synchronous step.  The
+//! split is what lets N-level hierarchies, adaptive schedules, and
+//! alternative collectives compose without touching the training loop.
+
+use anyhow::Result;
+
+use crate::algorithms::HierSchedule;
+use crate::backend::{StepBackend, StepOut};
+use crate::comm::Reducer;
+use crate::config::RunConfig;
+use crate::data::{BatchBuf, DataSource};
+use crate::optimizer::Sgd;
+use crate::params::FlatParams;
+use crate::topology::HierTopology;
+use crate::util::rng::Pcg32;
+
+/// Replicated per-learner training state (parameters, gradients, optimizer
+/// state, PRNG streams) plus the shared step-output scratch.
+pub struct LearnerSet {
+    pub replicas: Vec<FlatParams>,
+    pub grads: Vec<FlatParams>,
+    pub outs: Vec<StepOut>,
+    pub opts: Vec<Sgd>,
+    pub rngs: Vec<Pcg32>,
+}
+
+impl LearnerSet {
+    pub fn new(cfg: &RunConfig, n_params: usize, init: &FlatParams) -> LearnerSet {
+        let p = cfg.p;
+        let mut root = Pcg32::new(cfg.seed, 0x48494552); // "HIER"
+        LearnerSet {
+            replicas: vec![init.clone(); p],
+            grads: vec![vec![0.0; n_params]; p],
+            outs: vec![StepOut::default(); p],
+            opts: (0..p).map(|_| Sgd::new(cfg.momentum, cfg.weight_decay, n_params)).collect(),
+            rngs: (0..p).map(|j| root.fork(j as u64)).collect(),
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.replicas.len()
+    }
+}
+
+/// A reduction that fired after a step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReduceOutcome {
+    /// Hierarchy level that reduced (0 = innermost).
+    pub level: usize,
+    /// Modelled seconds the reduction cost.
+    pub seconds: f64,
+    /// Trace tag ('L' innermost, 'G' outermost, digits between).
+    pub kind: char,
+}
+
+/// What one synchronous step produced.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepOutcome {
+    /// Mean training loss across learners.
+    pub mean_loss: f64,
+    /// Total correct predictions across learners.
+    pub ncorrect: f64,
+    /// The reduction event, if the schedule fired one.
+    pub reduce: Option<ReduceOutcome>,
+}
+
+/// Drives the P learners: batch sampling, the stacked backend dispatch,
+/// local SGD updates, and scheduled hierarchical reductions.
+pub struct Engine<'a> {
+    pub cfg: &'a RunConfig,
+    pub topo: HierTopology,
+    pub reducer: Reducer,
+    pub learners: LearnerSet,
+    batch: BatchBuf,
+    t: u64,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(cfg: &'a RunConfig, n_params: usize, init: &FlatParams) -> Result<Engine<'a>> {
+        let topo = cfg.hierarchy()?;
+        let mut reducer =
+            Reducer::with_collective(cfg.cost, cfg.strategy, n_params, cfg.collective.build());
+        reducer.reserve_levels(topo.n_levels());
+        Ok(Engine {
+            cfg,
+            topo,
+            reducer,
+            learners: LearnerSet::new(cfg, n_params, init),
+            batch: BatchBuf::default(),
+            t: 0,
+        })
+    }
+
+    /// Completed step count (1-based after the first step).
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// One synchronous step: every learner draws a mini-batch and takes one
+    /// local SGD step (a single stacked backend dispatch), then the
+    /// schedule decides which hierarchy tier (if any) averages.
+    pub fn step(
+        &mut self,
+        backend: &mut dyn StepBackend,
+        data: &dyn DataSource,
+        lr: f32,
+        sched: &HierSchedule,
+    ) -> Result<StepOutcome> {
+        let p = self.learners.p();
+        let b = backend.train_batch();
+        self.batch.clear();
+        for rng in self.learners.rngs.iter_mut() {
+            data.fill_train(rng, b, &mut self.batch);
+        }
+        backend.grads(
+            &self.learners.replicas,
+            &self.batch,
+            &mut self.learners.grads,
+            &mut self.learners.outs,
+        )?;
+        for j in 0..p {
+            self.learners.opts[j].apply(&mut self.learners.replicas[j], &self.learners.grads[j], lr);
+        }
+        self.t += 1;
+        let reduce = match sched.event_after(self.t) {
+            Some(level) => {
+                let seconds =
+                    self.reducer.reduce_level(&mut self.learners.replicas, &self.topo, level);
+                Some(ReduceOutcome { level, seconds, kind: self.topo.trace_kind(level) })
+            }
+            None => None,
+        };
+        let mean_loss =
+            self.learners.outs.iter().map(|o| o.loss as f64).sum::<f64>() / p as f64;
+        let ncorrect = self.learners.outs.iter().map(|o| o.ncorrect as f64).sum::<f64>();
+        Ok(StepOutcome { mean_loss, ncorrect, reduce })
+    }
+
+    /// The paper's w̃: the mean of all replicas, without perturbing them.
+    pub fn mean_params(&self, out: &mut FlatParams) {
+        self.reducer.mean_of(&self.learners.replicas, out);
+    }
+}

@@ -1,24 +1,34 @@
-//! The trainer: Algorithm 1 of the paper, orchestrated at L3.
+//! The trainer: Algorithm 1 of the paper (generalized to N levels),
+//! orchestrated at L3.
 //!
-//! Owns the P learner replicas, their optimizer states and PRNG streams,
-//! the averaging schedule, the reducer (+ cost model), and the metrics
-//! sink.  One `step` = every learner takes one local SGD step (one stacked
-//! backend dispatch), then the schedule decides whether clusters average
-//! locally or all P average globally.
+//! The training core is decomposed into three pluggable layers, each owned
+//! by [`engine::Engine`]:
+//!
+//! - **topology** (`HierTopology`) — who reduces with whom: an N-level
+//!   hierarchy of nested groups, each on a link class of the cost model;
+//! - **schedule** (`HierSchedule`) — when each tier reduces: per-level
+//!   intervals `K1 ≤ K2 ≤ …`, the outermost boundary subsuming inner ones;
+//! - **collective** (`comm::Collective`) — how the bytes move: simulated
+//!   single-thread or thread-parallel sharded, bit-identical numerics.
+//!
+//! `Trainer` keeps what is not per-step: the epoch loop, evaluation of the
+//! paper's w̃, and `RunRecord` assembly.  One engine step = every learner
+//! takes one local SGD step (one stacked backend dispatch), then the
+//! schedule decides which tier (if any) averages.
+
+pub mod engine;
 
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::algorithms::ReduceEvent;
-use crate::backend::{StepBackend, StepOut};
-use crate::comm::Reducer;
+use crate::backend::StepBackend;
 use crate::config::RunConfig;
 use crate::data::{BatchBuf, DataSource};
 use crate::metrics::{EpochStats, RunRecord};
-use crate::optimizer::Sgd;
 use crate::params::FlatParams;
-use crate::util::rng::Pcg32;
+
+pub use engine::{Engine, LearnerSet, ReduceOutcome, StepOutcome};
 
 pub struct Trainer<'a> {
     pub cfg: &'a RunConfig,
@@ -57,74 +67,39 @@ impl<'a> Trainer<'a> {
 
     pub fn run(&mut self) -> Result<RunRecord> {
         let cfg = self.cfg;
-        let topo = cfg.topology()?;
         let p = cfg.p;
         let b = self.backend.train_batch();
         let n_params = self.backend.n_params();
-
-        let mut replicas: Vec<FlatParams> = vec![self.init.clone(); p];
-        let mut grads: Vec<FlatParams> = vec![vec![0.0; n_params]; p];
-        let mut outs: Vec<StepOut> = vec![StepOut::default(); p];
-        let mut opts: Vec<Sgd> =
-            (0..p).map(|_| Sgd::new(cfg.momentum, cfg.weight_decay, n_params)).collect();
-        let mut root = Pcg32::new(cfg.seed, 0x48494552); // "HIER"
-        let mut rngs: Vec<Pcg32> = (0..p).map(|j| root.fork(j as u64)).collect();
-        let mut reducer = Reducer::new(cfg.cost, cfg.strategy, n_params);
+        let mut engine = Engine::new(cfg, n_params, &self.init)?;
 
         let mut record = RunRecord { label: cfg.label(), ..Default::default() };
         let spe = self.steps_per_epoch();
         let step_secs = self.sim_step_seconds();
         let units = self.backend.units_per_row() as f64;
         let started = Instant::now();
-        let mut batch = BatchBuf::default();
         let mut wbar: FlatParams = Vec::new();
-        let mut t: u64 = 0;
 
         for epoch in 0..cfg.epochs {
             let lr = cfg.lr.lr_at(epoch);
             // Adaptive K2 (paper §3.3): the schedule may change per epoch.
-            let sched = cfg.schedule_at(epoch)?;
+            let sched = cfg.hier_schedule_at(epoch)?;
             let mut ep_loss = 0.0f64;
             let mut ep_correct = 0.0f64;
             for _ in 0..spe {
-                batch.clear();
-                for rng in rngs.iter_mut() {
-                    self.data.fill_train(rng, b, &mut batch);
-                }
-                self.backend.grads(&replicas, &batch, &mut grads, &mut outs)?;
-                for j in 0..p {
-                    opts[j].apply(&mut replicas[j], &grads[j], lr);
-                }
-                t += 1;
-                match sched.event_after(t) {
-                    ReduceEvent::Local => {
-                        let secs = reducer.local_average(&mut replicas, &topo);
-                        if cfg.record_trace {
-                            record.trace.push(crate::metrics::TraceEvent {
-                                step: t,
-                                kind: 'L',
-                                seconds: secs,
-                            });
-                        }
+                let out = engine.step(self.backend.as_mut(), self.data.as_ref(), lr, &sched)?;
+                if let Some(r) = out.reduce {
+                    if cfg.record_trace {
+                        record.trace.push(crate::metrics::TraceEvent {
+                            step: engine.t(),
+                            kind: r.kind,
+                            seconds: r.seconds,
+                        });
                     }
-                    ReduceEvent::Global => {
-                        let secs = reducer.global_average(&mut replicas, &topo);
-                        if cfg.record_trace {
-                            record.trace.push(crate::metrics::TraceEvent {
-                                step: t,
-                                kind: 'G',
-                                seconds: secs,
-                            });
-                        }
-                    }
-                    ReduceEvent::None => {}
                 }
-                let mean_loss =
-                    outs.iter().map(|o| o.loss as f64).sum::<f64>() / p as f64;
-                ep_loss += mean_loss;
-                ep_correct += outs.iter().map(|o| o.ncorrect as f64).sum::<f64>();
+                ep_loss += out.mean_loss;
+                ep_correct += out.ncorrect;
                 if cfg.record_steps {
-                    record.step_loss.push(mean_loss as f32);
+                    record.step_loss.push(out.mean_loss as f32);
                 }
             }
             record.sim_compute_seconds += spe as f64 * step_secs;
@@ -133,7 +108,7 @@ impl<'a> Trainer<'a> {
             let (test_loss, test_acc) = if do_eval {
                 // Evaluate the paper's w̃: the global mean of all replicas
                 // (without perturbing them if t is mid-interval).
-                reducer.mean_of(&replicas, &mut wbar);
+                engine.mean_params(&mut wbar);
                 self.evaluate(&wbar)?
             } else {
                 (f64::NAN, f64::NAN)
@@ -145,16 +120,17 @@ impl<'a> Trainer<'a> {
                 train_acc: ep_correct / (spe * p * b) as f64 / units,
                 test_loss,
                 test_acc,
-                sim_seconds: record.sim_compute_seconds + reducer.stats.total_seconds(),
+                sim_seconds: record.sim_compute_seconds + engine.reducer.stats.total_seconds(),
                 wall_seconds: started.elapsed().as_secs_f64(),
             });
         }
 
-        record.comm = reducer.stats;
-        record.total_steps = t;
+        record.comm = engine.reducer.stats;
+        record.comm_levels = engine.reducer.level_stats().to_vec();
+        record.total_steps = engine.t();
         if cfg.keep_final_params {
             let mut final_params = Vec::new();
-            reducer.mean_of(&replicas, &mut final_params);
+            engine.mean_params(&mut final_params);
             record.final_params = Some(final_params);
         }
         Ok(record)
@@ -192,6 +168,7 @@ mod tests {
     use crate::config::BackendKind;
     use crate::data::{ClassifyData, MixtureSpec};
     use crate::native::NativeMlp;
+    use crate::util::rng::Pcg32;
 
     fn quick_cfg() -> RunConfig {
         let mut cfg = RunConfig::defaults("native-test");

@@ -6,11 +6,14 @@
 //! distributed-training framework:
 //!
 //! - **L3 (this crate)** — the hierarchical-averaging coordinator
-//!   (Algorithm 1): P learner replicas in clusters of S, local averaging
-//!   every K1 steps, global reduction every K2; plus the substrates it
-//!   needs (cluster/topology model, simulated collectives with an α–β
-//!   hierarchical cost model, optimizers, synthetic datasets, metrics, and
-//!   the paper's bounds in `theory`).
+//!   (Algorithm 1, generalized): P learner replicas in an N-level
+//!   hierarchy of nested groups (the paper's clusters-of-S is the 2-level
+//!   case), per-level averaging intervals `K1 ≤ K2 ≤ …`, and pluggable
+//!   collectives (single-thread simulated or thread-parallel sharded,
+//!   bit-identical numerics); plus the substrates it needs
+//!   (cluster/topology model, an α–β hierarchical cost model, optimizers,
+//!   synthetic datasets, metrics, and the paper's bounds in `theory`).
+//!   See DESIGN.md §Engine for the three-layer decomposition.
 //! - **L2 (python/compile/model.py, build-time)** — JAX model graphs
 //!   (MLP classifiers + a transformer LM) AOT-lowered to HLO text.
 //! - **L1 (python/compile/kernels, build-time)** — Pallas kernels (fused
@@ -54,11 +57,14 @@ pub mod theory;
 pub mod topology;
 pub mod util;
 
-pub use algorithms::{HierAvgSchedule, ReduceEvent};
-pub use comm::{CommStats, CostModel, ReduceStrategy, Reducer};
+pub use algorithms::{HierAvgSchedule, HierSchedule, ReduceEvent};
+pub use comm::{
+    Collective, CollectiveKind, CommStats, CostModel, LevelStats, ReduceStrategy, Reducer,
+    ShardedCollective, SimulatedCollective,
+};
 pub use config::{BackendKind, RunConfig};
-pub use coordinator::Trainer;
+pub use coordinator::{Engine, Trainer};
 pub use metrics::{EpochStats, RunRecord};
 pub use params::{FlatParams, ParamLayout};
-pub use topology::Topology;
+pub use topology::{HierTopology, Topology};
 pub mod repro;

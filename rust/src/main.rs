@@ -2,8 +2,7 @@
 
 use anyhow::{bail, Result};
 
-use hier_avg::config::{BackendKind, RunConfig};
-use hier_avg::optimizer::LrSchedule;
+use hier_avg::config::RunConfig;
 use hier_avg::runtime::Manifest;
 use hier_avg::util::cli::Args;
 use hier_avg::{driver, repro};
@@ -14,16 +13,23 @@ hier-avg — distributed hierarchical averaging SGD (Zhou & Cong 2019)
 USAGE:
   hier-avg train  [--config f.json] [--model M] [--backend xla|native]
                   [--p N] [--s N] [--k1 N] [--k2 N] [--epochs N]
+                  [--levels S1,S2,..,P] [--ks K1,K2,..,KL]
+                  [--collective simulated|sharded|sharded:N]
                   [--train-n N] [--test-n N] [--lr SCHED] [--seed N]
                   [--noise F] [--radius F] [--strategy ring|tree|naive]
                   [--out results/run.json] [--record-steps]
                   [--save-params ckpt.bin] [--init-params ckpt.bin]
                   [--trace results/trace.jsonl]
   hier-avg repro  <fig1|fig2|fig3|fig4|fig5|table1|thm34|thm35|thm36|comm|
-                   asgd|adaptive|all>
+                   asgd|adaptive|deep|all>
                   [--scale small|full] [--backend xla|native] [--out DIR]
   hier-avg list                      # models in the artifact manifest
   hier-avg info   --model M          # manifest entry details
+
+Hierarchy: --levels gives the N-level group-size chain (innermost first,
+last = P, each dividing the next) and --ks the per-level averaging
+intervals; omit both for the paper's two-level --p/--s/--k1/--k2 shape.
+E.g. a GPU->node->rack run: --levels 4,16,64 --ks 2,8,32
 
 LR schedules: const:0.05 | step:0.1@150=0.01 | cosine:0.1->0.001@200 |
               warmcos:0.1->0.001@5/200
@@ -51,57 +57,18 @@ fn real_main() -> Result<()> {
     }
 }
 
-pub fn config_from_args(args: &Args) -> Result<RunConfig> {
-    let mut cfg = if let Some(path) = args.get("config") {
-        RunConfig::from_json_file(std::path::Path::new(path))?
-    } else {
-        RunConfig::defaults(args.get_or("model", "resnet18_sim"))
-    };
-    if let Some(m) = args.get("model") {
-        cfg.model = m.to_string();
-    }
-    if let Some(b) = args.get("backend") {
-        cfg.backend = BackendKind::parse(b)?;
-    }
-    cfg.p = args.parse_or("p", cfg.p)?;
-    cfg.s = args.parse_or("s", cfg.s)?;
-    cfg.k1 = args.parse_or("k1", cfg.k1)?;
-    cfg.k2 = args.parse_or("k2", cfg.k2)?;
-    cfg.epochs = args.parse_or("epochs", cfg.epochs)?;
-    cfg.train_n = args.parse_or("train-n", cfg.train_n)?;
-    cfg.test_n = args.parse_or("test-n", cfg.test_n)?;
-    cfg.seed = args.parse_or("seed", cfg.seed)?;
-    cfg.noise = args.parse_or("noise", cfg.noise)?;
-    cfg.radius = args.parse_or("radius", cfg.radius)?;
-    cfg.momentum = args.parse_or("momentum", cfg.momentum)?;
-    if let Some(lr) = args.get("lr") {
-        cfg.lr = LrSchedule::parse(lr)?;
-    }
-    if let Some(s) = args.get("strategy") {
-        cfg.strategy = hier_avg::ReduceStrategy::parse(s)
-            .ok_or_else(|| anyhow::anyhow!("unknown strategy {s:?}"))?;
-    }
-    if args.has("record-steps") {
-        cfg.record_steps = true;
-    }
-    if let Some(p) = args.get("init-params") {
-        cfg.init_params = Some(p.to_string());
-    }
-    if args.get("save-params").is_some() {
-        cfg.keep_final_params = true;
-    }
-    if args.get("trace").is_some() {
-        cfg.record_trace = true;
-    }
-    cfg.validate()?;
-    Ok(cfg)
-}
-
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = config_from_args(args)?;
+    let cfg = RunConfig::from_args(args)?;
+    let topo = cfg.hierarchy()?;
     eprintln!(
-        "[train] {} backend={:?} P={} S={} K1={} K2={} epochs={}",
-        cfg.model, cfg.backend, cfg.p, cfg.s, cfg.k1, cfg.k2, cfg.epochs
+        "[train] {} backend={:?} P={} levels={:?} K={:?} collective={} epochs={}",
+        cfg.model,
+        cfg.backend,
+        cfg.p,
+        topo.sizes(),
+        cfg.base_intervals(),
+        cfg.collective.name(),
+        cfg.epochs
     );
     let rec = driver::run(&cfg)?;
     for e in &rec.epochs {
@@ -119,6 +86,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         rec.comm.global_seconds,
         rec.comm.local_seconds,
     );
+    for (lev, ls) in rec.comm_levels.iter().enumerate() {
+        println!(
+            "level {lev} (groups of {:>4}, {:?}): {:>8} reductions  {:>14} bytes  {:.4}s",
+            topo.size(lev),
+            topo.link(lev),
+            ls.reductions,
+            ls.bytes,
+            ls.seconds
+        );
+    }
     if let Some(out) = args.get("out") {
         rec.write_json(std::path::Path::new(out))?;
         eprintln!("wrote {out}");

@@ -5,7 +5,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::comm::CommStats;
+use crate::comm::{CommStats, LevelStats};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, Default)]
@@ -39,6 +39,9 @@ pub struct RunRecord {
     /// fine-grained curves (the e2e example logs this).
     pub step_loss: Vec<f32>,
     pub comm: CommStats,
+    /// Per-hierarchy-level reduction accounts (index = level, 0 =
+    /// innermost; filled by the engine, one entry per topology level).
+    pub comm_levels: Vec<LevelStats>,
     pub total_steps: u64,
     pub sim_compute_seconds: f64,
     /// Reduction-event trace (populated when `record_trace` is set).
@@ -89,10 +92,20 @@ impl RunRecord {
             .set("global_bytes", Json::from(self.comm.global_bytes as usize))
             .set("local_seconds", Json::from(self.comm.local_seconds))
             .set("global_seconds", Json::from(self.comm.global_seconds));
+        let mut comm_levels = Vec::new();
+        for (i, l) in self.comm_levels.iter().enumerate() {
+            let mut o = Json::obj();
+            o.set("level", Json::from(i))
+                .set("reductions", Json::from(l.reductions as usize))
+                .set("bytes", Json::from(l.bytes as usize))
+                .set("seconds", Json::from(l.seconds));
+            comm_levels.push(o);
+        }
         let mut o = Json::obj();
         o.set("label", Json::from(self.label.as_str()))
             .set("epochs", Json::Arr(epochs))
             .set("comm", comm)
+            .set("comm_levels", Json::Arr(comm_levels))
             .set("total_steps", Json::from(self.total_steps as usize))
             .set("sim_compute_seconds", Json::from(self.sim_compute_seconds))
             .set("sim_total_seconds", Json::from(self.sim_total_seconds()))

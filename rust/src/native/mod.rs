@@ -218,6 +218,14 @@ impl NativeMlp {
         }
     }
 
+    /// Evaluation stats (sum_loss, ncorrect) for `n` rows of a contiguous
+    /// batch slice — the kernel shared by the serial eval path and the
+    /// parallel backend's per-lane fan-out.
+    pub fn eval_rows(&mut self, params: &[f32], x: &[f32], y: &[i32], n: usize) -> (f32, f32) {
+        self.forward(params, x, n);
+        self.loss_from_logits(y, n, n, None)
+    }
+
     /// One learner's grads + stats from a contiguous batch slice.
     pub fn grads_single(
         &mut self,
@@ -282,8 +290,7 @@ impl StepBackend for NativeMlp {
         n: usize,
     ) -> Result<(f32, f32)> {
         let d = self.dims[0];
-        self.forward(params, &batch.xf[..n * d], n);
-        Ok(self.loss_from_logits(&batch.y, n, n, None))
+        Ok(self.eval_rows(params, &batch.xf[..n * d], &batch.y[..n], n))
     }
 }
 

@@ -107,7 +107,37 @@ impl StepBackend for ParallelNativeMlp {
         batch: &BatchBuf,
         n: usize,
     ) -> Result<(f32, f32)> {
-        self.lanes[0].eval_batch_stats(params, batch, n)
+        let d = self.dims[0];
+        let lanes = self.lanes.len().min(n).max(1);
+        if lanes == 1 {
+            return self.lanes[0].eval_batch_stats(params, batch, n);
+        }
+        // Fan the evaluation rows across lanes like `grads` fans learners;
+        // each lane's scratch holds up to eval_batch rows, and a chunk is
+        // never larger than that.  Partial sums are combined in lane order,
+        // so the result is deterministic for a fixed lane count.
+        let per = n.div_ceil(lanes);
+        let partials: Vec<(f32, f32)> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (i, lane) in self.lanes.iter_mut().take(lanes).enumerate() {
+                let start = i * per;
+                if start >= n {
+                    break;
+                }
+                let len = per.min(n - start);
+                let x = &batch.xf[start * d..(start + len) * d];
+                let y = &batch.y[start..start + len];
+                handles.push(scope.spawn(move || lane.eval_rows(params, x, y, len)));
+            }
+            handles.into_iter().map(|h| h.join().expect("native eval lane panicked")).collect()
+        });
+        let mut sum_loss = 0.0f32;
+        let mut ncorrect = 0.0f32;
+        for (l, c) in partials {
+            sum_loss += l;
+            ncorrect += c;
+        }
+        Ok((sum_loss, ncorrect))
     }
 }
 
@@ -164,6 +194,44 @@ mod tests {
             assert_eq!(os[j].loss, op[j].loss);
             assert_eq!(os[j].ncorrect, op[j].ncorrect);
         }
+    }
+
+    #[test]
+    fn parallel_eval_matches_serial() {
+        let dims = [10usize, 20, 4];
+        let eval_b = 23; // deliberately not a multiple of the lane count
+        let mut serial = NativeMlp::new(&dims, 4, eval_b).unwrap();
+        let mut par = ParallelNativeMlp::new(&dims, 4, eval_b, 3).unwrap();
+
+        let mut rng = Pcg32::seeded(17);
+        let params = serial.init(&mut rng);
+        let data = ClassifyData::generate(MixtureSpec {
+            dim: 10,
+            classes: 4,
+            train_n: 64,
+            test_n: 64,
+            radius: 1.0,
+            noise: 0.9,
+            subclusters: 1,
+            label_noise: 0.0,
+            seed: 8,
+        });
+        let mut buf = BatchBuf::default();
+        assert_eq!(data.fill_eval(0, eval_b, &mut buf), eval_b);
+
+        let (ls, cs) = serial.eval_batch_stats(&params, &buf, eval_b).unwrap();
+        let (lp, cp) = par.eval_batch_stats(&params, &buf, eval_b).unwrap();
+        // Correct counts are integer-valued f32 sums: exact in any order.
+        assert_eq!(cs, cp);
+        // The loss sum is chunked per lane; only the accumulation order
+        // differs, so the results agree to rounding.
+        assert!(
+            (ls - lp).abs() <= 1e-5 * ls.abs().max(1.0),
+            "serial {ls} vs parallel {lp}"
+        );
+        // Deterministic for a fixed lane count.
+        let (lp2, cp2) = par.eval_batch_stats(&params, &buf, eval_b).unwrap();
+        assert_eq!((lp, cp), (lp2, cp2));
     }
 
     #[test]

@@ -465,6 +465,56 @@ pub fn adaptive(ctx: &ReproCtx) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Deep hierarchies (beyond the paper): GPU -> node -> rack.  The engine's
+// N-level generalization lets the paper's trade (global reductions for
+// cheap local ones) recurse: the rack tier absorbs most of what the
+// 2-level shape still paid on the global fabric.
+// ---------------------------------------------------------------------------
+
+pub fn deep(ctx: &ReproCtx) -> Result<()> {
+    println!("\n=== Deep hierarchy: 2-level vs 3-level at P=32, equal data budget ===");
+    let p = 32usize;
+    // 2-level: the paper's shape, S=4, K=[4,16].
+    let two = ctx.cifar_cfg("resnet18_sim", p, 4, 4, 16);
+    // 3-level: GPU quads -> nodes of 16 -> the 32-learner rack, reducing
+    // each tier 4x less often than the one below.
+    let mut three = ctx.cifar_cfg("resnet18_sim", p, 4, 4, 16);
+    three.set_levels(vec![4, 16, 32]);
+    three.set_ks(vec![4, 16, 64]);
+    let runs =
+        [("two-level-s4", two), ("three-level-4x16x32", three)];
+    let mut records = Vec::new();
+    println!(
+        "{:<24} {:>12} {:>10} {:>12} {:>12} {:>14}",
+        "run", "tail_loss", "test_acc", "glob_reds", "loc_reds", "comm_model_s"
+    );
+    for (label, cfg) in runs {
+        let rec = run_labeled(&cfg, label)?;
+        println!(
+            "{:<24} {:>12.4} {:>10.4} {:>12} {:>12} {:>14.4}",
+            label,
+            tail_mean(&rec, |e| e.train_loss),
+            rec.final_test_acc(),
+            rec.comm.global_reductions,
+            rec.comm.local_reductions,
+            rec.comm.total_seconds()
+        );
+        let topo = cfg.hierarchy()?;
+        for (lev, ls) in rec.comm_levels.iter().enumerate() {
+            println!(
+                "    level {lev} (groups of {:>3}): {:>8} reductions  {:.4}s",
+                topo.size(lev),
+                ls.reductions,
+                ls.seconds
+            );
+        }
+        records.push(rec);
+    }
+    println!("\nexpectation: the 3-level run fires ~4x fewer rack-wide reductions while the\nnode tier keeps learners synchronized, so modelled comm time drops without\ngiving up the convergence the 2-level shape achieves.");
+    ctx.save_records("deep", &records)
+}
+
+// ---------------------------------------------------------------------------
 // Communication model: the claim the paper could not measure (§4.3).
 // ---------------------------------------------------------------------------
 

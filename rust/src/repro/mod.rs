@@ -14,7 +14,7 @@ pub use scale::Scale;
 
 pub fn cmd_repro(args: &Args) -> Result<()> {
     let Some(exp) = args.positional.get(1) else {
-        bail!("repro needs an experiment id (fig1..fig5, table1, thm34..thm36, comm, all)");
+        bail!("repro needs an experiment id (fig1..fig5, table1, thm34..thm36, comm, asgd, adaptive, deep, all)");
     };
     let scale = Scale::parse(args.get_or("scale", "small"))?;
     let backend = match args.get("backend") {
@@ -36,6 +36,7 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
         "comm" => experiments::comm(&ctx),
         "asgd" => experiments::asgd(&ctx),
         "adaptive" => experiments::adaptive(&ctx),
+        "deep" => experiments::deep(&ctx),
         "all" => {
             experiments::thm34(&ctx)?;
             experiments::thm35(&ctx)?;
@@ -47,7 +48,8 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
             experiments::table1(&ctx)?;
             experiments::fig5(&ctx)?;
             experiments::asgd(&ctx)?;
-            experiments::adaptive(&ctx)
+            experiments::adaptive(&ctx)?;
+            experiments::deep(&ctx)
         }
         other => bail!("unknown experiment {other:?}"),
     }

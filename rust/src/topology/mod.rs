@@ -1,9 +1,16 @@
-//! Cluster topology: P learners arranged into local clusters of S.
+//! Cluster topology: P learners arranged into a hierarchy of nested groups.
 //!
-//! Mirrors the paper's platform model (§1, §3.4): a node hosts S GPUs with
-//! high intra-node bandwidth; P/S nodes are interconnected by a slower
-//! fabric.  Hier-AVG's local averaging runs within a cluster, global
-//! averaging across all P learners.
+//! Two views of the same platform model (paper §1, §3.4):
+//!
+//! - [`Topology`] — the paper's exact two-level shape: a node hosts S GPUs
+//!   with high intra-node bandwidth; P/S nodes are interconnected by a
+//!   slower fabric.  Hier-AVG's local averaging runs within a cluster,
+//!   global averaging across all P learners.
+//! - [`HierTopology`] — the N-level generalization (GPU → node → rack →
+//!   …): a non-decreasing divisibility chain of group sizes, each level
+//!   tagged with the [`LinkClass`] its reductions are charged to.  The
+//!   two-level case ([`Topology::to_hier`]) reproduces `Topology`
+//!   semantics exactly, so all paper experiments are the L=2 special case.
 
 use anyhow::{bail, Result};
 
@@ -63,6 +70,138 @@ impl Topology {
             LinkClass::InterNode
         }
     }
+
+    /// The equivalent two-level hierarchy `[S, P]` (clusters on the
+    /// intra-node link, the global group on the inter-node fabric).
+    pub fn to_hier(&self) -> HierTopology {
+        HierTopology::new(vec![self.s, self.p]).expect("a valid Topology is a valid 2-level HierTopology")
+    }
+}
+
+/// An N-level reduction hierarchy over P learners.
+///
+/// `sizes[l]` is the number of learners in one level-`l` group; level 0 is
+/// the innermost tier (e.g. GPUs sharing a node), the last level is the
+/// outermost (all P learners).  Sizes form a divisibility chain
+/// (`sizes[l]` divides `sizes[l+1]`), so groups nest: the level-`l` group
+/// of learner j is `j / sizes[l]`, contained in its level-`l+1` group.
+///
+/// Each level carries the [`LinkClass`] its reductions are charged to in
+/// the α–β cost model.  Default assignment: the innermost level of a
+/// multi-level hierarchy is `IntraNode`; every other level is `InterNode`
+/// (node-level and rack-level fabrics share the slower tier).  Use
+/// [`HierTopology::with_links`] for custom assignments.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HierTopology {
+    sizes: Vec<usize>,
+    links: Vec<LinkClass>,
+}
+
+/// More levels than this and the schedule's inclusion–exclusion counting
+/// (2^L subsets) stops being cheap; real platforms have 2-4 tiers.
+pub const MAX_LEVELS: usize = 12;
+
+impl HierTopology {
+    pub fn new(sizes: Vec<usize>) -> Result<HierTopology> {
+        let links = default_links(sizes.len());
+        HierTopology::with_links(sizes, links)
+    }
+
+    pub fn with_links(sizes: Vec<usize>, links: Vec<LinkClass>) -> Result<HierTopology> {
+        if sizes.is_empty() {
+            bail!("hierarchy needs at least one level");
+        }
+        if sizes.len() > MAX_LEVELS {
+            bail!("hierarchy has {} levels (max {MAX_LEVELS})", sizes.len());
+        }
+        if links.len() != sizes.len() {
+            bail!("{} link classes for {} levels", links.len(), sizes.len());
+        }
+        for (l, &s) in sizes.iter().enumerate() {
+            if s == 0 {
+                bail!("level {l} has group size 0");
+            }
+        }
+        for l in 0..sizes.len() - 1 {
+            if sizes[l + 1] % sizes[l] != 0 {
+                bail!(
+                    "level sizes must form a divisibility chain: {} does not divide {} (levels {l}->{})",
+                    sizes[l],
+                    sizes[l + 1],
+                    l + 1
+                );
+            }
+        }
+        Ok(HierTopology { sizes, links })
+    }
+
+    /// The 2-level hierarchy of `Topology::new(p, s)`.
+    pub fn two_level(p: usize, s: usize) -> Result<HierTopology> {
+        Topology::new(p, s).map(|t| t.to_hier())
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Total learner count (the outermost group size).
+    pub fn p(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Learners per group at `level`.
+    pub fn size(&self, level: usize) -> usize {
+        self.sizes[level]
+    }
+
+    pub fn link(&self, level: usize) -> LinkClass {
+        self.links[level]
+    }
+
+    pub fn n_groups(&self, level: usize) -> usize {
+        self.p() / self.sizes[level]
+    }
+
+    /// Group id of learner `j` at `level`.
+    pub fn group_of(&self, level: usize, j: usize) -> usize {
+        debug_assert!(j < self.p());
+        j / self.sizes[level]
+    }
+
+    /// Learner ids in group `g` at `level` (contiguous block assignment,
+    /// matching `Topology::cluster_members`).
+    pub fn group_members(&self, level: usize, g: usize) -> std::ops::Range<usize> {
+        debug_assert!(g < self.n_groups(level));
+        let s = self.sizes[level];
+        g * s..(g + 1) * s
+    }
+
+    pub fn groups(&self, level: usize) -> impl Iterator<Item = std::ops::Range<usize>> + '_ {
+        (0..self.n_groups(level)).map(move |g| self.group_members(level, g))
+    }
+
+    /// Trace-event tag for a reduction at `level`: 'G' for the outermost
+    /// (global), 'L' for the innermost of a multi-level hierarchy, the
+    /// level digit for intermediate tiers.
+    pub fn trace_kind(&self, level: usize) -> char {
+        if level + 1 == self.n_levels() {
+            'G'
+        } else if level == 0 {
+            'L'
+        } else {
+            char::from_digit(level as u32 % 10, 10).unwrap()
+        }
+    }
+}
+
+fn default_links(n_levels: usize) -> Vec<LinkClass> {
+    (0..n_levels)
+        .map(|l| if l == 0 && n_levels > 1 { LinkClass::IntraNode } else { LinkClass::InterNode })
+        .collect()
 }
 
 #[cfg(test)]
@@ -113,5 +252,87 @@ mod tests {
         let t = Topology::new(8, 4).unwrap();
         assert_eq!(t.link(0, 3), LinkClass::IntraNode);
         assert_eq!(t.link(0, 4), LinkClass::InterNode);
+    }
+
+    #[test]
+    fn hier_two_level_matches_topology() {
+        let t = Topology::new(16, 4).unwrap();
+        let h = t.to_hier();
+        assert_eq!(h.n_levels(), 2);
+        assert_eq!(h.p(), 16);
+        assert_eq!(h.size(0), 4);
+        assert_eq!(h.size(1), 16);
+        assert_eq!(h.link(0), LinkClass::IntraNode);
+        assert_eq!(h.link(1), LinkClass::InterNode);
+        assert_eq!(h.n_groups(0), t.n_clusters());
+        for c in 0..t.n_clusters() {
+            assert_eq!(h.group_members(0, c), t.cluster_members(c));
+        }
+        for j in 0..16 {
+            assert_eq!(h.group_of(0, j), t.cluster_of(j));
+        }
+        assert_eq!(h.group_members(1, 0), 0..16);
+    }
+
+    #[test]
+    fn hier_three_level_partitions_nest() {
+        let h = HierTopology::new(vec![2, 8, 32]).unwrap();
+        assert_eq!(h.n_levels(), 3);
+        assert_eq!(h.p(), 32);
+        assert_eq!(h.n_groups(0), 16);
+        assert_eq!(h.n_groups(1), 4);
+        assert_eq!(h.n_groups(2), 1);
+        // every level partitions 0..P exactly
+        for level in 0..3 {
+            let mut seen = vec![false; 32];
+            for g in h.groups(level) {
+                for j in g {
+                    assert!(!seen[j]);
+                    seen[j] = true;
+                }
+            }
+            assert!(seen.iter().all(|&x| x));
+        }
+        // nesting: a level-0 group lies inside one level-1 group
+        for j in 0..32 {
+            let g0 = h.group_members(0, h.group_of(0, j));
+            let g1 = h.group_members(1, h.group_of(1, j));
+            assert!(g1.start <= g0.start && g0.end <= g1.end);
+        }
+        // default links: innermost intra, the rest inter
+        assert_eq!(h.link(0), LinkClass::IntraNode);
+        assert_eq!(h.link(1), LinkClass::InterNode);
+        assert_eq!(h.link(2), LinkClass::InterNode);
+    }
+
+    #[test]
+    fn hier_rejects_bad_chains() {
+        assert!(HierTopology::new(vec![]).is_err());
+        assert!(HierTopology::new(vec![0, 4]).is_err());
+        assert!(HierTopology::new(vec![3, 8]).is_err()); // 3 does not divide 8
+        assert!(HierTopology::new(vec![4, 2]).is_err()); // decreasing
+        assert!(HierTopology::new(vec![2; MAX_LEVELS + 1]).is_err());
+        assert!(HierTopology::with_links(vec![2, 4], vec![LinkClass::IntraNode]).is_err());
+    }
+
+    #[test]
+    fn hier_degenerate_levels_ok() {
+        // Single level = flat K-AVG topology; equal sizes = coincident tiers.
+        let flat = HierTopology::new(vec![8]).unwrap();
+        assert_eq!(flat.n_levels(), 1);
+        assert_eq!(flat.link(0), LinkClass::InterNode);
+        let dup = HierTopology::new(vec![4, 4]).unwrap();
+        assert_eq!(dup.n_groups(0), 1);
+        assert_eq!(dup.n_groups(1), 1);
+    }
+
+    #[test]
+    fn trace_kinds() {
+        let h = HierTopology::new(vec![2, 8, 32]).unwrap();
+        assert_eq!(h.trace_kind(0), 'L');
+        assert_eq!(h.trace_kind(1), '1');
+        assert_eq!(h.trace_kind(2), 'G');
+        let flat = HierTopology::new(vec![8]).unwrap();
+        assert_eq!(flat.trace_kind(0), 'G');
     }
 }

@@ -1,0 +1,357 @@
+//! Property and regression tests for the three-layer engine refactor:
+//!
+//! (a) an N-level topology/schedule with L=2 reproduces the legacy
+//!     `HierAvgSchedule::event_after` stream and reduction counts exactly,
+//!     and a trainer run expressed via explicit `levels`/`ks` is
+//!     bit-identical to the `(p, s, k1, k2)` form;
+//! (b) the sharded thread-parallel collective is bit-identical to the
+//!     simulated reducer for random replicas;
+//! plus end-to-end coverage of a ≥3-level hierarchy through the CLI
+//! config path with per-level reduction counts in the metrics.
+
+use hier_avg::algorithms::{HierAvgSchedule, HierSchedule, ReduceEvent};
+use hier_avg::comm::{
+    CollectiveKind, CostModel, ReduceStrategy, Reducer, ShardedCollective,
+};
+use hier_avg::config::{BackendKind, RunConfig};
+use hier_avg::coordinator::Trainer;
+use hier_avg::data::{ClassifyData, MixtureSpec};
+use hier_avg::metrics::RunRecord;
+use hier_avg::native::NativeMlp;
+use hier_avg::optimizer::LrSchedule;
+use hier_avg::topology::{HierTopology, LinkClass, Topology};
+use hier_avg::util::cli::Args;
+use hier_avg::util::rng::Pcg32;
+
+const CASES: usize = 300;
+
+// ---------------------------------------------------------------------------
+// (a) L=2 identities: schedule stream + reduction counts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_two_level_schedule_matches_legacy_stream() {
+    let mut rng = Pcg32::seeded(0x2EE7);
+    for case in 0..CASES {
+        let k1 = 1 + rng.next_below(16) as u64;
+        let k2 = k1 + rng.next_below(48) as u64;
+        let t_max = 1 + rng.next_below(2000) as u64;
+        let legacy = HierAvgSchedule::new(k1, k2).unwrap();
+        let hier = HierSchedule::two_level(k1, k2).unwrap();
+        for t in 1..=t_max {
+            let expect = match legacy.event_after(t) {
+                ReduceEvent::Global => Some(1),
+                ReduceEvent::Local => Some(0),
+                ReduceEvent::None => None,
+            };
+            assert_eq!(
+                hier.event_after(t),
+                expect,
+                "case {case}: k1={k1} k2={k2} t={t}"
+            );
+        }
+        let (g, l) = legacy.reduction_counts(t_max);
+        assert_eq!(
+            hier.reduction_counts(t_max),
+            vec![l, g],
+            "case {case}: k1={k1} k2={k2} t={t_max}"
+        );
+    }
+}
+
+#[test]
+fn prop_multilevel_counts_match_event_scan() {
+    let mut rng = Pcg32::seeded(0x3C4A);
+    for case in 0..100 {
+        let n_levels = 1 + rng.next_below(4) as usize;
+        let mut intervals = Vec::with_capacity(n_levels);
+        let mut k = 1 + rng.next_below(6) as u64;
+        for _ in 0..n_levels {
+            k += rng.next_below(12) as u64;
+            intervals.push(k);
+        }
+        let s = HierSchedule::new(intervals.clone()).unwrap();
+        let t = 1 + rng.next_below(3000) as u64;
+        let mut scan = vec![0u64; n_levels];
+        for i in 1..=t {
+            if let Some(lev) = s.event_after(i) {
+                scan[lev] += 1;
+            }
+        }
+        assert_eq!(
+            s.reduction_counts(t),
+            scan,
+            "case {case}: intervals {intervals:?} t={t}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) sharded collective ≡ simulated reducer, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sharded_collective_bit_identical() {
+    let mut rng = Pcg32::seeded(0x5AAD);
+    for case in 0..60 {
+        let s = 1 + rng.next_below(4) as usize;
+        let clusters = 1 + rng.next_below(4) as usize;
+        let p = s * clusters;
+        let n = 1 + rng.next_below(10_000) as usize;
+        let threads = 1 + rng.next_below(6) as usize;
+        let topo = Topology::new(p, s).unwrap();
+        let base: Vec<Vec<f32>> =
+            (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+
+        let mut a = base.clone();
+        let mut sim = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
+        sim.local_average(&mut a, &topo);
+        sim.global_average(&mut a, &topo);
+
+        let mut b = base.clone();
+        let mut sh = Reducer::with_collective(
+            CostModel::default(),
+            ReduceStrategy::Ring,
+            n,
+            Box::new(ShardedCollective::new(threads)),
+        );
+        sh.local_average(&mut b, &topo);
+        sh.global_average(&mut b, &topo);
+
+        assert_eq!(a, b, "case {case}: p={p} s={s} n={n} threads={threads}");
+        assert_eq!(sim.stats, sh.stats, "case {case}");
+
+        // mean_of parity as well
+        let mut ma = Vec::new();
+        let mut mb = Vec::new();
+        sim.mean_of(&base, &mut ma);
+        sh.mean_of(&base, &mut mb);
+        assert_eq!(ma, mb, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trainer-level regression: (p, s, k1, k2) vs explicit levels/ks, and
+// simulated vs sharded collective
+// ---------------------------------------------------------------------------
+
+fn quick_cfg() -> RunConfig {
+    let mut cfg = RunConfig::defaults("native-hier-test");
+    cfg.backend = BackendKind::Native;
+    cfg.p = 8;
+    cfg.s = 4;
+    cfg.k1 = 2;
+    cfg.k2 = 8;
+    cfg.epochs = 4;
+    cfg.train_n = 1024;
+    cfg.test_n = 256;
+    cfg.lr = LrSchedule::Constant(0.1);
+    cfg.noise = 0.8;
+    cfg
+}
+
+const DIMS: &[usize] = &[18, 36, 5];
+
+fn run_native(cfg: &RunConfig) -> RunRecord {
+    let backend = NativeMlp::new(DIMS, 8, 64).unwrap();
+    let data = ClassifyData::generate(MixtureSpec {
+        dim: DIMS[0],
+        classes: *DIMS.last().unwrap(),
+        train_n: cfg.train_n,
+        test_n: cfg.test_n,
+        radius: cfg.radius,
+        noise: cfg.noise,
+        subclusters: 1,
+        label_noise: 0.0,
+        seed: cfg.seed ^ 0x5eed,
+    });
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let init = backend.init(&mut rng);
+    Trainer::new(cfg, Box::new(backend), Box::new(data), init).unwrap().run().unwrap()
+}
+
+fn assert_records_identical(a: &RunRecord, b: &RunRecord) {
+    assert_eq!(a.total_steps, b.total_steps);
+    assert_eq!(a.epochs.len(), b.epochs.len());
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.train_loss, y.train_loss);
+        assert_eq!(x.train_acc, y.train_acc);
+        // NaNs (skipped evals) compare equal via bits
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits());
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
+    }
+    assert_eq!(a.comm, b.comm);
+}
+
+#[test]
+fn explicit_two_level_config_is_bit_identical() {
+    let implicit = quick_cfg();
+    let mut explicit = quick_cfg();
+    explicit.set_levels(vec![4, 8]);
+    explicit.set_ks(vec![2, 8]);
+    let ra = run_native(&implicit);
+    let rb = run_native(&explicit);
+    assert_records_identical(&ra, &rb);
+    // per-level accounts mirror the aggregate local/global split
+    assert_eq!(rb.comm_levels.len(), 2);
+    assert_eq!(rb.comm_levels[0].reductions, rb.comm.local_reductions);
+    assert_eq!(rb.comm_levels[1].reductions, rb.comm.global_reductions);
+    assert_eq!(ra.comm_levels, rb.comm_levels);
+}
+
+#[test]
+fn sharded_collective_trainer_is_bit_identical() {
+    let simulated = quick_cfg();
+    let mut sharded = quick_cfg();
+    sharded.collective = CollectiveKind::Sharded { threads: 3 };
+    let ra = run_native(&simulated);
+    let rb = run_native(&sharded);
+    assert_records_identical(&ra, &rb);
+    assert_eq!(ra.comm_levels, rb.comm_levels);
+}
+
+#[test]
+fn adaptive_k2_identical_across_forms() {
+    let mut implicit = quick_cfg();
+    implicit.k2_schedule = vec![(2, 4)];
+    let mut explicit = quick_cfg();
+    explicit.set_levels(vec![4, 8]);
+    explicit.set_ks(vec![2, 8]);
+    explicit.k2_schedule = vec![(2, 4)];
+    let ra = run_native(&implicit);
+    let rb = run_native(&explicit);
+    assert_records_identical(&ra, &rb);
+}
+
+// ---------------------------------------------------------------------------
+// ≥3-level hierarchy end to end via the CLI config path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn three_level_hierarchy_runs_via_cli_args() {
+    let argv: Vec<String> = [
+        "train",
+        "--model",
+        "quickstart",
+        "--backend",
+        "native",
+        "--levels",
+        "2,4,8",
+        "--ks",
+        "2,4,8",
+        "--collective",
+        "sharded:2",
+        "--epochs",
+        "2",
+        "--train-n",
+        "1024",
+        "--test-n",
+        "256",
+        "--lr",
+        "const:0.1",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+    let cfg = RunConfig::from_args(&args).unwrap();
+    assert_eq!(cfg.hierarchy().unwrap().n_levels(), 3);
+
+    let rec = hier_avg::driver::run(&cfg).unwrap();
+    assert!(rec.total_steps > 0);
+    assert!(rec.epochs.last().unwrap().train_loss.is_finite());
+
+    // Per-level reduction counts are reported and match the schedule: each
+    // level-l event reduces every group at that level.
+    let topo = cfg.hierarchy().unwrap();
+    let sched = cfg.hier_schedule().unwrap();
+    let events = sched.reduction_counts(rec.total_steps);
+    assert_eq!(rec.comm_levels.len(), 3);
+    for lev in 0..3 {
+        assert_eq!(
+            rec.comm_levels[lev].reductions,
+            events[lev] * topo.n_groups(lev) as u64,
+            "level {lev}"
+        );
+    }
+    // aggregate split: level 0 is intra-node, levels 1..=2 inter-node
+    assert_eq!(topo.link(0), LinkClass::IntraNode);
+    assert_eq!(rec.comm.local_reductions, rec.comm_levels[0].reductions);
+    assert_eq!(
+        rec.comm.global_reductions,
+        rec.comm_levels[1].reductions + rec.comm_levels[2].reductions
+    );
+    // the record serializes the per-level accounts
+    let json = rec.to_json();
+    assert_eq!(
+        json.req("comm_levels").unwrap().as_arr().unwrap().len(),
+        3
+    );
+}
+
+#[test]
+fn deeper_hierarchy_reduces_modelled_global_time() {
+    // The paper's argument, one level deeper: pushing reductions down the
+    // hierarchy (cheap links, small groups) cuts the modelled time spent on
+    // the global fabric for the same total number of reduction events.
+    let mut two = quick_cfg();
+    two.set_levels(vec![2, 8]);
+    two.set_ks(vec![2, 4]);
+    let mut three = quick_cfg();
+    three.set_levels(vec![2, 4, 8]);
+    three.set_ks(vec![2, 4, 8]);
+    let r2 = run_native(&two);
+    let r3 = run_native(&three);
+    assert_eq!(r2.total_steps, r3.total_steps);
+    assert!(
+        r3.comm.global_seconds < r2.comm.global_seconds,
+        "3-level global {} vs 2-level {}",
+        r3.comm.global_seconds,
+        r2.comm.global_seconds
+    );
+    // both still learn (chance for 5 classes is 0.2)
+    assert!(r3.epochs.last().unwrap().test_acc > 0.4);
+}
+
+#[test]
+fn flat_single_level_hierarchy_is_kavg() {
+    // levels=[P], ks=[K]: pure K-AVG — global-only reductions.
+    let mut flat = quick_cfg();
+    flat.set_levels(vec![8]);
+    flat.set_ks(vec![4]);
+    let rec = run_native(&flat);
+    assert_eq!(rec.comm.local_reductions, 0);
+    assert_eq!(rec.comm.global_reductions, rec.total_steps / 4);
+    assert_eq!(rec.comm_levels.len(), 1);
+
+    // ... and matches the (s=1, k1=k2) two-level encoding bit for bit.
+    let mut legacy = quick_cfg();
+    legacy.s = 1;
+    legacy.k1 = 4;
+    legacy.k2 = 4;
+    let rl = run_native(&legacy);
+    for (x, y) in rec.epochs.iter().zip(&rl.epochs) {
+        assert_eq!(x.train_loss, y.train_loss);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
+    }
+    assert_eq!(rec.comm.global_reductions, rl.comm.global_reductions);
+}
+
+#[test]
+fn hier_topology_three_level_reduction_nests() {
+    // After a level-1 reduction, members of each level-1 group agree; a
+    // level-2 reduction then synchronizes everything.
+    let topo = HierTopology::new(vec![2, 4, 8]).unwrap();
+    let mut rng = Pcg32::seeded(3);
+    let mut replicas: Vec<Vec<f32>> =
+        (0..8).map(|_| (0..33).map(|_| rng.next_normal()).collect()).collect();
+    let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 33);
+    red.reduce_level(&mut replicas, &topo, 1);
+    assert_eq!(replicas[0], replicas[3]);
+    assert_eq!(replicas[4], replicas[7]);
+    assert_ne!(replicas[0], replicas[4]);
+    red.reduce_level(&mut replicas, &topo, 2);
+    for j in 1..8 {
+        assert_eq!(replicas[0], replicas[j]);
+    }
+}
