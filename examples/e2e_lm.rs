@@ -8,8 +8,7 @@
 //!         [--steps N] [--p N] [--out results/e2e_lm.json]
 //!
 //! Logs the per-step loss curve and compares the final loss against the
-//! corpus's entropy floor.  The run recorded in EXPERIMENTS.md used the
-//! defaults.
+//! corpus's entropy floor.  Defaults match the recorded reference run.
 
 use anyhow::Result;
 

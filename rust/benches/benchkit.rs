@@ -13,13 +13,21 @@
 //!
 //! Each benchmark is auto-calibrated to ~80 ms per sample, 15 samples are
 //! collected, and min / median / mean / p95 plus derived throughput are
-//! printed in a stable, grep-friendly format.
+//! printed in a stable, grep-friendly format.  `finish()` additionally
+//! writes a machine-readable `BENCH_<group>.json` (bench name → ns/iter
+//! plus calibration counts) at the repo root so the perf trajectory is
+//! tracked PR over PR.
+//!
+//! Env knobs (for CI smoke runs): `BENCHKIT_SAMPLES` overrides the sample
+//! count, `BENCHKIT_TARGET_MS` the per-sample calibration target.
 
 use std::time::{Duration, Instant};
 
 pub struct Bench {
     group: String,
     filter: Option<String>,
+    samples: usize,
+    target_sample: Duration,
     results: Vec<(String, Stats)>,
 }
 
@@ -32,8 +40,12 @@ pub struct Stats {
     pub iters_per_sample: u64,
 }
 
-const TARGET_SAMPLE: Duration = Duration::from_millis(80);
+const TARGET_SAMPLE_MS: u64 = 80;
 const SAMPLES: usize = 15;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).filter(|&v| v > 0).unwrap_or(default)
+}
 
 impl Bench {
     pub fn new(group: &str) -> Bench {
@@ -41,8 +53,16 @@ impl Bench {
         let filter = std::env::args()
             .skip(1)
             .find(|a| !a.starts_with('-') && a != "--bench");
+        let samples = env_usize("BENCHKIT_SAMPLES", SAMPLES);
+        let target_ms = env_usize("BENCHKIT_TARGET_MS", TARGET_SAMPLE_MS as usize) as u64;
         println!("== bench group: {group} ==");
-        Bench { group: group.to_string(), filter, results: Vec::new() }
+        Bench {
+            group: group.to_string(),
+            filter,
+            samples,
+            target_sample: Duration::from_millis(target_ms),
+            results: Vec::new(),
+        }
     }
 
     pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
@@ -61,7 +81,8 @@ impl Bench {
                 return;
             }
         }
-        // Warmup + calibration: find iters such that a sample ≈ TARGET.
+        // Warmup + calibration: find iters such that a sample ≈ the target.
+        let warmup_floor = (self.target_sample / 4).max(Duration::from_millis(1));
         let mut iters: u64 = 1;
         loop {
             let start = Instant::now();
@@ -69,15 +90,16 @@ impl Bench {
                 f();
             }
             let el = start.elapsed();
-            if el >= Duration::from_millis(20) || iters >= 1 << 24 {
+            if el >= warmup_floor || iters >= 1 << 24 {
                 let per = el.as_nanos().max(1) as f64 / iters as f64;
-                iters = ((TARGET_SAMPLE.as_nanos() as f64 / per).ceil() as u64).max(1);
+                iters = ((self.target_sample.as_nanos() as f64 / per).ceil() as u64).max(1);
                 break;
             }
             iters *= 4;
         }
-        let mut samples: Vec<f64> = Vec::with_capacity(SAMPLES);
-        for _ in 0..SAMPLES {
+        let n_samples = self.samples.max(1);
+        let mut samples: Vec<f64> = Vec::with_capacity(n_samples);
+        for _ in 0..n_samples {
             let start = Instant::now();
             for _ in 0..iters {
                 f();
@@ -87,9 +109,9 @@ impl Bench {
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let stats = Stats {
             min_ns: samples[0],
-            median_ns: samples[SAMPLES / 2],
-            mean_ns: samples.iter().sum::<f64>() / SAMPLES as f64,
-            p95_ns: samples[(SAMPLES as f64 * 0.95) as usize - 1],
+            median_ns: samples[n_samples / 2],
+            mean_ns: samples.iter().sum::<f64>() / n_samples as f64,
+            p95_ns: samples[((n_samples as f64 * 0.95) as usize).saturating_sub(1)],
             iters_per_sample: iters,
         };
         let thr = if bytes_per_iter > 0 {
@@ -113,8 +135,46 @@ impl Bench {
     }
 
     pub fn finish(self) -> Vec<(String, Stats)> {
+        if self.filter.is_some() {
+            // A filtered run covers only a slice of the group; silently
+            // overwriting the committed BENCH_<group>.json baseline with a
+            // partial file would corrupt the PR-over-PR perf trajectory.
+            println!("(filtered run: not rewriting BENCH_{}.json)", self.group);
+        } else {
+            self.write_json();
+        }
         println!("== {} done ({} benchmarks) ==", self.group, self.results.len());
         self.results
+    }
+
+    /// Emit `BENCH_<group>.json` at the repo root: bench name → ns/iter
+    /// (median, plus min/mean/p95) and the calibration counts (which
+    /// double as provenance — a reduced-sampling smoke run is visible in
+    /// `samples`/`target_sample_ms`), so the perf trajectory is diffable
+    /// PR over PR.
+    fn write_json(&self) {
+        use hier_avg::util::json::Json;
+        let mut benches = Json::obj();
+        for (name, s) in &self.results {
+            let mut o = Json::obj();
+            o.set("ns_per_iter", Json::from(s.median_ns))
+                .set("min_ns", Json::from(s.min_ns))
+                .set("mean_ns", Json::from(s.mean_ns))
+                .set("p95_ns", Json::from(s.p95_ns))
+                .set("iters_per_sample", Json::from(s.iters_per_sample as usize))
+                .set("samples", Json::from(self.samples));
+            benches.set(name, o);
+        }
+        let mut root = Json::obj();
+        root.set("group", Json::from(self.group.as_str()))
+            .set("target_sample_ms", Json::from(self.target_sample.as_millis() as usize))
+            .set("benches", benches);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join(format!("BENCH_{}.json", self.group));
+        match std::fs::write(&path, root.pretty()) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("(could not write {}: {e})", path.display()),
+        }
     }
 }
 

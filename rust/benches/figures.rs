@@ -2,7 +2,7 @@
 //! the exact experiment code path (config grid -> trainer -> metrics) at a
 //! micro scale, giving a per-figure wall-clock cost and guarding the repro
 //! harness against regressions.  The full-size regeneration is
-//! `hier-avg repro <exp>` (see EXPERIMENTS.md for recorded outputs).
+//! `hier-avg repro <exp>` (see DESIGN.md for the experiment index).
 
 mod benchkit;
 

@@ -3,11 +3,13 @@
 //! (the alternate path), plus the analytic cost model itself.
 //!
 //! The native reducer is the one on the training hot path; its target is
-//! memory-bandwidth-bound throughput (§Perf in EXPERIMENTS.md).
+//! memory-bandwidth-bound throughput (DESIGN.md §Performance).  The
+//! sharded (spawn-per-call) vs pooled (persistent worker pool) cases at
+//! equal shapes isolate the per-reduction thread-spawn overhead.
 
 mod benchkit;
 
-use hier_avg::comm::{CostModel, ReduceStrategy, Reducer, ShardedCollective};
+use hier_avg::comm::{Collective, CostModel, PooledCollective, ReduceStrategy, Reducer, ShardedCollective};
 use hier_avg::runtime::xla_backend::XlaGroupAvg;
 use hier_avg::runtime::Manifest;
 use hier_avg::topology::Topology;
@@ -86,6 +88,71 @@ fn main() {
             b.bench_with_throughput(&format!("native/group_avg_sharded/3.4M/p8/t{threads}"), bytes, || {
                 red.global_average(&mut r, &topo);
             });
+        }
+        for &threads in &[2usize, 4, 8] {
+            let mut r = base.clone();
+            let mut red = Reducer::with_collective(
+                CostModel::default(),
+                ReduceStrategy::Ring,
+                n,
+                Box::new(PooledCollective::new(threads)),
+            );
+            let bytes = 2 * p * n * 4;
+            b.bench_with_throughput(&format!("native/group_avg_pooled/3.4M/p8/t{threads}"), bytes, || {
+                red.global_average(&mut r, &topo);
+            });
+        }
+    }
+
+    // Sharded (spawn-per-call) vs pooled (persistent workers) head to head
+    // at small/medium group sizes and param counts — the regime where the
+    // per-call spawn+join dominates the sharded engine's time and the
+    // pooled engine either dispatches cheaply or falls back to the serial
+    // kernel (tiny shapes).  Bit-identity is asserted before timing.
+    {
+        for &(label, n) in &[("100k", 101_386usize), ("400k", 400_000usize)] {
+            for &s in &[2usize, 4, 8] {
+                let topo = Topology::new(s, s).unwrap();
+                let base = replicas(s, n, &mut rng);
+                {
+                    let mut a = base.clone();
+                    let mut b0 = base.clone();
+                    let mut sa = vec![0.0f32; n];
+                    let mut sb = vec![0.0f32; n];
+                    ShardedCollective::new(2).average_group(&mut a, 0..s, &mut sa);
+                    PooledCollective::new(2).average_group(&mut b0, 0..s, &mut sb);
+                    assert_eq!(a, b0, "pooled collective must be bit-identical");
+                }
+                let mut r = base.clone();
+                let mut red = Reducer::with_collective(
+                    CostModel::default(),
+                    ReduceStrategy::Ring,
+                    n,
+                    Box::new(ShardedCollective::new(0)),
+                );
+                let bytes = 2 * s * n * 4;
+                b.bench_with_throughput(
+                    &format!("native/group_avg_sharded/{label}/s{s}"),
+                    bytes,
+                    || {
+                        red.global_average(&mut r, &topo);
+                    },
+                );
+                let mut r = base.clone();
+                let mut red = Reducer::with_collective(
+                    CostModel::default(),
+                    ReduceStrategy::Ring,
+                    n,
+                    Box::new(PooledCollective::new(0)),
+                );
+                b.bench_with_throughput(
+                    &format!("native/group_avg_pooled/{label}/s{s}"),
+                    bytes,
+                    || {
+                        red.global_average(&mut r, &topo);
+                    },
+                );
+            }
         }
     }
 

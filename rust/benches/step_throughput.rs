@@ -7,7 +7,7 @@ mod benchkit;
 use hier_avg::backend::{StepBackend, StepOut};
 use hier_avg::data::{BatchBuf, ClassifyData, DataSource, MixtureSpec};
 use hier_avg::driver;
-use hier_avg::native::NativeMlp;
+use hier_avg::native::{NativeMlp, ParallelNativeMlp};
 use hier_avg::optimizer::Sgd;
 use hier_avg::runtime::{Manifest, XlaBackend};
 use hier_avg::util::rng::Pcg32;
@@ -52,7 +52,7 @@ fn bench_backend(
 fn main() {
     let mut b = benchkit::Bench::new("step");
 
-    // Native MLP backend.
+    // Native MLP backend (serial).
     for &(name, p) in &[("resnet18_sim", 1usize), ("resnet18_sim", 16)] {
         let (dims, batch, eval_b) = driver::model_dims(name).unwrap();
         let mut backend = NativeMlp::new(dims, batch, eval_b).unwrap();
@@ -68,6 +68,40 @@ fn main() {
             classes,
             &init,
         );
+    }
+
+    // Parallel native backend: lane fan-out over the persistent worker
+    // pool (what the driver uses at P >= 8).  Compared against the serial
+    // native/p16 case above, this isolates the per-step dispatch overhead
+    // that used to be a thread spawn per step.  Lane counts above the
+    // host's parallelism would clamp and silently duplicate an existing
+    // case under one bench name, so they are filtered out (with the
+    // host's own count always included).
+    {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut lane_counts: Vec<usize> =
+            [2usize, 4, 8].into_iter().filter(|&l| l <= hw).collect();
+        if lane_counts.is_empty() {
+            lane_counts.push(hw.max(1));
+        }
+        let (name, p) = ("resnet18_sim", 16usize);
+        let (dims, batch, eval_b) = driver::model_dims(name).unwrap();
+        let proto = NativeMlp::new(dims, batch, eval_b).unwrap();
+        let init = proto.init(&mut Pcg32::seeded(1));
+        let dim = dims[0];
+        let classes = *dims.last().unwrap();
+        for &lanes in &lane_counts {
+            let mut backend = ParallelNativeMlp::new(dims, batch, eval_b, lanes).unwrap();
+            bench_backend(
+                &mut b,
+                &format!("native_pooled/{name}/p{p}/lanes{lanes}"),
+                &mut backend,
+                p,
+                dim,
+                classes,
+                &init,
+            );
+        }
     }
 
     // XLA backends (artifacts required).

@@ -4,26 +4,34 @@
 //! execution strategy — mirroring how torch.distributed separates process
 //! groups from backend implementations.
 //!
-//! Two implementations:
+//! Three implementations:
 //!
 //! - [`SimulatedCollective`] — the original single-thread in-place path:
 //!   blocked mean accumulation, then a broadcast copy per member.
 //! - [`ShardedCollective`] — a reduce-scatter/all-gather analogue on OS
 //!   threads: the flat parameter vector is cut into contiguous shards,
 //!   worker threads reduce their shards concurrently, then the broadcast
-//!   fans out over threads by member.
+//!   fans out over threads by member.  Spawns fresh scoped threads per
+//!   call — kept as the reference parallel engine and the baseline the
+//!   pooled engine is benchmarked against.
+//! - [`PooledCollective`] — the same shard/broadcast decomposition
+//!   dispatched onto a persistent [`exec::WorkerPool`], removing the
+//!   per-reduction spawn+join, with a heuristic serial fallback so tiny
+//!   groups/param counts skip the dispatch entirely.
 //!
-//! Both compute the **identical** arithmetic: per element the summation is
+//! All compute the **identical** arithmetic: per element the summation is
 //! learner-index-ascending (first replica copied, then pairs added in
 //! order, then the scale), independent of the shard/block boundaries.
 //! Results are therefore bit-identical across collectives and thread
-//! counts — enforced by `prop_sharded_collective_bit_identical` in
-//! rust/tests/hierarchy.rs.
+//! counts — enforced by `prop_sharded_collective_bit_identical` and
+//! `prop_pooled_collective_bit_identical` in rust/tests/hierarchy.rs.
 
 use std::ops::Range;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::exec::{self, WorkerPool};
 use crate::params::FlatParams;
 
 /// How a group of replicas is averaged in place.  Implementations must
@@ -45,9 +53,13 @@ pub trait Collective: Send + Sync {
 pub enum CollectiveKind {
     /// Single-thread in-place reduction (the default; exact legacy path).
     Simulated,
-    /// Thread-parallel sharded reduction; `threads == 0` means auto
-    /// (available parallelism).
+    /// Thread-parallel sharded reduction on per-call scoped threads;
+    /// `threads == 0` means auto (available parallelism).
     Sharded { threads: usize },
+    /// Sharded reduction on the persistent worker pool; `threads == 0`
+    /// defers to the run's `--pool-threads` (which itself defaults to
+    /// available parallelism).
+    Pooled { threads: usize },
 }
 
 impl CollectiveKind {
@@ -55,13 +67,22 @@ impl CollectiveKind {
         match s {
             "simulated" => Ok(CollectiveKind::Simulated),
             "sharded" => Ok(CollectiveKind::Sharded { threads: 0 }),
+            "pooled" => Ok(CollectiveKind::Pooled { threads: 0 }),
             other => {
                 if let Some(t) = other.strip_prefix("sharded:") {
                     if let Ok(threads) = t.parse::<usize>() {
                         return Ok(CollectiveKind::Sharded { threads });
                     }
                 }
-                bail!("unknown collective {s:?} (simulated|sharded|sharded:<threads>)")
+                if let Some(t) = other.strip_prefix("pooled:") {
+                    if let Ok(threads) = t.parse::<usize>() {
+                        return Ok(CollectiveKind::Pooled { threads });
+                    }
+                }
+                bail!(
+                    "unknown collective {s:?} \
+                     (simulated|sharded[:<threads>]|pooled[:<threads>])"
+                )
             }
         }
     }
@@ -71,13 +92,25 @@ impl CollectiveKind {
             CollectiveKind::Simulated => "simulated".to_string(),
             CollectiveKind::Sharded { threads: 0 } => "sharded".to_string(),
             CollectiveKind::Sharded { threads } => format!("sharded:{threads}"),
+            CollectiveKind::Pooled { threads: 0 } => "pooled".to_string(),
+            CollectiveKind::Pooled { threads } => format!("pooled:{threads}"),
         }
     }
 
-    pub fn build(&self) -> Box<dyn Collective> {
+    /// Build the engine, resolving a `Pooled { threads: 0 }` selector with
+    /// the run's `--pool-threads` so the collective shares the same
+    /// process-wide pool as the native backend's lane fan-out.  (There is
+    /// deliberately no argument-free `build()`: a pooled kind built
+    /// without the run's pool size would silently create a second
+    /// full-size pool next to the run's own.)
+    pub fn build_for(&self, pool_threads: usize) -> Box<dyn Collective> {
         match self {
             CollectiveKind::Simulated => Box::new(SimulatedCollective),
             CollectiveKind::Sharded { threads } => Box::new(ShardedCollective::new(*threads)),
+            CollectiveKind::Pooled { threads } => {
+                let t = if *threads > 0 { *threads } else { pool_threads };
+                Box::new(PooledCollective::new(t))
+            }
         }
     }
 }
@@ -188,6 +221,86 @@ impl Collective for ShardedCollective {
 }
 
 // ---------------------------------------------------------------------------
+// Pooled (persistent worker pool) collective
+// ---------------------------------------------------------------------------
+
+/// Below this many element-operations (group size × shard-able elements) a
+/// reduction runs serially instead of paying the pool's notify/wait
+/// round-trip.  At memory-bandwidth-bound throughput 64k element-ops take
+/// tens of µs — an order of magnitude above the dispatch cost — so the
+/// crossover errs toward serial, keeping tiny-group reductions (the common
+/// case at the innermost hierarchy level) free of any dispatch overhead.
+const POOL_MIN_ELEMENT_OPS: usize = 64 * 1024;
+
+/// The same reduce-scatter/all-gather decomposition as
+/// [`ShardedCollective`], dispatched onto a persistent [`WorkerPool`]
+/// instead of freshly spawned scoped threads.  Shard boundaries use the
+/// identical ceil-div math and [`mean_range`] is order-independent of
+/// them, so results are bit-identical to both other collectives; small
+/// reductions fall back to the serial kernel (see
+/// [`POOL_MIN_ELEMENT_OPS`]).
+pub struct PooledCollective {
+    pool: Arc<WorkerPool>,
+}
+
+impl PooledCollective {
+    /// A collective on the process-wide shared pool of `threads` slots
+    /// (`0` = available parallelism); see [`exec::shared_pool`].
+    pub fn new(threads: usize) -> PooledCollective {
+        PooledCollective { pool: exec::shared_pool(threads) }
+    }
+
+    /// A collective on a specific pool (shared with other subsystems).
+    pub fn with_pool(pool: Arc<WorkerPool>) -> PooledCollective {
+        PooledCollective { pool }
+    }
+}
+
+impl Collective for PooledCollective {
+    fn name(&self) -> &'static str {
+        "pooled"
+    }
+
+    fn average_group(&self, replicas: &mut [FlatParams], group: Range<usize>, scratch: &mut [f32]) {
+        self.mean_of(replicas, group.clone(), scratch);
+        let members = &mut replicas[group];
+        let n = scratch.len();
+        if members.len() * n < POOL_MIN_ELEMENT_OPS || members.len() <= 1 {
+            for r in members.iter_mut() {
+                r.copy_from_slice(scratch);
+            }
+            return;
+        }
+        // All-gather: members are chunked across the pool; each task
+        // copies the full mean into its members.
+        let mean: &[f32] = scratch;
+        let t = self.pool.threads().clamp(1, members.len());
+        let per = members.len().div_ceil(t);
+        self.pool.run_chunks_mut(members, per, |_, chunk| {
+            for r in chunk {
+                r.copy_from_slice(mean);
+            }
+        });
+    }
+
+    fn mean_of(&self, replicas: &[FlatParams], group: Range<usize>, out: &mut [f32]) {
+        let n = out.len();
+        if n == 0 {
+            return;
+        }
+        let t = self.pool.threads().clamp(1, n);
+        if t == 1 || group.len() * n < POOL_MIN_ELEMENT_OPS {
+            mean_range(out, replicas, group, 0);
+            return;
+        }
+        let shard = n.div_ceil(t);
+        self.pool.run_chunks_mut(out, shard, |i, chunk| {
+            mean_range(chunk, replicas, group.clone(), i * shard);
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
 // The shared mean kernel
 // ---------------------------------------------------------------------------
 
@@ -195,7 +308,7 @@ impl Collective for ShardedCollective {
 /// room for two source streams).  §Perf: the naive formulation makes S
 /// full passes over `out` (S+1 streams of DRAM traffic); blocking keeps the
 /// accumulator chunk resident so `out` is written once, which measured
-/// 1.6-2.3x faster at 3.4M params (see EXPERIMENTS.md §Perf).
+/// 1.6-2.3x faster at 3.4M params (see DESIGN.md §Performance).
 const MEAN_BLOCK: usize = 4096;
 
 /// `out = mean(replicas[group][base .. base + out.len()])` with fixed
@@ -302,10 +415,45 @@ mod tests {
         let before = r.clone();
         let mut out_a = vec![0.0f32; 64];
         let mut out_b = vec![0.0f32; 64];
+        let mut out_c = vec![0.0f32; 64];
         SimulatedCollective.mean_of(&r, 0..3, &mut out_a);
         ShardedCollective::new(2).mean_of(&r, 0..3, &mut out_b);
+        PooledCollective::new(2).mean_of(&r, 0..3, &mut out_c);
         assert_eq!(r, before);
         assert_eq!(out_a, out_b);
+        assert_eq!(out_a, out_c);
+    }
+
+    #[test]
+    fn pooled_bit_identical_to_simulated() {
+        // Shapes straddling the serial-fallback threshold on both sides
+        // (group.len() * n vs POOL_MIN_ELEMENT_OPS) and odd shard splits.
+        for &(p, n, threads) in &[
+            (2usize, 17usize, 2usize),
+            (4, 1, 2),
+            (5, 1024, 3),
+            (8, 9000, 4),
+            (3, 4097, 7),
+            (4, 50_000, 2),
+            (2, 100_003, 5),
+        ] {
+            let base = replicas(p, n, 77 + p as u64);
+            let mut a = base.clone();
+            let mut b = base.clone();
+            let mut sa = vec![0.0f32; n];
+            let mut sb = vec![0.0f32; n];
+            SimulatedCollective.average_group(&mut a, 0..p, &mut sa);
+            PooledCollective::new(threads).average_group(&mut b, 0..p, &mut sb);
+            assert_eq!(a, b, "p={p} n={n} threads={threads}");
+            assert_eq!(sa, sb);
+            if p >= 4 {
+                let mut a = base.clone();
+                let mut b = base.clone();
+                SimulatedCollective.average_group(&mut a, 1..3, &mut sa);
+                PooledCollective::new(threads).average_group(&mut b, 1..3, &mut sb);
+                assert_eq!(a, b);
+            }
+        }
     }
 
     #[test]
@@ -319,9 +467,32 @@ mod tests {
             CollectiveKind::parse("sharded:4").unwrap(),
             CollectiveKind::Sharded { threads: 4 }
         );
+        assert_eq!(
+            CollectiveKind::parse("pooled").unwrap(),
+            CollectiveKind::Pooled { threads: 0 }
+        );
+        assert_eq!(
+            CollectiveKind::parse("pooled:6").unwrap(),
+            CollectiveKind::Pooled { threads: 6 }
+        );
         assert!(CollectiveKind::parse("mpi").is_err());
         assert!(CollectiveKind::parse("sharded:x").is_err());
+        assert!(CollectiveKind::parse("pooled:x").is_err());
         assert_eq!(CollectiveKind::Sharded { threads: 4 }.name(), "sharded:4");
+        assert_eq!(CollectiveKind::Pooled { threads: 4 }.name(), "pooled:4");
+        assert_eq!(CollectiveKind::Pooled { threads: 0 }.name(), "pooled");
         assert_eq!(CollectiveKind::Simulated.name(), "simulated");
+    }
+
+    #[test]
+    fn build_for_resolves_pool_threads() {
+        // Pooled{0} defers to the run-level pool-threads knob; explicit
+        // counts win.  Either way the engine reports the pooled name.
+        let c = CollectiveKind::Pooled { threads: 0 }.build_for(2);
+        assert_eq!(c.name(), "pooled");
+        let c = CollectiveKind::Pooled { threads: 3 }.build_for(2);
+        assert_eq!(c.name(), "pooled");
+        let c = CollectiveKind::Simulated.build_for(4);
+        assert_eq!(c.name(), "simulated");
     }
 }

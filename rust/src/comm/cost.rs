@@ -1,8 +1,12 @@
 //! α–β cost model for hierarchical reductions.
 //!
-//! A message of M bytes over a link costs `α + M·β` seconds.  Defaults are
-//! calibrated to the paper's platform (IBM Minsky: NVLink ~40 GB/s intra
-//! node, EDR Infiniband ~10 GB/s inter node, α ≈ 5 µs / 20 µs).
+//! A message of M bytes over a link costs `α + M·β` seconds.  Three link
+//! tiers: intra-node and inter-node defaults are calibrated to the paper's
+//! platform (IBM Minsky: NVLink ~40 GB/s intra node, EDR Infiniband
+//! ~10 GB/s inter node, α ≈ 5 µs / 20 µs); the rack-fabric tier models an
+//! oversubscribed cross-rack spine (~5 GB/s, α ≈ 50 µs) and is only
+//! charged when a hierarchy level is explicitly assigned to it via the
+//! config's per-level `links` override.
 
 use crate::topology::LinkClass;
 
@@ -16,6 +20,10 @@ pub struct CostModel {
     pub alpha_inter: f64,
     /// Per-byte time on an inter-node link (seconds/byte).
     pub beta_inter: f64,
+    /// Per-message latency on the cross-rack fabric (seconds).
+    pub alpha_rack: f64,
+    /// Per-byte time on the cross-rack fabric (seconds/byte).
+    pub beta_rack: f64,
 }
 
 impl Default for CostModel {
@@ -25,6 +33,8 @@ impl Default for CostModel {
             beta_intra: 1.0 / 40e9,
             alpha_inter: 20e-6,
             beta_inter: 1.0 / 10e9,
+            alpha_rack: 50e-6,
+            beta_rack: 1.0 / 5e9,
         }
     }
 }
@@ -65,6 +75,7 @@ impl CostModel {
         match link {
             LinkClass::IntraNode => (self.alpha_intra, self.beta_intra),
             LinkClass::InterNode => (self.alpha_inter, self.beta_inter),
+            LinkClass::RackFabric => (self.alpha_rack, self.beta_rack),
         }
     }
 
@@ -123,29 +134,37 @@ pub struct LevelStats {
     pub seconds: f64,
 }
 
-/// Running communication account for one training run.
+/// Running communication account for one training run.  Local = the
+/// intra-node tier, global = the inter-node tier, rack = the cross-rack
+/// fabric tier (zero unless the config assigns a level to it).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommStats {
     pub local_reductions: u64,
     pub global_reductions: u64,
+    pub rack_reductions: u64,
     pub local_bytes: u64,
     pub global_bytes: u64,
+    pub rack_bytes: u64,
     pub local_seconds: f64,
     pub global_seconds: f64,
+    pub rack_seconds: f64,
 }
 
 impl CommStats {
     pub fn total_seconds(&self) -> f64 {
-        self.local_seconds + self.global_seconds
+        self.local_seconds + self.global_seconds + self.rack_seconds
     }
 
     pub fn merge(&mut self, other: &CommStats) {
         self.local_reductions += other.local_reductions;
         self.global_reductions += other.global_reductions;
+        self.rack_reductions += other.rack_reductions;
         self.local_bytes += other.local_bytes;
         self.global_bytes += other.global_bytes;
+        self.rack_bytes += other.rack_bytes;
         self.local_seconds += other.local_seconds;
         self.global_seconds += other.global_seconds;
+        self.rack_seconds += other.rack_seconds;
     }
 }
 
@@ -189,6 +208,20 @@ mod tests {
                 cm.allreduce_seconds(4, bytes, IntraNode, s)
                     < cm.allreduce_seconds(4, bytes, InterNode, s)
             );
+        }
+    }
+
+    #[test]
+    fn rack_is_the_slowest_tier() {
+        let cm = CostModel::default();
+        for &bytes in &[4usize, 4 << 20] {
+            for s in [ReduceStrategy::Naive, ReduceStrategy::Tree, ReduceStrategy::Ring] {
+                assert!(
+                    cm.allreduce_seconds(4, bytes, InterNode, s)
+                        < cm.allreduce_seconds(4, bytes, RackFabric, s),
+                    "bytes={bytes} strategy={s:?}"
+                );
+            }
         }
     }
 

@@ -4,22 +4,26 @@
 //! Three layers, independently pluggable:
 //!
 //! - [`collective`] — *how bytes move*: the [`Collective`] trait with a
-//!   single-thread simulated engine and a thread-parallel sharded engine
-//!   (reduce-scatter/all-gather over OS threads).  All engines compute the
-//!   identical arithmetic mean (summation order is fixed), so training
-//!   dynamics are exact and engine choice is a pure throughput knob.
+//!   single-thread simulated engine, a spawn-per-call sharded engine, and
+//!   a persistent-worker-pool pooled engine (reduce-scatter/all-gather
+//!   over `exec::WorkerPool`).  All engines compute the identical
+//!   arithmetic mean (summation order is fixed), so training dynamics are
+//!   exact and engine choice is a pure throughput knob.
 //! - [`reduce`] — *what a reduction does to the run*: in-place group
 //!   averaging plus aggregate and per-hierarchy-level accounting.
 //! - [`cost`] — *what a reduction costs*: an α–β model with distinct
-//!   intra-node (NVLink-class) and inter-node (Infiniband-class) links —
-//!   the quantity the paper argues about but could not measure (§4.3:
-//!   their PyTorch stack lacked GPU-direct).  Three allreduce schedules
-//!   are modelled (naive gather+broadcast, binary tree, ring).
+//!   intra-node (NVLink-class), inter-node (Infiniband-class), and
+//!   cross-rack (oversubscribed spine) links — the quantity the paper
+//!   argues about but could not measure (§4.3: their PyTorch stack lacked
+//!   GPU-direct).  Three allreduce schedules are modelled (naive
+//!   gather+broadcast, binary tree, ring).
 
 pub mod collective;
 pub mod cost;
 pub mod reduce;
 
-pub use collective::{Collective, CollectiveKind, ShardedCollective, SimulatedCollective};
+pub use collective::{
+    Collective, CollectiveKind, PooledCollective, ShardedCollective, SimulatedCollective,
+};
 pub use cost::{CommStats, CostModel, LevelStats, ReduceStrategy};
 pub use reduce::Reducer;

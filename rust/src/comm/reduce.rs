@@ -3,11 +3,11 @@
 //!
 //! This is the L3 hot path (profiled in benches/reduction.rs).  The
 //! *arithmetic* is delegated to a pluggable [`Collective`] (simulated
-//! single-thread, or thread-parallel sharded); both keep a fixed summation
-//! order (learner-index ascending), so results are identical across
-//! collectives, reduce strategies, and runs.  The reducer owns what the
-//! collective does not: the α–β cost model, the aggregate [`CommStats`],
-//! and per-hierarchy-level [`LevelStats`].
+//! single-thread, spawn-per-call sharded, or persistent-pool pooled); all
+//! keep a fixed summation order (learner-index ascending), so results are
+//! identical across collectives, reduce strategies, and runs.  The reducer
+//! owns what the collective does not: the α–β cost model, the aggregate
+//! [`CommStats`], and per-hierarchy-level [`LevelStats`].
 
 use crate::comm::collective::{Collective, SimulatedCollective};
 use crate::comm::cost::{CommStats, CostModel, LevelStats, ReduceStrategy};
@@ -98,6 +98,11 @@ impl Reducer {
                 self.stats.global_bytes += moved;
                 self.stats.global_seconds += secs;
             }
+            LinkClass::RackFabric => {
+                self.stats.rack_reductions += 1;
+                self.stats.rack_bytes += moved;
+                self.stats.rack_seconds += secs;
+            }
         }
         (secs, moved)
     }
@@ -148,6 +153,7 @@ impl Reducer {
         match link {
             LinkClass::IntraNode => self.stats.local_seconds -= surplus,
             LinkClass::InterNode => self.stats.global_seconds -= surplus,
+            LinkClass::RackFabric => self.stats.rack_seconds -= surplus,
         }
         self.reserve_levels(level + 1);
         let ls = &mut self.level_stats[level];
@@ -282,6 +288,32 @@ mod tests {
         // Two symmetric clusters run concurrently: charged time equals one
         // cluster's allreduce, not two.
         assert!((red.stats.local_seconds - secs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rack_tier_charged_to_its_own_account() {
+        use crate::topology::HierTopology;
+        let topo = HierTopology::with_links(
+            vec![2, 4, 8],
+            vec![LinkClass::IntraNode, LinkClass::InterNode, LinkClass::RackFabric],
+        )
+        .unwrap();
+        let mut r = replicas(8, 64);
+        let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 64);
+        red.reserve_levels(topo.n_levels());
+        red.reduce_level(&mut r, &topo, 0);
+        red.reduce_level(&mut r, &topo, 1);
+        red.reduce_level(&mut r, &topo, 2);
+        assert_eq!(red.stats.local_reductions, 4);
+        assert_eq!(red.stats.global_reductions, 2);
+        assert_eq!(red.stats.rack_reductions, 1);
+        assert!(red.stats.rack_seconds > 0.0);
+        assert!(red.stats.rack_bytes > 0);
+        // The rack fabric is the slowest tier: one 8-way reduction there
+        // costs more than one 4-way on the inter-node tier.
+        assert!(red.stats.rack_seconds > red.stats.global_seconds / 2.0);
+        let total: f64 = red.level_stats().iter().map(|l| l.seconds).sum();
+        assert!((red.stats.total_seconds() - total).abs() < 1e-12);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::algorithms::{HierAvgSchedule, HierSchedule};
 use crate::comm::{CollectiveKind, CostModel, ReduceStrategy};
 use crate::optimizer::LrSchedule;
-use crate::topology::{HierTopology, Topology};
+use crate::topology::{HierTopology, LinkClass, Topology};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -46,6 +46,15 @@ pub struct RunConfig {
     pub ks: Vec<u64>,
     /// Which collective engine executes reductions.
     pub collective: CollectiveKind,
+    /// Execution slots of the persistent worker pool the pooled collective
+    /// and the native backend's lane fan-out dispatch onto (0 = available
+    /// parallelism).  Oversubscription is allowed and never changes
+    /// results (the pool's static assignment is deterministic).
+    pub pool_threads: usize,
+    /// Per-level link-class overrides matching `levels` (innermost first):
+    /// `intra` / `inter` / `rack`.  Empty = the default assignment
+    /// (innermost intra-node, every outer level inter-node).
+    pub links: Vec<LinkClass>,
     pub epochs: usize,
     /// Nominal training-set size; steps/epoch = train_n / (P·B).
     pub train_n: usize,
@@ -91,6 +100,8 @@ impl RunConfig {
             levels: Vec::new(),
             ks: Vec::new(),
             collective: CollectiveKind::Simulated,
+            pool_threads: 0,
+            links: Vec::new(),
             epochs: 20,
             train_n: 4096,
             test_n: 1024,
@@ -121,10 +132,10 @@ impl RunConfig {
     }
 
     /// The run's reduction hierarchy: `levels` when set, else the
-    /// two-level `[s, p]`.
+    /// two-level `[s, p]`; per-level `links` overrides applied when given.
     pub fn hierarchy(&self) -> Result<HierTopology> {
-        if self.levels.is_empty() {
-            Ok(self.topology()?.to_hier())
+        let topo = if self.levels.is_empty() {
+            self.topology()?.to_hier()
         } else {
             let topo = HierTopology::new(self.levels.clone())?;
             if topo.p() != self.p {
@@ -135,7 +146,12 @@ impl RunConfig {
                     self.p
                 );
             }
+            topo
+        };
+        if self.links.is_empty() {
             Ok(topo)
+        } else {
+            HierTopology::with_links(topo.sizes().to_vec(), self.links.clone())
         }
     }
 
@@ -284,6 +300,19 @@ impl RunConfig {
                     self.set_ks(ks);
                 }
                 "collective" => self.collective = CollectiveKind::parse(v.as_str()?)?,
+                "pool_threads" => self.pool_threads = v.as_usize()?,
+                "links" => {
+                    self.links = v
+                        .as_arr()?
+                        .iter()
+                        .map(|l| {
+                            let s = l.as_str()?;
+                            LinkClass::parse(s).ok_or_else(|| {
+                                anyhow!("unknown link class {s:?} (intra|inter|rack)")
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?
+                }
                 "epochs" => self.epochs = v.as_usize()?,
                 "train_n" => self.train_n = v.as_usize()?,
                 "test_n" => self.test_n = v.as_usize()?,
@@ -319,6 +348,8 @@ impl RunConfig {
                 "beta_intra" => self.cost.beta_intra = v.as_f64()?,
                 "alpha_inter" => self.cost.alpha_inter = v.as_f64()?,
                 "beta_inter" => self.cost.beta_inter = v.as_f64()?,
+                "alpha_rack" => self.cost.alpha_rack = v.as_f64()?,
+                "beta_rack" => self.cost.beta_rack = v.as_f64()?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -350,6 +381,17 @@ impl RunConfig {
         }
         if let Some(c) = args.get("collective") {
             cfg.collective = CollectiveKind::parse(c)?;
+        }
+        cfg.pool_threads = args.parse_or("pool-threads", cfg.pool_threads)?;
+        if let Some(ls) = args.get("links") {
+            cfg.links = ls
+                .split(',')
+                .map(|x| {
+                    let x = x.trim();
+                    LinkClass::parse(x)
+                        .ok_or_else(|| anyhow!("invalid --links entry {x:?} (intra|inter|rack)"))
+                })
+                .collect::<Result<Vec<_>>>()?;
         }
         cfg.p = args.parse_or("p", cfg.p)?;
         cfg.s = args.parse_or("s", cfg.s)?;
@@ -507,6 +549,68 @@ mod tests {
         c.validate().unwrap();
         assert_eq!(c.hier_schedule_at(0).unwrap().intervals(), &[4, 8, 32]);
         assert_eq!(c.hier_schedule_at(5).unwrap().intervals(), &[2, 2, 2]);
+    }
+
+    #[test]
+    fn pool_threads_and_links_via_json() {
+        let mut c = RunConfig::defaults("m");
+        let j = Json::parse(
+            r#"{"levels": [2, 8, 32], "ks": [2, 8, 32], "collective": "pooled:4",
+                "pool_threads": 3, "links": ["intra", "inter", "rack"],
+                "alpha_rack": 1e-4, "beta_rack": 1e-9, "backend": "native"}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.collective, CollectiveKind::Pooled { threads: 4 });
+        assert_eq!(c.pool_threads, 3);
+        assert_eq!(c.cost.alpha_rack, 1e-4);
+        c.validate().unwrap();
+        let h = c.hierarchy().unwrap();
+        assert_eq!(h.link(0), crate::topology::LinkClass::IntraNode);
+        assert_eq!(h.link(2), crate::topology::LinkClass::RackFabric);
+    }
+
+    #[test]
+    fn links_length_mismatch_rejected() {
+        let mut c = RunConfig::defaults("m");
+        c.set_levels(vec![2, 8, 32]);
+        c.set_ks(vec![2, 8, 32]);
+        c.links = vec![LinkClass::IntraNode, LinkClass::RackFabric];
+        assert!(c.validate().is_err());
+        let j = Json::parse(r#"{"links": ["nvlink"]}"#).unwrap();
+        assert!(RunConfig::defaults("m").apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn links_apply_to_two_level_default_shape() {
+        let mut c = RunConfig::defaults("m");
+        c.links = vec![LinkClass::IntraNode, LinkClass::RackFabric];
+        c.validate().unwrap();
+        let h = c.hierarchy().unwrap();
+        assert_eq!(h.sizes(), &[4, 16]);
+        assert_eq!(h.link(1), LinkClass::RackFabric);
+    }
+
+    #[test]
+    fn from_args_parses_pool_and_link_flags() {
+        use crate::util::cli::Args;
+        let argv: Vec<String> = [
+            "train", "--model", "quickstart", "--backend", "native", "--levels", "2,4,8",
+            "--ks", "2,4,8", "--collective", "pooled", "--pool-threads", "5",
+            "--links", "intra,inter,rack", "--epochs", "2",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.collective, CollectiveKind::Pooled { threads: 0 });
+        assert_eq!(cfg.pool_threads, 5);
+        assert_eq!(
+            cfg.links,
+            vec![LinkClass::IntraNode, LinkClass::InterNode, LinkClass::RackFabric]
+        );
+        assert_eq!(cfg.hierarchy().unwrap().link(2), LinkClass::RackFabric);
     }
 
     #[test]

@@ -86,8 +86,12 @@ pub struct Engine<'a> {
 impl<'a> Engine<'a> {
     pub fn new(cfg: &'a RunConfig, n_params: usize, init: &FlatParams) -> Result<Engine<'a>> {
         let topo = cfg.hierarchy()?;
-        let mut reducer =
-            Reducer::with_collective(cfg.cost, cfg.strategy, n_params, cfg.collective.build());
+        // A pooled collective resolves against the run's `--pool-threads`,
+        // landing on the same process-wide pool the native backend's lane
+        // fan-out uses (exec::shared_pool), so one run never oversubscribes
+        // the host with two thread sets.
+        let collective = cfg.collective.build_for(cfg.pool_threads);
+        let mut reducer = Reducer::with_collective(cfg.cost, cfg.strategy, n_params, collective);
         reducer.reserve_levels(topo.n_levels());
         Ok(Engine {
             cfg,

@@ -9,7 +9,8 @@
 //! - **schedule** (`HierSchedule`) — when each tier reduces: per-level
 //!   intervals `K1 ≤ K2 ≤ …`, the outermost boundary subsuming inner ones;
 //! - **collective** (`comm::Collective`) — how the bytes move: simulated
-//!   single-thread or thread-parallel sharded, bit-identical numerics.
+//!   single-thread, spawn-per-call sharded, or persistent-pool pooled —
+//!   bit-identical numerics across all three.
 //!
 //! `Trainer` keeps what is not per-step: the epoch loop, evaluation of the
 //! paper's w̃, and `RunRecord` assembly.  One engine step = every learner
@@ -127,6 +128,9 @@ impl<'a> Trainer<'a> {
 
         record.comm = engine.reducer.stats;
         record.comm_levels = engine.reducer.level_stats().to_vec();
+        record.level_links = (0..engine.topo.n_levels())
+            .map(|l| engine.topo.link(l).name().to_string())
+            .collect();
         record.total_steps = engine.t();
         if cfg.keep_final_params {
             let mut final_params = Vec::new();

@@ -96,13 +96,17 @@ pub fn build(cfg: &RunConfig) -> Result<(Box<dyn StepBackend>, Box<dyn DataSourc
                 );
             };
             // Parallel lanes pay off once several learners step per
-            // dispatch; below that the thread fan-out overhead dominates.
+            // dispatch; below that even the pool's (cheap) dispatch
+            // overhead dominates.  The lane fan-out runs on the same
+            // process-wide pool a pooled collective sized by
+            // `--pool-threads` resolves to (exec::shared_pool).
             let backend: Box<dyn StepBackend> = if cfg.p >= 8 {
-                Box::new(crate::native::ParallelNativeMlp::new(
+                Box::new(crate::native::ParallelNativeMlp::with_pool(
                     dims,
                     batch,
                     eval_batch,
                     cfg.p.min(8),
+                    crate::exec::shared_pool(cfg.pool_threads),
                 )?)
             } else {
                 Box::new(NativeMlp::new(dims, batch, eval_batch)?)

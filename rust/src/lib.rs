@@ -9,8 +9,9 @@
 //!   (Algorithm 1, generalized): P learner replicas in an N-level
 //!   hierarchy of nested groups (the paper's clusters-of-S is the 2-level
 //!   case), per-level averaging intervals `K1 ≤ K2 ≤ …`, and pluggable
-//!   collectives (single-thread simulated or thread-parallel sharded,
-//!   bit-identical numerics); plus the substrates it needs
+//!   collectives (single-thread simulated, spawn-per-call sharded, or
+//!   persistent-worker-pool pooled — bit-identical numerics); plus the
+//!   substrates it needs
 //!   (cluster/topology model, an α–β hierarchical cost model, optimizers,
 //!   synthetic datasets, metrics, and the paper's bounds in `theory`).
 //!   See DESIGN.md §Engine for the three-layer decomposition.
@@ -21,8 +22,9 @@
 //!
 //! At run time the coordinator executes the artifacts through the `xla`
 //! crate's PJRT CPU client (`runtime`); Python is never on the training
-//! path.  See DESIGN.md for the experiment index and EXPERIMENTS.md for
-//! the measured reproductions.
+//! path.  See DESIGN.md for the experiment index and its §Performance
+//! section for the measured hot-path numbers (tracked per PR in the
+//! committed `BENCH_*.json` files).
 //!
 //! ## Quick start
 //!
@@ -48,6 +50,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod driver;
+pub mod exec;
 pub mod metrics;
 pub mod native;
 pub mod optimizer;
@@ -59,11 +62,12 @@ pub mod util;
 
 pub use algorithms::{HierAvgSchedule, HierSchedule, ReduceEvent};
 pub use comm::{
-    Collective, CollectiveKind, CommStats, CostModel, LevelStats, ReduceStrategy, Reducer,
-    ShardedCollective, SimulatedCollective,
+    Collective, CollectiveKind, CommStats, CostModel, LevelStats, PooledCollective,
+    ReduceStrategy, Reducer, ShardedCollective, SimulatedCollective,
 };
 pub use config::{BackendKind, RunConfig};
 pub use coordinator::{Engine, Trainer};
+pub use exec::WorkerPool;
 pub use metrics::{EpochStats, RunRecord};
 pub use params::{FlatParams, ParamLayout};
 pub use topology::{HierTopology, Topology};

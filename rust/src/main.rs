@@ -14,7 +14,9 @@ USAGE:
   hier-avg train  [--config f.json] [--model M] [--backend xla|native]
                   [--p N] [--s N] [--k1 N] [--k2 N] [--epochs N]
                   [--levels S1,S2,..,P] [--ks K1,K2,..,KL]
-                  [--collective simulated|sharded|sharded:N]
+                  [--links intra,inter,rack]
+                  [--collective simulated|sharded[:N]|pooled[:N]]
+                  [--pool-threads N]
                   [--train-n N] [--test-n N] [--lr SCHED] [--seed N]
                   [--noise F] [--radius F] [--strategy ring|tree|naive]
                   [--out results/run.json] [--record-steps]
@@ -29,7 +31,13 @@ USAGE:
 Hierarchy: --levels gives the N-level group-size chain (innermost first,
 last = P, each dividing the next) and --ks the per-level averaging
 intervals; omit both for the paper's two-level --p/--s/--k1/--k2 shape.
-E.g. a GPU->node->rack run: --levels 4,16,64 --ks 2,8,32
+--links assigns each level's cost-model tier (default: innermost intra,
+outer levels inter).  E.g. a GPU->node->rack run:
+  --levels 4,16,64 --ks 2,8,32 --links intra,inter,rack
+
+Execution: --collective pooled reduces over the persistent worker pool
+(no per-reduction thread spawn); --pool-threads sizes the pool shared by
+reductions and the native backend's lane fan-out (0 = all cores).
 
 LR schedules: const:0.05 | step:0.1@150=0.01 | cosine:0.1->0.001@200 |
               warmcos:0.1->0.001@5/200
@@ -86,6 +94,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         rec.comm.global_seconds,
         rec.comm.local_seconds,
     );
+    if rec.comm.rack_reductions > 0 {
+        println!(
+            "rack fabric: {} reductions  {} bytes  {:.4}s",
+            rec.comm.rack_reductions, rec.comm.rack_bytes, rec.comm.rack_seconds
+        );
+    }
     for (lev, ls) in rec.comm_levels.iter().enumerate() {
         println!(
             "level {lev} (groups of {:>4}, {:?}): {:>8} reductions  {:>14} bytes  {:.4}s",

@@ -42,6 +42,10 @@ pub struct RunRecord {
     /// Per-hierarchy-level reduction accounts (index = level, 0 =
     /// innermost; filled by the engine, one entry per topology level).
     pub comm_levels: Vec<LevelStats>,
+    /// Link-class name (`intra` / `inter` / `rack`) per hierarchy level,
+    /// parallel to `comm_levels` (filled by the trainer from the
+    /// topology; surfaces `--links` overrides in the JSON output).
+    pub level_links: Vec<String>,
     pub total_steps: u64,
     pub sim_compute_seconds: f64,
     /// Reduction-event trace (populated when `record_trace` is set).
@@ -88,10 +92,13 @@ impl RunRecord {
         let mut comm = Json::obj();
         comm.set("local_reductions", Json::from(self.comm.local_reductions as usize))
             .set("global_reductions", Json::from(self.comm.global_reductions as usize))
+            .set("rack_reductions", Json::from(self.comm.rack_reductions as usize))
             .set("local_bytes", Json::from(self.comm.local_bytes as usize))
             .set("global_bytes", Json::from(self.comm.global_bytes as usize))
+            .set("rack_bytes", Json::from(self.comm.rack_bytes as usize))
             .set("local_seconds", Json::from(self.comm.local_seconds))
-            .set("global_seconds", Json::from(self.comm.global_seconds));
+            .set("global_seconds", Json::from(self.comm.global_seconds))
+            .set("rack_seconds", Json::from(self.comm.rack_seconds));
         let mut comm_levels = Vec::new();
         for (i, l) in self.comm_levels.iter().enumerate() {
             let mut o = Json::obj();
@@ -99,6 +106,9 @@ impl RunRecord {
                 .set("reductions", Json::from(l.reductions as usize))
                 .set("bytes", Json::from(l.bytes as usize))
                 .set("seconds", Json::from(l.seconds));
+            if let Some(link) = self.level_links.get(i) {
+                o.set("link", Json::from(link.as_str()));
+            }
             comm_levels.push(o);
         }
         let mut o = Json::obj();

@@ -1,53 +1,204 @@
 //! Dense f32 kernels for the native backend: row-major matmuls in the three
-//! orientations backprop needs, written as ikj loops over contiguous rows
-//! so the compiler auto-vectorizes the inner accumulation.
+//! orientations backprop needs, written as register-blocked microkernels
+//! (MR×NR accumulator tiles + k-blocking) in plain safe Rust, relying on
+//! auto-vectorization of the fixed-size inner loops.
+//!
+//! ## Bit-exactness contract
+//!
+//! Every kernel keeps the *naive* formulation's per-element summation
+//! order: each output element is a single accumulator folded over the
+//! reduction index in strictly ascending order.  Tiling only changes
+//! *which* elements are in flight together (and round-trips accumulators
+//! through memory at k-block boundaries, which is exact for f32), never
+//! the order of adds into any one element — so results are bit-identical
+//! to the straightforward triple loop, and everything downstream (grads,
+//! training curves, repro outputs) is unchanged.  Enforced by the
+//! `*_bit_identical_to_naive` tests below across odd shapes.
+//!
+//! §Perf: the previous unblocked ikj loops streamed the full B (or C)
+//! panel from cache for every row at ~3 memory ops per FMA; the MR×NR
+//! tiles amortize MR+NR loads over MR·NR FMAs (see DESIGN.md
+//! §Performance).
+
+/// Accumulator tile rows (output rows held in registers per microkernel).
+const MR: usize = 4;
+/// Accumulator tile columns; 8 f32 = one AVX2 register per row.
+const NR: usize = 8;
+/// k-block length: a KC×NR panel of b (8 KiB) stays L1-resident while a
+/// tile row of accumulators round-trips through c.
+const KC: usize = 256;
 
 /// c[n,fo] = a[n,fi] @ b[fi,fo]   (all row-major)
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo: usize) {
     debug_assert!(a.len() >= n * fi && b.len() >= fi * fo && c.len() >= n * fo);
     c[..n * fo].fill(0.0);
-    for i in 0..n {
-        let arow = &a[i * fi..(i + 1) * fi];
-        let crow = &mut c[i * fo..(i + 1) * fo];
-        for (k, &aik) in arow.iter().enumerate() {
-            let brow = &b[k * fo..(k + 1) * fo];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += aik * bv;
+    let mut k0 = 0;
+    while k0 < fi {
+        let kend = (k0 + KC).min(fi);
+        let mut i0 = 0;
+        while i0 < n {
+            let iend = (i0 + MR).min(n);
+            let mut j0 = 0;
+            while j0 < fo {
+                let jend = (j0 + NR).min(fo);
+                if iend - i0 == MR && jend - j0 == NR {
+                    // Full MR×NR microkernel: accumulators live in
+                    // registers across the k loop, loaded from / stored to
+                    // c at the k-block boundary (exact round-trip).
+                    let mut acc = [[0.0f32; NR]; MR];
+                    for (r, row) in acc.iter_mut().enumerate() {
+                        let crow = &c[(i0 + r) * fo + j0..(i0 + r) * fo + j0 + NR];
+                        row.copy_from_slice(crow);
+                    }
+                    for k in k0..kend {
+                        let brow = &b[k * fo + j0..k * fo + j0 + NR];
+                        for (r, row) in acc.iter_mut().enumerate() {
+                            let aik = a[(i0 + r) * fi + k];
+                            for (av, &bv) in row.iter_mut().zip(brow) {
+                                *av += aik * bv;
+                            }
+                        }
+                    }
+                    for (r, row) in acc.iter().enumerate() {
+                        let crow = &mut c[(i0 + r) * fo + j0..(i0 + r) * fo + j0 + NR];
+                        crow.copy_from_slice(row);
+                    }
+                } else {
+                    // Remainder tile: plain ikj over the partial extent —
+                    // identical per-element add order.
+                    for i in i0..iend {
+                        let arow = &a[i * fi..(i + 1) * fi];
+                        let crow = &mut c[i * fo..(i + 1) * fo];
+                        for k in k0..kend {
+                            let aik = arow[k];
+                            let brow = &b[k * fo..(k + 1) * fo];
+                            for j in j0..jend {
+                                crow[j] += aik * brow[j];
+                            }
+                        }
+                    }
+                }
+                j0 = jend;
             }
+            i0 = iend;
         }
+        k0 = kend;
     }
 }
 
-/// c[fi,fo] = a[n,fi]^T @ b[n,fo]   (wgrad)
+/// c[fi,fo] = a[n,fi]^T @ b[n,fo]   (wgrad; the reduction runs over n)
 pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo: usize) {
     debug_assert!(a.len() >= n * fi && b.len() >= n * fo && c.len() >= fi * fo);
     c[..fi * fo].fill(0.0);
-    for i in 0..n {
-        let arow = &a[i * fi..(i + 1) * fi];
-        let brow = &b[i * fo..(i + 1) * fo];
-        for (k, &aik) in arow.iter().enumerate() {
-            let crow = &mut c[k * fo..(k + 1) * fo];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += aik * bv;
+    let mut i0 = 0;
+    while i0 < n {
+        let iend = (i0 + KC).min(n);
+        let mut k0 = 0;
+        while k0 < fi {
+            let kend = (k0 + MR).min(fi);
+            let mut j0 = 0;
+            while j0 < fo {
+                let jend = (j0 + NR).min(fo);
+                if kend - k0 == MR && jend - j0 == NR {
+                    let mut acc = [[0.0f32; NR]; MR];
+                    for (r, row) in acc.iter_mut().enumerate() {
+                        let crow = &c[(k0 + r) * fo + j0..(k0 + r) * fo + j0 + NR];
+                        row.copy_from_slice(crow);
+                    }
+                    for i in i0..iend {
+                        let brow = &b[i * fo + j0..i * fo + j0 + NR];
+                        for (r, row) in acc.iter_mut().enumerate() {
+                            let aik = a[i * fi + k0 + r];
+                            for (av, &bv) in row.iter_mut().zip(brow) {
+                                *av += aik * bv;
+                            }
+                        }
+                    }
+                    for (r, row) in acc.iter().enumerate() {
+                        let crow = &mut c[(k0 + r) * fo + j0..(k0 + r) * fo + j0 + NR];
+                        crow.copy_from_slice(row);
+                    }
+                } else {
+                    for i in i0..iend {
+                        let arow = &a[i * fi..(i + 1) * fi];
+                        let brow = &b[i * fo..(i + 1) * fo];
+                        for k in k0..kend {
+                            let aik = arow[k];
+                            let crow = &mut c[k * fo..(k + 1) * fo];
+                            for j in j0..jend {
+                                crow[j] += aik * brow[j];
+                            }
+                        }
+                    }
+                }
+                j0 = jend;
             }
+            k0 = kend;
         }
+        i0 = iend;
     }
 }
 
-/// c[n,fi] = a[n,fo] @ b[fi,fo]^T   (dgrad; b is the row-major weight)
+/// Accumulator tile columns for the Bᵀ orientation (output columns index
+/// rows of b, so loads are strided; a narrower tile keeps register
+/// pressure down while still amortizing the a-row loads).
+const NR_T: usize = 4;
+
+/// c[n,fi] = a[n,fo] @ b[fi,fo]^T   (dgrad; b is the row-major weight;
+/// the reduction runs over fo)
 pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fo: usize, fi: usize) {
     debug_assert!(a.len() >= n * fo && b.len() >= fi * fo && c.len() >= n * fi);
-    for i in 0..n {
-        let arow = &a[i * fo..(i + 1) * fo];
-        let crow = &mut c[i * fi..(i + 1) * fi];
-        for (k, cv) in crow.iter_mut().enumerate() {
-            let brow = &b[k * fo..(k + 1) * fo];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
+    c[..n * fi].fill(0.0);
+    let mut j0 = 0;
+    while j0 < fo {
+        let jend = (j0 + KC).min(fo);
+        let mut i0 = 0;
+        while i0 < n {
+            let iend = (i0 + MR).min(n);
+            let mut k0 = 0;
+            while k0 < fi {
+                let kend = (k0 + NR_T).min(fi);
+                if iend - i0 == MR && kend - k0 == NR_T {
+                    let mut acc = [[0.0f32; NR_T]; MR];
+                    for (r, row) in acc.iter_mut().enumerate() {
+                        let crow = &c[(i0 + r) * fi + k0..(i0 + r) * fi + k0 + NR_T];
+                        row.copy_from_slice(crow);
+                    }
+                    for j in j0..jend {
+                        let mut bvals = [0.0f32; NR_T];
+                        for (q, bv) in bvals.iter_mut().enumerate() {
+                            *bv = b[(k0 + q) * fo + j];
+                        }
+                        for (r, row) in acc.iter_mut().enumerate() {
+                            let av = a[(i0 + r) * fo + j];
+                            for (cv, &bv) in row.iter_mut().zip(&bvals) {
+                                *cv += av * bv;
+                            }
+                        }
+                    }
+                    for (r, row) in acc.iter().enumerate() {
+                        let crow = &mut c[(i0 + r) * fi + k0..(i0 + r) * fi + k0 + NR_T];
+                        crow.copy_from_slice(row);
+                    }
+                } else {
+                    for i in i0..iend {
+                        let arow = &a[i * fo..(i + 1) * fo];
+                        let crow = &mut c[i * fi..(i + 1) * fi];
+                        for k in k0..kend {
+                            let brow = &b[k * fo..(k + 1) * fo];
+                            let mut acc = crow[k];
+                            for j in j0..jend {
+                                acc += arow[j] * brow[j];
+                            }
+                            crow[k] = acc;
+                        }
+                    }
+                }
+                k0 = kend;
             }
-            *cv = acc;
+            i0 = iend;
         }
+        j0 = jend;
     }
 }
 
@@ -65,6 +216,8 @@ pub fn add_bias(z: &mut [f32], bias: &[f32], n: usize, fo: usize) {
 mod tests {
     use super::*;
 
+    /// The reference formulation every kernel must match bit for bit: one
+    /// accumulator per element, reduction index strictly ascending.
     fn naive(a: &[f32], b: &[f32], n: usize, fi: usize, fo: usize) -> Vec<f32> {
         let mut c = vec![0.0; n * fo];
         for i in 0..n {
@@ -77,24 +230,88 @@ mod tests {
         c
     }
 
+    fn naive_at_b(a: &[f32], b: &[f32], n: usize, fi: usize, fo: usize) -> Vec<f32> {
+        let mut c = vec![0.0; fi * fo];
+        for k in 0..fi {
+            for j in 0..fo {
+                for i in 0..n {
+                    c[k * fo + j] += a[i * fi + k] * b[i * fo + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn naive_a_bt(a: &[f32], b: &[f32], n: usize, fo: usize, fi: usize) -> Vec<f32> {
+        let mut c = vec![0.0; n * fi];
+        for i in 0..n {
+            for k in 0..fi {
+                for j in 0..fo {
+                    c[i * fi + k] += a[i * fo + j] * b[k * fo + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn mat(len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|i| (i as f32 * scale).sin()).collect()
+    }
+
+    /// Shapes chosen to hit every remainder path: below/at/above MR, NR,
+    /// NR_T, and straddling KC.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (2, 3, 5),
+        (4, 8, 8),
+        (5, 7, 3),
+        (3, 9, 17),
+        (16, 128, 256),
+        (7, 33, 65),
+        (4, 257, 12),
+        (9, 300, 31),
+        (300, 5, 7),
+        (5, 40, 300),
+    ];
+
     #[test]
-    fn matmul_matches_naive() {
-        let (n, fi, fo) = (5, 7, 3);
-        let a: Vec<f32> = (0..n * fi).map(|i| (i as f32 * 0.13).sin()).collect();
-        let b: Vec<f32> = (0..fi * fo).map(|i| (i as f32 * 0.29).cos()).collect();
-        let mut c = vec![0.0; n * fo];
-        matmul(&a, &b, &mut c, n, fi, fo);
-        let expect = naive(&a, &b, n, fi, fo);
-        for (x, y) in c.iter().zip(&expect) {
-            assert!((x - y).abs() < 1e-5);
+    fn matmul_bit_identical_to_naive() {
+        for &(n, fi, fo) in SHAPES {
+            let a = mat(n * fi, 0.13);
+            let b = mat(fi * fo, 0.29);
+            let mut c = vec![0.0; n * fo];
+            matmul(&a, &b, &mut c, n, fi, fo);
+            assert_eq!(c, naive(&a, &b, n, fi, fo), "shape ({n},{fi},{fo})");
+        }
+    }
+
+    #[test]
+    fn at_b_bit_identical_to_naive() {
+        for &(n, fi, fo) in SHAPES {
+            let a = mat(n * fi, 0.7);
+            let b = mat(n * fo, 0.3);
+            let mut c = vec![0.0; fi * fo];
+            matmul_at_b(&a, &b, &mut c, n, fi, fo);
+            assert_eq!(c, naive_at_b(&a, &b, n, fi, fo), "shape ({n},{fi},{fo})");
+        }
+    }
+
+    #[test]
+    fn a_bt_bit_identical_to_naive() {
+        for &(n, fi, fo) in SHAPES {
+            let a = mat(n * fo, 0.11);
+            let b = mat(fi * fo, 0.17);
+            let mut c = vec![0.0; n * fi];
+            matmul_a_bt(&a, &b, &mut c, n, fo, fi);
+            assert_eq!(c, naive_a_bt(&a, &b, n, fo, fi), "shape ({n},{fo},{fi})");
         }
     }
 
     #[test]
     fn at_b_is_transpose_product() {
         let (n, fi, fo) = (6, 4, 5);
-        let a: Vec<f32> = (0..n * fi).map(|i| (i as f32 * 0.7).sin()).collect();
-        let b: Vec<f32> = (0..n * fo).map(|i| (i as f32 * 0.3).cos()).collect();
+        let a = mat(n * fi, 0.7);
+        let b = mat(n * fo, 0.3);
         let mut c = vec![0.0; fi * fo];
         matmul_at_b(&a, &b, &mut c, n, fi, fo);
         // reference: transpose a then multiply
@@ -113,8 +330,8 @@ mod tests {
     #[test]
     fn a_bt_is_transpose_product() {
         let (n, fo, fi) = (3, 6, 4);
-        let a: Vec<f32> = (0..n * fo).map(|i| (i as f32 * 0.11).sin()).collect();
-        let b: Vec<f32> = (0..fi * fo).map(|i| (i as f32 * 0.17).cos()).collect();
+        let a = mat(n * fo, 0.11);
+        let b = mat(fi * fo, 0.17);
         let mut c = vec![0.0; n * fi];
         matmul_a_bt(&a, &b, &mut c, n, fo, fi);
         let mut bt = vec![0.0; fo * fi];

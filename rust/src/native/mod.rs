@@ -4,7 +4,10 @@
 //!
 //! Exists as a substrate (per DESIGN.md): it cross-validates the XLA
 //! artifacts' numerics in integration tests, runs property sweeps fast, and
-//! powers large-P experiments without XLA in the loop.
+//! powers large-P experiments without XLA in the loop.  The dense kernels
+//! in [`linalg`] are register-blocked microkernels (bit-identical to the
+//! naive loops; DESIGN.md §Performance) and multi-learner dispatch fans
+//! out over the persistent worker pool via [`ParallelNativeMlp`].
 
 pub mod linalg;
 pub mod parallel;

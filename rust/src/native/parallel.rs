@@ -1,30 +1,73 @@
-//! Thread-parallel native backend: learners are split across OS threads,
+//! Thread-parallel native backend: learners are split across pool lanes,
 //! each with its own `NativeMlp` scratch (the forward/backward workspaces
 //! are not shareable).  Exact same numerics as the serial backend — the
 //! per-learner computation is untouched; only the loop is parallel.
+//!
+//! Lane fan-out dispatches onto the persistent `exec::WorkerPool` (shared
+//! with the pooled collective when both are sized alike) instead of
+//! spawning scoped threads per step — the dispatch that used to cost a
+//! spawn+join per training step now costs a condvar wake.  Chunk
+//! boundaries are the same ceil-div math as the old scoped path, so
+//! results are bit-identical.
+
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
 use crate::backend::{StepBackend, StepOut};
 use crate::data::BatchBuf;
+use crate::exec::{self, WorkerPool};
 use crate::params::FlatParams;
 
 use super::NativeMlp;
 
 pub struct ParallelNativeMlp {
     lanes: Vec<NativeMlp>,
+    pool: Arc<WorkerPool>,
     dims: Vec<usize>,
     batch: usize,
     eval_batch_size: usize,
 }
 
+/// One lane's share of a `grads` dispatch: its scratch backend plus the
+/// disjoint output chunks it owns.  Wrapped in a `Mutex` per task so the
+/// shared `Fn(usize)` pool closure can take the mutable borrows; each
+/// mutex is locked exactly once, uncontended.
+struct GradTask<'a> {
+    lane: &'a mut NativeMlp,
+    gchunk: &'a mut [FlatParams],
+    ochunk: &'a mut [StepOut],
+    start: usize,
+}
+
+struct EvalTask<'a> {
+    lane: &'a mut NativeMlp,
+    start: usize,
+    len: usize,
+    out: (f32, f32),
+}
+
 impl ParallelNativeMlp {
-    /// `threads` worker lanes (clamped to available parallelism).
+    /// `threads` worker lanes (clamped to available parallelism), fanned
+    /// out over the process-wide shared pool.
     pub fn new(
         dims: &[usize],
         batch: usize,
         eval_batch_size: usize,
         threads: usize,
+    ) -> Result<ParallelNativeMlp> {
+        Self::with_pool(dims, batch, eval_batch_size, threads, exec::shared_pool(0))
+    }
+
+    /// Like [`ParallelNativeMlp::new`] but on a caller-supplied pool (the
+    /// engine passes the run's `--pool-threads`-sized pool so step compute
+    /// and reductions share one set of threads).
+    pub fn with_pool(
+        dims: &[usize],
+        batch: usize,
+        eval_batch_size: usize,
+        threads: usize,
+        pool: Arc<WorkerPool>,
     ) -> Result<ParallelNativeMlp> {
         let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let lanes = threads.clamp(1, hw.max(1));
@@ -32,6 +75,7 @@ impl ParallelNativeMlp {
             lanes: (0..lanes)
                 .map(|_| NativeMlp::new(dims, batch, eval_batch_size))
                 .collect::<Result<_>>()?,
+            pool,
             dims: dims.to_vec(),
             batch,
             eval_batch_size,
@@ -71,31 +115,35 @@ impl StepBackend for ParallelNativeMlp {
         }
         let n_lanes = self.lanes.len().min(p).max(1);
         let per_lane = p.div_ceil(n_lanes);
-        // Split the output slices into per-lane chunks and fan out.
-        let grad_chunks: Vec<&mut [FlatParams]> = grads_out.chunks_mut(per_lane).collect();
-        let out_chunks: Vec<&mut [StepOut]> = outs.chunks_mut(per_lane).collect();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (lane_idx, (lane, (gchunk, ochunk))) in self
-                .lanes
-                .iter_mut()
-                .zip(grad_chunks.into_iter().zip(out_chunks))
-                .enumerate()
-            {
-                let start = lane_idx * per_lane;
-                let xf = &batch.xf;
-                let y = &batch.y;
-                handles.push(scope.spawn(move || {
-                    for (i, (g, o)) in gchunk.iter_mut().zip(ochunk.iter_mut()).enumerate() {
-                        let j = start + i;
-                        let x = &xf[j * b * d..(j + 1) * b * d];
-                        let ys = &y[j * b..(j + 1) * b];
-                        *o = lane.grads_single(&replicas[j], x, ys, b, g);
-                    }
-                }));
+        // Split the output slices into per-lane chunks (same ceil-div
+        // boundaries as the old scoped-thread fan-out) and dispatch.
+        let mut tasks: Vec<Mutex<GradTask>> = Vec::with_capacity(n_lanes);
+        {
+            let mut gs = &mut grads_out[..p];
+            let mut os = &mut outs[..p];
+            let mut lanes = self.lanes.iter_mut();
+            let mut start = 0usize;
+            while start < p {
+                let take = per_lane.min(p - start);
+                let (gchunk, grest) = std::mem::take(&mut gs).split_at_mut(take);
+                let (ochunk, orest) = std::mem::take(&mut os).split_at_mut(take);
+                gs = grest;
+                os = orest;
+                let lane = lanes.next().expect("at least one lane per chunk");
+                tasks.push(Mutex::new(GradTask { lane, gchunk, ochunk, start }));
+                start += take;
             }
-            for h in handles {
-                h.join().expect("native lane panicked");
+        }
+        let xf = &batch.xf;
+        let y = &batch.y;
+        self.pool.run(tasks.len(), &|ti| {
+            let mut guard = tasks[ti].lock().expect("grad task lock");
+            let t = &mut *guard;
+            for (i, (g, o)) in t.gchunk.iter_mut().zip(t.ochunk.iter_mut()).enumerate() {
+                let j = t.start + i;
+                let x = &xf[j * b * d..(j + 1) * b * d];
+                let ys = &y[j * b..(j + 1) * b];
+                *o = t.lane.grads_single(&replicas[j], x, ys, b, g);
             }
         });
         Ok(())
@@ -117,25 +165,30 @@ impl StepBackend for ParallelNativeMlp {
         // never larger than that.  Partial sums are combined in lane order,
         // so the result is deterministic for a fixed lane count.
         let per = n.div_ceil(lanes);
-        let partials: Vec<(f32, f32)> = std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (i, lane) in self.lanes.iter_mut().take(lanes).enumerate() {
-                let start = i * per;
-                if start >= n {
-                    break;
-                }
-                let len = per.min(n - start);
-                let x = &batch.xf[start * d..(start + len) * d];
-                let y = &batch.y[start..start + len];
-                handles.push(scope.spawn(move || lane.eval_rows(params, x, y, len)));
+        let mut tasks: Vec<Mutex<EvalTask>> = Vec::with_capacity(lanes);
+        for (i, lane) in self.lanes.iter_mut().take(lanes).enumerate() {
+            let start = i * per;
+            if start >= n {
+                break;
             }
-            handles.into_iter().map(|h| h.join().expect("native eval lane panicked")).collect()
+            let len = per.min(n - start);
+            tasks.push(Mutex::new(EvalTask { lane, start, len, out: (0.0, 0.0) }));
+        }
+        let xf = &batch.xf;
+        let y = &batch.y;
+        self.pool.run(tasks.len(), &|ti| {
+            let mut guard = tasks[ti].lock().expect("eval task lock");
+            let t = &mut *guard;
+            let x = &xf[t.start * d..(t.start + t.len) * d];
+            let ys = &y[t.start..t.start + t.len];
+            t.out = t.lane.eval_rows(params, x, ys, t.len);
         });
         let mut sum_loss = 0.0f32;
         let mut ncorrect = 0.0f32;
-        for (l, c) in partials {
-            sum_loss += l;
-            ncorrect += c;
+        for t in tasks {
+            let t = t.into_inner().expect("eval task lock");
+            sum_loss += t.out.0;
+            ncorrect += t.out.1;
         }
         Ok((sum_loss, ncorrect))
     }
@@ -194,6 +247,52 @@ mod tests {
             assert_eq!(os[j].loss, op[j].loss);
             assert_eq!(os[j].ncorrect, op[j].ncorrect);
         }
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_oversubscribed_pool() {
+        // More pool slots than hardware threads (and than lanes): the
+        // static task assignment keeps results bit-identical anyway.
+        let dims = [10usize, 16, 4];
+        let b = 4;
+        let p = 5;
+        let mut serial = NativeMlp::new(&dims, b, 8).unwrap();
+        let mut par =
+            ParallelNativeMlp::with_pool(&dims, b, 8, 4, exec::shared_pool(32)).unwrap();
+
+        let mut rng = Pcg32::seeded(11);
+        let init = serial.init(&mut rng);
+        let replicas = vec![init; p];
+        let data = ClassifyData::generate(MixtureSpec {
+            dim: 10,
+            classes: 4,
+            train_n: 128,
+            test_n: 32,
+            radius: 1.0,
+            noise: 0.5,
+            subclusters: 1,
+            label_noise: 0.0,
+            seed: 4,
+        });
+        let mut batch = BatchBuf::default();
+        let mut brng = Pcg32::seeded(2);
+        for _ in 0..p {
+            data.fill_train(&mut brng, b, &mut batch);
+        }
+        let n = serial.n_params();
+        let mut gs = vec![vec![0.0f32; n]; p];
+        let mut os = vec![StepOut::default(); p];
+        serial.grads(&replicas, &batch, &mut gs, &mut os).unwrap();
+        let mut gp = vec![vec![0.0f32; n]; p];
+        let mut op = vec![StepOut::default(); p];
+        par.grads(&replicas, &batch, &mut gp, &mut op).unwrap();
+        assert_eq!(gs, gp);
+        // Dispatching twice is deterministic.
+        let mut gp2 = vec![vec![0.0f32; n]; p];
+        let mut op2 = vec![StepOut::default(); p];
+        par.grads(&replicas, &batch, &mut gp2, &mut op2).unwrap();
+        assert_eq!(gp, gp2);
+        let _ = (os, op, op2);
     }
 
     #[test]

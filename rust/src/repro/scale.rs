@@ -1,8 +1,8 @@
 //! Experiment scale: `full` uses the paper's parameters (P, epochs, data
 //! volume); `small` shrinks epochs / dataset so the whole suite runs on a
 //! laptop-class CPU in tens of minutes while preserving every *relative*
-//! comparison (same P, S, K1, K2 grids).  EXPERIMENTS.md records which
-//! scale produced each table.
+//! comparison (same P, S, K1, K2 grids); results/<exp>/ output directories
+//! record which scale produced each table.
 
 use anyhow::{bail, Result};
 

@@ -20,6 +20,28 @@ pub enum LinkClass {
     IntraNode,
     /// Node-to-node fabric (Infiniband-class).
     InterNode,
+    /// Cross-rack fabric (oversubscribed spine links; the slowest tier).
+    RackFabric,
+}
+
+impl LinkClass {
+    /// Parse the config/CLI spelling (`intra`, `inter`, `rack`).
+    pub fn parse(s: &str) -> Option<LinkClass> {
+        match s {
+            "intra" => Some(LinkClass::IntraNode),
+            "inter" => Some(LinkClass::InterNode),
+            "rack" => Some(LinkClass::RackFabric),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkClass::IntraNode => "intra",
+            LinkClass::InterNode => "inter",
+            LinkClass::RackFabric => "rack",
+        }
+    }
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -89,8 +111,9 @@ impl Topology {
 /// Each level carries the [`LinkClass`] its reductions are charged to in
 /// the α–β cost model.  Default assignment: the innermost level of a
 /// multi-level hierarchy is `IntraNode`; every other level is `InterNode`
-/// (node-level and rack-level fabrics share the slower tier).  Use
-/// [`HierTopology::with_links`] for custom assignments.
+/// (so the default model stays the paper's two-tier one).  Use
+/// [`HierTopology::with_links`] — or the config's per-level `links`
+/// override — to charge outer tiers to the slower `RackFabric` class.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct HierTopology {
     sizes: Vec<usize>,
@@ -324,6 +347,24 @@ mod tests {
         let dup = HierTopology::new(vec![4, 4]).unwrap();
         assert_eq!(dup.n_groups(0), 1);
         assert_eq!(dup.n_groups(1), 1);
+    }
+
+    #[test]
+    fn link_class_parse_and_name() {
+        for l in [LinkClass::IntraNode, LinkClass::InterNode, LinkClass::RackFabric] {
+            assert_eq!(LinkClass::parse(l.name()), Some(l));
+        }
+        assert_eq!(LinkClass::parse("nvlink"), None);
+    }
+
+    #[test]
+    fn custom_links_accept_rack_tier() {
+        let h = HierTopology::with_links(
+            vec![2, 8, 32],
+            vec![LinkClass::IntraNode, LinkClass::InterNode, LinkClass::RackFabric],
+        )
+        .unwrap();
+        assert_eq!(h.link(2), LinkClass::RackFabric);
     }
 
     #[test]

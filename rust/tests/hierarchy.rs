@@ -11,7 +11,7 @@
 
 use hier_avg::algorithms::{HierAvgSchedule, HierSchedule, ReduceEvent};
 use hier_avg::comm::{
-    CollectiveKind, CostModel, ReduceStrategy, Reducer, ShardedCollective,
+    CollectiveKind, CostModel, PooledCollective, ReduceStrategy, Reducer, ShardedCollective,
 };
 use hier_avg::config::{BackendKind, RunConfig};
 use hier_avg::coordinator::Trainer;
@@ -131,6 +131,88 @@ fn prop_sharded_collective_bit_identical() {
 }
 
 // ---------------------------------------------------------------------------
+// (b') pooled collective ≡ simulated reducer, bit for bit, across thread
+// counts — including counts far above the available parallelism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pooled_collective_bit_identical() {
+    let mut rng = Pcg32::seeded(0x900D);
+    for case in 0..60 {
+        let s = 1 + rng.next_below(4) as usize;
+        let clusters = 1 + rng.next_below(4) as usize;
+        let p = s * clusters;
+        // Spread n across the serial-fallback threshold: tiny shapes take
+        // the serial path, large ones the pooled shards.
+        let n = 1 + rng.next_below(60_000) as usize;
+        let threads = 1 + rng.next_below(8) as usize;
+        let topo = Topology::new(p, s).unwrap();
+        let base: Vec<Vec<f32>> =
+            (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+
+        let mut a = base.clone();
+        let mut sim = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
+        sim.local_average(&mut a, &topo);
+        sim.global_average(&mut a, &topo);
+
+        let mut b = base.clone();
+        let mut po = Reducer::with_collective(
+            CostModel::default(),
+            ReduceStrategy::Ring,
+            n,
+            Box::new(PooledCollective::new(threads)),
+        );
+        po.local_average(&mut b, &topo);
+        po.global_average(&mut b, &topo);
+
+        assert_eq!(a, b, "case {case}: p={p} s={s} n={n} threads={threads}");
+        assert_eq!(sim.stats, po.stats, "case {case}");
+
+        let mut ma = Vec::new();
+        let mut mb = Vec::new();
+        sim.mean_of(&base, &mut ma);
+        po.mean_of(&base, &mut mb);
+        assert_eq!(ma, mb, "case {case}");
+    }
+}
+
+#[test]
+fn pooled_collective_deterministic_under_oversubscription() {
+    // pool-threads far above the host's parallelism: the static
+    // index→slot assignment keeps every run bit-identical.
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = (hw * 8).max(16);
+    let p = 8;
+    let n = 200_003; // odd, well above the serial-fallback threshold
+    let mut rng = Pcg32::seeded(0x0E5B);
+    let base: Vec<Vec<f32>> =
+        (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+    let topo = Topology::new(p, 4).unwrap();
+
+    let run = |threads: usize| {
+        let mut r = base.clone();
+        let mut red = Reducer::with_collective(
+            CostModel::default(),
+            ReduceStrategy::Ring,
+            n,
+            Box::new(PooledCollective::new(threads)),
+        );
+        red.local_average(&mut r, &topo);
+        red.global_average(&mut r, &topo);
+        r
+    };
+    let first = run(threads);
+    let second = run(threads);
+    assert_eq!(first, second, "oversubscribed pool must be deterministic");
+    // ... and identical to the simulated engine.
+    let mut sim_r = base.clone();
+    let mut sim = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
+    sim.local_average(&mut sim_r, &topo);
+    sim.global_average(&mut sim_r, &topo);
+    assert_eq!(first, sim_r);
+}
+
+// ---------------------------------------------------------------------------
 // Trainer-level regression: (p, s, k1, k2) vs explicit levels/ks, and
 // simulated vs sharded collective
 // ---------------------------------------------------------------------------
@@ -208,6 +290,47 @@ fn sharded_collective_trainer_is_bit_identical() {
     let rb = run_native(&sharded);
     assert_records_identical(&ra, &rb);
     assert_eq!(ra.comm_levels, rb.comm_levels);
+}
+
+#[test]
+fn pooled_collective_trainer_is_bit_identical() {
+    let simulated = quick_cfg();
+    let mut pooled = quick_cfg();
+    pooled.collective = CollectiveKind::Pooled { threads: 3 };
+    let ra = run_native(&simulated);
+    let rb = run_native(&pooled);
+    assert_records_identical(&ra, &rb);
+    assert_eq!(ra.comm_levels, rb.comm_levels);
+}
+
+#[test]
+fn rack_link_override_is_surfaced_and_charged() {
+    let mut cfg = quick_cfg();
+    cfg.set_levels(vec![4, 8]);
+    cfg.set_ks(vec![2, 8]);
+    cfg.links = vec![LinkClass::IntraNode, LinkClass::RackFabric];
+    let rec = run_native(&cfg);
+    // The outer level's reductions land on the rack account, not global.
+    assert_eq!(rec.comm.global_reductions, 0);
+    assert!(rec.comm.rack_reductions > 0);
+    assert!(rec.comm.rack_seconds > 0.0);
+    // ... and are more expensive than the default inter-node tier.
+    let mut default_cfg = quick_cfg();
+    default_cfg.set_levels(vec![4, 8]);
+    default_cfg.set_ks(vec![2, 8]);
+    let def = run_native(&default_cfg);
+    assert_eq!(def.comm.global_reductions, rec.comm.rack_reductions);
+    assert!(rec.comm.rack_seconds > def.comm.global_seconds);
+    // Training dynamics are untouched by the cost-model relabelling.
+    for (x, y) in rec.epochs.iter().zip(&def.epochs) {
+        assert_eq!(x.train_loss, y.train_loss);
+    }
+    // The JSON output names each level's link class.
+    let json = rec.to_json();
+    let levels = json.req("comm_levels").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(levels[0].req("link").unwrap().as_str().unwrap(), "intra");
+    assert_eq!(levels[1].req("link").unwrap().as_str().unwrap(), "rack");
+    assert!(json.req("comm").unwrap().req("rack_seconds").unwrap().as_f64().unwrap() > 0.0);
 }
 
 #[test]
