@@ -31,6 +31,16 @@ use crate::params::FlatParams;
 
 pub use engine::{Engine, LearnerSet, ReduceOutcome, StepOutcome};
 
+/// Per-step modelled compute seconds on the simulated cluster: all P
+/// learners step concurrently; fwd+bwd ≈ 6·B·n_params flops on a
+/// P100-class device (DESIGN.md §1: modelled, not measured).  Shared by
+/// the trainer's epoch clock and the sweep planner's time-to-target
+/// scoring so both tick against the same device model.
+pub fn sim_step_seconds(batch: usize, n_params: usize) -> f64 {
+    const DEVICE_FLOPS: f64 = 10.6e12; // P100 fp32 peak
+    6.0 * batch as f64 * n_params as f64 / DEVICE_FLOPS
+}
+
 pub struct Trainer<'a> {
     pub cfg: &'a RunConfig,
     pub backend: Box<dyn StepBackend>,
@@ -58,12 +68,10 @@ impl<'a> Trainer<'a> {
         (self.data.train_n() / (self.cfg.p * self.backend.train_batch())).max(1)
     }
 
-    /// Per-step modelled compute seconds for the simulated cluster: all P
-    /// learners step concurrently; fwd+bwd ≈ 6·B·n_params flops on a
-    /// P100-class device (DESIGN.md §1: modelled, not measured).
+    /// This trainer's per-step modelled compute seconds (see
+    /// [`sim_step_seconds`]).
     fn sim_step_seconds(&self) -> f64 {
-        const DEVICE_FLOPS: f64 = 10.6e12; // P100 fp32 peak
-        6.0 * self.backend.train_batch() as f64 * self.backend.n_params() as f64 / DEVICE_FLOPS
+        sim_step_seconds(self.backend.train_batch(), self.backend.n_params())
     }
 
     pub fn run(&mut self) -> Result<RunRecord> {

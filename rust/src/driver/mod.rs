@@ -53,19 +53,29 @@ pub fn remap_by_name(
     Ok(out)
 }
 
+/// The classification-mixture spec a config's MLP data source is built
+/// from.  Shared with the planner's manifest-independent validation runs
+/// (`planner::validation_record`) so they train on byte-identical data to
+/// a `driver::run` of the same config.
+pub(crate) fn mixture_spec(cfg: &RunConfig, dims: &[usize]) -> MixtureSpec {
+    MixtureSpec {
+        dim: dims[0],
+        classes: *dims.last().unwrap(),
+        train_n: cfg.train_n,
+        test_n: cfg.test_n,
+        radius: cfg.radius,
+        noise: cfg.noise,
+        subclusters: cfg.subclusters,
+        label_noise: cfg.label_noise,
+        seed: cfg.seed ^ 0x5eed,
+    }
+}
+
 fn build_data(cfg: &RunConfig, kind: &ModelKind) -> Box<dyn DataSource> {
     match kind {
-        ModelKind::Mlp { dims, .. } => Box::new(ClassifyData::generate(MixtureSpec {
-            dim: dims[0],
-            classes: *dims.last().unwrap(),
-            train_n: cfg.train_n,
-            test_n: cfg.test_n,
-            radius: cfg.radius,
-            noise: cfg.noise,
-            subclusters: cfg.subclusters,
-            label_noise: cfg.label_noise,
-            seed: cfg.seed ^ 0x5eed,
-        })),
+        ModelKind::Mlp { dims, .. } => {
+            Box::new(ClassifyData::generate(mixture_spec(cfg, dims)))
+        }
         ModelKind::Lm { vocab, seq_len, .. } => {
             let mut spec = TokenSpec::tiny_corpus(*vocab, *seq_len);
             spec.train_n = cfg.train_n;

@@ -55,6 +55,7 @@ pub mod metrics;
 pub mod native;
 pub mod optimizer;
 pub mod params;
+pub mod planner;
 pub mod runtime;
 pub mod theory;
 pub mod topology;
@@ -70,5 +71,6 @@ pub use coordinator::{Engine, Trainer};
 pub use exec::WorkerPool;
 pub use metrics::{EpochStats, RunRecord};
 pub use params::{FlatParams, ParamLayout};
+pub use planner::{Candidate, Ranked, ScoreCtx, SweepSpace};
 pub use topology::{HierTopology, Topology};
 pub mod repro;

@@ -25,6 +25,11 @@ USAGE:
   hier-avg repro  <fig1|fig2|fig3|fig4|fig5|table1|thm34|thm35|thm36|comm|
                    asgd|adaptive|deep|all>
                   [--scale small|full] [--backend xla|native] [--out DIR]
+  hier-avg sweep  --p N [--model M] [--steps T] [--levels-min N]
+                  [--levels-max N] [--k1-grid 1,2,4] [--k2-max N]
+                  [--strategy ring|tree|naive] [--no-rack] [--no-local]
+                  [--validate-top N] [--collective simulated|sharded|pooled]
+                  [--top N] [--out SWEEP_<p>.json]
   hier-avg list                      # models in the artifact manifest
   hier-avg info   --model M          # manifest entry details
 
@@ -39,6 +44,16 @@ Execution: --collective pooled reduces over the persistent worker pool
 (no per-reduction thread spawn); --pool-threads sizes the pool shared by
 reductions and the native backend's lane fan-out (0 = all cores).
 
+Sweep: enumerates hierarchy shapes for P learners (level counts
+--levels-min..--levels-max, divisor fan-outs, optional rack-tier
+outermost level), scores each with the alpha-beta cost model composed
+over levels plus the Thm 3.4 convergence bound (K2 search capped by
+step-size condition (3.5)), ranks by modelled time-to-target, optionally
+replays the top --validate-top candidates through the engine (reporting
+modelled-vs-measured comm deltas), and writes SWEEP_<p>.json.
+--no-local restricts the space to the K-AVG baseline family (no local
+averaging); --no-rack drops the rack-tier variants.
+
 LR schedules: const:0.05 | step:0.1@150=0.01 | cosine:0.1->0.001@200 |
               warmcos:0.1->0.001@5/200
 ";
@@ -51,18 +66,142 @@ fn main() {
 }
 
 fn real_main() -> Result<()> {
-    let args = Args::from_env(&["record-steps", "help"])?;
+    let args = Args::from_env(&["record-steps", "help", "no-rack", "no-local"])?;
     if args.has("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
     }
+    // Sweep-only switches are registered globally (the parser needs the
+    // switch list up front); any other subcommand must reject them rather
+    // than silently run a different configuration than asked.
+    if args.positional[0] != "sweep" {
+        for s in ["no-rack", "no-local"] {
+            // saw_switch also catches the explicit-off form (--no-rack=0),
+            // which has() deliberately reports as false.
+            if args.saw_switch(s) {
+                bail!("--{s} only applies to the sweep subcommand");
+            }
+        }
+    }
     match args.positional[0].as_str() {
         "train" => cmd_train(&args),
         "repro" => repro::cmd_repro(&args),
+        "sweep" => cmd_sweep(&args),
         "list" => cmd_list(),
         "info" => cmd_info(&args),
         other => bail!("unknown subcommand {other:?}\n{USAGE}"),
     }
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use hier_avg::comm::{CollectiveKind, CostModel, ReduceStrategy};
+    use hier_avg::planner::{self, ScoreCtx, SweepSpace};
+
+    // A misspelled flag (or a value given to a switch, e.g. `--no-rack 0`,
+    // which parses as the switch plus a stray positional) would otherwise
+    // be consumed and ignored, sweeping a different space than asked with
+    // no warning.
+    args.check_known(&[
+        "p", "model", "steps", "strategy", "levels-min", "levels-max", "k2-max", "k1-grid",
+        "no-rack", "no-local", "top", "validate-top", "collective", "out",
+    ])?;
+    if args.positional.len() > 1 {
+        bail!(
+            "sweep takes no positional arguments (got {:?}); switches are --no-rack / --no-rack=0|1",
+            &args.positional[1..]
+        );
+    }
+    // USAGE documents --p as required: a silent default would sweep the
+    // wrong population without warning.
+    let p: usize = args
+        .require("p")?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("invalid --p: {e}"))?;
+    let model = args.get_or("model", "quickstart");
+    let steps: u64 = args.parse_or("steps", 20_000u64)?;
+    let strategy = ReduceStrategy::parse(args.get_or("strategy", "ring"))
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy (ring|tree|naive)"))?;
+
+    let mut space = SweepSpace::new(p)?;
+    space.min_levels = args.parse_or("levels-min", space.min_levels)?;
+    space.max_levels = args.parse_or("levels-max", space.max_levels)?;
+    space.k2_max = args.parse_or("k2-max", space.k2_max)?;
+    if let Some(grid) = args.get("k1-grid") {
+        space.k1_grid = grid
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<u64>()
+                    .map_err(|e| anyhow::anyhow!("invalid --k1-grid entry {x:?}: {e}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    // `--no-rack` and `--no-rack=0|1` both resolve through Args::parse's
+    // switch handling (an explicit false value stays off).
+    if args.has("no-rack") {
+        space.use_rack = false;
+    }
+    if args.has("no-local") {
+        space.local_averaging = false;
+    }
+
+    let ctx = ScoreCtx::for_model(model, p, steps, strategy, CostModel::default())?;
+    let ranked = planner::rank(&space, &ctx)?;
+    eprintln!(
+        "[sweep] p={p} model={model} horizon={steps} candidates={} k2_cap={} strategy={}",
+        ranked.len(),
+        space.k2_cap(&ctx.bound),
+        strategy.name()
+    );
+
+    let top: usize = args.parse_or("top", 20usize)?;
+    println!(
+        "{:<4} {:<28} {:>14} {:>12} {:>12} {:>12} {:>6}",
+        "rank", "candidate", "time_to_tgt_s", "comm_s", "comm_MB", "bound", "c3.5"
+    );
+    for (i, r) in ranked.iter().take(top).enumerate() {
+        println!(
+            "{:<4} {:<28} {:>14.4} {:>12.4} {:>12.2} {:>12.6} {:>6}",
+            i,
+            r.candidate.label(),
+            r.score.time_to_target,
+            r.score.comm_seconds,
+            r.score.comm_bytes as f64 / 1e6,
+            r.score.bound,
+            if r.score.condition_35 { "ok" } else { "viol" }
+        );
+    }
+
+    let validate_top: usize = args.parse_or("validate-top", 3usize)?;
+    let collective = match args.get("collective") {
+        Some(c) => CollectiveKind::parse(c)?,
+        None => CollectiveKind::Simulated,
+    };
+    let validations = planner::validate_top(&ranked, &ctx, model, validate_top, collective)?;
+    for v in &validations {
+        println!(
+            "validated {:<28} steps={:<5} comm_s modelled={:.6} measured={:.6} delta={:+.3e} train_loss={:.4}",
+            v.label,
+            v.total_steps,
+            v.modelled_comm_seconds,
+            v.measured_comm_seconds,
+            v.delta_seconds,
+            v.final_train_loss
+        );
+    }
+
+    let default_out = format!("SWEEP_{p}.json");
+    let out = args.get_or("out", &default_out);
+    planner::report::write_sweep(
+        std::path::Path::new(out),
+        &space,
+        &ctx,
+        model,
+        &ranked,
+        &validations,
+    )?;
+    eprintln!("wrote {out}");
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {

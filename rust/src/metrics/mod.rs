@@ -76,7 +76,11 @@ impl RunRecord {
         self.sim_compute_seconds + self.comm.total_seconds()
     }
 
-    pub fn to_json(&self) -> Json {
+    /// The single JSON builder behind [`RunRecord::to_json`] and
+    /// [`RunRecord::to_golden_json`] — any new field lands in both views
+    /// (object keys are BTreeMap-sorted, so conditional insertion order
+    /// never changes the output).
+    fn json_record(&self, include_wall: bool, include_trace: bool) -> Json {
         let mut epochs = Vec::new();
         for e in &self.epochs {
             let mut o = Json::obj();
@@ -85,8 +89,10 @@ impl RunRecord {
                 .set("train_acc", Json::from(e.train_acc))
                 .set("test_loss", Json::from(e.test_loss))
                 .set("test_acc", Json::from(e.test_acc))
-                .set("sim_seconds", Json::from(e.sim_seconds))
-                .set("wall_seconds", Json::from(e.wall_seconds));
+                .set("sim_seconds", Json::from(e.sim_seconds));
+            if include_wall {
+                o.set("wall_seconds", Json::from(e.wall_seconds));
+            }
             epochs.push(o);
         }
         let mut comm = Json::obj();
@@ -123,7 +129,33 @@ impl RunRecord {
                 "step_loss",
                 Json::Arr(self.step_loss.iter().map(|&l| Json::Num(l as f64)).collect()),
             );
+        if include_trace {
+            let mut trace = Vec::with_capacity(self.trace.len());
+            for t in &self.trace {
+                let mut e = Json::obj();
+                e.set("step", Json::from(t.step as usize))
+                    .set("kind", Json::from(t.kind.to_string()))
+                    .set("seconds", Json::from(t.seconds));
+                trace.push(e);
+            }
+            o.set("trace", Json::Arr(trace));
+        }
         o
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.json_record(true, false)
+    }
+
+    /// The deterministic view of [`RunRecord::to_json`] used by the
+    /// golden-trace regression suite (rust/tests/golden_trace.rs): drops
+    /// the wall-clock fields (the only nondeterministic ones) and appends
+    /// the reduction-event trace, so two bit-identical runs serialize to
+    /// byte-identical JSON on any host.  Callers must ensure no epoch
+    /// skipped its eval (`eval_every = 1`): NaN placeholders are not
+    /// representable in JSON.
+    pub fn to_golden_json(&self) -> Json {
+        self.json_record(false, true)
     }
 
     pub fn write_json(&self, path: &Path) -> Result<()> {
@@ -240,6 +272,26 @@ mod tests {
         let parsed = Json::parse(&j.pretty()).unwrap();
         assert_eq!(parsed.req("label").unwrap().as_str().unwrap(), "x");
         assert_eq!(parsed.req("epochs").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn golden_json_drops_wall_clock_and_keeps_trace() {
+        let mut r = record("g", 2);
+        r.epochs[0].wall_seconds = 123.0;
+        r.trace.push(TraceEvent { step: 4, kind: 'L', seconds: 0.5 });
+        r.trace.push(TraceEvent { step: 8, kind: 'G', seconds: 1.5 });
+        let j = r.to_golden_json();
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        let epochs = parsed.req("epochs").unwrap().as_arr().unwrap();
+        assert!(epochs[0].get("wall_seconds").is_none());
+        let trace = parsed.req("trace").unwrap().as_arr().unwrap();
+        assert_eq!(trace.len(), 2);
+        assert_eq!(trace[1].req("kind").unwrap().as_str().unwrap(), "G");
+        assert_eq!(trace[1].req("step").unwrap().as_usize().unwrap(), 8);
+        // Differing wall clocks serialize identically.
+        let mut r2 = r.clone();
+        r2.epochs[0].wall_seconds = 456.0;
+        assert_eq!(r.to_golden_json().pretty(), r2.to_golden_json().pretty());
     }
 
     #[test]

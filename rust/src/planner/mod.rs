@@ -1,0 +1,813 @@
+//! The sweep planner: searches hierarchy *shapes* instead of running one.
+//!
+//! The paper's central claim is that the hierarchy shape — level count,
+//! fan-outs, and the per-level averaging intervals (K1, K2, S) — trades
+//! communication for convergence.  This module is the decision procedure
+//! that connects the three subsystems the claim spans:
+//!
+//! - **topology / comm::cost** — [`enumerate`] walks candidate
+//!   [`HierTopology`] shapes (divisor chains over P, per-level
+//!   [`LinkClass`] assignments) and [`score`] composes
+//!   `CostModel::allreduce_seconds`/`allreduce_bytes` over levels with the
+//!   exact per-level event counts of [`HierSchedule::reduction_counts`],
+//!   reproducing the engine's accounting conventions (concurrent groups at
+//!   one level are charged the max, i.e. one group's time; size-1 levels
+//!   below the top are free no-ops);
+//! - **theory** — each candidate's `(K1, K2, S)` projection is scored with
+//!   [`theory::thm34_budget_bound`], schedules include the
+//!   [`theory::optimal_k2`] point, and the K2 search is capped at
+//!   [`theory::max_k2_condition_35`] so the bound stays a guarantee
+//!   (property-tested invariants in rust/tests/proptests.rs);
+//! - **coordinator/engine** — [`validate`] replays the top candidates as
+//!   short deterministic training runs and reports modelled-vs-measured
+//!   communication deltas (near-zero by construction: the closed form and
+//!   the engine share the cost model — a drift here is a regression).
+//!
+//! Ranking: `time_to_target = (compute_s + comm_s) · bound / bound_floor`
+//! — modelled wall seconds for the step horizon, inflated by how much
+//! looser the candidate's fixed-budget convergence bound is than the best
+//! bound in the search space.  Deterministic: no RNG, stable tie-breaks.
+//!
+//! The `sweep` CLI subcommand (main.rs) drives this end to end and emits a
+//! machine-readable `SWEEP_<p>.json` report (see [`report`]); the
+//! golden-trace suite (rust/tests/golden_trace.rs) pins the validation
+//! runs bit-for-bit across collectives.
+
+pub mod report;
+
+use anyhow::{bail, Result};
+
+use crate::algorithms::HierSchedule;
+use crate::comm::{CollectiveKind, CostModel, ReduceStrategy};
+use crate::config::{BackendKind, RunConfig};
+use crate::coordinator::{self, Trainer};
+use crate::data::ClassifyData;
+use crate::driver;
+use crate::metrics::RunRecord;
+use crate::native::NativeMlp;
+use crate::optimizer::LrSchedule;
+use crate::theory::{self, BoundParams};
+use crate::topology::{HierTopology, LinkClass};
+use crate::util::rng::Pcg32;
+
+/// Search-space description for one sweep over a fixed learner count P.
+#[derive(Debug, Clone)]
+pub struct SweepSpace {
+    pub p: usize,
+    /// Smallest / largest hierarchy depth enumerated (inclusive).
+    pub min_levels: usize,
+    pub max_levels: usize,
+    /// Innermost-interval grid; inner chains grow geometrically (ratio 2)
+    /// from each entry.
+    pub k1_grid: Vec<u64>,
+    /// Upper cap on the outermost interval before the condition-(3.5)
+    /// clamp is applied.
+    pub k2_max: u64,
+    /// Also enumerate, for every shape with ≥ 3 levels, a variant whose
+    /// outermost level is charged to the cross-rack fabric tier.
+    pub use_rack: bool,
+    /// When false the space collapses to the K-AVG family: the single
+    /// shape `[1, P]` (every learner its own cluster) under flat
+    /// single-interval schedules — the paper's baseline, and the shape the
+    /// planner must degenerate to when local averaging is disabled.
+    pub local_averaging: bool,
+}
+
+impl SweepSpace {
+    pub fn new(p: usize) -> Result<SweepSpace> {
+        if p < 2 {
+            bail!("sweep needs p >= 2 learners (got {p})");
+        }
+        Ok(SweepSpace {
+            p,
+            min_levels: 2,
+            max_levels: 4,
+            k1_grid: vec![1, 2, 4],
+            k2_max: 256,
+            use_rack: true,
+            local_averaging: true,
+        })
+    }
+
+    /// Reject contradictory knob combinations instead of silently
+    /// reinterpreting them ([`rank`] calls this before enumerating).
+    pub fn validate(&self) -> Result<()> {
+        if self.p < 2 {
+            bail!("sweep needs p >= 2 learners (got {})", self.p);
+        }
+        if self.min_levels < 2 {
+            bail!("levels-min must be >= 2 (got {})", self.min_levels);
+        }
+        if self.min_levels > self.max_levels {
+            bail!(
+                "levels-min {} exceeds levels-max {}",
+                self.min_levels,
+                self.max_levels
+            );
+        }
+        if self.k1_grid.is_empty() || self.k1_grid.iter().any(|&k| k == 0) {
+            bail!("k1-grid must be non-empty with entries >= 1 (got {:?})", self.k1_grid);
+        }
+        if self.k2_max == 0 {
+            bail!("k2-max must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// The condition-(3.5) clamp on this space's K2 search: theorems
+    /// 3.2/3.3 only hold below it, so neither `optimal_k2` nor the ranked
+    /// schedules look past it.
+    pub fn k2_cap(&self, bound: &BoundParams) -> u64 {
+        theory::max_k2_condition_35(bound, self.k2_max).unwrap_or(1)
+    }
+}
+
+/// What a sweep scores against: the cost model, the convergence-bound
+/// regime, and the modelled workload (message size, horizon, step clock).
+#[derive(Debug, Clone, Copy)]
+pub struct ScoreCtx {
+    pub cost: CostModel,
+    pub strategy: ReduceStrategy,
+    /// Bound regime with `p`/`b` matching the swept platform and model.
+    pub bound: BoundParams,
+    /// Parameters per learner; one reduction moves `4 * n_params` bytes.
+    pub n_params: usize,
+    /// Step horizon T the closed-form costs and bounds are evaluated over.
+    pub horizon: u64,
+    /// Modelled compute seconds per synchronous step
+    /// ([`coordinator::sim_step_seconds`]).
+    pub step_seconds: f64,
+}
+
+impl ScoreCtx {
+    /// A context for one of the native model registry entries (the same
+    /// registry the validation runs execute), default cost model and
+    /// bound regime.
+    pub fn for_model(
+        model: &str,
+        p: usize,
+        horizon: u64,
+        strategy: ReduceStrategy,
+        cost: CostModel,
+    ) -> Result<ScoreCtx> {
+        let Some((dims, batch, eval_batch)) = driver::model_dims(model) else {
+            bail!(
+                "model {model:?} is not in the native registry (sweep validates natively; have {:?})",
+                driver::MODEL_DIMS.iter().map(|m| m.0).collect::<Vec<_>>()
+            );
+        };
+        if horizon == 0 {
+            bail!("sweep horizon must be >= 1 step");
+        }
+        // The backend's layout is the single source of truth for the
+        // parameter count (and hence bytes per reduction) — the same
+        // backend the validation runs execute.
+        let n_params = NativeMlp::new(dims, batch, eval_batch)?.layout().total;
+        let mut bound = BoundParams::default();
+        bound.p = p as f64;
+        bound.b = batch as f64;
+        bound.validate()?;
+        Ok(ScoreCtx {
+            cost,
+            strategy,
+            bound,
+            n_params,
+            horizon,
+            step_seconds: coordinator::sim_step_seconds(batch, n_params),
+        })
+    }
+}
+
+/// One point of the search space: a topology shape plus its schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Candidate {
+    /// Group-size chain, innermost first, last = P.
+    pub levels: Vec<usize>,
+    /// Per-level link class, parallel to `levels`.
+    pub links: Vec<LinkClass>,
+    /// Per-level averaging intervals, parallel to `levels`.
+    pub ks: Vec<u64>,
+}
+
+impl Candidate {
+    /// A candidate under the topology's default link assignment
+    /// (innermost intra-node, outer levels inter-node).
+    pub fn with_default_links(levels: Vec<usize>, ks: Vec<u64>) -> Result<Candidate> {
+        let topo = HierTopology::new(levels.clone())?;
+        let links = (0..topo.n_levels()).map(|l| topo.link(l)).collect();
+        Ok(Candidate { levels, links, ks })
+    }
+
+    /// Stable identifier: `h<sizes>-k<intervals>[-rack]`.
+    pub fn label(&self) -> String {
+        let sizes: Vec<String> = self.levels.iter().map(|s| s.to_string()).collect();
+        let ks: Vec<String> = self.ks.iter().map(|k| k.to_string()).collect();
+        let mut s = format!("h{}-k{}", sizes.join("x"), ks.join("_"));
+        if self.links.last() == Some(&LinkClass::RackFabric) {
+            s.push_str("-rack");
+        }
+        s
+    }
+
+    pub fn topology(&self) -> Result<HierTopology> {
+        HierTopology::with_links(self.levels.clone(), self.links.clone())
+    }
+
+    pub fn schedule(&self) -> Result<HierSchedule> {
+        HierSchedule::new(self.ks.clone())
+    }
+
+    /// The paper's two-level projection used by the theory layer.
+    pub fn k1k2s(&self) -> (u64, u64, u64) {
+        (self.ks[0], *self.ks.last().unwrap(), self.levels[0] as u64)
+    }
+
+    /// A native-backend run configuration for this shape (epochs / data
+    /// sizes left at defaults; see [`validation_config`]).
+    pub fn to_config(&self, model: &str) -> RunConfig {
+        let mut cfg = RunConfig::defaults(model);
+        cfg.backend = BackendKind::Native;
+        cfg.set_levels(self.levels.clone());
+        cfg.set_ks(self.ks.clone());
+        cfg.links = self.links.clone();
+        cfg
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Enumeration
+// ---------------------------------------------------------------------------
+
+/// All divisor chains `d_1 < d_2 < … < P` of the given length whose
+/// entries each divide the next.  Chains of length ≥ 3 require `d_1 ≥ 2`:
+/// a size-1 inner tier is a no-op duplicating the (L−1)-level shape.
+fn divisor_chains(p: usize, len: usize) -> Vec<Vec<usize>> {
+    let divisors: Vec<usize> = (1..p).filter(|d| p % d == 0).collect();
+    let mut out = Vec::new();
+    let mut chain = Vec::with_capacity(len);
+    fn rec(
+        divisors: &[usize],
+        p: usize,
+        len: usize,
+        min: usize,
+        chain: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+    ) {
+        if chain.len() == len - 1 {
+            let mut full = chain.clone();
+            full.push(p);
+            out.push(full);
+            return;
+        }
+        for &d in divisors {
+            if d < min {
+                continue;
+            }
+            if let Some(&prev) = chain.last() {
+                if d % prev != 0 {
+                    continue;
+                }
+            }
+            chain.push(d);
+            rec(divisors, p, len, d + 1, chain, out);
+            chain.pop();
+        }
+    }
+    let min = if len >= 3 { 2 } else { 1 };
+    rec(&divisors, p, len, min, &mut chain, &mut out);
+    out
+}
+
+/// Per-shape schedule candidates: for each base K1, a geometric (ratio-2)
+/// inner chain, with the outermost interval drawn from {2×, 4×} the last
+/// inner interval plus the theory's [`theory::optimal_k2`] point under the
+/// condition-(3.5) cap.  With `local_averaging` off, flat single-interval
+/// schedules (pure K-AVG).
+fn schedules_for(levels: &[usize], space: &SweepSpace, ctx: &ScoreCtx) -> Vec<Vec<u64>> {
+    let l = levels.len();
+    let s = (levels[0] as u64).max(1);
+    let cap = space.k2_cap(&ctx.bound);
+    if !space.local_averaging || (l == 2 && levels[0] <= 1) {
+        // The K-AVG family: either the whole space is restricted to it
+        // (`--no-local`), or this shape's inner tier is a size-1 no-op —
+        // any inner interval is then score- and training-equivalent (the
+        // S = 1 deviation term Φ is independent of K1), so enumerating
+        // one flat representative per outer interval avoids padding the
+        // ranking with duplicate-score candidates under distinct labels.
+        let mut k2s = space.k1_grid.clone();
+        for &k1 in &space.k1_grid {
+            if k1 == 0 {
+                continue;
+            }
+            k2s.extend([2 * k1, 4 * k1]);
+        }
+        k2s.push(theory::optimal_k2(&ctx.bound, ctx.horizon, 1, s, cap.max(1)));
+        // `k2_max` caps the outermost interval, fixed continuations
+        // included — never enumerate past what the user asked for.
+        k2s.retain(|&k| k >= 1 && k <= space.k2_max);
+        k2s.sort_unstable();
+        k2s.dedup();
+        return k2s.into_iter().map(|k| vec![k; l]).collect();
+    }
+    let mut out: Vec<Vec<u64>> = Vec::new();
+    for &k1 in &space.k1_grid {
+        if k1 == 0 {
+            continue;
+        }
+        let inner: Vec<u64> = (0..l - 1).map(|i| k1 << i).collect();
+        let last_inner = *inner.last().unwrap_or(&k1);
+        let opt =
+            theory::optimal_k2(&ctx.bound, ctx.horizon, last_inner, s, cap.max(last_inner));
+        let mut outers = vec![2 * last_inner, 4 * last_inner, opt.max(last_inner)];
+        // Honor the user's K2 cap on the fixed {2x, 4x} continuations too
+        // (a chain whose last inner interval already exceeds the cap
+        // yields no schedule — correctly, since any valid outer would
+        // break it).
+        outers.retain(|&o| o <= space.k2_max);
+        outers.sort_unstable();
+        outers.dedup();
+        for o in outers {
+            let mut ks = inner.clone();
+            ks.push(o);
+            out.push(ks);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Enumerate every candidate of the space: shapes × link assignments ×
+/// schedules.  Deterministic order (no RNG anywhere in the planner);
+/// expects a [`SweepSpace::validate`]d space (a contradictory range just
+/// yields no candidates here — [`rank`] rejects it with a real error).
+pub fn enumerate(space: &SweepSpace, ctx: &ScoreCtx) -> Vec<Candidate> {
+    let mut shapes: Vec<Vec<usize>> = Vec::new();
+    if space.local_averaging {
+        for len in space.min_levels..=space.max_levels {
+            shapes.extend(divisor_chains(space.p, len));
+        }
+    } else {
+        shapes.push(vec![1, space.p]);
+    }
+    let mut out = Vec::new();
+    for shape in shapes {
+        for ks in schedules_for(&shape, space, ctx) {
+            let Ok(cand) = Candidate::with_default_links(shape.clone(), ks.clone()) else {
+                continue;
+            };
+            if space.use_rack && shape.len() >= 3 {
+                let mut rack = cand.clone();
+                *rack.links.last_mut().unwrap() = LinkClass::RackFabric;
+                out.push(rack);
+            }
+            out.push(cand);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Scoring
+// ---------------------------------------------------------------------------
+
+/// Per-level slice of a candidate's modelled communication cost over the
+/// horizon, mirroring the engine's [`crate::comm::LevelStats`] accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LevelCost {
+    pub level: usize,
+    pub size: usize,
+    pub link: LinkClass,
+    /// Schedule events at this level over the horizon.
+    pub events: u64,
+    /// Group reductions fired (events × groups; 0 for size-1 levels below
+    /// the top, which the engine skips as no-ops).
+    pub reductions: u64,
+    pub bytes: u64,
+    pub seconds: f64,
+}
+
+/// A candidate's modelled cost + convergence figures.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Score {
+    /// Modelled communication seconds over the horizon (per-level events ×
+    /// one symmetric group's allreduce — the engine's concurrent-groups
+    /// convention).
+    pub comm_seconds: f64,
+    /// Total bytes crossing the network over the horizon.
+    pub comm_bytes: u64,
+    /// Modelled compute seconds over the horizon.
+    pub compute_seconds: f64,
+    /// Fixed-budget convergence bound B(K1, K2, S) of Theorem 3.4.
+    pub bound: f64,
+    /// Whether the candidate's K2 satisfies step-size condition (3.5).
+    pub condition_35: bool,
+    /// `(compute + comm) × bound / bound_floor`; filled by [`rank`]
+    /// (NaN straight out of [`score`]).
+    pub time_to_target: f64,
+    pub levels: Vec<LevelCost>,
+}
+
+/// Closed-form cost + bound for one candidate over `ctx.horizon` steps.
+pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
+    let topo = cand.topology()?;
+    let sched = cand.schedule()?;
+    if topo.n_levels() != sched.n_levels() {
+        bail!(
+            "candidate {} has {} intervals for {} levels",
+            cand.label(),
+            sched.n_levels(),
+            topo.n_levels()
+        );
+    }
+    let counts = sched.reduction_counts(ctx.horizon);
+    let msg = ctx.n_params * 4;
+    let mut levels = Vec::with_capacity(topo.n_levels());
+    let mut comm_seconds = 0.0f64;
+    let mut comm_bytes = 0u64;
+    for l in 0..topo.n_levels() {
+        let size = topo.size(l);
+        let link = topo.link(l);
+        let events = counts[l];
+        // The engine's reduce_level conventions: size-1 levels below the
+        // top are no-ops; otherwise every group counts its event and
+        // bytes, but symmetric groups run concurrently so the level is
+        // charged one group's seconds per event.
+        let (sec_per_event, bytes_per_group, groups) =
+            if size <= 1 && l + 1 < topo.n_levels() {
+                (0.0, 0u64, 0u64)
+            } else {
+                (
+                    ctx.cost.allreduce_seconds(size, msg, link, ctx.strategy),
+                    ctx.cost.allreduce_bytes(size, msg, ctx.strategy),
+                    topo.n_groups(l) as u64,
+                )
+            };
+        let seconds = events as f64 * sec_per_event;
+        let bytes = events * groups * bytes_per_group;
+        comm_seconds += seconds;
+        comm_bytes += bytes;
+        levels.push(LevelCost {
+            level: l,
+            size,
+            link,
+            events,
+            reductions: events * groups,
+            bytes,
+            seconds,
+        });
+    }
+    let (k1, k2, s) = cand.k1k2s();
+    let bound = theory::thm34_budget_bound(&ctx.bound, ctx.horizon, k1, k2, s.max(1));
+    Ok(Score {
+        comm_seconds,
+        comm_bytes,
+        compute_seconds: ctx.horizon as f64 * ctx.step_seconds,
+        bound,
+        condition_35: ctx.bound.condition_35(k2),
+        time_to_target: f64::NAN,
+        levels,
+    })
+}
+
+/// A scored candidate in the ranking.
+#[derive(Debug, Clone)]
+pub struct Ranked {
+    pub candidate: Candidate,
+    pub score: Score,
+}
+
+/// Enumerate, score, and rank the space by modelled time-to-target
+/// (ascending = better).  Ties break on communication seconds, then on
+/// the candidate label, so the order is fully deterministic.
+pub fn rank(space: &SweepSpace, ctx: &ScoreCtx) -> Result<Vec<Ranked>> {
+    space.validate()?;
+    let cands = enumerate(space, ctx);
+    if cands.is_empty() {
+        bail!("empty search space for p={}", space.p);
+    }
+    let mut ranked = cands
+        .into_iter()
+        .map(|candidate| {
+            let score = score(&candidate, ctx)?;
+            Ok(Ranked { candidate, score })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let floor = ranked.iter().map(|r| r.score.bound).fold(f64::INFINITY, f64::min);
+    for r in &mut ranked {
+        r.score.time_to_target =
+            (r.score.compute_seconds + r.score.comm_seconds) * (r.score.bound / floor);
+    }
+    ranked.sort_by(|a, b| {
+        a.score
+            .time_to_target
+            .partial_cmp(&b.score.time_to_target)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| {
+                a.score
+                    .comm_seconds
+                    .partial_cmp(&b.score.comm_seconds)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then_with(|| a.candidate.label().cmp(&b.candidate.label()))
+    });
+    Ok(ranked)
+}
+
+// ---------------------------------------------------------------------------
+// Validation: replay the top candidates through the real engine
+// ---------------------------------------------------------------------------
+
+/// Steps per epoch of a validation run (short but long enough for inner
+/// tiers to fire many times; outer intervals past `2 × VALIDATION_EPOCHS ×
+/// this` simply record zero events, consistently on both sides of the
+/// comparison).
+const VALIDATION_SPE: usize = 24;
+const VALIDATION_EPOCHS: usize = 2;
+
+/// The short deterministic run a candidate is validated with: native
+/// backend, fixed seed, constant LR, trace recording on.  This is also the
+/// scenario generator the golden-trace suite feeds on
+/// (rust/tests/golden_trace.rs).
+pub fn validation_config(
+    cand: &Candidate,
+    model: &str,
+    collective: CollectiveKind,
+) -> Result<RunConfig> {
+    let Some((_, batch, eval_batch)) = driver::model_dims(model) else {
+        bail!("model {model:?} is not in the native registry");
+    };
+    let mut cfg = cand.to_config(model);
+    cfg.collective = collective;
+    cfg.epochs = VALIDATION_EPOCHS;
+    cfg.train_n = VALIDATION_SPE * cfg.p * batch;
+    cfg.test_n = eval_batch;
+    cfg.lr = LrSchedule::Constant(0.05);
+    cfg.record_trace = true;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Run a validation config end to end with an explicitly seeded
+/// initialization, bypassing the artifact manifest: validation runs are
+/// calibration probes and must be bit-reproducible on any checkout,
+/// whether or not `make artifacts` has been run.
+pub fn validation_record(cfg: &RunConfig) -> Result<RunRecord> {
+    let Some((dims, batch, eval_batch)) = driver::model_dims(&cfg.model) else {
+        bail!("model {:?} is not in the native registry", cfg.model);
+    };
+    let backend = NativeMlp::new(dims, batch, eval_batch)?;
+    // Same data wiring as driver::build (shared spec builder); only the
+    // init path differs — explicitly seeded instead of the artifact blob.
+    let data = ClassifyData::generate(driver::mixture_spec(cfg, dims));
+    let init = backend.init(&mut Pcg32::seeded(cfg.seed));
+    Trainer::new(cfg, Box::new(backend), Box::new(data), init)?.run()
+}
+
+/// Modelled-vs-measured comparison for one candidate.
+#[derive(Debug, Clone)]
+pub struct Validation {
+    pub label: String,
+    pub total_steps: u64,
+    /// Closed-form communication seconds at the run's actual step count.
+    pub modelled_comm_seconds: f64,
+    /// The engine's accounted communication seconds for the same run.
+    pub measured_comm_seconds: f64,
+    /// measured − modelled (near-zero by construction; drift = regression).
+    pub delta_seconds: f64,
+    pub modelled_level_seconds: Vec<f64>,
+    pub measured_level_seconds: Vec<f64>,
+    pub modelled_comm_bytes: u64,
+    pub measured_comm_bytes: u64,
+    pub final_train_loss: f64,
+    pub final_test_acc: f64,
+}
+
+/// Validate one candidate: run it, then re-score at the measured horizon
+/// so the closed form and the engine are compared like for like.  `ctx`
+/// must have been built for the same `model` (same n_params).
+pub fn validate(
+    cand: &Candidate,
+    ctx: &ScoreCtx,
+    model: &str,
+    collective: CollectiveKind,
+) -> Result<Validation> {
+    let mut cfg = validation_config(cand, model, collective)?;
+    // The run must charge reductions with the same strategy and α–β
+    // parameters the closed form scores with, or the modelled-vs-measured
+    // delta would be spurious for non-default `--strategy`/cost settings.
+    cfg.strategy = ctx.strategy;
+    cfg.cost = ctx.cost;
+    let rec = validation_record(&cfg)?;
+    let vctx = ScoreCtx { horizon: rec.total_steps.max(1), ..*ctx };
+    let vscore = score(cand, &vctx)?;
+    let measured_comm_seconds = rec.comm.total_seconds();
+    let measured_comm_bytes =
+        rec.comm.local_bytes + rec.comm.global_bytes + rec.comm.rack_bytes;
+    Ok(Validation {
+        label: cand.label(),
+        total_steps: rec.total_steps,
+        modelled_comm_seconds: vscore.comm_seconds,
+        measured_comm_seconds,
+        delta_seconds: measured_comm_seconds - vscore.comm_seconds,
+        modelled_level_seconds: vscore.levels.iter().map(|l| l.seconds).collect(),
+        measured_level_seconds: rec.comm_levels.iter().map(|l| l.seconds).collect(),
+        modelled_comm_bytes: vscore.comm_bytes,
+        measured_comm_bytes,
+        final_train_loss: rec.final_train_loss(),
+        final_test_acc: rec.final_test_acc(),
+    })
+}
+
+/// Validate the first `n` entries of a ranking.
+pub fn validate_top(
+    ranked: &[Ranked],
+    ctx: &ScoreCtx,
+    model: &str,
+    n: usize,
+    collective: CollectiveKind,
+) -> Result<Vec<Validation>> {
+    ranked
+        .iter()
+        .take(n)
+        .map(|r| validate(&r.candidate, ctx, model, collective))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx16() -> ScoreCtx {
+        ScoreCtx::for_model("quickstart", 16, 20_000, ReduceStrategy::Ring, CostModel::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn divisor_chains_are_valid() {
+        for len in 2..=4 {
+            for chain in divisor_chains(16, len) {
+                assert_eq!(chain.len(), len);
+                assert_eq!(*chain.last().unwrap(), 16);
+                for w in chain.windows(2) {
+                    assert!(w[0] < w[1] && w[1] % w[0] == 0, "{chain:?}");
+                }
+                if len >= 3 {
+                    assert!(chain[0] >= 2, "{chain:?}");
+                }
+            }
+        }
+        assert_eq!(divisor_chains(16, 2).len(), 4); // s in {1,2,4,8}
+        assert_eq!(divisor_chains(16, 3).len(), 3); // (2,4) (2,8) (4,8)
+        assert_eq!(divisor_chains(16, 4).len(), 1); // (2,4,8)
+    }
+
+    #[test]
+    fn enumeration_is_deterministic_and_valid() {
+        let space = SweepSpace::new(16).unwrap();
+        let ctx = ctx16();
+        let a = enumerate(&space, &ctx);
+        let b = enumerate(&space, &ctx);
+        assert_eq!(a, b);
+        assert!(a.len() >= 20, "only {} candidates", a.len());
+        for c in &a {
+            c.topology().unwrap();
+            c.schedule().unwrap();
+            assert_eq!(*c.levels.last().unwrap(), 16);
+            assert_eq!(c.levels.len(), c.ks.len());
+            assert_eq!(c.levels.len(), c.links.len());
+        }
+    }
+
+    #[test]
+    fn rack_variants_present_only_for_deep_shapes() {
+        let space = SweepSpace::new(16).unwrap();
+        let ctx = ctx16();
+        for c in enumerate(&space, &ctx) {
+            let has_rack = c.links.contains(&LinkClass::RackFabric);
+            if c.levels.len() < 3 {
+                assert!(!has_rack, "{}", c.label());
+            }
+            if has_rack {
+                assert_eq!(*c.links.last().unwrap(), LinkClass::RackFabric);
+            }
+        }
+        let mut no_rack = space.clone();
+        no_rack.use_rack = false;
+        for c in enumerate(&no_rack, &ctx) {
+            assert!(!c.links.contains(&LinkClass::RackFabric));
+        }
+    }
+
+    #[test]
+    fn score_matches_hand_computation_two_level() {
+        // [4, 16], ks [2, 8] over 64 steps: 24 inner events (t%2 & !%8),
+        // 8 outer events.
+        let ctx = ScoreCtx { horizon: 64, ..ctx16() };
+        let cand = Candidate::with_default_links(vec![4, 16], vec![2, 8]).unwrap();
+        let s = score(&cand, &ctx).unwrap();
+        let msg = ctx.n_params * 4;
+        let inner =
+            ctx.cost.allreduce_seconds(4, msg, LinkClass::IntraNode, ctx.strategy);
+        let outer =
+            ctx.cost.allreduce_seconds(16, msg, LinkClass::InterNode, ctx.strategy);
+        assert_eq!(s.levels[0].events, 24);
+        assert_eq!(s.levels[1].events, 8);
+        assert_eq!(s.levels[0].reductions, 24 * 4);
+        assert_eq!(s.levels[1].reductions, 8);
+        assert!((s.comm_seconds - (24.0 * inner + 8.0 * outer)).abs() < 1e-12);
+        assert!(s.bound.is_finite() && s.bound > 0.0);
+    }
+
+    #[test]
+    fn size_one_inner_level_is_free() {
+        let ctx = ScoreCtx { horizon: 64, ..ctx16() };
+        let cand = Candidate::with_default_links(vec![1, 16], vec![4, 4]).unwrap();
+        let s = score(&cand, &ctx).unwrap();
+        assert_eq!(s.levels[0].seconds, 0.0);
+        assert_eq!(s.levels[0].reductions, 0);
+        assert_eq!(s.levels[0].events, 0); // flat schedule: outer subsumes
+        assert_eq!(s.levels[1].events, 16);
+    }
+
+    #[test]
+    fn rank_is_sorted_and_finite() {
+        let space = SweepSpace::new(16).unwrap();
+        let ranked = rank(&space, &ctx16()).unwrap();
+        assert!(ranked.len() >= 20);
+        for w in ranked.windows(2) {
+            assert!(w[0].score.time_to_target <= w[1].score.time_to_target);
+        }
+        for r in &ranked {
+            assert!(r.score.time_to_target.is_finite() && r.score.time_to_target > 0.0);
+            assert!(r.score.bound.is_finite() && r.score.bound > 0.0);
+        }
+    }
+
+    #[test]
+    fn no_local_space_is_kavg_family() {
+        let mut space = SweepSpace::new(16).unwrap();
+        space.local_averaging = false;
+        let ranked = rank(&space, &ctx16()).unwrap();
+        assert!(!ranked.is_empty());
+        for r in &ranked {
+            assert_eq!(r.candidate.levels, vec![1, 16]);
+            let (k1, k2, s) = r.candidate.k1k2s();
+            assert_eq!(k1, k2, "flat schedule expected: {}", r.candidate.label());
+            assert_eq!(s, 1);
+        }
+    }
+
+    #[test]
+    fn optimal_k2_schedules_respect_condition_cap() {
+        let space = SweepSpace::new(16).unwrap();
+        let ctx = ctx16();
+        let cap = space.k2_cap(&ctx.bound);
+        // Every enumerated K2 beyond the fixed {2x, 4x} continuations must
+        // come from optimal_k2, hence sit within the cap.
+        for c in enumerate(&space, &ctx) {
+            let (_, k2, _) = c.k1k2s();
+            let last_inner = c.ks[c.ks.len() - 2];
+            if k2 != 2 * last_inner && k2 != 4 * last_inner {
+                assert!(k2 <= cap.max(last_inner), "{} k2={k2} cap={cap}", c.label());
+            }
+        }
+    }
+
+    #[test]
+    fn k2_max_caps_every_enumerated_outer_interval() {
+        let mut space = SweepSpace::new(16).unwrap();
+        space.k2_max = 8;
+        let ranked = rank(&space, &ctx16()).unwrap();
+        assert!(!ranked.is_empty());
+        for r in &ranked {
+            let (_, k2, _) = r.candidate.k1k2s();
+            assert!(k2 <= 8, "{} exceeds --k2-max", r.candidate.label());
+        }
+    }
+
+    #[test]
+    fn contradictory_space_is_rejected() {
+        let ctx = ctx16();
+        let mut space = SweepSpace::new(16).unwrap();
+        space.min_levels = 4;
+        space.max_levels = 3;
+        assert!(rank(&space, &ctx).is_err());
+        let mut space = SweepSpace::new(16).unwrap();
+        space.k1_grid = vec![];
+        assert!(rank(&space, &ctx).is_err());
+        let mut space = SweepSpace::new(16).unwrap();
+        space.k1_grid = vec![0, 2];
+        assert!(rank(&space, &ctx).is_err());
+    }
+
+    #[test]
+    fn validation_config_is_well_formed() {
+        let cand = Candidate::with_default_links(vec![2, 4, 8], vec![2, 4, 8]).unwrap();
+        let cfg = validation_config(&cand, "quickstart", CollectiveKind::Simulated).unwrap();
+        assert_eq!(cfg.p, 8);
+        assert_eq!(cfg.epochs, VALIDATION_EPOCHS);
+        assert!(cfg.record_trace);
+        cfg.validate().unwrap();
+    }
+}

@@ -1,0 +1,194 @@
+//! Machine-readable sweep reports: `SWEEP_<p>.json`.
+//!
+//! Schema (documented in DESIGN.md §Planner; stable keys, additive
+//! evolution only — CI uploads these files as artifacts and downstream
+//! tooling diffs them across PRs):
+//!
+//! ```json
+//! {
+//!   "p": 16, "model": "quickstart", "horizon_steps": 20000,
+//!   "n_params": 2762, "bytes_per_reduction": 11048, "strategy": "ring",
+//!   "space": {"min_levels": 2, "max_levels": 4, "k1_grid": [1,2,4],
+//!             "k2_max": 256, "use_rack": true, "local_averaging": true},
+//!   "k2_cap_condition_35": 199,
+//!   "candidates": [
+//!     {"rank": 0, "label": "h4x16-k2_8", "levels": [4,16], "ks": [2,8],
+//!      "links": ["intra","inter"], "k1": 2, "k2": 8, "s": 4,
+//!      "score": {"time_to_target": 1.2, "comm_seconds": 0.3,
+//!                "comm_bytes": 123, "compute_seconds": 0.9,
+//!                "bound": 0.01, "condition_35": true},
+//!      "cost_levels": [{"level": 0, "size": 4, "link": "intra",
+//!                       "events": 1, "reductions": 4, "bytes": 1,
+//!                       "seconds": 0.1}],
+//!      "validation": {"total_steps": 48, "modelled_comm_seconds": 0.1,
+//!                     "measured_comm_seconds": 0.1, "delta_seconds": 0.0,
+//!                     "modelled_comm_bytes": 1, "measured_comm_bytes": 1,
+//!                     "modelled_level_seconds": [..],
+//!                     "measured_level_seconds": [..],
+//!                     "final_train_loss": 1.0, "final_test_acc": 0.5}}
+//!   ]
+//! }
+//! ```
+//!
+//! `validation` is present only on the entries that were replayed through
+//! the engine (`sweep --validate-top N`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::planner::{Ranked, ScoreCtx, SweepSpace, Validation};
+use crate::util::json::Json;
+
+fn validation_json(v: &Validation) -> Json {
+    let mut o = Json::obj();
+    o.set("total_steps", Json::from(v.total_steps as usize))
+        .set("modelled_comm_seconds", Json::from(v.modelled_comm_seconds))
+        .set("measured_comm_seconds", Json::from(v.measured_comm_seconds))
+        .set("delta_seconds", Json::from(v.delta_seconds))
+        .set("modelled_comm_bytes", Json::from(v.modelled_comm_bytes as usize))
+        .set("measured_comm_bytes", Json::from(v.measured_comm_bytes as usize))
+        .set("modelled_level_seconds", Json::from_f64_slice(&v.modelled_level_seconds))
+        .set("measured_level_seconds", Json::from_f64_slice(&v.measured_level_seconds))
+        .set("final_train_loss", Json::from(v.final_train_loss))
+        .set("final_test_acc", Json::from(v.final_test_acc));
+    o
+}
+
+fn candidate_json(rank: usize, r: &Ranked, validation: Option<&Validation>) -> Json {
+    let c = &r.candidate;
+    let s = &r.score;
+    let (k1, k2, cluster_s) = c.k1k2s();
+    let mut score = Json::obj();
+    score
+        .set("time_to_target", Json::from(s.time_to_target))
+        .set("comm_seconds", Json::from(s.comm_seconds))
+        .set("comm_bytes", Json::from(s.comm_bytes as usize))
+        .set("compute_seconds", Json::from(s.compute_seconds))
+        .set("bound", Json::from(s.bound))
+        .set("condition_35", Json::from(s.condition_35));
+    let mut cost_levels = Vec::with_capacity(s.levels.len());
+    for l in &s.levels {
+        let mut o = Json::obj();
+        o.set("level", Json::from(l.level))
+            .set("size", Json::from(l.size))
+            .set("link", Json::from(l.link.name()))
+            .set("events", Json::from(l.events as usize))
+            .set("reductions", Json::from(l.reductions as usize))
+            .set("bytes", Json::from(l.bytes as usize))
+            .set("seconds", Json::from(l.seconds));
+        cost_levels.push(o);
+    }
+    let mut o = Json::obj();
+    o.set("rank", Json::from(rank))
+        .set("label", Json::from(c.label()))
+        .set("levels", Json::Arr(c.levels.iter().map(|&v| Json::from(v)).collect()))
+        .set("ks", Json::Arr(c.ks.iter().map(|&v| Json::from(v as usize)).collect()))
+        .set(
+            "links",
+            Json::Arr(c.links.iter().map(|l| Json::from(l.name())).collect()),
+        )
+        .set("k1", Json::from(k1 as usize))
+        .set("k2", Json::from(k2 as usize))
+        .set("s", Json::from(cluster_s as usize))
+        .set("score", score)
+        .set("cost_levels", Json::Arr(cost_levels));
+    if let Some(v) = validation {
+        o.set("validation", validation_json(v));
+    }
+    o
+}
+
+/// The full report as a JSON value.  `validations[i]` pairs with
+/// `ranked[i]` (the top of the ranking); shorter is fine.
+pub fn sweep_json(
+    space: &SweepSpace,
+    ctx: &ScoreCtx,
+    model: &str,
+    ranked: &[Ranked],
+    validations: &[Validation],
+) -> Json {
+    let mut sp = Json::obj();
+    sp.set("min_levels", Json::from(space.min_levels))
+        .set("max_levels", Json::from(space.max_levels))
+        .set(
+            "k1_grid",
+            Json::Arr(space.k1_grid.iter().map(|&k| Json::from(k as usize)).collect()),
+        )
+        .set("k2_max", Json::from(space.k2_max as usize))
+        .set("use_rack", Json::from(space.use_rack))
+        .set("local_averaging", Json::from(space.local_averaging));
+    let candidates: Vec<Json> = ranked
+        .iter()
+        .enumerate()
+        .map(|(i, r)| candidate_json(i, r, validations.get(i)))
+        .collect();
+    let mut o = Json::obj();
+    o.set("p", Json::from(space.p))
+        .set("model", Json::from(model))
+        .set("horizon_steps", Json::from(ctx.horizon as usize))
+        .set("n_params", Json::from(ctx.n_params))
+        .set("bytes_per_reduction", Json::from(ctx.n_params * 4))
+        .set("strategy", Json::from(ctx.strategy.name()))
+        .set("space", sp)
+        .set("k2_cap_condition_35", Json::from(space.k2_cap(&ctx.bound) as usize))
+        .set("candidates", Json::Arr(candidates));
+    o
+}
+
+/// Write the report to `path` (pretty-printed; parent dirs created).
+pub fn write_sweep(
+    path: &Path,
+    space: &SweepSpace,
+    ctx: &ScoreCtx,
+    model: &str,
+    ranked: &[Ranked],
+    validations: &[Validation],
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let json = sweep_json(space, ctx, model, ranked, validations);
+    std::fs::write(path, json.pretty())
+        .with_context(|| format!("writing sweep report {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CostModel, ReduceStrategy};
+    use crate::planner;
+
+    #[test]
+    fn report_roundtrips_and_is_ranked() {
+        let space = SweepSpace::new(16).unwrap();
+        let ctx = ScoreCtx::for_model(
+            "quickstart",
+            16,
+            2_000,
+            ReduceStrategy::Ring,
+            CostModel::default(),
+        )
+        .unwrap();
+        let ranked = planner::rank(&space, &ctx).unwrap();
+        let j = sweep_json(&space, &ctx, "quickstart", &ranked, &[]);
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.req("p").unwrap().as_usize().unwrap(), 16);
+        let cands = parsed.req("candidates").unwrap().as_arr().unwrap();
+        assert!(cands.len() >= 20);
+        let mut prev = f64::NEG_INFINITY;
+        for (i, c) in cands.iter().enumerate() {
+            assert_eq!(c.req("rank").unwrap().as_usize().unwrap(), i);
+            let tt = c.req("score").unwrap().req("time_to_target").unwrap().as_f64().unwrap();
+            assert!(tt >= prev, "candidate {i} out of order");
+            prev = tt;
+            assert!(c.get("validation").is_none());
+            assert_eq!(
+                c.req("levels").unwrap().as_arr().unwrap().len(),
+                c.req("cost_levels").unwrap().as_arr().unwrap().len()
+            );
+        }
+    }
+}

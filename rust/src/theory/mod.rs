@@ -129,6 +129,29 @@ pub fn thm34_condition(p: &BoundParams, t: u64, s: u64) -> bool {
     d * alpha / (1.0 - d) > 2.0 * beta + 12.0 * eta / s as f64
 }
 
+/// The largest K2 in `1..=cap` satisfying condition (3.5), or `None` when
+/// even K2 = 1 violates it.  The condition's left-hand side is strictly
+/// decreasing in K2 (each increment subtracts `(Lγ)²·K2 + Lγ > 0`), so the
+/// feasible set is a prefix and binary search applies.  The sweep planner
+/// caps its K2 search here: theorems 3.2/3.3 — and hence
+/// [`thm34_budget_bound`]'s interpretation as a convergence guarantee —
+/// only hold inside this range.
+pub fn max_k2_condition_35(p: &BoundParams, cap: u64) -> Option<u64> {
+    if cap == 0 || !p.condition_35(1) {
+        return None;
+    }
+    let (mut lo, mut hi) = (1u64, cap);
+    while lo < hi {
+        let mid = lo + (hi - lo + 1) / 2;
+        if p.condition_35(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    Some(lo)
+}
+
 /// argmin over K2 ∈ {multiples of K1} ∪ {1..} of the fixed-budget bound.
 pub fn optimal_k2(p: &BoundParams, t: u64, k1: u64, s: u64, k2_max: u64) -> u64 {
     let mut best = (f64::INFINITY, 1u64);
@@ -262,6 +285,20 @@ mod tests {
         // With a big enough K2 the condition must eventually fail for a
         // fixed gamma.
         assert!(!pp.condition_35(100_000));
+    }
+
+    #[test]
+    fn max_k2_condition_35_is_the_threshold() {
+        let pp = p();
+        let cap = 1_000_000;
+        let k = max_k2_condition_35(&pp, cap).unwrap();
+        assert!(pp.condition_35(k));
+        assert!(!pp.condition_35(k + 1), "k={k} is not the last feasible K2");
+        // A cap below the threshold clamps.
+        assert_eq!(max_k2_condition_35(&pp, 2), Some(2));
+        assert_eq!(max_k2_condition_35(&pp, 0), None);
+        // Validated params always admit K2 = 1 (δ < 1 forces Lγ < 1).
+        assert!(max_k2_condition_35(&pp, 1).is_some());
     }
 
     #[test]

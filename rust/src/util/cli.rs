@@ -12,6 +12,10 @@ pub struct Args {
     pub positional: Vec<String>,
     pub flags: BTreeMap<String, String>,
     pub switches: Vec<String>,
+    /// Every switch mentioned on the command line, including explicit-off
+    /// forms (`--switch=0`), so callers can reject a switch that does not
+    /// apply to them regardless of its value.
+    seen_switches: Vec<String>,
     known_switches: Vec<&'static str>,
 }
 
@@ -27,8 +31,23 @@ impl Args {
         while let Some(arg) = it.next() {
             if let Some(name) = arg.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    if switches.contains(&k) {
+                        // `--switch=0|1`: honor the explicit value instead of
+                        // silently routing a known switch into the flag map
+                        // (where `has()` would miss it).
+                        out.seen_switches.push(k.to_string());
+                        match v {
+                            "1" | "true" => out.switches.push(k.to_string()),
+                            "0" | "false" => {}
+                            other => bail!(
+                                "--{k} is a switch: pass --{k} or --{k}=0|1 (got {other:?})"
+                            ),
+                        }
+                    } else {
+                        out.flags.insert(k.to_string(), v.to_string());
+                    }
                 } else if switches.contains(&name) {
+                    out.seen_switches.push(name.to_string());
                     out.switches.push(name.to_string());
                 } else {
                     let v = it
@@ -50,6 +69,13 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         debug_assert!(self.known_switches.contains(&switch) || self.flags.contains_key(switch));
         self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Whether `switch` appeared on the command line at all, even in an
+    /// explicit-off form (`--switch=0`) — for rejecting a switch that a
+    /// subcommand does not accept, regardless of its value.
+    pub fn saw_switch(&self, switch: &str) -> bool {
+        self.seen_switches.iter().any(|s| s == switch)
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -83,7 +109,7 @@ impl Args {
                 bail!("unknown flag --{k} (accepted: {accepted:?})");
             }
         }
-        for s in &self.switches {
+        for s in &self.seen_switches {
             if !accepted.contains(&s.as_str()) {
                 bail!("unknown switch --{s}");
             }
@@ -115,6 +141,22 @@ mod tests {
     #[test]
     fn missing_value_is_error() {
         assert!(Args::parse(sv(&["--p"]), &[]).is_err());
+    }
+
+    #[test]
+    fn switch_equals_value_forms() {
+        let a = Args::parse(sv(&["--full=1", "--quiet=0"]), &["full", "quiet"]).unwrap();
+        assert!(a.has("full"));
+        assert!(!a.has("quiet"));
+        // ... but the explicit-off mention is still visible, so callers
+        // can reject an inapplicable switch regardless of its value, and
+        // check_known validates it like any other switch.
+        assert!(a.saw_switch("quiet"));
+        assert!(!a.saw_switch("absent"));
+        assert!(a.get("full").is_none(), "switch must not leak into the flag map");
+        assert!(a.check_known(&["full", "quiet"]).is_ok());
+        assert!(a.check_known(&["full"]).is_err(), "off-form switch must not evade check_known");
+        assert!(Args::parse(sv(&["--full=yes"]), &["full"]).is_err());
     }
 
     #[test]

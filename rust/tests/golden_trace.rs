@@ -1,0 +1,135 @@
+//! Golden-trace regression suite: the planner's validation runs, pinned
+//! bit-for-bit.
+//!
+//! One small deterministic run per collective engine (simulated, sharded,
+//! pooled) is serialized through `RunRecord::to_golden_json` (wall-clock
+//! stripped, reduction trace included) and compared against the committed
+//! JSON under `rust/tests/golden/`.  Any change to training numerics, the
+//! schedule, the cost model, or the serialization shows up as a diff.
+//!
+//! Blessing: set `GOLDEN_BLESS=1` to regenerate the files (they are also
+//! written automatically when missing, so a fresh checkout bootstraps
+//! itself); commit the result.  CI additionally runs this suite twice
+//! (bless, then verify) to prove run-to-run determinism on its own host.
+//!
+//! The configs come from `planner::validation_config` — the exact
+//! scenario generator `sweep --validate-top` uses — so these goldens also
+//! prove the planner's validation runs are identical across
+//! `--collective simulated|sharded|pooled`.
+
+use std::path::PathBuf;
+
+use hier_avg::comm::CollectiveKind;
+use hier_avg::metrics::RunRecord;
+use hier_avg::planner::{self, Candidate};
+use hier_avg::util::json::Json;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+/// The fixed scenario all three goldens share: a 3-level hierarchy at
+/// P = 8 so every tier (intra / inter) fires within the short run.
+fn golden_candidate() -> Candidate {
+    Candidate::with_default_links(vec![2, 4, 8], vec![2, 4, 8]).unwrap()
+}
+
+fn run_with(collective: CollectiveKind) -> RunRecord {
+    let cfg = planner::validation_config(&golden_candidate(), "quickstart", collective).unwrap();
+    planner::validation_record(&cfg).unwrap()
+}
+
+/// Compare `rec` against the committed golden `name`.json, blessing it
+/// when missing or when `GOLDEN_BLESS=1`.  `GOLDEN_REQUIRE=1` turns a
+/// missing golden into a hard failure instead of a bootstrap bless — the
+/// knob CI uses to surface "the cross-commit pin is not in the tree yet"
+/// rather than silently re-blessing forever.
+fn check_golden(name: &str, rec: &RunRecord) {
+    let dir = golden_dir();
+    let path = dir.join(format!("{name}.json"));
+    let actual = rec.to_golden_json().pretty() + "\n";
+    let env_on = |k: &str| std::env::var(k).map(|v| v == "1").unwrap_or(false);
+    let bless = env_on("GOLDEN_BLESS");
+    if !bless && env_on("GOLDEN_REQUIRE") && !path.exists() {
+        panic!(
+            "golden trace {} is not committed (GOLDEN_REQUIRE=1): run \
+             `GOLDEN_BLESS=1 cargo test --test golden_trace` and commit the file \
+             (or download CI's golden-traces artifact)",
+            path.display()
+        );
+    }
+    if bless || !path.exists() {
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, &actual).unwrap();
+        eprintln!(
+            "blessed golden trace {} — commit it to pin the behaviour",
+            path.display()
+        );
+        return;
+    }
+    let stored = std::fs::read_to_string(&path).unwrap();
+    let stored_json = Json::parse(&stored)
+        .unwrap_or_else(|e| panic!("{} is not valid JSON: {e}", path.display()));
+    let actual_json = Json::parse(&actual).unwrap();
+    assert_eq!(
+        stored_json,
+        actual_json,
+        "golden trace {name} drifted from {}.\nIf the change is intentional, regenerate with \
+         `GOLDEN_BLESS=1 cargo test --test golden_trace` and commit the new file.",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_trace_simulated() {
+    check_golden("validation_simulated", &run_with(CollectiveKind::Simulated));
+}
+
+#[test]
+fn golden_trace_sharded() {
+    check_golden("validation_sharded", &run_with(CollectiveKind::Sharded { threads: 3 }));
+}
+
+#[test]
+fn golden_trace_pooled() {
+    check_golden("validation_pooled", &run_with(CollectiveKind::Pooled { threads: 2 }));
+}
+
+/// The three collectives must produce the same golden bytes — the
+/// cross-engine half of the regression holds even before any file is
+/// committed, and proves the planner's validation runs are bit-identical
+/// across `--collective simulated|sharded|pooled`.
+#[test]
+fn golden_identical_across_collectives() {
+    let sim = run_with(CollectiveKind::Simulated).to_golden_json().pretty();
+    let sh = run_with(CollectiveKind::Sharded { threads: 3 }).to_golden_json().pretty();
+    let po = run_with(CollectiveKind::Pooled { threads: 2 }).to_golden_json().pretty();
+    assert_eq!(sim, sh, "sharded validation run drifted from simulated");
+    assert_eq!(sim, po, "pooled validation run drifted from simulated");
+}
+
+/// Same config, run twice in one process: byte-identical golden JSON
+/// (run-to-run determinism, independent of the committed files).
+#[test]
+fn golden_run_to_run_deterministic() {
+    let a = run_with(CollectiveKind::Simulated).to_golden_json().pretty();
+    let b = run_with(CollectiveKind::Simulated).to_golden_json().pretty();
+    assert_eq!(a, b);
+}
+
+/// The golden scenario exercises every level: trace events for all three
+/// tiers, per-level accounts filled, and counts matching the schedule.
+#[test]
+fn golden_scenario_covers_all_levels() {
+    let rec = run_with(CollectiveKind::Simulated);
+    assert!(rec.total_steps >= 16, "run too short to fire the outer tier");
+    assert_eq!(rec.comm_levels.len(), 3);
+    for (l, ls) in rec.comm_levels.iter().enumerate() {
+        assert!(ls.reductions > 0, "level {l} never reduced");
+        assert!(ls.seconds > 0.0, "level {l} free");
+    }
+    let kinds: std::collections::BTreeSet<char> =
+        rec.trace.iter().map(|t| t.kind).collect();
+    let expect: std::collections::BTreeSet<char> = ['L', '1', 'G'].into_iter().collect();
+    assert_eq!(kinds, expect);
+}

@@ -4,13 +4,33 @@
 //! case on violation).
 
 use hier_avg::algorithms::{HierAvgSchedule, ReduceEvent};
-use hier_avg::comm::{CostModel, ReduceStrategy, Reducer};
+use hier_avg::comm::{CommStats, CostModel, ReduceStrategy, Reducer};
 use hier_avg::optimizer::{LrSchedule, Sgd};
 use hier_avg::params::{ParamEntry, ParamLayout};
 use hier_avg::theory::{self, BoundParams};
-use hier_avg::topology::Topology;
+use hier_avg::topology::{LinkClass, Topology};
 use hier_avg::util::json::Json;
 use hier_avg::util::rng::Pcg32;
+
+const STRATEGIES: [ReduceStrategy; 3] =
+    [ReduceStrategy::Naive, ReduceStrategy::Tree, ReduceStrategy::Ring];
+const LINKS: [LinkClass; 3] =
+    [LinkClass::IntraNode, LinkClass::InterNode, LinkClass::RackFabric];
+
+/// A random bound regime; returns None when the draw violates δ ∈ (0,1).
+fn random_bound_params(rng: &mut Pcg32) -> Option<BoundParams> {
+    let p = BoundParams {
+        l: 0.5 + rng.next_f64() * 20.0,
+        m: 0.1 + rng.next_f64() * 5.0,
+        mg: 0.1 + rng.next_f64() * 3.0,
+        f_gap: 0.01 + rng.next_f64() * 100.0,
+        gamma: 1e-4 + rng.next_f64() * 5e-3,
+        b: 8.0 + rng.next_below(120) as f64,
+        p: 2.0 + rng.next_below(126) as f64,
+        delta_grad: rng.next_f64() * 3.0,
+    };
+    p.validate().ok().map(|_| p)
+}
 
 const CASES: usize = 300;
 
@@ -302,6 +322,166 @@ fn prop_thm36_holds_in_paper_range() {
         assert!(h < x, "k={k} a={a:.3}: hier={h} kavg={x}");
     }
     assert!(tested > CASES / 4);
+}
+
+#[test]
+fn prop_allreduce_seconds_monotone_in_bytes_and_participants() {
+    // The planner's ranking depends on it: more bytes or more learners
+    // never make a modelled allreduce cheaper, for every strategy on every
+    // link tier.
+    let mut rng = Pcg32::seeded(0xC0_57_01);
+    let cm = CostModel::default();
+    for case in 0..CASES {
+        let n1 = 1 + rng.next_below(128) as usize;
+        let n2 = n1 + rng.next_below(128) as usize;
+        let b1 = 1 + rng.next_below(1 << 24) as usize;
+        let b2 = b1 + rng.next_below(1 << 24) as usize;
+        for link in LINKS {
+            for s in STRATEGIES {
+                let base = cm.allreduce_seconds(n1, b1, link, s);
+                assert!(
+                    base <= cm.allreduce_seconds(n2, b1, link, s) + 1e-15,
+                    "case {case}: participants {n1}->{n2} {link:?} {s:?}"
+                );
+                assert!(
+                    base <= cm.allreduce_seconds(n1, b2, link, s) + 1e-15,
+                    "case {case}: bytes {b1}->{b2} {link:?} {s:?}"
+                );
+                assert!(base >= 0.0 && base.is_finite());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_link_tier_ordering() {
+    // Identical payloads: rack-fabric cost ≥ inter-node ≥ intra-node (the
+    // calibrated default tiers; strict once a reduction actually happens).
+    let mut rng = Pcg32::seeded(0xC0_57_02);
+    let cm = CostModel::default();
+    for case in 0..CASES {
+        let n = 2 + rng.next_below(255) as usize;
+        let bytes = 1 + rng.next_below(1 << 26) as usize;
+        for s in STRATEGIES {
+            let intra = cm.allreduce_seconds(n, bytes, LinkClass::IntraNode, s);
+            let inter = cm.allreduce_seconds(n, bytes, LinkClass::InterNode, s);
+            let rack = cm.allreduce_seconds(n, bytes, LinkClass::RackFabric, s);
+            assert!(
+                intra < inter && inter < rack,
+                "case {case}: n={n} bytes={bytes} {s:?}: {intra} / {inter} / {rack}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_commstats_merge_associative() {
+    // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c).  Counts are u64 (exact); the seconds are
+    // drawn as integer multiples of 2⁻⁸ far below 2⁵³ so every f64 sum is
+    // exact and associativity holds bit-for-bit, not just approximately.
+    let mut rng = Pcg32::seeded(0xC0_57_03);
+    let draw = |rng: &mut Pcg32| CommStats {
+        local_reductions: rng.next_below(1 << 20) as u64,
+        global_reductions: rng.next_below(1 << 20) as u64,
+        rack_reductions: rng.next_below(1 << 20) as u64,
+        local_bytes: rng.next_below(1 << 30) as u64,
+        global_bytes: rng.next_below(1 << 30) as u64,
+        rack_bytes: rng.next_below(1 << 30) as u64,
+        local_seconds: rng.next_below(1 << 24) as f64 / 256.0,
+        global_seconds: rng.next_below(1 << 24) as f64 / 256.0,
+        rack_seconds: rng.next_below(1 << 24) as f64 / 256.0,
+    };
+    for case in 0..CASES {
+        let (a, b, c) = (draw(&mut rng), draw(&mut rng), draw(&mut rng));
+        // left: (a ⊕ b) ⊕ c
+        let mut left = a;
+        left.merge(&b);
+        left.merge(&c);
+        // right: a ⊕ (b ⊕ c)
+        let mut bc = b;
+        bc.merge(&c);
+        let mut right = a;
+        right.merge(&bc);
+        assert_eq!(left, right, "case {case}");
+    }
+}
+
+#[test]
+fn prop_optimal_k2_satisfies_condition_35() {
+    // The planner invariant: with the K2 search capped at
+    // max_k2_condition_35, the argmin the planner schedules always sits in
+    // the regime where Theorem 3.4's bound is a guarantee.
+    let mut rng = Pcg32::seeded(0x7434_35);
+    let mut tested = 0;
+    for case in 0..CASES {
+        let Some(p) = random_bound_params(&mut rng) else { continue };
+        let cap = theory::max_k2_condition_35(&p, 4096)
+            .expect("validated params always admit K2 = 1");
+        assert!(p.condition_35(cap), "case {case}: cap {cap} itself infeasible");
+        if cap < 4096 {
+            assert!(!p.condition_35(cap + 1), "case {case}: cap {cap} not maximal");
+        }
+        let k1 = 1 + rng.next_below(8) as u64;
+        if k1 > cap {
+            continue;
+        }
+        tested += 1;
+        let t = 100 + rng.next_below(1_000_000) as u64;
+        let s = 1 + rng.next_below(16) as u64;
+        let k2 = theory::optimal_k2(&p, t, k1, s, cap);
+        assert!(
+            p.condition_35(k2),
+            "case {case}: optimal K2 = {k2} violates (3.5) under cap {cap}"
+        );
+        assert!(k2 >= k1 && k2 <= cap && k2 % k1 == 0, "case {case}: k1={k1} k2={k2}");
+    }
+    assert!(tested > CASES / 4, "too few valid regimes: {tested}");
+}
+
+#[test]
+fn prop_phi_monotone_in_k2() {
+    // Φ(K1, K2, S) is non-decreasing in K2 on K2 ≥ K1 (and non-negative
+    // there) — the planner's bound ordering over outer intervals relies on
+    // the deviation term never rewarding a longer interval.
+    let mut rng = Pcg32::seeded(0x7434_99);
+    for case in 0..CASES {
+        let k1 = 1 + rng.next_below(32) as u64;
+        let s = 1 + rng.next_below(32) as u64;
+        let mut prev = theory::phi(k1, k1, s);
+        assert!(prev >= 0.0, "case {case}: phi({k1},{k1},{s}) = {prev} < 0");
+        for dk in 1..=64u64 {
+            let cur = theory::phi(k1, k1 + dk, s);
+            assert!(
+                cur >= prev - 1e-9,
+                "case {case}: phi({k1},{},{s}) = {cur} < {prev}",
+                k1 + dk
+            );
+            prev = cur;
+        }
+    }
+}
+
+#[test]
+fn prop_thm34_bound_finite_positive() {
+    // The planner divides and sorts by this bound: over any valid random
+    // regime and any (T, K1 ≤ K2, S) grid point it must be a finite,
+    // strictly positive number — never NaN, ∞, zero, or negative.
+    let mut rng = Pcg32::seeded(0x7434_34);
+    let mut tested = 0;
+    for case in 0..CASES {
+        let Some(p) = random_bound_params(&mut rng) else { continue };
+        tested += 1;
+        let t = 1 + rng.next_below(1_000_000) as u64;
+        let k1 = 1 + rng.next_below(64) as u64;
+        let k2 = k1 + rng.next_below(256) as u64;
+        let s = 1 + rng.next_below(64) as u64;
+        let b = theory::thm34_budget_bound(&p, t, k1, k2, s);
+        assert!(
+            b.is_finite() && b > 0.0,
+            "case {case}: B(t={t}, k1={k1}, k2={k2}, s={s}) = {b}"
+        );
+    }
+    assert!(tested > CASES / 4, "too few valid regimes: {tested}");
 }
 
 #[test]
