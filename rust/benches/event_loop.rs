@@ -1,0 +1,57 @@
+//! Timeline dispatch overhead: what the virtual-time layer costs per
+//! step, lockstep (shared clock, O(1)/step) vs the event engine
+//! (per-learner clocks + group-local barriers, O(P)/step), at P ∈ {16,
+//! 64}.  The event model's dispatch cost rides the training hot path when
+//! `--exec event` is set, so it must stay visible in the perf trajectory
+//! (`BENCH_event.json`).
+//!
+//! Each iteration drives one model through a fixed 512-step two-level
+//! schedule (K = [4, 32]) — the measured number is the whole timeline,
+//! so per-step cost = reported time / 512.
+
+mod benchkit;
+
+use hier_avg::algorithms::HierSchedule;
+use hier_avg::sim::{drive_timeline, ExecKind, ExecModel, HetSpec};
+use hier_avg::topology::HierTopology;
+
+const STEPS: u64 = 512;
+
+fn main() {
+    let mut b = benchkit::Bench::new("event");
+    let base = 1e-3;
+    let level_seconds = [1e-4, 1e-3];
+    for &p in &[16usize, 64] {
+        let topo = HierTopology::new(vec![4, p]).unwrap();
+        let sched = HierSchedule::new(vec![4, 32]).unwrap();
+        let homogeneous = HetSpec::default();
+        let straggler =
+            HetSpec { het: 0.2, straggler_prob: 0.05, straggler_mult: 4.0, seed: 42 };
+
+        b.bench(&format!("timeline/lockstep/p{p}/512steps"), || {
+            let mut m = ExecKind::Lockstep.build(p, 2, base, &homogeneous);
+            drive_timeline(m.as_mut(), &topo, &sched, STEPS, &level_seconds);
+            std::hint::black_box(m.now());
+        });
+        b.bench(&format!("timeline/event/p{p}/512steps"), || {
+            let mut m = ExecKind::Event.build(p, 2, base, &homogeneous);
+            drive_timeline(m.as_mut(), &topo, &sched, STEPS, &level_seconds);
+            std::hint::black_box(m.now());
+        });
+        // The RNG draw per learner-step is the event model's marginal cost
+        // over the homogeneous path.
+        b.bench(&format!("timeline/event_straggler/p{p}/512steps"), || {
+            let mut m = ExecKind::Event.build(p, 2, base, &straggler);
+            drive_timeline(m.as_mut(), &topo, &sched, STEPS, &level_seconds);
+            std::hint::black_box(m.now());
+        });
+        // Breakdown assembly (per-run, not per-step, but part of the
+        // record path).
+        b.bench(&format!("timeline/event_breakdown/p{p}"), || {
+            let mut m = ExecKind::Event.build(p, 2, base, &straggler);
+            drive_timeline(m.as_mut(), &topo, &sched, STEPS, &level_seconds);
+            std::hint::black_box(m.breakdown());
+        });
+    }
+    b.finish();
+}

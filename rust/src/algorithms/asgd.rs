@@ -74,8 +74,13 @@ impl<'a> AsgdTrainer<'a> {
         let mut root = Pcg32::new(cfg.seed, 0x41534744); // "ASGD"
         let mut rngs: Vec<Pcg32> = (0..p).map(|j| root.fork(j as u64)).collect();
 
-        let mut record =
-            RunRecord { label: format!("asgd-{}-p{}", cfg.model, p), ..Default::default() };
+        let mut record = RunRecord {
+            label: format!("asgd-{}-p{}", cfg.model, p),
+            // ASGD's own overlap model is neither lockstep nor the event
+            // engine; name it so the JSON `exec` block is self-describing.
+            exec_model: "asgd".to_string(),
+            ..Default::default()
+        };
         let tpe = self.ticks_per_epoch();
         // Modelled compute: each worker's fwd+bwd overlaps with others, so
         // per *round* of P ticks one step-time elapses; the server
@@ -139,6 +144,7 @@ impl<'a> AsgdTrainer<'a> {
             });
         }
         record.total_steps = ticks;
+        record.makespan_seconds = record.sim_compute_seconds + record.comm.total_seconds();
         Ok(record)
     }
 }

@@ -7,6 +7,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::algorithms::{HierAvgSchedule, HierSchedule};
 use crate::comm::{CollectiveKind, CostModel, ReduceStrategy};
 use crate::optimizer::LrSchedule;
+use crate::sim::{ExecKind, HetSpec};
 use crate::topology::{HierTopology, LinkClass, Topology};
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -55,6 +56,18 @@ pub struct RunConfig {
     /// `intra` / `inter` / `rack`.  Empty = the default assignment
     /// (innermost intra-node, every outer level inter-node).
     pub links: Vec<LinkClass>,
+    /// Which execution model accounts the run's virtual time: the legacy
+    /// shared-clock `lockstep`, or the per-learner-clock `event` engine
+    /// with group-local barriers (`sim::ExecModel`).
+    pub exec: ExecKind,
+    /// Deterministic per-learner compute-rate spread (event mode only):
+    /// learner j's step time scales by `1 + het * j/(P-1)`.
+    pub het: f64,
+    /// Per-(learner, step) straggler-spike probability (event mode only).
+    pub straggler_prob: f64,
+    /// Spike slowdown factor (a spiked step takes `straggler_mult ×` the
+    /// learner's nominal step time).
+    pub straggler_mult: f64,
     pub epochs: usize,
     /// Nominal training-set size; steps/epoch = train_n / (P·B).
     pub train_n: usize,
@@ -102,6 +115,10 @@ impl RunConfig {
             collective: CollectiveKind::Simulated,
             pool_threads: 0,
             links: Vec::new(),
+            exec: ExecKind::Lockstep,
+            het: 0.0,
+            straggler_prob: 0.0,
+            straggler_mult: 4.0,
             epochs: 20,
             train_n: 4096,
             test_n: 1024,
@@ -200,6 +217,29 @@ impl RunConfig {
         HierSchedule::new(ks)
     }
 
+    /// The event model's heterogeneity knobs as one spec (straggler
+    /// streams are forked from the run seed on their own stream id, so
+    /// they never perturb the training streams).
+    pub fn het_spec(&self) -> HetSpec {
+        HetSpec {
+            het: self.het,
+            straggler_prob: self.straggler_prob,
+            straggler_mult: self.straggler_mult,
+            seed: self.seed,
+        }
+    }
+
+    /// Install a het spec (the inverse of [`RunConfig::het_spec`]): every
+    /// knob including the seed, so the run's straggler streams match a
+    /// replay built from the same spec.  Does not switch `exec` — callers
+    /// decide whether a heterogeneous spec implies event mode.
+    pub fn set_het_spec(&mut self, spec: &HetSpec) {
+        self.het = spec.het;
+        self.straggler_prob = spec.straggler_prob;
+        self.straggler_mult = spec.straggler_mult;
+        self.seed = spec.seed;
+    }
+
     pub fn validate(&self) -> Result<()> {
         let topo = self.hierarchy()?;
         let sched = self.hier_schedule()?;
@@ -231,6 +271,14 @@ impl RunConfig {
         }
         if self.epochs == 0 || self.train_n == 0 {
             bail!("epochs and train_n must be positive");
+        }
+        self.het_spec().validate()?;
+        if self.exec == ExecKind::Lockstep && (self.het > 0.0 || self.straggler_prob > 0.0) {
+            bail!(
+                "--het/--straggler model heterogeneous compute, which the lockstep \
+                 execution model cannot represent: add --exec event (lockstep charges \
+                 every learner the same step time against one shared clock)"
+            );
         }
         Ok(())
     }
@@ -313,6 +361,10 @@ impl RunConfig {
                         })
                         .collect::<Result<Vec<_>>>()?
                 }
+                "exec" => self.exec = ExecKind::parse(v.as_str()?)?,
+                "het" => self.het = v.as_f64()?,
+                "straggler_prob" => self.straggler_prob = v.as_f64()?,
+                "straggler_mult" => self.straggler_mult = v.as_f64()?,
                 "epochs" => self.epochs = v.as_usize()?,
                 "train_n" => self.train_n = v.as_usize()?,
                 "test_n" => self.test_n = v.as_usize()?,
@@ -393,6 +445,14 @@ impl RunConfig {
                 })
                 .collect::<Result<Vec<_>>>()?;
         }
+        if let Some(e) = args.get("exec") {
+            cfg.exec = ExecKind::parse(e)?;
+        }
+        // Shared `--het` / `--straggler` grammar (one definition for
+        // train, sweep, and the examples).
+        let mut het = cfg.het_spec();
+        het.apply_args(args)?;
+        cfg.set_het_spec(&het);
         cfg.p = args.parse_or("p", cfg.p)?;
         cfg.s = args.parse_or("s", cfg.s)?;
         cfg.k1 = args.parse_or("k1", cfg.k1)?;
@@ -611,6 +671,67 @@ mod tests {
             vec![LinkClass::IntraNode, LinkClass::InterNode, LinkClass::RackFabric]
         );
         assert_eq!(cfg.hierarchy().unwrap().link(2), LinkClass::RackFabric);
+    }
+
+    #[test]
+    fn exec_and_het_knobs_via_json_and_args() {
+        let mut c = RunConfig::defaults("m");
+        let j = Json::parse(
+            r#"{"exec": "event", "het": 0.25, "straggler_prob": 0.05,
+                "straggler_mult": 6.0, "backend": "native"}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.exec, ExecKind::Event);
+        assert_eq!(c.het, 0.25);
+        assert_eq!(c.straggler_prob, 0.05);
+        assert_eq!(c.straggler_mult, 6.0);
+        c.validate().unwrap();
+        let spec = c.het_spec();
+        assert!(!spec.is_homogeneous());
+        assert_eq!(spec.seed, c.seed);
+
+        use crate::util::cli::Args;
+        let argv: Vec<String> = [
+            "train", "--model", "quickstart", "--backend", "native", "--exec", "event",
+            "--het", "0.1", "--straggler", "0.02:5",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.exec, ExecKind::Event);
+        assert_eq!(cfg.het, 0.1);
+        assert_eq!((cfg.straggler_prob, cfg.straggler_mult), (0.02, 5.0));
+    }
+
+    #[test]
+    fn out_of_range_het_knobs_rejected() {
+        let mut c = RunConfig::defaults("m");
+        c.exec = ExecKind::Event;
+        c.het = -0.5;
+        assert!(c.validate().unwrap_err().to_string().contains("--het"));
+        let mut c = RunConfig::defaults("m");
+        c.exec = ExecKind::Event;
+        c.straggler_prob = 1.5;
+        assert!(c.validate().unwrap_err().to_string().contains("[0, 1]"));
+        let mut c = RunConfig::defaults("m");
+        c.exec = ExecKind::Event;
+        c.straggler_prob = 0.1;
+        c.straggler_mult = 0.25;
+        assert!(c.validate().unwrap_err().to_string().contains("multiplier"));
+        // heterogeneity without the event model is a contradiction, not a
+        // silent no-op
+        let mut c = RunConfig::defaults("m");
+        c.het = 0.2;
+        assert!(c.validate().unwrap_err().to_string().contains("--exec event"));
+        // ... and the CLI straggler grammar rejects garbage with context
+        use crate::util::cli::Args;
+        let argv: Vec<String> =
+            ["train", "--straggler", "often"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+        assert!(RunConfig::from_args(&args).is_err());
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::config::RunConfig;
 use crate::data::{BatchBuf, DataSource};
 use crate::optimizer::Sgd;
 use crate::params::FlatParams;
+use crate::sim::ExecModel;
 use crate::topology::HierTopology;
 use crate::util::rng::Pcg32;
 
@@ -73,18 +74,32 @@ pub struct StepOutcome {
 }
 
 /// Drives the P learners: batch sampling, the stacked backend dispatch,
-/// local SGD updates, and scheduled hierarchical reductions.
+/// local SGD updates, and scheduled hierarchical reductions.  The
+/// `timeline` (selected by `--exec`) accounts virtual time for every step
+/// and reduction the engine executes; it never influences the parameter
+/// math, so execution models are interchangeable without perturbing
+/// training numerics.
 pub struct Engine<'a> {
     pub cfg: &'a RunConfig,
     pub topo: HierTopology,
     pub reducer: Reducer,
     pub learners: LearnerSet,
+    pub timeline: Box<dyn ExecModel>,
     batch: BatchBuf,
     t: u64,
 }
 
 impl<'a> Engine<'a> {
-    pub fn new(cfg: &'a RunConfig, n_params: usize, init: &FlatParams) -> Result<Engine<'a>> {
+    /// `step_seconds` is the modelled base-rate compute time of one
+    /// synchronous step ([`crate::coordinator::sim_step_seconds`]); the
+    /// timeline charges it (scaled per learner in event mode) on every
+    /// step.
+    pub fn new(
+        cfg: &'a RunConfig,
+        n_params: usize,
+        init: &FlatParams,
+        step_seconds: f64,
+    ) -> Result<Engine<'a>> {
         let topo = cfg.hierarchy()?;
         // A pooled collective resolves against the run's `--pool-threads`,
         // landing on the same process-wide pool the native backend's lane
@@ -93,11 +108,13 @@ impl<'a> Engine<'a> {
         let collective = cfg.collective.build_for(cfg.pool_threads);
         let mut reducer = Reducer::with_collective(cfg.cost, cfg.strategy, n_params, collective);
         reducer.reserve_levels(topo.n_levels());
+        let timeline = cfg.exec.build(cfg.p, topo.n_levels(), step_seconds, &cfg.het_spec());
         Ok(Engine {
             cfg,
             topo,
             reducer,
             learners: LearnerSet::new(cfg, n_params, init),
+            timeline,
             batch: BatchBuf::default(),
             t: 0,
         })
@@ -134,10 +151,15 @@ impl<'a> Engine<'a> {
             self.learners.opts[j].apply(&mut self.learners.replicas[j], &self.learners.grads[j], lr);
         }
         self.t += 1;
+        self.timeline.on_step();
         let reduce = match sched.event_after(self.t) {
             Some(level) => {
                 let seconds =
                     self.reducer.reduce_level(&mut self.learners.replicas, &self.topo, level);
+                // Symmetric groups at one level cost the same, so the
+                // reducer's max-over-groups is also each group's barrier
+                // cost on the timeline.
+                self.timeline.on_reduction(&self.topo, level, seconds);
                 Some(ReduceOutcome { level, seconds, kind: self.topo.trace_kind(level) })
             }
             None => None,

@@ -12,6 +12,13 @@
 //!   single-thread, spawn-per-call sharded, or persistent-pool pooled —
 //!   bit-identical numerics across all three.
 //!
+//! A fourth pluggable layer sits beside them: the **execution model**
+//! (`sim::ExecModel`, `--exec lockstep|event`) — *when* modelled work
+//! happens per learner.  It only accounts virtual time (per-learner
+//! clocks, group-local barriers, stall attribution); the parameter math
+//! never consults it, so homogeneous event runs are bit-identical to
+//! lockstep (DESIGN.md §Execution models).
+//!
 //! `Trainer` keeps what is not per-step: the epoch loop, evaluation of the
 //! paper's w̃, and `RunRecord` assembly.  One engine step = every learner
 //! takes one local SGD step (one stacked backend dispatch), then the
@@ -28,6 +35,9 @@ use crate::config::RunConfig;
 use crate::data::{BatchBuf, DataSource};
 use crate::metrics::{EpochStats, RunRecord};
 use crate::params::FlatParams;
+// Trait must be in scope to call `now()`/`breakdown()` on the engine's
+// boxed timeline.
+use crate::sim::ExecModel as _;
 
 pub use engine::{Engine, LearnerSet, ReduceOutcome, StepOutcome};
 
@@ -79,11 +89,11 @@ impl<'a> Trainer<'a> {
         let p = cfg.p;
         let b = self.backend.train_batch();
         let n_params = self.backend.n_params();
-        let mut engine = Engine::new(cfg, n_params, &self.init)?;
+        let step_secs = self.sim_step_seconds();
+        let mut engine = Engine::new(cfg, n_params, &self.init, step_secs)?;
 
         let mut record = RunRecord { label: cfg.label(), ..Default::default() };
         let spe = self.steps_per_epoch();
-        let step_secs = self.sim_step_seconds();
         let units = self.backend.units_per_row() as f64;
         let started = Instant::now();
         let mut wbar: FlatParams = Vec::new();
@@ -129,11 +139,26 @@ impl<'a> Trainer<'a> {
                 train_acc: ep_correct / (spe * p * b) as f64 / units,
                 test_loss,
                 test_acc,
-                sim_seconds: record.sim_compute_seconds + engine.reducer.stats.total_seconds(),
+                // The execution model's clock: under lockstep this equals
+                // the legacy compute + comm sum mathematically (low-order
+                // bits may differ from pre-event-engine releases — the
+                // clock now accumulates step by step, which is what makes
+                // homogeneous event runs bit-identical; re-bless goldens
+                // once when upgrading); under the event model it is the
+                // makespan of the per-learner timeline.
+                sim_seconds: engine.timeline.now(),
                 wall_seconds: started.elapsed().as_secs_f64(),
             });
         }
 
+        let breakdown = engine.timeline.breakdown();
+        record.exec_model = breakdown.model.to_string();
+        record.makespan_seconds = breakdown.makespan_seconds;
+        record.busy_seconds = breakdown.busy_seconds;
+        record.blocked_seconds = breakdown.blocked_seconds;
+        record.idle_seconds = breakdown.idle_seconds;
+        record.level_stall_seconds = breakdown.level_stall_seconds;
+        record.straggler_events = breakdown.straggler_events;
         record.comm = engine.reducer.stats;
         record.comm_levels = engine.reducer.level_stats().to_vec();
         record.level_links = (0..engine.topo.n_levels())
@@ -265,6 +290,51 @@ mod tests {
         // large-batch SGD.
         assert!(rec.epochs.last().unwrap().train_loss < rec.epochs[0].train_loss);
         assert_eq!(rec.comm.global_reductions, rec.total_steps);
+    }
+
+    #[test]
+    fn homogeneous_event_mode_matches_lockstep_training() {
+        let lockstep = quick_cfg();
+        let mut event = quick_cfg();
+        event.exec = crate::sim::ExecKind::Event;
+        let ra = make_trainer(&lockstep).run().unwrap();
+        let rb = make_trainer(&event).run().unwrap();
+        assert_eq!(ra.exec_model, "lockstep");
+        assert_eq!(rb.exec_model, "event");
+        for (x, y) in ra.epochs.iter().zip(&rb.epochs) {
+            assert_eq!(x.train_loss, y.train_loss);
+            assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
+            // homogeneous timelines coincide to the bit
+            assert_eq!(x.sim_seconds.to_bits(), y.sim_seconds.to_bits());
+        }
+        assert_eq!(ra.comm, rb.comm);
+        assert_eq!(ra.makespan_seconds.to_bits(), rb.makespan_seconds.to_bits());
+        assert_eq!(ra.busy_seconds, rb.busy_seconds);
+        assert!(rb.blocked_seconds.iter().all(|&x| x == 0.0));
+        assert_eq!(ra.level_stall_seconds, rb.level_stall_seconds);
+    }
+
+    #[test]
+    fn straggler_run_keeps_parameters_and_stretches_the_clock() {
+        let lockstep = quick_cfg();
+        let mut strag = quick_cfg();
+        strag.exec = crate::sim::ExecKind::Event;
+        strag.het = 0.2;
+        strag.straggler_prob = 0.1;
+        strag.straggler_mult = 4.0;
+        let ra = make_trainer(&lockstep).run().unwrap();
+        let rb = make_trainer(&strag).run().unwrap();
+        // Heterogeneity is a time model only: training numerics and the
+        // communication account are untouched.
+        for (x, y) in ra.epochs.iter().zip(&rb.epochs) {
+            assert_eq!(x.train_loss, y.train_loss);
+            assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
+        }
+        assert_eq!(ra.comm, rb.comm);
+        // ... while the modelled wall clock stretches past the lockstep sum
+        assert!(rb.makespan_seconds > ra.makespan_seconds);
+        assert!(rb.straggler_events > 0);
+        assert!(rb.blocked_seconds.iter().sum::<f64>() > 0.0);
     }
 
     #[test]

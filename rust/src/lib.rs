@@ -8,10 +8,13 @@
 //! - **L3 (this crate)** — the hierarchical-averaging coordinator
 //!   (Algorithm 1, generalized): P learner replicas in an N-level
 //!   hierarchy of nested groups (the paper's clusters-of-S is the 2-level
-//!   case), per-level averaging intervals `K1 ≤ K2 ≤ …`, and pluggable
+//!   case), per-level averaging intervals `K1 ≤ K2 ≤ …`, pluggable
 //!   collectives (single-thread simulated, spawn-per-call sharded, or
-//!   persistent-worker-pool pooled — bit-identical numerics); plus the
-//!   substrates it needs
+//!   persistent-worker-pool pooled — bit-identical numerics), and
+//!   pluggable execution models (`sim`: lockstep shared clock, or a
+//!   virtual-time event engine with per-learner clocks, heterogeneous
+//!   rates/stragglers, and group-local barriers — time model only, never
+//!   the parameter math); plus the substrates it needs
 //!   (cluster/topology model, an α–β hierarchical cost model, optimizers,
 //!   synthetic datasets, metrics, and the paper's bounds in `theory`).
 //!   See DESIGN.md §Engine for the three-layer decomposition.
@@ -57,6 +60,7 @@ pub mod optimizer;
 pub mod params;
 pub mod planner;
 pub mod runtime;
+pub mod sim;
 pub mod theory;
 pub mod topology;
 pub mod util;
@@ -72,5 +76,6 @@ pub use exec::WorkerPool;
 pub use metrics::{EpochStats, RunRecord};
 pub use params::{FlatParams, ParamLayout};
 pub use planner::{Candidate, Ranked, ScoreCtx, SweepSpace};
+pub use sim::{ExecBreakdown, ExecKind, ExecModel, HetSpec};
 pub use topology::{HierTopology, Topology};
 pub mod repro;

@@ -17,6 +17,7 @@ USAGE:
                   [--links intra,inter,rack]
                   [--collective simulated|sharded[:N]|pooled[:N]]
                   [--pool-threads N]
+                  [--exec lockstep|event] [--het F] [--straggler P[:M]]
                   [--train-n N] [--test-n N] [--lr SCHED] [--seed N]
                   [--noise F] [--radius F] [--strategy ring|tree|naive]
                   [--out results/run.json] [--record-steps]
@@ -25,9 +26,11 @@ USAGE:
   hier-avg repro  <fig1|fig2|fig3|fig4|fig5|table1|thm34|thm35|thm36|comm|
                    asgd|adaptive|deep|all>
                   [--scale small|full] [--backend xla|native] [--out DIR]
+                  [--from-sweep SWEEP_<p>.json]   (deep only)
   hier-avg sweep  --p N [--model M] [--steps T] [--levels-min N]
                   [--levels-max N] [--k1-grid 1,2,4] [--k2-max N]
                   [--strategy ring|tree|naive] [--no-rack] [--no-local]
+                  [--het F] [--straggler P[:M]] [--seed N]
                   [--validate-top N] [--collective simulated|sharded|pooled]
                   [--top N] [--out SWEEP_<p>.json]
   hier-avg list                      # models in the artifact manifest
@@ -43,6 +46,14 @@ outer levels inter).  E.g. a GPU->node->rack run:
 Execution: --collective pooled reduces over the persistent worker pool
 (no per-reduction thread spawn); --pool-threads sizes the pool shared by
 reductions and the native backend's lane fan-out (0 = all cores).
+--exec selects the virtual-time model: lockstep (one shared clock,
+default) or event (per-learner clocks, group-local barriers — a level
+reduction blocks only its group at max arrival + collective cost).
+Event mode accepts --het F (learner j's step time scales by
+1 + F*j/(P-1)) and --straggler P[:M] (each learner-step spikes to M x
+duration with probability P; seeded, never perturbs training numerics).
+Homogeneous event runs are bit-identical to lockstep (DESIGN.md
+section "Execution models").
 
 Sweep: enumerates hierarchy shapes for P learners (level counts
 --levels-min..--levels-max, divisor fan-outs, optional rack-tier
@@ -103,7 +114,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // no warning.
     args.check_known(&[
         "p", "model", "steps", "strategy", "levels-min", "levels-max", "k2-max", "k1-grid",
-        "no-rack", "no-local", "top", "validate-top", "collective", "out",
+        "no-rack", "no-local", "top", "validate-top", "collective", "out", "het",
+        "straggler", "seed",
     ])?;
     if args.positional.len() > 1 {
         bail!(
@@ -145,26 +157,34 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         space.local_averaging = false;
     }
 
-    let ctx = ScoreCtx::for_model(model, p, steps, strategy, CostModel::default())?;
+    let mut ctx = ScoreCtx::for_model(model, p, steps, strategy, CostModel::default())?;
+    ctx.het.apply_args(args)?;
+    ctx.het.seed = args.parse_or("seed", ctx.het.seed)?;
+    ctx.het.validate()?;
     let ranked = planner::rank(&space, &ctx)?;
     eprintln!(
-        "[sweep] p={p} model={model} horizon={steps} candidates={} k2_cap={} strategy={}",
+        "[sweep] p={p} model={model} horizon={steps} candidates={} k2_cap={} strategy={} \
+         het={} straggler={}:{}",
         ranked.len(),
         space.k2_cap(&ctx.bound),
-        strategy.name()
+        strategy.name(),
+        ctx.het.het,
+        ctx.het.straggler_prob,
+        ctx.het.straggler_mult,
     );
 
     let top: usize = args.parse_or("top", 20usize)?;
     println!(
-        "{:<4} {:<28} {:>14} {:>12} {:>12} {:>12} {:>6}",
-        "rank", "candidate", "time_to_tgt_s", "comm_s", "comm_MB", "bound", "c3.5"
+        "{:<4} {:<28} {:>14} {:>12} {:>12} {:>12} {:>12} {:>6}",
+        "rank", "candidate", "time_to_tgt_s", "makespan_s", "comm_s", "comm_MB", "bound", "c3.5"
     );
     for (i, r) in ranked.iter().take(top).enumerate() {
         println!(
-            "{:<4} {:<28} {:>14.4} {:>12.4} {:>12.2} {:>12.6} {:>6}",
+            "{:<4} {:<28} {:>14.4} {:>12.4} {:>12.4} {:>12.2} {:>12.6} {:>6}",
             i,
             r.candidate.label(),
             r.score.time_to_target,
+            r.score.makespan_seconds,
             r.score.comm_seconds,
             r.score.comm_bytes as f64 / 1e6,
             r.score.bound,
@@ -180,12 +200,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let validations = planner::validate_top(&ranked, &ctx, model, validate_top, collective)?;
     for v in &validations {
         println!(
-            "validated {:<28} steps={:<5} comm_s modelled={:.6} measured={:.6} delta={:+.3e} train_loss={:.4}",
+            "validated {:<28} steps={:<5} comm_s modelled={:.6} measured={:.6} delta={:+.3e} \
+             makespan_s modelled={:.6} measured={:.6} delta={:+.3e} train_loss={:.4}",
             v.label,
             v.total_steps,
             v.modelled_comm_seconds,
             v.measured_comm_seconds,
             v.delta_seconds,
+            v.modelled_makespan_seconds,
+            v.measured_makespan_seconds,
+            v.makespan_delta_seconds,
             v.final_train_loss
         );
     }
@@ -205,16 +229,25 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // A misspelled flag would otherwise be silently ignored and the run
+    // would train a different configuration than asked.
+    args.check_known(&[
+        "config", "model", "backend", "p", "s", "k1", "k2", "levels", "ks", "links",
+        "collective", "pool-threads", "exec", "het", "straggler", "epochs", "train-n",
+        "test-n", "lr", "seed", "noise", "radius", "momentum", "strategy", "record-steps",
+        "init-params", "save-params", "trace", "out", "help",
+    ])?;
     let cfg = RunConfig::from_args(args)?;
     let topo = cfg.hierarchy()?;
     eprintln!(
-        "[train] {} backend={:?} P={} levels={:?} K={:?} collective={} epochs={}",
+        "[train] {} backend={:?} P={} levels={:?} K={:?} collective={} exec={} epochs={}",
         cfg.model,
         cfg.backend,
         cfg.p,
         topo.sizes(),
         cfg.base_intervals(),
         cfg.collective.name(),
+        cfg.exec.name(),
         cfg.epochs
     );
     let rec = driver::run(&cfg)?;
@@ -240,15 +273,25 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     for (lev, ls) in rec.comm_levels.iter().enumerate() {
+        let stall = rec.level_stall_seconds.get(lev).copied().unwrap_or(0.0);
         println!(
-            "level {lev} (groups of {:>4}, {:?}): {:>8} reductions  {:>14} bytes  {:.4}s",
+            "level {lev} (groups of {:>4}, {:?}): {:>8} reductions  {:>14} bytes  {:.4}s  stall {:.4}s",
             topo.size(lev),
             topo.link(lev),
             ls.reductions,
             ls.bytes,
-            ls.seconds
+            ls.seconds,
+            stall
         );
     }
+    println!(
+        "exec {}: makespan {:.4}s  blocked {:.4}s  idle {:.4}s  straggler_events {}",
+        rec.exec_model,
+        rec.makespan_seconds,
+        rec.blocked_seconds.iter().sum::<f64>(),
+        rec.idle_seconds.iter().sum::<f64>(),
+        rec.straggler_events
+    );
     if let Some(out) = args.get("out") {
         rec.write_json(std::path::Path::new(out))?;
         eprintln!("wrote {out}");

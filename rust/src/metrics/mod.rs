@@ -15,7 +15,9 @@ pub struct EpochStats {
     pub train_acc: f64,
     pub test_loss: f64,
     pub test_acc: f64,
-    /// Modelled (simulated-cluster) seconds elapsed so far, compute + comm.
+    /// Modelled (simulated-cluster) seconds elapsed so far: the execution
+    /// model's clock (lockstep: compute + comm; event: the timeline's
+    /// makespan across learners).
     pub sim_seconds: f64,
     /// Real wall seconds spent so far in this process.
     pub wall_seconds: f64,
@@ -47,11 +49,32 @@ pub struct RunRecord {
     /// topology; surfaces `--links` overrides in the JSON output).
     pub level_links: Vec<String>,
     pub total_steps: u64,
+    /// Base-rate compute seconds (steps × `sim_step_seconds`; the
+    /// homogeneous-compute floor, independent of the execution model).
     pub sim_compute_seconds: f64,
     /// Reduction-event trace (populated when `record_trace` is set).
     pub trace: Vec<TraceEvent>,
     /// Final averaged parameters (populated when `keep_final_params`).
     pub final_params: Option<crate::params::FlatParams>,
+    /// Execution model that accounted the run's virtual time
+    /// (`lockstep` / `event`; `sim::ExecKind::name`).
+    pub exec_model: String,
+    /// Modelled wall clock of the run: the timeline's makespan (max over
+    /// learner clocks).  Under lockstep this equals compute + comm; under
+    /// the event model it reflects per-learner rates, straggler spikes,
+    /// and barrier waits.
+    pub makespan_seconds: f64,
+    /// Per-learner compute seconds (rate ramp and spikes included).
+    pub busy_seconds: Vec<f64>,
+    /// Per-learner seconds spent blocked at barriers for slower peers.
+    pub blocked_seconds: Vec<f64>,
+    /// Per-learner `makespan − own clock` tail.
+    pub idle_seconds: Vec<f64>,
+    /// Barrier wait seconds attributed to each hierarchy level (parallel
+    /// to `comm_levels`): where the straggler tax is actually paid.
+    pub level_stall_seconds: Vec<f64>,
+    /// Straggler spikes that fired over the run.
+    pub straggler_events: u64,
 }
 
 impl RunRecord {
@@ -117,11 +140,20 @@ impl RunRecord {
             }
             comm_levels.push(o);
         }
+        let mut exec = Json::obj();
+        exec.set("model", Json::from(self.exec_model.as_str()))
+            .set("makespan_seconds", Json::from(self.makespan_seconds))
+            .set("busy_seconds", Json::from_f64_slice(&self.busy_seconds))
+            .set("blocked_seconds", Json::from_f64_slice(&self.blocked_seconds))
+            .set("idle_seconds", Json::from_f64_slice(&self.idle_seconds))
+            .set("level_stall_seconds", Json::from_f64_slice(&self.level_stall_seconds))
+            .set("straggler_events", Json::from(self.straggler_events as usize));
         let mut o = Json::obj();
         o.set("label", Json::from(self.label.as_str()))
             .set("epochs", Json::Arr(epochs))
             .set("comm", comm)
             .set("comm_levels", Json::Arr(comm_levels))
+            .set("exec", exec)
             .set("total_steps", Json::from(self.total_steps as usize))
             .set("sim_compute_seconds", Json::from(self.sim_compute_seconds))
             .set("sim_total_seconds", Json::from(self.sim_total_seconds()))
@@ -151,7 +183,10 @@ impl RunRecord {
     /// golden-trace regression suite (rust/tests/golden_trace.rs): drops
     /// the wall-clock fields (the only nondeterministic ones) and appends
     /// the reduction-event trace, so two bit-identical runs serialize to
-    /// byte-identical JSON on any host.  Callers must ensure no epoch
+    /// byte-identical JSON on any host.  The `exec` block (timeline
+    /// breakdown) is included: under homogeneous compute it is identical
+    /// across `lockstep`/`event` except for the `model` name — the
+    /// equivalence the golden suite pins.  Callers must ensure no epoch
     /// skipped its eval (`eval_every = 1`): NaN placeholders are not
     /// representable in JSON.
     pub fn to_golden_json(&self) -> Json {
@@ -292,6 +327,32 @@ mod tests {
         let mut r2 = r.clone();
         r2.epochs[0].wall_seconds = 456.0;
         assert_eq!(r.to_golden_json().pretty(), r2.to_golden_json().pretty());
+    }
+
+    #[test]
+    fn exec_breakdown_serializes() {
+        let mut r = record("e", 1);
+        r.exec_model = "event".into();
+        r.makespan_seconds = 2.5;
+        r.busy_seconds = vec![1.0, 1.5];
+        r.blocked_seconds = vec![0.5, 0.0];
+        r.idle_seconds = vec![0.0, 0.25];
+        r.level_stall_seconds = vec![0.1, 0.4];
+        r.straggler_events = 3;
+        for j in [r.to_json(), r.to_golden_json()] {
+            let parsed = Json::parse(&j.pretty()).unwrap();
+            let e = parsed.req("exec").unwrap();
+            assert_eq!(e.req("model").unwrap().as_str().unwrap(), "event");
+            assert_eq!(e.req("makespan_seconds").unwrap().as_f64().unwrap(), 2.5);
+            assert_eq!(e.req("busy_seconds").unwrap().as_arr().unwrap().len(), 2);
+            assert_eq!(
+                e.req("level_stall_seconds").unwrap().as_arr().unwrap()[1]
+                    .as_f64()
+                    .unwrap(),
+                0.4
+            );
+            assert_eq!(e.req("straggler_events").unwrap().as_usize().unwrap(), 3);
+        }
     }
 
     #[test]

@@ -23,10 +23,14 @@
 //!   communication deltas (near-zero by construction: the closed form and
 //!   the engine share the cost model — a drift here is a regression).
 //!
-//! Ranking: `time_to_target = (compute_s + comm_s) · bound / bound_floor`
-//! — modelled wall seconds for the step horizon, inflated by how much
-//! looser the candidate's fixed-budget convergence bound is than the best
-//! bound in the search space.  Deterministic: no RNG, stable tie-breaks.
+//! Ranking: `time_to_target = makespan_s · bound / bound_floor` — the
+//! candidate's straggler-aware modelled wall clock for the step horizon
+//! (equal to `compute_s + comm_s` under homogeneous compute; the event
+//! timeline's makespan when the sweep is given `--het`/`--straggler`),
+//! inflated by how much looser the candidate's fixed-budget convergence
+//! bound is than the best bound in the search space.  Deterministic: the
+//! only randomness is the seeded straggler stream, fixed per sweep;
+//! stable tie-breaks.
 //!
 //! The `sweep` CLI subcommand (main.rs) drives this end to end and emits a
 //! machine-readable `SWEEP_<p>.json` report (see [`report`]); the
@@ -46,6 +50,7 @@ use crate::driver;
 use crate::metrics::RunRecord;
 use crate::native::NativeMlp;
 use crate::optimizer::LrSchedule;
+use crate::sim::{self, HetSpec};
 use crate::theory::{self, BoundParams};
 use crate::topology::{HierTopology, LinkClass};
 use crate::util::rng::Pcg32;
@@ -137,6 +142,13 @@ pub struct ScoreCtx {
     /// Modelled compute seconds per synchronous step
     /// ([`coordinator::sim_step_seconds`]).
     pub step_seconds: f64,
+    /// Heterogeneity the candidates are priced against (`--het` /
+    /// `--straggler` on the sweep CLI).  Homogeneous (the default) keeps
+    /// the legacy closed-form `compute + comm` makespan; otherwise each
+    /// candidate's schedule is replayed through the virtual-time event
+    /// engine ([`sim::replay_timeline`]) so frequent wide barriers pay
+    /// the straggler tax they would pay in an event-mode run.
+    pub het: HetSpec,
 }
 
 impl ScoreCtx {
@@ -174,6 +186,7 @@ impl ScoreCtx {
             n_params,
             horizon,
             step_seconds: coordinator::sim_step_seconds(batch, n_params),
+            het: HetSpec::default(),
         })
     }
 }
@@ -396,8 +409,13 @@ pub struct Score {
     pub comm_seconds: f64,
     /// Total bytes crossing the network over the horizon.
     pub comm_bytes: u64,
-    /// Modelled compute seconds over the horizon.
+    /// Modelled compute seconds over the horizon (base rate).
     pub compute_seconds: f64,
+    /// Straggler-aware modelled wall clock over the horizon: equal to
+    /// `compute + comm` under homogeneous compute, otherwise the makespan
+    /// of the candidate's schedule replayed through the event timeline
+    /// (heterogeneous rates + seeded straggler spikes).
+    pub makespan_seconds: f64,
     /// Fixed-budget convergence bound B(K1, K2, S) of Theorem 3.4.
     pub bound: f64,
     /// Whether the candidate's K2 satisfies step-size condition (3.5).
@@ -423,6 +441,7 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
     let counts = sched.reduction_counts(ctx.horizon);
     let msg = ctx.n_params * 4;
     let mut levels = Vec::with_capacity(topo.n_levels());
+    let mut sec_per_events = Vec::with_capacity(topo.n_levels());
     let mut comm_seconds = 0.0f64;
     let mut comm_bytes = 0u64;
     for l in 0..topo.n_levels() {
@@ -443,6 +462,7 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
                     topo.n_groups(l) as u64,
                 )
             };
+        sec_per_events.push(sec_per_event);
         let seconds = events as f64 * sec_per_event;
         let bytes = events * groups * bytes_per_group;
         comm_seconds += seconds;
@@ -459,10 +479,25 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
     }
     let (k1, k2, s) = cand.k1k2s();
     let bound = theory::thm34_budget_bound(&ctx.bound, ctx.horizon, k1, k2, s.max(1));
+    let compute_seconds = ctx.horizon as f64 * ctx.step_seconds;
+    // Homogeneous compute keeps the exact closed form (bit-stable with the
+    // pre-event-engine ranking); heterogeneous contexts replay the
+    // schedule through the virtual timeline so barrier waits are priced.
+    // Known optimization if het sweeps ever feel slow: the per-learner
+    // step-duration stream depends only on (P, het, seed) — one duration
+    // matrix could be precomputed per ScoreCtx and shared across
+    // candidates, leaving only the O(horizon·P) barrier walk per replay.
+    let makespan_seconds = if ctx.het.is_homogeneous() {
+        compute_seconds + comm_seconds
+    } else {
+        sim::replay_timeline(&topo, &sched, ctx.horizon, ctx.step_seconds, &sec_per_events, &ctx.het)
+            .makespan_seconds
+    };
     Ok(Score {
         comm_seconds,
         comm_bytes,
-        compute_seconds: ctx.horizon as f64 * ctx.step_seconds,
+        compute_seconds,
+        makespan_seconds,
         bound,
         condition_35: ctx.bound.condition_35(k2),
         time_to_target: f64::NAN,
@@ -495,8 +530,7 @@ pub fn rank(space: &SweepSpace, ctx: &ScoreCtx) -> Result<Vec<Ranked>> {
         .collect::<Result<Vec<_>>>()?;
     let floor = ranked.iter().map(|r| r.score.bound).fold(f64::INFINITY, f64::min);
     for r in &mut ranked {
-        r.score.time_to_target =
-            (r.score.compute_seconds + r.score.comm_seconds) * (r.score.bound / floor);
+        r.score.time_to_target = r.score.makespan_seconds * (r.score.bound / floor);
     }
     ranked.sort_by(|a, b| {
         a.score
@@ -579,6 +613,15 @@ pub struct Validation {
     pub measured_level_seconds: Vec<f64>,
     pub modelled_comm_bytes: u64,
     pub measured_comm_bytes: u64,
+    /// The score's makespan at the run's actual step count — the quantity
+    /// the ranking orders by.
+    pub modelled_makespan_seconds: f64,
+    /// The run's own timeline makespan.  Heterogeneous validations run
+    /// `--exec event` under the sweep's het spec, so a drift between
+    /// `sim::replay_timeline` and the engine's timeline shows up here.
+    pub measured_makespan_seconds: f64,
+    /// measured − modelled makespan (near-zero by construction).
+    pub makespan_delta_seconds: f64,
     pub final_train_loss: f64,
     pub final_test_acc: f64,
 }
@@ -598,6 +641,16 @@ pub fn validate(
     // delta would be spurious for non-default `--strategy`/cost settings.
     cfg.strategy = ctx.strategy;
     cfg.cost = ctx.cost;
+    // A heterogeneous sweep ranks by the event timeline's makespan, so the
+    // validation run must execute under the same event model and het spec
+    // (seed included — the run's straggler streams derive from cfg.seed),
+    // or the quantity driving the ranking would never be checked against a
+    // measured run.
+    if !ctx.het.is_homogeneous() {
+        cfg.exec = crate::sim::ExecKind::Event;
+        cfg.set_het_spec(&ctx.het);
+        cfg.validate()?;
+    }
     let rec = validation_record(&cfg)?;
     let vctx = ScoreCtx { horizon: rec.total_steps.max(1), ..*ctx };
     let vscore = score(cand, &vctx)?;
@@ -614,6 +667,9 @@ pub fn validate(
         measured_level_seconds: rec.comm_levels.iter().map(|l| l.seconds).collect(),
         modelled_comm_bytes: vscore.comm_bytes,
         measured_comm_bytes,
+        modelled_makespan_seconds: vscore.makespan_seconds,
+        measured_makespan_seconds: rec.makespan_seconds,
+        makespan_delta_seconds: rec.makespan_seconds - vscore.makespan_seconds,
         final_train_loss: rec.final_train_loss(),
         final_test_acc: rec.final_test_acc(),
     })
@@ -784,6 +840,102 @@ mod tests {
             let (_, k2, _) = r.candidate.k1k2s();
             assert!(k2 <= 8, "{} exceeds --k2-max", r.candidate.label());
         }
+    }
+
+    #[test]
+    fn homogeneous_makespan_is_the_legacy_sum() {
+        let ctx = ScoreCtx { horizon: 256, ..ctx16() };
+        let cand = Candidate::with_default_links(vec![4, 16], vec![2, 8]).unwrap();
+        let s = score(&cand, &ctx).unwrap();
+        assert_eq!(
+            s.makespan_seconds.to_bits(),
+            (s.compute_seconds + s.comm_seconds).to_bits(),
+            "homogeneous scoring must stay bit-stable with the pre-event ranking"
+        );
+    }
+
+    #[test]
+    fn straggler_aware_makespan_prices_barrier_waits() {
+        let mut ctx = ScoreCtx { horizon: 512, ..ctx16() };
+        ctx.het = HetSpec { het: 0.3, straggler_prob: 0.1, straggler_mult: 4.0, seed: 7 };
+        let cand = Candidate::with_default_links(vec![4, 16], vec![2, 8]).unwrap();
+        let s = score(&cand, &ctx).unwrap();
+        // Heterogeneous learners can only extend the timeline: the slowest
+        // learner's busy time alone exceeds the base compute.
+        assert!(
+            s.makespan_seconds > s.compute_seconds + s.comm_seconds,
+            "makespan {} vs sum {}",
+            s.makespan_seconds,
+            s.compute_seconds + s.comm_seconds
+        );
+        // ... deterministically (same seed, same bits).
+        let s2 = score(&cand, &ctx).unwrap();
+        assert_eq!(s.makespan_seconds.to_bits(), s2.makespan_seconds.to_bits());
+        // Ranking under heterogeneity stays fully ordered and finite.
+        let space = SweepSpace::new(16).unwrap();
+        let ranked = rank(&space, &ctx).unwrap();
+        for w in ranked.windows(2) {
+            assert!(w[0].score.time_to_target <= w[1].score.time_to_target);
+        }
+        for r in &ranked {
+            assert!(r.score.makespan_seconds.is_finite() && r.score.makespan_seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn stragglers_tax_frequent_global_schedules_hardest() {
+        // The event-engine advantage the planner must see: under random
+        // spikes, a sync-SGD-like schedule pays max-over-P spikes at every
+        // step, while a sparse-global schedule lets spikes average out
+        // between barriers.  Relative inflation must order that way.
+        let mut ctx = ScoreCtx { horizon: 512, ..ctx16() };
+        ctx.het = HetSpec { het: 0.0, straggler_prob: 0.2, straggler_mult: 3.0, seed: 11 };
+        let inflation = |ks: Vec<u64>| {
+            let cand = Candidate::with_default_links(vec![1, 16], ks).unwrap();
+            let s = score(&cand, &ctx).unwrap();
+            s.makespan_seconds / (s.compute_seconds + s.comm_seconds)
+        };
+        let sync = inflation(vec![1, 1]);
+        let sparse = inflation(vec![1, 32]);
+        assert!(sync > sparse, "sync inflation {sync} vs sparse {sparse}");
+    }
+
+    #[test]
+    fn validation_measures_the_makespan_the_ranking_orders_by() {
+        let cand = Candidate::with_default_links(vec![4, 16], vec![2, 8]).unwrap();
+        // Homogeneous: the lockstep run's step-accumulated clock must agree
+        // with the closed-form compute + comm sum (to fp-accumulation
+        // tolerance).
+        let hom_ctx = ctx16();
+        let hom = validate(&cand, &hom_ctx, "quickstart", CollectiveKind::Simulated).unwrap();
+        assert!(hom.measured_makespan_seconds > 0.0);
+        let rel = hom.makespan_delta_seconds.abs() / hom.measured_makespan_seconds;
+        assert!(
+            rel < 1e-9,
+            "homogeneous makespan drift: modelled {} vs measured {}",
+            hom.modelled_makespan_seconds,
+            hom.measured_makespan_seconds
+        );
+        // Heterogeneous: the validation run executes under the event model
+        // with the sweep's het spec, so replay_timeline and the engine's
+        // timeline walk the identical call sequence — a barrier-rule or
+        // level-indexing drift between them shows up as a nonzero delta.
+        let mut het_ctx = ctx16();
+        het_ctx.het =
+            HetSpec { het: 0.3, straggler_prob: 0.05, straggler_mult: 4.0, seed: 13 };
+        let het = validate(&cand, &het_ctx, "quickstart", CollectiveKind::Simulated).unwrap();
+        let rel = het.makespan_delta_seconds.abs() / het.measured_makespan_seconds;
+        assert!(
+            rel < 1e-9,
+            "het makespan drift: modelled {} vs measured {}",
+            het.modelled_makespan_seconds,
+            het.measured_makespan_seconds
+        );
+        // ... and the het makespan genuinely exceeds the homogeneous one.
+        assert!(het.measured_makespan_seconds > hom.measured_makespan_seconds);
+        // Comm parity still holds under the event model (time model only).
+        let rel = het.delta_seconds.abs() / het.measured_comm_seconds.max(1e-30);
+        assert!(rel < 1e-9, "het comm drift {rel}");
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! {
 //!   "p": 16, "model": "quickstart", "horizon_steps": 20000,
 //!   "n_params": 2762, "bytes_per_reduction": 11048, "strategy": "ring",
+//!   "het": {"het": 0.0, "straggler_prob": 0.0, "straggler_mult": 4.0,
+//!           "seed": 42},
 //!   "space": {"min_levels": 2, "max_levels": 4, "k1_grid": [1,2,4],
 //!             "k2_max": 256, "use_rack": true, "local_averaging": true},
 //!   "k2_cap_condition_35": 199,
@@ -16,6 +18,7 @@
 //!      "links": ["intra","inter"], "k1": 2, "k2": 8, "s": 4,
 //!      "score": {"time_to_target": 1.2, "comm_seconds": 0.3,
 //!                "comm_bytes": 123, "compute_seconds": 0.9,
+//!                "makespan_seconds": 1.2,
 //!                "bound": 0.01, "condition_35": true},
 //!      "cost_levels": [{"level": 0, "size": 4, "link": "intra",
 //!                       "events": 1, "reductions": 4, "bytes": 1,
@@ -25,6 +28,9 @@
 //!                     "modelled_comm_bytes": 1, "measured_comm_bytes": 1,
 //!                     "modelled_level_seconds": [..],
 //!                     "measured_level_seconds": [..],
+//!                     "modelled_makespan_seconds": 1.2,
+//!                     "measured_makespan_seconds": 1.2,
+//!                     "makespan_delta_seconds": 0.0,
 //!                     "final_train_loss": 1.0, "final_test_acc": 0.5}}
 //!   ]
 //! }
@@ -50,6 +56,9 @@ fn validation_json(v: &Validation) -> Json {
         .set("measured_comm_bytes", Json::from(v.measured_comm_bytes as usize))
         .set("modelled_level_seconds", Json::from_f64_slice(&v.modelled_level_seconds))
         .set("measured_level_seconds", Json::from_f64_slice(&v.measured_level_seconds))
+        .set("modelled_makespan_seconds", Json::from(v.modelled_makespan_seconds))
+        .set("measured_makespan_seconds", Json::from(v.measured_makespan_seconds))
+        .set("makespan_delta_seconds", Json::from(v.makespan_delta_seconds))
         .set("final_train_loss", Json::from(v.final_train_loss))
         .set("final_test_acc", Json::from(v.final_test_acc));
     o
@@ -65,6 +74,7 @@ fn candidate_json(rank: usize, r: &Ranked, validation: Option<&Validation>) -> J
         .set("comm_seconds", Json::from(s.comm_seconds))
         .set("comm_bytes", Json::from(s.comm_bytes as usize))
         .set("compute_seconds", Json::from(s.compute_seconds))
+        .set("makespan_seconds", Json::from(s.makespan_seconds))
         .set("bound", Json::from(s.bound))
         .set("condition_35", Json::from(s.condition_35));
     let mut cost_levels = Vec::with_capacity(s.levels.len());
@@ -123,6 +133,13 @@ pub fn sweep_json(
         .enumerate()
         .map(|(i, r)| candidate_json(i, r, validations.get(i)))
         .collect();
+    // The heterogeneity regime the makespans were priced against — a
+    // report is not reproducible without it.
+    let mut het = Json::obj();
+    het.set("het", Json::from(ctx.het.het))
+        .set("straggler_prob", Json::from(ctx.het.straggler_prob))
+        .set("straggler_mult", Json::from(ctx.het.straggler_mult))
+        .set("seed", Json::from(ctx.het.seed as usize));
     let mut o = Json::obj();
     o.set("p", Json::from(space.p))
         .set("model", Json::from(model))
@@ -130,6 +147,7 @@ pub fn sweep_json(
         .set("n_params", Json::from(ctx.n_params))
         .set("bytes_per_reduction", Json::from(ctx.n_params * 4))
         .set("strategy", Json::from(ctx.strategy.name()))
+        .set("het", het)
         .set("space", sp)
         .set("k2_cap_condition_35", Json::from(space.k2_cap(&ctx.bound) as usize))
         .set("candidates", Json::Arr(candidates));

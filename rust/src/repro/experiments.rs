@@ -471,25 +471,32 @@ pub fn adaptive(ctx: &ReproCtx) -> Result<()> {
 // 2-level shape still paid on the global fabric.
 // ---------------------------------------------------------------------------
 
-pub fn deep(ctx: &ReproCtx) -> Result<()> {
-    println!("\n=== Deep hierarchy: 2-level vs 3-level at P=32, equal data budget ===");
-    let p = 32usize;
-    // 2-level: the paper's shape, S=4, K=[4,16].
-    let two = ctx.cifar_cfg("resnet18_sim", p, 4, 4, 16);
-    // 3-level: GPU quads -> nodes of 16 -> the 32-learner rack, reducing
-    // each tier 4x less often than the one below.
-    let mut three = ctx.cifar_cfg("resnet18_sim", p, 4, 4, 16);
-    three.set_levels(vec![4, 16, 32]);
-    three.set_ks(vec![4, 16, 64]);
-    let runs =
-        [("two-level-s4", two), ("three-level-4x16x32", three)];
+pub fn deep(ctx: &ReproCtx, from_sweep: Option<&str>) -> Result<()> {
+    let runs = match from_sweep {
+        // Planner follow-through: train the sweep's winner instead of the
+        // hand-picked pair, against the best 2-level entry of the same
+        // report as the paper-shaped reference.
+        Some(path) => sweep_deep_runs(ctx, std::path::Path::new(path))?,
+        None => {
+            println!("\n=== Deep hierarchy: 2-level vs 3-level at P=32, equal data budget ===");
+            let p = 32usize;
+            // 2-level: the paper's shape, S=4, K=[4,16].
+            let two = ctx.cifar_cfg("resnet18_sim", p, 4, 4, 16);
+            // 3-level: GPU quads -> nodes of 16 -> the 32-learner rack,
+            // reducing each tier 4x less often than the one below.
+            let mut three = ctx.cifar_cfg("resnet18_sim", p, 4, 4, 16);
+            three.set_levels(vec![4, 16, 32]);
+            three.set_ks(vec![4, 16, 64]);
+            vec![("two-level-s4".to_string(), two), ("three-level-4x16x32".to_string(), three)]
+        }
+    };
     let mut records = Vec::new();
     println!(
         "{:<24} {:>12} {:>10} {:>12} {:>12} {:>14}",
         "run", "tail_loss", "test_acc", "glob_reds", "loc_reds", "comm_model_s"
     );
     for (label, cfg) in runs {
-        let rec = run_labeled(&cfg, label)?;
+        let rec = run_labeled(&cfg, &label)?;
         println!(
             "{:<24} {:>12.4} {:>10.4} {:>12} {:>12} {:>14.4}",
             label,
@@ -502,16 +509,107 @@ pub fn deep(ctx: &ReproCtx) -> Result<()> {
         let topo = cfg.hierarchy()?;
         for (lev, ls) in rec.comm_levels.iter().enumerate() {
             println!(
-                "    level {lev} (groups of {:>3}): {:>8} reductions  {:.4}s",
+                "    level {lev} (groups of {:>3}): {:>8} reductions  {:.4}s  stall {:.4}s",
                 topo.size(lev),
                 ls.reductions,
-                ls.seconds
+                ls.seconds,
+                rec.level_stall_seconds.get(lev).copied().unwrap_or(0.0)
             );
         }
         records.push(rec);
     }
     println!("\nexpectation: the 3-level run fires ~4x fewer rack-wide reductions while the\nnode tier keeps learners synchronized, so modelled comm time drops without\ngiving up the convergence the 2-level shape achieves.");
     ctx.save_records("deep", &records)
+}
+
+/// Build the `repro deep` run list from a `SWEEP_<p>.json` report: the
+/// top-ranked candidate, plus the report's best 2-level candidate as the
+/// paper-shaped reference (skipped when the winner already is 2-level).
+fn sweep_deep_runs(
+    ctx: &ReproCtx,
+    path: &std::path::Path,
+) -> Result<Vec<(String, RunConfig)>> {
+    use anyhow::{anyhow, Context};
+
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading sweep report {}", path.display()))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    let model = j.req("model")?.as_str()?.to_string();
+    let p = j.req("p")?.as_usize()?;
+    let cands = j.req("candidates")?.as_arr()?;
+    if cands.is_empty() {
+        anyhow::bail!("sweep report {} ranks no candidates", path.display());
+    }
+    // A heterogeneity-ranked winner was selected for its straggler-aware
+    // makespan — replaying it under homogeneous lockstep would hide the
+    // very property it won on, so the runs inherit the report's het
+    // regime (reports from homogeneous sweeps stay lockstep).
+    let het = match j.get("het") {
+        Some(h) => crate::sim::HetSpec {
+            het: h.req("het")?.as_f64()?,
+            straggler_prob: h.req("straggler_prob")?.as_f64()?,
+            straggler_mult: h.req("straggler_mult")?.as_f64()?,
+            seed: h.req("seed")?.as_usize()? as u64,
+        },
+        None => crate::sim::HetSpec::default(),
+    };
+
+    let to_cfg = |cand: &Json| -> Result<(String, RunConfig)> {
+        let label = cand.req("label")?.as_str()?.to_string();
+        let levels = cand.req("levels")?.usize_arr()?;
+        let ks: Vec<u64> =
+            cand.req("ks")?.usize_arr()?.into_iter().map(|k| k as u64).collect();
+        let links = cand
+            .req("links")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                let s = l.as_str()?;
+                crate::topology::LinkClass::parse(s)
+                    .ok_or_else(|| anyhow!("unknown link class {s:?} in sweep report"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let (s, k1, k2) = (
+            *levels.first().ok_or_else(|| anyhow!("candidate {label} has no levels"))?,
+            *ks.first().ok_or_else(|| anyhow!("candidate {label} has no intervals"))?,
+            *ks.last().unwrap(),
+        );
+        let mut cfg = ctx.cifar_cfg(&model, p, s, k1, k2);
+        cfg.set_levels(levels);
+        cfg.set_ks(ks);
+        cfg.links = links;
+        if !het.is_homogeneous() {
+            cfg.exec = crate::sim::ExecKind::Event;
+            cfg.set_het_spec(&het);
+        }
+        cfg.validate()
+            .with_context(|| format!("sweep candidate {label} is not a valid run config"))?;
+        Ok((label, cfg))
+    };
+
+    let top = to_cfg(&cands[0])?;
+    println!(
+        "\n=== Deep hierarchy from sweep {}: top-ranked {} (model {model}, P={p}) ===",
+        path.display(),
+        top.0
+    );
+    if !het.is_homogeneous() {
+        println!(
+            "(event execution, inherited from the report: het={} straggler={}:{} seed={})",
+            het.het, het.straggler_prob, het.straggler_mult, het.seed
+        );
+    }
+    let mut runs = Vec::new();
+    // The reference goes first so the comparison reads baseline -> winner.
+    if top.1.hierarchy()?.n_levels() > 2 {
+        if let Some(two) = cands.iter().skip(1).find(|c| {
+            c.req("levels").and_then(|l| l.usize_arr()).map(|l| l.len() == 2).unwrap_or(false)
+        }) {
+            runs.push(to_cfg(two)?);
+        }
+    }
+    runs.push(top);
+    Ok(runs)
 }
 
 // ---------------------------------------------------------------------------

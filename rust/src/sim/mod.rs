@@ -1,0 +1,613 @@
+//! The execution-model layer: *when* does modelled work happen, per
+//! learner, on the simulated cluster.
+//!
+//! The paper's central trade — local reductions are cheap because they
+//! synchronize only a subgroup, global reductions are expensive because
+//! they stall all P learners — only becomes visible when learners own
+//! their clocks.  This module decouples the *time model* from the
+//! *parameter math*: the engine keeps computing parameters in the same
+//! deterministic step order under every model (so numerics are identical
+//! by construction), while the selected [`ExecModel`] accounts for how
+//! those steps and reductions land on a virtual timeline.
+//!
+//! Two models (`--exec lockstep|event`):
+//!
+//! - [`LockstepModel`] — the legacy semantics: one shared clock, every
+//!   step charges every learner the same compute time, every reduction
+//!   serializes against the shared clock (concurrent symmetric groups are
+//!   charged once, the max — same convention as `Reducer::reduce_level`).
+//! - [`EventModel`] — the virtual-time event engine: each learner has its
+//!   own clock driven by a deterministic per-learner rate ramp (`--het`)
+//!   plus seeded straggler spikes (`--straggler`, an independent `Pcg32`
+//!   stream per learner that never touches the training streams).  A
+//!   level-ℓ reduction is a **group-local barrier**: it blocks only that
+//!   group's members at their max arrival time plus the modelled
+//!   collective cost, while every other group keeps stepping.  Modelled
+//!   wall clock is the makespan of the timeline (max over learner
+//!   clocks).
+//!
+//! Determinism contract (enforced by rust/tests/golden_trace.rs and the
+//! property tests in rust/tests/hierarchy.rs): with homogeneous compute
+//! times (`het = 0`, `straggler_prob = 0`) the event model reproduces
+//! lockstep **bit for bit** — same parameters, same reduction trace, same
+//! comm bytes, and the identical timeline breakdown — because every
+//! arithmetic operation the two models perform is then the same IEEE
+//! operation in the same order.  Heterogeneity changes *time only*: the
+//! parameter path never consults the timeline.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::algorithms::HierSchedule;
+use crate::topology::HierTopology;
+use crate::util::rng::Pcg32;
+
+/// Which execution model accounts the run's virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecKind {
+    /// One shared clock; reductions serialize against it (legacy).
+    Lockstep,
+    /// Per-learner clocks with group-local barriers (virtual-time events).
+    Event,
+}
+
+impl ExecKind {
+    /// Parse the config/CLI spelling (`lockstep`, `event`).
+    pub fn parse(s: &str) -> Result<ExecKind> {
+        match s {
+            "lockstep" => Ok(ExecKind::Lockstep),
+            "event" => Ok(ExecKind::Event),
+            _ => bail!("unknown execution model {s:?} (lockstep|event)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecKind::Lockstep => "lockstep",
+            ExecKind::Event => "event",
+        }
+    }
+
+    /// Build the model for a run of `p` learners over an `n_levels`-deep
+    /// hierarchy whose synchronous step costs `step_seconds` at base rate.
+    pub fn build(
+        &self,
+        p: usize,
+        n_levels: usize,
+        step_seconds: f64,
+        spec: &HetSpec,
+    ) -> Box<dyn ExecModel> {
+        match self {
+            ExecKind::Lockstep => Box::new(LockstepModel::new(p, n_levels, step_seconds)),
+            ExecKind::Event => Box::new(EventModel::new(p, n_levels, step_seconds, spec)),
+        }
+    }
+}
+
+/// Heterogeneity knobs for the event model.
+///
+/// - `het` — deterministic per-learner rate spread: learner `j`'s step
+///   time is scaled by `1 + het · j/(P−1)` (learner 0 runs at base rate,
+///   learner P−1 is the slowest).  `0` = homogeneous.
+/// - `straggler_prob` / `straggler_mult` — seeded straggler spikes: each
+///   (learner, step) independently takes `straggler_mult ×` as long with
+///   probability `straggler_prob`.  Spikes draw from per-learner `Pcg32`
+///   streams forked from `seed` on a stream id distinct from every
+///   training stream, so enabling them never perturbs the parameter math.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HetSpec {
+    pub het: f64,
+    pub straggler_prob: f64,
+    pub straggler_mult: f64,
+    pub seed: u64,
+}
+
+impl Default for HetSpec {
+    fn default() -> HetSpec {
+        HetSpec { het: 0.0, straggler_prob: 0.0, straggler_mult: 4.0, seed: 42 }
+    }
+}
+
+impl HetSpec {
+    /// Reject out-of-range knobs with actionable errors (negative or
+    /// non-finite rates, probabilities outside [0, 1], speed-up
+    /// "stragglers").
+    pub fn validate(&self) -> Result<()> {
+        if !self.het.is_finite() || self.het < 0.0 {
+            bail!(
+                "--het must be a finite rate spread >= 0 (got {}): learner j's step time \
+                 scales by 1 + het*j/(P-1), so a negative spread would model \
+                 faster-than-hardware learners",
+                self.het
+            );
+        }
+        if !self.straggler_prob.is_finite() || !(0.0..=1.0).contains(&self.straggler_prob) {
+            bail!(
+                "--straggler probability must lie in [0, 1] (got {}): it is the chance any \
+                 one learner-step spikes",
+                self.straggler_prob
+            );
+        }
+        if !self.straggler_mult.is_finite() || self.straggler_mult < 1.0 {
+            bail!(
+                "--straggler multiplier must be >= 1 (got {}): a spike makes a step slower, \
+                 never faster",
+                self.straggler_mult
+            );
+        }
+        Ok(())
+    }
+
+    /// Whether this spec leaves every learner at base rate — the regime
+    /// where event mode must reproduce lockstep bit for bit.
+    pub fn is_homogeneous(&self) -> bool {
+        self.het == 0.0 && self.straggler_prob == 0.0
+    }
+
+    /// Apply the shared `--het F` / `--straggler PROB[:MULT]` CLI grammar
+    /// on top of this spec — the one place the flag spelling and the
+    /// default-multiplier fall-through live, shared by `train`, `sweep`,
+    /// and the examples (range checks stay in [`HetSpec::validate`]).
+    pub fn apply_args(&mut self, args: &crate::util::cli::Args) -> Result<()> {
+        self.het = args.parse_or("het", self.het)?;
+        if let Some(s) = args.get("straggler") {
+            let (prob, mult) = parse_straggler(s, self.straggler_mult)?;
+            self.straggler_prob = prob;
+            self.straggler_mult = mult;
+        }
+        Ok(())
+    }
+}
+
+/// Parse a `--straggler PROB[:MULT]` flag value (e.g. `0.05` or `0.05:4`).
+/// `default_mult` fills in when `:MULT` is omitted.  Range checks live in
+/// [`HetSpec::validate`].
+pub fn parse_straggler(s: &str, default_mult: f64) -> Result<(f64, f64)> {
+    let (p, m) = match s.split_once(':') {
+        Some((p, m)) => (p, Some(m)),
+        None => (s, None),
+    };
+    let prob: f64 = p
+        .trim()
+        .parse()
+        .map_err(|e| anyhow!("invalid --straggler probability {p:?}: {e} (expected PROB[:MULT], e.g. 0.05:4)"))?;
+    let mult: f64 = match m {
+        Some(m) => m
+            .trim()
+            .parse()
+            .map_err(|e| anyhow!("invalid --straggler multiplier {m:?}: {e} (expected PROB[:MULT], e.g. 0.05:4)"))?,
+        None => default_mult,
+    };
+    Ok((prob, mult))
+}
+
+/// Final timeline accounting, per learner and per hierarchy level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecBreakdown {
+    /// `ExecKind::name()` of the model that produced this breakdown.
+    pub model: &'static str,
+    /// Modelled wall clock of the whole run: max over learner clocks.
+    pub makespan_seconds: f64,
+    /// Per-learner compute time (rate ramp and spikes included).
+    pub busy_seconds: Vec<f64>,
+    /// Per-learner time spent waiting at barriers for slower peers.
+    pub blocked_seconds: Vec<f64>,
+    /// Per-learner `makespan − own clock`: time the run keeps running
+    /// after this learner's last event (zero under homogeneity).
+    pub idle_seconds: Vec<f64>,
+    /// Barrier wait time attributed to each hierarchy level (sum over the
+    /// waits its barriers caused, across all learners and events).
+    pub level_stall_seconds: Vec<f64>,
+    /// Straggler spikes that fired over the run.
+    pub straggler_events: u64,
+}
+
+/// A virtual-time execution model the engine drives step by step.
+///
+/// The engine calls [`ExecModel::on_step`] once per synchronous step
+/// (after the parameter update) and [`ExecModel::on_reduction`] for every
+/// fired reduction, in the same order the `Reducer` applies them.  Models
+/// account time only — they never influence what the engine computes.
+pub trait ExecModel {
+    fn name(&self) -> &'static str;
+
+    /// Charge one local SGD step to every learner's clock.
+    fn on_step(&mut self);
+
+    /// Charge a level-`level` reduction: every group at that level
+    /// barriers its members and pays `seconds` (one symmetric group's
+    /// modelled collective cost — groups at one level are identical in
+    /// size, link, and payload).  Size-1 levels below the top are no-ops,
+    /// mirroring `Reducer::reduce_level`.
+    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64);
+
+    /// Modelled wall clock so far (max over learner clocks).
+    fn now(&self) -> f64;
+
+    /// Snapshot the per-learner / per-level accounting.
+    fn breakdown(&self) -> ExecBreakdown;
+}
+
+/// The legacy shared-clock model: every learner is charged the same step
+/// time, every reduction stalls everyone.  Kept deliberately scalar (O(1)
+/// per step) — it is the baseline the event loop's dispatch overhead is
+/// benchmarked against (rust/benches/event_loop.rs).
+#[derive(Debug, Clone)]
+pub struct LockstepModel {
+    base: f64,
+    p: usize,
+    n_levels: usize,
+    clock: f64,
+    busy: f64,
+}
+
+impl LockstepModel {
+    pub fn new(p: usize, n_levels: usize, step_seconds: f64) -> LockstepModel {
+        LockstepModel { base: step_seconds, p, n_levels, clock: 0.0, busy: 0.0 }
+    }
+}
+
+impl ExecModel for LockstepModel {
+    fn name(&self) -> &'static str {
+        ExecKind::Lockstep.name()
+    }
+
+    fn on_step(&mut self) {
+        self.busy += self.base;
+        self.clock += self.base;
+    }
+
+    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64) {
+        if topo.size(level) <= 1 && level + 1 < topo.n_levels() {
+            return; // the reducer's no-op convention
+        }
+        self.clock += seconds;
+    }
+
+    fn now(&self) -> f64 {
+        self.clock
+    }
+
+    fn breakdown(&self) -> ExecBreakdown {
+        ExecBreakdown {
+            model: self.name(),
+            makespan_seconds: self.clock,
+            busy_seconds: vec![self.busy; self.p],
+            blocked_seconds: vec![0.0; self.p],
+            idle_seconds: vec![0.0; self.p],
+            level_stall_seconds: vec![0.0; self.n_levels],
+            straggler_events: 0,
+        }
+    }
+}
+
+/// The virtual-time event engine: per-learner clocks, group-local
+/// barriers, straggler spikes.
+///
+/// Bit-for-bit note: under a homogeneous [`HetSpec`] every operation here
+/// degenerates to the exact IEEE operation [`LockstepModel`] performs in
+/// the same order (`rate = 1.0` multiplications are exact, equal-clock
+/// maxima return the shared value, `x − x = +0.0` waits), which is what
+/// makes the homogeneous-equivalence golden tests byte-stable.
+#[derive(Debug, Clone)]
+pub struct EventModel {
+    base: f64,
+    n_levels: usize,
+    rates: Vec<f64>,
+    spike_prob: f64,
+    spike_mult: f64,
+    rngs: Vec<Pcg32>,
+    clocks: Vec<f64>,
+    busy: Vec<f64>,
+    blocked: Vec<f64>,
+    level_stalls: Vec<f64>,
+    straggler_events: u64,
+}
+
+/// Stream id of the straggler PRNGs ("SIMT"): distinct from the training
+/// streams ("HIER" in `LearnerSet::new`, the data/init streams), so the
+/// time model owns its own randomness.
+const STRAGGLER_STREAM: u64 = 0x53494D54;
+
+impl EventModel {
+    pub fn new(p: usize, n_levels: usize, step_seconds: f64, spec: &HetSpec) -> EventModel {
+        let rates = (0..p)
+            .map(|j| {
+                if p > 1 {
+                    1.0 + spec.het * j as f64 / (p - 1) as f64
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let mut root = Pcg32::new(spec.seed, STRAGGLER_STREAM);
+        EventModel {
+            base: step_seconds,
+            n_levels,
+            rates,
+            spike_prob: spec.straggler_prob,
+            spike_mult: spec.straggler_mult,
+            rngs: (0..p).map(|j| root.fork(j as u64)).collect(),
+            clocks: vec![0.0; p],
+            busy: vec![0.0; p],
+            blocked: vec![0.0; p],
+            level_stalls: vec![0.0; n_levels],
+            straggler_events: 0,
+        }
+    }
+}
+
+impl ExecModel for EventModel {
+    fn name(&self) -> &'static str {
+        ExecKind::Event.name()
+    }
+
+    fn on_step(&mut self) {
+        for j in 0..self.clocks.len() {
+            let mut dt = self.base * self.rates[j];
+            // prob = 0 draws nothing, keeping the homogeneous path free of
+            // RNG state (and bit-identical to lockstep).
+            if self.spike_prob > 0.0 && self.rngs[j].next_f64() < self.spike_prob {
+                dt *= self.spike_mult;
+                self.straggler_events += 1;
+            }
+            self.busy[j] += dt;
+            self.clocks[j] += dt;
+        }
+    }
+
+    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64) {
+        debug_assert_eq!(topo.n_levels(), self.n_levels);
+        debug_assert_eq!(topo.p(), self.clocks.len());
+        if topo.size(level) <= 1 && level + 1 < topo.n_levels() {
+            return; // the reducer's no-op convention
+        }
+        for g in 0..topo.n_groups(level) {
+            let members = topo.group_members(level, g);
+            // Group-local barrier: members meet at the slowest arrival,
+            // then pay the collective together.  Other groups' clocks are
+            // untouched — they keep stepping.
+            let arrival = members
+                .clone()
+                .map(|j| self.clocks[j])
+                .fold(f64::NEG_INFINITY, f64::max);
+            for j in members {
+                let wait = arrival - self.clocks[j];
+                self.blocked[j] += wait;
+                self.level_stalls[level] += wait;
+                self.clocks[j] = arrival + seconds;
+            }
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.clocks.iter().cloned().fold(0.0, f64::max)
+    }
+
+    fn breakdown(&self) -> ExecBreakdown {
+        let makespan = self.now();
+        ExecBreakdown {
+            model: self.name(),
+            makespan_seconds: makespan,
+            busy_seconds: self.busy.clone(),
+            blocked_seconds: self.blocked.clone(),
+            idle_seconds: self.clocks.iter().map(|&c| makespan - c).collect(),
+            level_stall_seconds: self.level_stalls.clone(),
+            straggler_events: self.straggler_events,
+        }
+    }
+}
+
+/// Drive `model` through `horizon` steps of `sched`, charging
+/// `level_seconds[l]` per level-`l` event — the one canonical loop
+/// mirroring `Engine::step`'s on_step → on_reduction call order (the
+/// planner's replay, the property tests, and the event bench all reuse
+/// it, so they cannot drift from each other).
+pub fn drive_timeline(
+    model: &mut dyn ExecModel,
+    topo: &HierTopology,
+    sched: &HierSchedule,
+    horizon: u64,
+    level_seconds: &[f64],
+) {
+    debug_assert_eq!(level_seconds.len(), topo.n_levels());
+    for t in 1..=horizon {
+        model.on_step();
+        if let Some(level) = sched.event_after(t) {
+            model.on_reduction(topo, level, level_seconds[level]);
+        }
+    }
+}
+
+/// Drive a bare event timeline (no training): `horizon` steps under
+/// `sched`, charging `level_seconds[l]` per level-`l` group event.  This
+/// is the planner's straggler-aware makespan estimator — it prices a
+/// candidate schedule against heterogeneous learners without running the
+/// engine (O(horizon · P), no allocation in the loop).
+pub fn replay_timeline(
+    topo: &HierTopology,
+    sched: &HierSchedule,
+    horizon: u64,
+    step_seconds: f64,
+    level_seconds: &[f64],
+    spec: &HetSpec,
+) -> ExecBreakdown {
+    let mut model = EventModel::new(topo.p(), topo.n_levels(), step_seconds, spec);
+    drive_timeline(&mut model, topo, sched, horizon, level_seconds);
+    model.breakdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo_2x8() -> HierTopology {
+        HierTopology::new(vec![2, 8]).unwrap()
+    }
+
+    #[test]
+    fn exec_kind_parse_and_name() {
+        for k in [ExecKind::Lockstep, ExecKind::Event] {
+            assert_eq!(ExecKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(ExecKind::parse("async").is_err());
+    }
+
+    #[test]
+    fn het_spec_validation() {
+        HetSpec::default().validate().unwrap();
+        assert!(HetSpec { het: -0.1, ..Default::default() }.validate().is_err());
+        assert!(HetSpec { het: f64::NAN, ..Default::default() }.validate().is_err());
+        assert!(HetSpec { straggler_prob: 1.5, ..Default::default() }.validate().is_err());
+        assert!(HetSpec { straggler_prob: -0.1, ..Default::default() }.validate().is_err());
+        assert!(HetSpec { straggler_mult: 0.5, ..Default::default() }.validate().is_err());
+        assert!(HetSpec { straggler_mult: f64::INFINITY, ..Default::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn straggler_flag_parses() {
+        assert_eq!(parse_straggler("0.05", 4.0).unwrap(), (0.05, 4.0));
+        assert_eq!(parse_straggler("0.1:8", 4.0).unwrap(), (0.1, 8.0));
+        assert!(parse_straggler("lots", 4.0).is_err());
+        assert!(parse_straggler("0.1:fast", 4.0).is_err());
+    }
+
+    #[test]
+    fn homogeneous_event_matches_lockstep_bitwise() {
+        let topo = topo_2x8();
+        let sched = HierSchedule::new(vec![2, 8]).unwrap();
+        let secs = [1e-4, 1e-3];
+        let mut lock = LockstepModel::new(8, 2, 1e-3);
+        let mut event = EventModel::new(8, 2, 1e-3, &HetSpec::default());
+        drive_timeline(&mut lock, &topo, &sched, 100, &secs);
+        drive_timeline(&mut event, &topo, &sched, 100, &secs);
+        assert_eq!(lock.now().to_bits(), event.now().to_bits());
+        let (bl, be) = (lock.breakdown(), event.breakdown());
+        assert_eq!(bl.makespan_seconds.to_bits(), be.makespan_seconds.to_bits());
+        for j in 0..8 {
+            assert_eq!(bl.busy_seconds[j].to_bits(), be.busy_seconds[j].to_bits());
+            assert_eq!(be.blocked_seconds[j], 0.0);
+            assert_eq!(be.idle_seconds[j], 0.0);
+        }
+        assert_eq!(be.level_stall_seconds, vec![0.0, 0.0]);
+        assert_eq!(be.straggler_events, 0);
+    }
+
+    #[test]
+    fn rate_ramp_slows_the_last_learner() {
+        let topo = topo_2x8();
+        let sched = HierSchedule::new(vec![4, 16]).unwrap();
+        let spec = HetSpec { het: 0.5, ..Default::default() };
+        let mut m = EventModel::new(8, 2, 1e-3, &spec);
+        drive_timeline(&mut m, &topo, &sched, 64, &[1e-4, 1e-3]);
+        let b = m.breakdown();
+        assert!(b.busy_seconds[7] > b.busy_seconds[0]);
+        // learner 7 is always last to arrive: it never waits, everyone
+        // else does.
+        assert_eq!(b.blocked_seconds[7], 0.0);
+        assert!(b.blocked_seconds[0] > 0.0);
+        // and the ramp stretches the makespan past the homogeneous sum
+        let hom = 64.0 * 1e-3 + 12.0 * 1e-4 + 4.0 * 1e-3; // 16 events: 12 local + 4 global
+        assert!(b.makespan_seconds > hom);
+    }
+
+    #[test]
+    fn group_local_barrier_does_not_stall_other_groups() {
+        // Level-0 barriers only sync within each group of 2: learner 0/1
+        // meet, learner 6/7 meet, but group {0,1} never waits for {6,7}.
+        let topo = topo_2x8();
+        let spec = HetSpec { het: 1.0, ..Default::default() };
+        let mut m = EventModel::new(8, 2, 1.0, &spec);
+        m.on_step();
+        m.on_reduction(&topo, 0, 0.0);
+        // after the local barrier, clocks agree within groups only
+        assert_eq!(m.clocks[0], m.clocks[1]);
+        assert_eq!(m.clocks[6], m.clocks[7]);
+        assert!(m.clocks[1] < m.clocks[6]);
+        // a global barrier then aligns everyone
+        m.on_reduction(&topo, 1, 0.0);
+        for j in 1..8 {
+            assert_eq!(m.clocks[0], m.clocks[j]);
+        }
+    }
+
+    #[test]
+    fn stall_attribution_sums_to_blocked_time() {
+        let topo = HierTopology::new(vec![2, 4, 8]).unwrap();
+        let sched = HierSchedule::new(vec![2, 4, 8]).unwrap();
+        let spec =
+            HetSpec { het: 0.3, straggler_prob: 0.2, straggler_mult: 3.0, seed: 9 };
+        let mut m = EventModel::new(8, 3, 1e-3, &spec);
+        drive_timeline(&mut m, &topo, &sched, 200, &[1e-4, 5e-4, 1e-3]);
+        let b = m.breakdown();
+        let stalls: f64 = b.level_stall_seconds.iter().sum();
+        let blocked: f64 = b.blocked_seconds.iter().sum();
+        assert!((stalls - blocked).abs() < 1e-9 * blocked.max(1.0));
+        assert!(b.straggler_events > 0);
+        assert!(b.idle_seconds.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn straggler_spikes_are_seed_deterministic() {
+        let topo = topo_2x8();
+        let sched = HierSchedule::new(vec![2, 8]).unwrap();
+        let spec =
+            HetSpec { het: 0.0, straggler_prob: 0.1, straggler_mult: 4.0, seed: 7 };
+        let run = |spec: &HetSpec| {
+            let mut m = EventModel::new(8, 2, 1e-3, spec);
+            drive_timeline(&mut m, &topo, &sched, 300, &[1e-4, 1e-3]);
+            m.breakdown()
+        };
+        let a = run(&spec);
+        let b = run(&spec);
+        assert_eq!(a.makespan_seconds.to_bits(), b.makespan_seconds.to_bits());
+        assert_eq!(a.straggler_events, b.straggler_events);
+        let c = run(&HetSpec { seed: 8, ..spec });
+        assert_ne!(a.makespan_seconds.to_bits(), c.makespan_seconds.to_bits());
+    }
+
+    #[test]
+    fn size_one_inner_level_is_a_noop() {
+        let topo = HierTopology::new(vec![1, 8]).unwrap();
+        let mut m = EventModel::new(8, 2, 1.0, &HetSpec { het: 0.5, ..Default::default() });
+        m.on_step();
+        let before: Vec<u64> = m.clocks.iter().map(|c| c.to_bits()).collect();
+        m.on_reduction(&topo, 0, 123.0);
+        let after: Vec<u64> = m.clocks.iter().map(|c| c.to_bits()).collect();
+        assert_eq!(before, after);
+        assert_eq!(m.breakdown().level_stall_seconds[0], 0.0);
+        let mut l = LockstepModel::new(8, 2, 1.0);
+        l.on_step();
+        l.on_reduction(&topo, 0, 123.0);
+        assert_eq!(l.now(), 1.0);
+    }
+
+    #[test]
+    fn replay_timeline_homogeneous_matches_closed_form() {
+        let topo = topo_2x8();
+        let sched = HierSchedule::new(vec![2, 8]).unwrap();
+        let b = replay_timeline(&topo, &sched, 64, 1e-3, &[1e-4, 1e-3], &HetSpec::default());
+        // 64 steps, 24 local events, 8 global events
+        let expect = 64.0 * 1e-3 + 24.0 * 1e-4 + 8.0 * 1e-3;
+        assert!((b.makespan_seconds - expect).abs() < 1e-12, "{}", b.makespan_seconds);
+        assert_eq!(b.level_stall_seconds, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn frequent_global_barriers_amplify_straggler_cost() {
+        // Under random spikes, a barrier every step pays max-over-P spikes
+        // every step; sparse barriers let spikes average out within the
+        // interval first.  Relative makespan inflation must reflect that.
+        let topo = HierTopology::new(vec![1, 16]).unwrap();
+        let spec =
+            HetSpec { het: 0.0, straggler_prob: 0.2, straggler_mult: 3.0, seed: 11 };
+        let run = |k: u64| {
+            let sched = HierSchedule::new(vec![k, k]).unwrap();
+            let events = 512 / k;
+            let b = replay_timeline(&topo, &sched, 512, 1e-3, &[0.0, 1e-3], &spec);
+            b.makespan_seconds / (512.0 * 1e-3 + events as f64 * 1e-3)
+        };
+        assert!(run(1) > run(32), "sync {} vs sparse {}", run(1), run(32));
+    }
+}

@@ -171,4 +171,21 @@ mod tests {
         let a = Args::parse(sv(&["--p", "xyz"]), &[]).unwrap();
         assert!(a.parse_or("p", 0usize).is_err());
     }
+
+    #[test]
+    fn exec_model_flags_are_value_flags_and_guarded() {
+        // The execution-model knobs are ordinary value flags (never
+        // switches), and misspellings must not slip past check_known.
+        let a = Args::parse(
+            sv(&["train", "--exec", "event", "--het", "0.2", "--straggler", "0.05:4"]),
+            &["record-steps", "help"],
+        )
+        .unwrap();
+        assert_eq!(a.get("exec"), Some("event"));
+        assert_eq!(a.parse_or("het", 0.0f64).unwrap(), 0.2);
+        assert_eq!(a.get("straggler"), Some("0.05:4"));
+        assert!(a.check_known(&["exec", "het", "straggler"]).is_ok());
+        let typo = Args::parse(sv(&["train", "--stragler", "0.05"]), &[]).unwrap();
+        assert!(typo.check_known(&["exec", "het", "straggler"]).is_err());
+    }
 }

@@ -6,6 +6,10 @@
 //! stripped, reduction trace included) and compared against the committed
 //! JSON under `rust/tests/golden/`.  Any change to training numerics, the
 //! schedule, the cost model, or the serialization shows up as a diff.
+//! The `validation_event_*` set repeats the scenario under `--exec event`
+//! (homogeneous — byte-equal to lockstep except the model name, which
+//! `event_homogeneous_is_bit_identical_to_lockstep` enforces directly)
+//! plus one heterogeneous straggler pin.
 //!
 //! Blessing: set `GOLDEN_BLESS=1` to regenerate the files (they are also
 //! written automatically when missing, so a fresh checkout bootstraps
@@ -22,6 +26,7 @@ use std::path::PathBuf;
 use hier_avg::comm::CollectiveKind;
 use hier_avg::metrics::RunRecord;
 use hier_avg::planner::{self, Candidate};
+use hier_avg::sim::ExecKind;
 use hier_avg::util::json::Json;
 
 fn golden_dir() -> PathBuf {
@@ -35,8 +40,46 @@ fn golden_candidate() -> Candidate {
 }
 
 fn run_with(collective: CollectiveKind) -> RunRecord {
-    let cfg = planner::validation_config(&golden_candidate(), "quickstart", collective).unwrap();
+    run_with_exec(collective, ExecKind::Lockstep)
+}
+
+fn run_with_exec(collective: CollectiveKind, exec: ExecKind) -> RunRecord {
+    let mut cfg =
+        planner::validation_config(&golden_candidate(), "quickstart", collective).unwrap();
+    cfg.exec = exec;
+    cfg.validate().unwrap();
     planner::validation_record(&cfg).unwrap()
+}
+
+/// The heterogeneous scenario pinned by the straggler golden: the same
+/// topology/schedule under the event model with a rate ramp + seeded
+/// spikes.  Parameters must stay bit-identical to the homogeneous runs —
+/// heterogeneity is a time model only.
+fn run_straggler() -> RunRecord {
+    let mut cfg = planner::validation_config(
+        &golden_candidate(),
+        "quickstart",
+        CollectiveKind::Simulated,
+    )
+    .unwrap();
+    cfg.exec = ExecKind::Event;
+    cfg.het = 0.25;
+    cfg.straggler_prob = 0.1;
+    cfg.straggler_mult = 4.0;
+    cfg.validate().unwrap();
+    planner::validation_record(&cfg).unwrap()
+}
+
+/// The golden JSON with the execution-model *name* neutralized: the
+/// determinism contract says a homogeneous event run matches lockstep on
+/// every byte of the golden view except `exec.model` itself.
+fn neutralize_exec_model(mut j: Json) -> Json {
+    if let Json::Obj(ref mut root) = j {
+        if let Some(Json::Obj(exec)) = root.get_mut("exec") {
+            exec.insert("model".to_string(), Json::Str("-".to_string()));
+        }
+    }
+    j
 }
 
 /// Compare `rec` against the committed golden `name`.json, blessing it
@@ -93,6 +136,85 @@ fn golden_trace_sharded() {
 #[test]
 fn golden_trace_pooled() {
     check_golden("validation_pooled", &run_with(CollectiveKind::Pooled { threads: 2 }));
+}
+
+#[test]
+fn golden_trace_event_simulated() {
+    check_golden(
+        "validation_event_simulated",
+        &run_with_exec(CollectiveKind::Simulated, ExecKind::Event),
+    );
+}
+
+#[test]
+fn golden_trace_event_sharded() {
+    check_golden(
+        "validation_event_sharded",
+        &run_with_exec(CollectiveKind::Sharded { threads: 3 }, ExecKind::Event),
+    );
+}
+
+#[test]
+fn golden_trace_event_pooled() {
+    check_golden(
+        "validation_event_pooled",
+        &run_with_exec(CollectiveKind::Pooled { threads: 2 }, ExecKind::Event),
+    );
+}
+
+/// Pins the heterogeneous timeline itself: per-level stall attribution,
+/// busy/blocked/idle breakdown, and straggler spikes are all seeded and
+/// must stay byte-stable.
+#[test]
+fn golden_trace_event_straggler() {
+    check_golden("validation_event_straggler", &run_straggler());
+}
+
+/// The load-bearing invariant of the execution-model layer: with
+/// homogeneous compute times, `--exec event` reproduces lockstep **bit
+/// for bit** — parameters, reduction trace, comm bytes, epoch curves, and
+/// the timeline breakdown — across all three collectives.  The only
+/// permitted difference in the golden view is the model's own name.
+#[test]
+fn event_homogeneous_is_bit_identical_to_lockstep() {
+    for collective in [
+        CollectiveKind::Simulated,
+        CollectiveKind::Sharded { threads: 3 },
+        CollectiveKind::Pooled { threads: 2 },
+    ] {
+        let lockstep = run_with_exec(collective, ExecKind::Lockstep);
+        let event = run_with_exec(collective, ExecKind::Event);
+        assert_eq!(
+            neutralize_exec_model(lockstep.to_golden_json()).pretty(),
+            neutralize_exec_model(event.to_golden_json()).pretty(),
+            "homogeneous event run drifted from lockstep ({collective:?})"
+        );
+    }
+}
+
+/// Heterogeneity never touches the parameter path: a straggler-ridden
+/// event run produces the same training curves, trace steps/kinds, and
+/// comm account as lockstep — only the time fields move.
+#[test]
+fn straggler_run_training_numerics_match_lockstep() {
+    let lockstep = run_with(CollectiveKind::Simulated);
+    let strag = run_straggler();
+    assert_eq!(lockstep.total_steps, strag.total_steps);
+    for (x, y) in lockstep.epochs.iter().zip(&strag.epochs) {
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits());
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
+    }
+    assert_eq!(lockstep.comm, strag.comm);
+    assert_eq!(lockstep.trace.len(), strag.trace.len());
+    for (a, b) in lockstep.trace.iter().zip(&strag.trace) {
+        assert_eq!((a.step, a.kind), (b.step, b.kind));
+        assert_eq!(a.seconds.to_bits(), b.seconds.to_bits());
+    }
+    // ... while the timeline actually stretched.
+    assert!(strag.makespan_seconds > lockstep.makespan_seconds);
+    assert!(strag.straggler_events > 0);
+    assert!(strag.level_stall_seconds.iter().sum::<f64>() > 0.0);
 }
 
 /// The three collectives must produce the same golden bytes — the

@@ -6,6 +6,11 @@
 //!     bit-identical to the `(p, s, k1, k2)` form;
 //! (b) the sharded thread-parallel collective is bit-identical to the
 //!     simulated reducer for random replicas;
+//! (c) the execution-model layer: homogeneous `--exec event` runs are
+//!     bit-identical to lockstep on random small topologies (params,
+//!     trace, comm, timeline breakdown), and straggler runs attribute
+//!     more barrier stall to the global tier than the local one on the
+//!     paper's 2-level K1 < K2 shape;
 //! plus end-to-end coverage of a ≥3-level hierarchy through the CLI
 //! config path with per-level reduction counts in the metrics.
 
@@ -458,6 +463,111 @@ fn flat_single_level_hierarchy_is_kavg() {
         assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
     }
     assert_eq!(rec.comm.global_reductions, rl.comm.global_reductions);
+}
+
+// ---------------------------------------------------------------------------
+// Execution-model layer: homogeneous event ≡ lockstep on random small
+// topologies, and straggler stall attribution on the paper's 2-level shape
+// ---------------------------------------------------------------------------
+
+fn assert_exec_breakdowns_identical(a: &RunRecord, b: &RunRecord) {
+    assert_eq!(a.makespan_seconds.to_bits(), b.makespan_seconds.to_bits());
+    assert_eq!(a.busy_seconds.len(), b.busy_seconds.len());
+    for (x, y) in a.busy_seconds.iter().zip(&b.busy_seconds) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert_eq!(a.blocked_seconds, b.blocked_seconds);
+    assert_eq!(a.idle_seconds, b.idle_seconds);
+    assert_eq!(a.level_stall_seconds, b.level_stall_seconds);
+    assert_eq!(a.straggler_events, b.straggler_events);
+}
+
+#[test]
+fn prop_homogeneous_event_matches_lockstep_on_random_topologies() {
+    // Valid divisor chains over small P (2-, 3-level, with degenerate
+    // size-1 and flat cases in the pool).
+    let shapes: &[&[usize]] = &[
+        &[2, 4],
+        &[4, 8],
+        &[1, 8],
+        &[2, 6],
+        &[2, 4, 8],
+        &[2, 2, 8],
+        &[8],
+    ];
+    let mut rng = Pcg32::seeded(0xE7E7);
+    for case in 0..12 {
+        let shape = shapes[rng.next_below(shapes.len() as u32) as usize];
+        // Random non-decreasing intervals per level.
+        let mut ks = Vec::with_capacity(shape.len());
+        let mut k = 1 + rng.next_below(3) as u64;
+        for _ in 0..shape.len() {
+            ks.push(k);
+            k += rng.next_below(5) as u64;
+        }
+        let mut lockstep = quick_cfg();
+        lockstep.set_levels(shape.to_vec());
+        lockstep.set_ks(ks.clone());
+        lockstep.record_trace = true;
+        lockstep.keep_final_params = true;
+        let mut event = lockstep.clone();
+        event.exec = hier_avg::sim::ExecKind::Event;
+        let ra = run_native(&lockstep);
+        let rb = run_native(&event);
+        assert_records_identical(&ra, &rb);
+        assert_eq!(ra.comm_levels, rb.comm_levels, "case {case}: {shape:?} ks {ks:?}");
+        assert_eq!(ra.trace, rb.trace, "case {case}");
+        assert_eq!(
+            ra.final_params, rb.final_params,
+            "case {case}: parameter drift between execution models"
+        );
+        assert_exec_breakdowns_identical(&ra, &rb);
+        // homogeneous: nobody ever waits or idles
+        assert!(rb.blocked_seconds.iter().all(|&x| x == 0.0), "case {case}");
+        assert!(rb.idle_seconds.iter().all(|&x| x == 0.0), "case {case}");
+        for (x, y) in ra.epochs.iter().zip(&rb.epochs) {
+            assert_eq!(x.sim_seconds.to_bits(), y.sim_seconds.to_bits(), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn straggler_stall_attribution_favors_the_global_tier() {
+    // The acceptance scenario: a 2-level K1 < K2 run under stragglers.
+    // Local barriers re-synchronize pairs every K1 = 2 steps, absorbing
+    // only the small within-pair drift; the global barrier waits for the
+    // slowest of all P learners after a whole K2 = 8 interval of
+    // accumulated cross-group drift — so the stall bill lands on the
+    // global tier.
+    let mut cfg = quick_cfg();
+    cfg.set_levels(vec![2, 8]);
+    cfg.set_ks(vec![2, 8]);
+    cfg.exec = hier_avg::sim::ExecKind::Event;
+    cfg.het = 0.4;
+    cfg.straggler_prob = 0.02;
+    cfg.straggler_mult = 4.0;
+    let rec = run_native(&cfg);
+    assert_eq!(rec.exec_model, "event");
+    assert_eq!(rec.level_stall_seconds.len(), 2);
+    let (local_stall, global_stall) = (rec.level_stall_seconds[0], rec.level_stall_seconds[1]);
+    assert!(local_stall > 0.0, "local barriers never stalled");
+    assert!(
+        global_stall >= local_stall,
+        "global stall {global_stall} < local stall {local_stall}"
+    );
+    // stall attribution is conservative: it partitions total blocked time
+    let blocked: f64 = rec.blocked_seconds.iter().sum();
+    let stalls: f64 = rec.level_stall_seconds.iter().sum();
+    assert!((blocked - stalls).abs() < 1e-9 * blocked.max(1.0));
+    // and the makespan dominates the homogeneous lockstep clock of the
+    // same shape
+    let mut lockstep_cfg = quick_cfg();
+    lockstep_cfg.set_levels(vec![2, 8]);
+    lockstep_cfg.set_ks(vec![2, 8]);
+    let lockstep = run_native(&lockstep_cfg);
+    assert!(rec.makespan_seconds > lockstep.makespan_seconds);
+    // training numerics are still bit-identical to the lockstep twin
+    assert_records_identical(&lockstep, &rec);
 }
 
 #[test]
