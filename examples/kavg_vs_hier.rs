@@ -6,12 +6,17 @@
 //!
 //!     cargo run --release --example kavg_vs_hier [--p 16] [--k 8]
 //!         [--backend xla|native] [--epochs N]
+//!         [--schedule static|adaptive[:target]|warmup[:k]]
 //!         [--exec lockstep|event] [--het F] [--straggler P[:M]]
 //!
 //! Default: event mode with a mild rate ramp and rare straggler spikes,
 //! so the stall columns are populated.  `--exec lockstep` restores the
 //! legacy shared-clock accounting (stall columns read zero; the
 //! heterogeneity knobs are ignored there — lockstep cannot express them).
+//! `--schedule` runs every row under a schedule policy (e.g.
+//! `adaptive:0.1` lets the straggler-aware controller widen each row's
+//! intervals online); `examples/adaptive_vs_static.rs` compares the
+//! policies head to head on one fixed shape.
 
 use anyhow::Result;
 
@@ -28,6 +33,7 @@ fn main() -> Result<()> {
     let backend = BackendKind::parse(args.get_or("backend", "native"))?;
     let epochs: usize = args.parse_or("epochs", 16)?;
     let exec = ExecKind::parse(args.get_or("exec", "event"))?;
+    let policy = hier_avg::algorithms::PolicyKind::parse(args.get_or("schedule", "static"))?;
     // The example's demo defaults (mild ramp, rare spikes), overridable
     // through the shared --het/--straggler grammar.
     let mut spec =
@@ -48,6 +54,7 @@ fn main() -> Result<()> {
         cfg.lr =
             LrSchedule::StepDecay { initial: 0.1, milestones: vec![(epochs * 3 / 4, 0.01)] };
         cfg.exec = exec;
+        cfg.schedule_policy = policy;
         if exec == ExecKind::Event {
             cfg.het = het;
             cfg.straggler_prob = sprob;
@@ -57,10 +64,11 @@ fn main() -> Result<()> {
     };
 
     println!(
-        "K-AVG(K={k}) vs Hier-AVG(K2={}, K1∈{{1,{}}}, S=4), P={p}, exec={}",
+        "K-AVG(K={k}) vs Hier-AVG(K2={}, K1∈{{1,{}}}, S=4), P={p}, exec={}, schedule={}",
         2 * k,
         k / 2,
-        exec.name()
+        exec.name(),
+        policy.spec()
     );
     if exec == ExecKind::Event {
         println!("event model: het={het} straggler={sprob}:{smult} (time model only — numerics match lockstep)");

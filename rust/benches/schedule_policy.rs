@@ -1,0 +1,63 @@
+//! Schedule-policy dispatch overhead: what the policy layer costs per
+//! step on the timeline hot path, at P ∈ {16, 64} over a fixed 512-step
+//! two-level schedule (K = [4, 32]).
+//!
+//! The baseline is the static policy driven through the same
+//! `drive_timeline_policy` loop the engine mirrors; the adaptive rows add
+//! the controller's observe/EWMA work (under a straggler regime so every
+//! barrier actually feeds it), and the warmup rows the per-step stage
+//! recomputation.  Controller overhead per step must stay ~0 vs static —
+//! the whole layer is a handful of integer/float ops per step
+//! (`BENCH_schedule.json`).
+
+mod benchkit;
+
+use hier_avg::algorithms::{HierSchedule, PolicyKind};
+use hier_avg::sim::{drive_timeline_policy, ExecKind, ExecModel, HetSpec};
+use hier_avg::topology::HierTopology;
+
+const STEPS: u64 = 512;
+
+fn main() {
+    let mut b = benchkit::Bench::new("schedule");
+    let base = 1e-3;
+    let level_seconds = [1e-4, 1e-3];
+    for &p in &[16usize, 64] {
+        let topo = HierTopology::new(vec![4, p]).unwrap();
+        let sched = HierSchedule::new(vec![4, 32]).unwrap();
+        let straggler =
+            HetSpec { het: 0.2, straggler_prob: 0.05, straggler_mult: 4.0, seed: 42 };
+        let mut run = |name: &str, kind: PolicyKind, spec: &HetSpec| {
+            let label = format!("policy/{name}/p{p}/512steps");
+            let spec = *spec;
+            b.bench(&label, || {
+                let mut model = ExecKind::Event.build(p, 2, base, &spec);
+                let mut policy = kind.build(1 << 16, base, p);
+                let realized = drive_timeline_policy(
+                    model.as_mut(),
+                    &topo,
+                    policy.as_mut(),
+                    &sched,
+                    STEPS,
+                    &level_seconds,
+                );
+                std::hint::black_box((model.now(), realized));
+            });
+        };
+        run("static", PolicyKind::Static, &HetSpec::default());
+        run(
+            "adaptive_homogeneous",
+            PolicyKind::Adaptive { target: 0.25, gain: 1.0 },
+            &HetSpec::default(),
+        );
+        // The controller's real cost: every barrier observes and may
+        // rewrite the table.
+        run(
+            "adaptive_straggler",
+            PolicyKind::Adaptive { target: 0.05, gain: 1.0 },
+            &straggler,
+        );
+        run("warmup", PolicyKind::Warmup { stage_steps: 64 }, &HetSpec::default());
+    }
+    b.finish();
+}

@@ -16,6 +16,12 @@
 //! property tests in rust/tests/hierarchy.rs.
 
 pub mod asgd;
+pub mod policy;
+
+pub use policy::{
+    AdaptivePolicy, PolicyKind, ScheduleChange, SchedulePolicy, ScheduleSummary, StaticPolicy,
+    WarmupPolicy,
+};
 
 use anyhow::{bail, Result};
 
@@ -161,10 +167,12 @@ impl HierSchedule {
 
     /// The level that reduces after completing step `t` (1-based), if any:
     /// the outermost level whose interval divides t, subsuming all inner
-    /// boundaries that coincide with it.
+    /// boundaries that coincide with it (the one shared rule in
+    /// [`policy::fire_level`], so the static table and the policy layer's
+    /// phase-anchored tables cannot drift).
     pub fn event_after(&self, t: u64) -> Option<usize> {
         debug_assert!(t >= 1);
-        (0..self.intervals.len()).rev().find(|&l| t % self.intervals[l] == 0)
+        policy::fire_level(&self.intervals, t)
     }
 
     /// Number of reduction events per level over `t` steps.  A step on

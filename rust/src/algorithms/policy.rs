@@ -1,0 +1,1160 @@
+//! The schedule-policy layer: *who decides* when each hierarchy tier
+//! reduces.
+//!
+//! [`crate::algorithms::HierSchedule`] is a passive interval table; this
+//! module promotes the decision into a first-class [`SchedulePolicy`]
+//! trait so the reduction cadence can react to observed runtime
+//! conditions.  Three implementations:
+//!
+//! - [`StaticPolicy`] — delegates every decision to the epoch's base
+//!   `HierSchedule`, bit-for-bit identical to the pre-policy engine (the
+//!   load-bearing invariant; golden- and property-tested).
+//! - [`AdaptivePolicy`] — the online straggler-aware K2 controller: after
+//!   every fired reduction it observes the barrier stall the event
+//!   timeline attributed to that tier and the modelled collective cost,
+//!   and widens (doubles) a tier's interval when the stall eats more than
+//!   `target` of the tier's compute budget, narrowing back toward the
+//!   base schedule when the signal fades.  Widening the outermost
+//!   interval is capped at [`crate::theory::max_k2_condition_35`] so
+//!   *adaptation* never leaves the regime where Theorem 3.4's bound is a
+//!   guarantee (a base schedule the user already configured past the
+//!   clamp is adopted verbatim, exactly as a static run would — the
+//!   controller then simply cannot widen further), and no interval ever
+//!   narrows below the base schedule, so realized global reductions
+//!   never exceed the static run's.  With `gain = 0` the controller is
+//!   neutral: decisions short-circuit to the base schedule and the
+//!   policy is bit-identical to [`StaticPolicy`].
+//! - [`WarmupPolicy`] — Adaptive-Periodic-Averaging shape (Jiang &
+//!   Agrawal 2020): dense early averaging decaying to the base schedule.
+//!   During stage `s` (each stage is `stage_steps` steps) every interval
+//!   is capped at `2^s`, so training starts near sync-SGD and relaxes to
+//!   the configured sparse schedule.
+//!
+//! **Determinism rule** (DESIGN.md §Schedule policies): a policy's only
+//! inputs are the step counter, the base schedule, and the *seeded*
+//! virtual timeline's stall/comm attribution — never the wall clock — so
+//! replaying the same seeded timeline reproduces every decision exactly.
+//! This is what lets the planner rank adaptive candidates by pure replay
+//! ([`crate::sim::drive_timeline_policy`]) and lets a checkpointed
+//! controller resume bit-identically.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::algorithms::HierSchedule;
+use crate::util::json::Json;
+
+/// Upper cap fed to [`crate::theory::max_k2_condition_35`] when deriving
+/// the adaptive controller's clamp: far above any practical interval, so
+/// the binding constraint is condition (3.5) itself.
+pub const K2_CLAMP_CAP: u64 = 1 << 20;
+
+/// Default stall-to-compute ratio above which the adaptive controller
+/// widens a tier's interval (`--schedule adaptive` with no target).
+pub const DEFAULT_ADAPTIVE_TARGET: f64 = 0.25;
+
+/// Default steps per warmup stage (`--schedule warmup` with no length).
+pub const DEFAULT_WARMUP_STAGE_STEPS: u64 = 64;
+
+/// The level (if any) that fires `rel` steps into the current phase of
+/// `intervals`: the outermost level whose interval divides `rel`,
+/// subsuming inner boundaries.  This is THE subsumption rule —
+/// [`HierSchedule::event_after`] delegates here, so the static table and
+/// the phase-anchored policy tables can never drift apart.
+pub(crate) fn fire_level(intervals: &[u64], rel: u64) -> Option<usize> {
+    (0..intervals.len()).rev().find(|&l| rel % intervals[l] == 0)
+}
+
+/// Reject a restored interval table that violates the invariants the
+/// live controller maintains (missing, length-mismatched, zero,
+/// non-monotone, or below-base entries) — the sidecar is editable JSON,
+/// and a run must fail loudly rather than fire from a corrupt table.
+fn check_restored_table(what: &str, base: &[u64], current: &[u64]) -> Result<()> {
+    if base.len() != current.len() {
+        bail!("{what} state is inconsistent: {} base / {} current entries", base.len(), current.len());
+    }
+    for (l, (&b, &c)) in base.iter().zip(current).enumerate() {
+        if b == 0 || c == 0 {
+            bail!("{what} state is inconsistent: zero interval at level {l}");
+        }
+    }
+    for w in current.windows(2) {
+        if w[0] > w[1] {
+            bail!(
+                "{what} state is inconsistent: intervals {current:?} are not \
+                 non-decreasing outward"
+            );
+        }
+    }
+    for w in base.windows(2) {
+        if w[0] > w[1] {
+            bail!(
+                "{what} state is inconsistent: base {base:?} is not non-decreasing outward"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// One interval-table change: `intervals` took effect for steps
+/// `>= step` (the trajectory entry the metrics/JSON `schedule` block
+/// records).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleChange {
+    pub step: u64,
+    pub intervals: Vec<u64>,
+}
+
+/// Which schedule policy a run uses (`--schedule`, config key
+/// `"schedule"`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicyKind {
+    /// The base `HierSchedule`, verbatim (the default).
+    Static,
+    /// Online straggler-aware controller.  `target` is the
+    /// stall-to-compute ratio that triggers widening; `gain` the EWMA
+    /// weight of each new observation (0 disables adaptation entirely —
+    /// the neutral controller, bit-identical to `Static`).
+    Adaptive { target: f64, gain: f64 },
+    /// Dense-to-sparse warmup; `stage_steps` steps per doubling stage.
+    Warmup { stage_steps: u64 },
+}
+
+impl PolicyKind {
+    /// Parse the CLI/config spelling:
+    /// `static | adaptive[:target[:gain]] | warmup[:steps]`.
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        let mut parts = s.split(':');
+        let name = parts.next().unwrap_or("");
+        let kind = match name {
+            "static" => {
+                if parts.next().is_some() {
+                    bail!("--schedule static takes no parameter (got {s:?})");
+                }
+                PolicyKind::Static
+            }
+            "adaptive" => {
+                let target = match parts.next() {
+                    None => DEFAULT_ADAPTIVE_TARGET,
+                    Some(t) => t.trim().parse().map_err(|e| {
+                        anyhow!(
+                            "invalid --schedule adaptive target {t:?}: {e} \
+                             (expected adaptive[:target[:gain]], e.g. adaptive:0.25)"
+                        )
+                    })?,
+                };
+                let gain = match parts.next() {
+                    None => 1.0,
+                    Some(g) => g.trim().parse().map_err(|e| {
+                        anyhow!(
+                            "invalid --schedule adaptive gain {g:?}: {e} \
+                             (expected adaptive[:target[:gain]], e.g. adaptive:0.25:1)"
+                        )
+                    })?,
+                };
+                if parts.next().is_some() {
+                    bail!("--schedule adaptive takes at most target:gain (got {s:?})");
+                }
+                PolicyKind::Adaptive { target, gain }
+            }
+            "warmup" => {
+                let stage_steps = match parts.next() {
+                    None => DEFAULT_WARMUP_STAGE_STEPS,
+                    Some(k) => k.trim().parse().map_err(|e| {
+                        anyhow!(
+                            "invalid --schedule warmup stage length {k:?}: {e} \
+                             (expected warmup[:steps], e.g. warmup:64)"
+                        )
+                    })?,
+                };
+                if parts.next().is_some() {
+                    bail!("--schedule warmup takes at most one parameter (got {s:?})");
+                }
+                PolicyKind::Warmup { stage_steps }
+            }
+            other => bail!(
+                "unknown schedule policy {other:?} \
+                 (static | adaptive[:target[:gain]] | warmup[:steps])"
+            ),
+        };
+        kind.validate()?;
+        Ok(kind)
+    }
+
+    /// Reject out-of-range parameters with actionable errors (also run by
+    /// `RunConfig::validate` for programmatically-built configs).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            PolicyKind::Static => Ok(()),
+            PolicyKind::Adaptive { target, gain } => {
+                if !target.is_finite() || target <= 0.0 {
+                    bail!(
+                        "adaptive schedule target must be a finite ratio > 0 (got {target}): \
+                         it is the fraction of a tier's compute budget lost to barrier \
+                         stall above which the tier's interval widens"
+                    );
+                }
+                if !gain.is_finite() || gain < 0.0 {
+                    bail!(
+                        "adaptive schedule gain must be finite and >= 0 (got {gain}): \
+                         it is the EWMA weight of each stall observation (0 disables \
+                         adaptation — the neutral controller)"
+                    );
+                }
+                Ok(())
+            }
+            PolicyKind::Warmup { stage_steps } => {
+                if stage_steps == 0 {
+                    bail!(
+                        "warmup stage length must be >= 1 step (got 0): each stage \
+                         doubles the interval cap until the base schedule is reached"
+                    );
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Bare policy name (stable; used in labels and banners).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Static => "static",
+            PolicyKind::Adaptive { .. } => "adaptive",
+            PolicyKind::Warmup { .. } => "warmup",
+        }
+    }
+
+    /// Canonical spec string: `PolicyKind::parse(spec())` roundtrips, and
+    /// the checkpoint sidecar compares specs to reject cross-policy
+    /// resumes.
+    pub fn spec(&self) -> String {
+        match *self {
+            PolicyKind::Static => "static".to_string(),
+            PolicyKind::Adaptive { target, gain } => {
+                if gain == 1.0 {
+                    format!("adaptive:{target}")
+                } else {
+                    format!("adaptive:{target}:{gain}")
+                }
+            }
+            PolicyKind::Warmup { stage_steps } => format!("warmup:{stage_steps}"),
+        }
+    }
+
+    /// Build the policy for a run.  `k2_clamp` bounds what the adaptive
+    /// controller may *widen* the outermost interval to (condition (3.5);
+    /// the configured base schedule itself is never altered);
+    /// `step_seconds`/`p` normalize its stall observations into a
+    /// fraction of the cluster's compute budget.  Static and warmup
+    /// policies ignore all three.
+    pub fn build(
+        &self,
+        k2_clamp: u64,
+        step_seconds: f64,
+        p: usize,
+    ) -> Box<dyn SchedulePolicy> {
+        match *self {
+            PolicyKind::Static => Box::new(StaticPolicy::new()),
+            PolicyKind::Adaptive { target, gain } => {
+                Box::new(AdaptivePolicy::new(target, gain, k2_clamp, step_seconds, p))
+            }
+            PolicyKind::Warmup { stage_steps } => Box::new(WarmupPolicy::new(stage_steps)),
+        }
+    }
+}
+
+impl Default for PolicyKind {
+    fn default() -> PolicyKind {
+        PolicyKind::Static
+    }
+}
+
+/// What the metrics layer records about a run's schedule decisions
+/// (`RunRecord.schedule` → the JSON `schedule` block).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleSummary {
+    /// Canonical policy spec (`PolicyKind::spec`).
+    pub policy: String,
+    /// Per-level realized reduction events (decisions the policy actually
+    /// fired, outermost-subsumed — the engine counts them).
+    pub realized: Vec<u64>,
+    /// The interval table in effect at the end of the run.
+    pub final_intervals: Vec<u64>,
+    /// The condition-(3.5) clamp the run's controller was bounded by.
+    pub k2_clamp: u64,
+    /// Interval trajectory: every table change, in step order.
+    pub changes: Vec<ScheduleChange>,
+    /// Serializable controller state (the checkpoint sidecar stores this
+    /// so a resumed run continues the controller exactly).
+    pub state: Json,
+}
+
+/// A per-step, per-level reduction decider the engine consults instead of
+/// reading the static interval table directly.
+///
+/// Contract: the engine calls [`SchedulePolicy::decide`] once per
+/// completed step with the epoch's base schedule, then — iff a level
+/// fired — [`SchedulePolicy::observe`] with the barrier stall the
+/// execution model attributed to that event and the modelled collective
+/// seconds.  Feedback is a pure function of the seeded timeline (never
+/// wall clock), so identical replays make identical decisions.
+pub trait SchedulePolicy: std::fmt::Debug + Send {
+    /// `PolicyKind::name()` of this policy.
+    fn name(&self) -> &'static str;
+
+    /// Which level (if any) reduces after completing step `t` (1-based),
+    /// given the config's base schedule for the current epoch.  The
+    /// outermost eligible level wins, subsuming inner boundaries — the
+    /// same convention as [`HierSchedule::event_after`].
+    fn decide(&mut self, t: u64, base: &HierSchedule) -> Option<usize>;
+
+    /// Feedback for the reduction that `decide` fired at step `t`:
+    /// `stall_seconds` is the barrier wait the execution model attributed
+    /// to this event (zero under lockstep), `comm_seconds` one symmetric
+    /// group's modelled collective cost.
+    fn observe(&mut self, _t: u64, _level: usize, _stall_seconds: f64, _comm_seconds: f64) {}
+
+    /// The interval table currently in effect (the base schedule's, for
+    /// policies that never deviate from it).
+    fn intervals(&self, base: &HierSchedule) -> Vec<u64>;
+
+    /// Every interval-table change so far (empty for a static policy).
+    fn changes(&self) -> &[ScheduleChange] {
+        &[]
+    }
+
+    /// Serializable controller state.  [`SchedulePolicy::restore`] must
+    /// accept exactly what this produced; the checkpoint sidecar stores
+    /// it so a resumed run continues the controller bit-identically.
+    fn state(&self) -> Json;
+
+    /// Restore state previously produced by [`SchedulePolicy::state`] on
+    /// a policy of the same kind.
+    fn restore(&mut self, state: &Json) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// StaticPolicy
+// ---------------------------------------------------------------------------
+
+/// The base schedule, verbatim: `decide` is exactly
+/// [`HierSchedule::event_after`], so an engine driven by this policy is
+/// bit-identical to the pre-policy engine.
+#[derive(Debug, Clone, Default)]
+pub struct StaticPolicy;
+
+impl StaticPolicy {
+    pub fn new() -> StaticPolicy {
+        StaticPolicy
+    }
+}
+
+impl SchedulePolicy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn decide(&mut self, t: u64, base: &HierSchedule) -> Option<usize> {
+        base.event_after(t)
+    }
+
+    fn intervals(&self, base: &HierSchedule) -> Vec<u64> {
+        base.intervals().to_vec()
+    }
+
+    fn state(&self) -> Json {
+        Json::obj()
+    }
+
+    fn restore(&mut self, _state: &Json) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AdaptivePolicy
+// ---------------------------------------------------------------------------
+
+/// The online straggler-aware K2 controller (module docs for the control
+/// law; DESIGN.md §Schedule policies for the contract).
+#[derive(Debug, Clone)]
+pub struct AdaptivePolicy {
+    /// Widening threshold: stall / (P · interval · step_seconds).
+    pub target: f64,
+    /// EWMA weight per observation; 0 = neutral (≡ static).
+    pub gain: f64,
+    /// Condition-(3.5) ceiling on outermost-interval *widening* (the
+    /// configured base is adopted verbatim even when it sits past it).
+    pub k2_clamp: u64,
+    step_seconds: f64,
+    p: usize,
+    /// Steps completed by previous (checkpointed) runs: decisions use
+    /// `t + offset` so a resumed controller continues its own timeline.
+    offset: u64,
+    /// Highest absolute step seen (for the next checkpoint's offset).
+    last_t: u64,
+    /// Base-schedule snapshot the current table derives from.
+    base: Vec<u64>,
+    /// The interval table currently in effect (empty until first decide).
+    current: Vec<u64>,
+    /// Per-level phase anchor: level `l` fires when
+    /// `(t_abs − anchors[l]) % current[l] == 0`.  Only the level whose
+    /// interval changed re-anchors — adapting an inner tier must never
+    /// shift (let alone starve) the outer tiers' cadence.
+    anchors: Vec<u64>,
+    /// EWMA stall-to-compute ratio per level.
+    ratio: Vec<f64>,
+    /// Consecutive deep-quiet observations per level (the narrowing
+    /// hysteresis: with `gain = 1` the EWMA is just the last observation,
+    /// so a single quiet barrier right after a widening must not undo
+    /// it).
+    quiet: Vec<u32>,
+    changes: Vec<ScheduleChange>,
+}
+
+/// Consecutive observations below a quarter of the target a tier must
+/// see before it narrows (damping against widen/narrow ping-pong under
+/// stochastic spikes).
+const NARROW_STREAK: u32 = 3;
+
+impl AdaptivePolicy {
+    pub fn new(
+        target: f64,
+        gain: f64,
+        k2_clamp: u64,
+        step_seconds: f64,
+        p: usize,
+    ) -> AdaptivePolicy {
+        AdaptivePolicy {
+            target,
+            gain,
+            k2_clamp: k2_clamp.max(1),
+            step_seconds,
+            p: p.max(1),
+            offset: 0,
+            last_t: 0,
+            base: Vec::new(),
+            current: Vec::new(),
+            anchors: Vec::new(),
+            ratio: Vec::new(),
+            quiet: Vec::new(),
+            changes: Vec::new(),
+        }
+    }
+
+    /// (Re)derive the working table from the base schedule: on the first
+    /// decide, and whenever the base changes (the per-epoch `k2_schedule`
+    /// path).  The base is adopted *verbatim* — the condition-(3.5) clamp
+    /// bounds only what the controller may widen to ([`Self::widen_cap`]),
+    /// never the user's configured schedule, so an adaptive run starts
+    /// from exactly the static table and can only thin it out.  A mid-run
+    /// base change discards the adapted table (the controller's phase and
+    /// ratios are about the old cadence), re-anchors, and is recorded in
+    /// the trajectory so the emitted `adaptations` always reflect what
+    /// actually ran.
+    fn sync_base(&mut self, t_abs: u64, base: &HierSchedule) {
+        if self.base == base.intervals() {
+            return;
+        }
+        let first = self.base.is_empty();
+        self.base = base.intervals().to_vec();
+        self.current = self.base.clone();
+        self.ratio = vec![0.0; self.base.len()];
+        self.quiet = vec![0; self.base.len()];
+        if first {
+            // Legacy phase: every level counts from step 0, exactly like
+            // the static modulo rule.
+            self.anchors = vec![0; self.base.len()];
+        } else {
+            // Per-epoch rewrite (k2_schedule): restart every phase at the
+            // previous step so the new table fires on its own cadence,
+            // and log the reset as a trajectory entry.
+            self.anchors = vec![t_abs - 1; self.base.len()];
+            self.changes
+                .push(ScheduleChange { step: t_abs, intervals: self.current.clone() });
+        }
+    }
+
+    /// Highest value level `l` may widen to: *half* the next-outer
+    /// interval, or — at the outermost level — the condition-(3.5)
+    /// clamp.  The half keeps an inner tier strictly inside its outer
+    /// neighbour: a tier widened to equality would be fully subsumed
+    /// (outermost wins), never fire, never observe, and so never be able
+    /// to narrow back when the stall fades.  A base schedule already
+    /// past the clamp is the user's choice (exactly as in a static run):
+    /// widening is then simply impossible, never a silent narrowing
+    /// below the configured table.
+    fn widen_cap(&self, level: usize) -> u64 {
+        if level + 1 < self.current.len() {
+            self.current[level + 1] / 2
+        } else {
+            self.k2_clamp.max(*self.base.last().unwrap())
+        }
+    }
+
+    /// Lowest value level `l` may narrow to: never below the base
+    /// interval, and never below the level just inside it.
+    fn floor(&self, level: usize) -> u64 {
+        let base = self.base[level];
+        if level == 0 {
+            base
+        } else {
+            base.max(self.current[level - 1])
+        }
+    }
+
+    /// Log an adaptation of `level` and re-anchor *that level only*: the
+    /// other tiers — in particular the outermost — keep their cadence.
+    fn record_change(&mut self, t_abs: u64, level: usize) {
+        self.anchors[level] = t_abs;
+        self.changes.push(ScheduleChange { step: t_abs, intervals: self.current.clone() });
+    }
+}
+
+impl SchedulePolicy for AdaptivePolicy {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn decide(&mut self, t: u64, base: &HierSchedule) -> Option<usize> {
+        if self.gain == 0.0 {
+            // Neutral controller: no state, no phase tracking — literally
+            // the static decision (the zero-gain ≡ static property test
+            // rides on this being the identical code path).
+            return base.event_after(t);
+        }
+        let t_abs = t + self.offset;
+        self.last_t = t_abs;
+        self.sync_base(t_abs, base);
+        // Outermost-wins over per-level phases: level l is due when its
+        // own counter hits its interval; an outer due subsumes inner
+        // ones, exactly the `fire_level` convention (which this equals
+        // whenever all anchors coincide — e.g. before any adaptation).
+        (0..self.current.len()).rev().find(|&l| {
+            debug_assert!(self.anchors[l] < t_abs, "decide at or before an anchor");
+            (t_abs - self.anchors[l]) % self.current[l] == 0
+        })
+    }
+
+    fn observe(&mut self, t: u64, level: usize, stall_seconds: f64, comm_seconds: f64) {
+        if self.gain == 0.0 || level >= self.current.len() {
+            return;
+        }
+        let t_abs = t + self.offset;
+        // Stall as a fraction of the cluster's compute budget over the
+        // tier's interval: scale-free in model size and step cost, so one
+        // target works across workloads.
+        let budget =
+            (self.p as f64 * self.current[level] as f64 * self.step_seconds).max(1e-300);
+        let r = stall_seconds / budget;
+        let w = self.gain.min(1.0);
+        self.ratio[level] = (1.0 - w) * self.ratio[level] + w * r;
+        // Narrowing hysteresis: count consecutive deep-quiet barriers.
+        if r < 0.25 * self.target {
+            self.quiet[level] = self.quiet[level].saturating_add(1);
+        } else {
+            self.quiet[level] = 0;
+        }
+        if self.ratio[level] > self.target {
+            // Barriers at this tier are expensive: halve their frequency,
+            // staying inside the outer level's interval (or the theory
+            // clamp at the outermost level).  The EWMA is re-seeded at
+            // the neutral midpoint (not zero) so the next observation is
+            // judged from indifference, not from a fake all-clear.
+            let widened = self.current[level].saturating_mul(2).min(self.widen_cap(level));
+            if widened > self.current[level] {
+                self.current[level] = widened;
+                self.ratio[level] = 0.5 * self.target;
+                self.quiet[level] = 0;
+                self.record_change(t_abs, level);
+            }
+        } else if self.ratio[level] < 0.25 * self.target
+            && self.quiet[level] >= NARROW_STREAK
+            && self.current[level] > self.floor(level)
+        {
+            // The stall signal faded — for NARROW_STREAK consecutive
+            // barriers, so one quiet observation cannot ping-pong a
+            // widening — relax back toward the base schedule, but only
+            // where the tier's collective cost fits inside the narrowed
+            // interval's compute budget (the comm-cost half of the
+            // feedback: never narrow a tier into a comm-bound regime
+            // just because its barriers stopped stalling).
+            let narrowed = (self.current[level] / 2).max(self.floor(level));
+            let narrowed_budget =
+                (self.p as f64 * narrowed as f64 * self.step_seconds).max(1e-300);
+            if narrowed < self.current[level] && comm_seconds <= narrowed_budget {
+                self.current[level] = narrowed;
+                self.quiet[level] = 0;
+                self.record_change(t_abs, level);
+            }
+        }
+    }
+
+    fn intervals(&self, base: &HierSchedule) -> Vec<u64> {
+        if self.current.is_empty() {
+            base.intervals().to_vec()
+        } else {
+            self.current.clone()
+        }
+    }
+
+    fn changes(&self) -> &[ScheduleChange] {
+        &self.changes
+    }
+
+    fn state(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("offset", Json::from(self.last_t.max(self.offset) as usize))
+            .set(
+                "anchors",
+                Json::Arr(self.anchors.iter().map(|&a| Json::from(a as usize)).collect()),
+            )
+            .set(
+                "base",
+                Json::Arr(self.base.iter().map(|&k| Json::from(k as usize)).collect()),
+            )
+            .set(
+                "intervals",
+                Json::Arr(self.current.iter().map(|&k| Json::from(k as usize)).collect()),
+            )
+            .set("ratio", Json::from_f64_slice(&self.ratio))
+            .set(
+                "quiet",
+                Json::Arr(self.quiet.iter().map(|&q| Json::from(q as usize)).collect()),
+            );
+        o
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<()> {
+        self.offset = state.req("offset")?.as_usize()? as u64;
+        self.anchors = state
+            .req("anchors")?
+            .usize_arr()?
+            .into_iter()
+            .map(|a| a as u64)
+            .collect();
+        self.base = state
+            .req("base")?
+            .usize_arr()?
+            .into_iter()
+            .map(|k| k as u64)
+            .collect();
+        self.current = state
+            .req("intervals")?
+            .usize_arr()?
+            .into_iter()
+            .map(|k| k as u64)
+            .collect();
+        self.ratio =
+            state.req("ratio")?.as_arr()?.iter().map(|v| v.as_f64()).collect::<Result<_>>()?;
+        self.quiet = state
+            .req("quiet")?
+            .usize_arr()?
+            .into_iter()
+            .map(|q| q.min(u32::MAX as usize) as u32)
+            .collect();
+        if self.base.len() != self.ratio.len()
+            || self.base.len() != self.anchors.len()
+            || self.base.len() != self.quiet.len()
+        {
+            bail!(
+                "adaptive controller state is inconsistent: {} base / {} ratio / {} anchor \
+                 / {} quiet entries",
+                self.base.len(),
+                self.ratio.len(),
+                self.anchors.len(),
+                self.quiet.len()
+            );
+        }
+        if !self.base.is_empty() {
+            // The sidecar is editable JSON: re-check every invariant the
+            // live controller maintains, so a resumed run can never fire
+            // from a table the emitted schedule block would misreport.
+            check_restored_table("adaptive controller", &self.base, &self.current)?;
+            for (l, (&b, &c)) in self.base.iter().zip(&self.current).enumerate() {
+                if c < b {
+                    bail!(
+                        "adaptive controller state is inconsistent: interval {c} below the \
+                         base {b} at level {l} (the controller never narrows below base)"
+                    );
+                }
+            }
+            let outer = *self.current.last().unwrap();
+            let cap = self.k2_clamp.max(*self.base.last().unwrap());
+            if outer > cap {
+                bail!(
+                    "adaptive controller state is inconsistent: outermost interval {outer} \
+                     above the condition-(3.5) widening cap {cap}"
+                );
+            }
+            if self.ratio.iter().any(|r| !r.is_finite() || *r < 0.0) {
+                bail!(
+                    "adaptive controller state is inconsistent: stall/compute ratios must \
+                     be finite and >= 0 (got {:?})",
+                    self.ratio
+                );
+            }
+        } else if !self.current.is_empty() {
+            bail!(
+                "adaptive controller state is inconsistent: {} current entries with no base",
+                self.current.len()
+            );
+        }
+        if let Some(&a) = self.anchors.iter().find(|&&a| a > self.offset) {
+            bail!(
+                "adaptive controller state is inconsistent: anchor step {a} past the {} \
+                 steps the saving run completed",
+                self.offset
+            );
+        }
+        self.last_t = self.offset;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WarmupPolicy
+// ---------------------------------------------------------------------------
+
+/// Dense-to-sparse warmup: during stage `s` (steps `s·L+1 ..= (s+1)·L`
+/// with `L = stage_steps`) every base interval is capped at `2^s`, so
+/// the run starts near synchronous SGD and decays to the configured
+/// schedule — the Adaptive-Periodic-Averaging shape.
+#[derive(Debug, Clone)]
+pub struct WarmupPolicy {
+    pub stage_steps: u64,
+    offset: u64,
+    last_t: u64,
+    /// Stage index the current table was built for (the per-step path is
+    /// one division + compare; the table is rebuilt only on a stage or
+    /// base change — the layer must cost ~0 vs static).
+    stage: u64,
+    base: Vec<u64>,
+    current: Vec<u64>,
+    anchor: u64,
+    changes: Vec<ScheduleChange>,
+}
+
+impl WarmupPolicy {
+    pub fn new(stage_steps: u64) -> WarmupPolicy {
+        WarmupPolicy {
+            stage_steps: stage_steps.max(1),
+            offset: 0,
+            last_t: 0,
+            stage: 0,
+            base: Vec::new(),
+            current: Vec::new(),
+            anchor: 0,
+            changes: Vec::new(),
+        }
+    }
+}
+
+impl SchedulePolicy for WarmupPolicy {
+    fn name(&self) -> &'static str {
+        "warmup"
+    }
+
+    fn decide(&mut self, t: u64, base: &HierSchedule) -> Option<usize> {
+        let t_abs = t + self.offset;
+        self.last_t = t_abs;
+        let stage = t_abs.saturating_sub(1) / self.stage_steps;
+        if self.current.is_empty() || stage != self.stage || self.base != base.intervals() {
+            let first = self.current.is_empty();
+            self.stage = stage;
+            self.base = base.intervals().to_vec();
+            let cap = if stage >= 63 { u64::MAX } else { 1u64 << stage };
+            let target: Vec<u64> = self.base.iter().map(|&k| k.min(cap)).collect();
+            if target != self.current {
+                self.current = target;
+                // Phase re-anchors at the stage boundary (the previous
+                // step), so `rel` restarts at 1 for this step.  The
+                // initial table is recorded only when it actually
+                // deviates from the base.
+                self.anchor = t_abs - 1;
+                if !first || self.current != self.base {
+                    self.changes
+                        .push(ScheduleChange { step: t_abs, intervals: self.current.clone() });
+                }
+            }
+        }
+        let rel = t_abs - self.anchor;
+        fire_level(&self.current, rel)
+    }
+
+    fn intervals(&self, base: &HierSchedule) -> Vec<u64> {
+        if self.current.is_empty() {
+            base.intervals().to_vec()
+        } else {
+            self.current.clone()
+        }
+    }
+
+    fn changes(&self) -> &[ScheduleChange] {
+        &self.changes
+    }
+
+    fn state(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("offset", Json::from(self.last_t.max(self.offset) as usize))
+            .set("anchor", Json::from(self.anchor as usize))
+            .set(
+                "base",
+                Json::Arr(self.base.iter().map(|&k| Json::from(k as usize)).collect()),
+            )
+            .set(
+                "intervals",
+                Json::Arr(self.current.iter().map(|&k| Json::from(k as usize)).collect()),
+            );
+        o
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<()> {
+        self.offset = state.req("offset")?.as_usize()? as u64;
+        self.anchor = state.req("anchor")?.as_usize()? as u64;
+        self.base = state
+            .req("base")?
+            .usize_arr()?
+            .into_iter()
+            .map(|k| k as u64)
+            .collect();
+        self.current = state
+            .req("intervals")?
+            .usize_arr()?
+            .into_iter()
+            .map(|k| k as u64)
+            .collect();
+        if !self.base.is_empty() {
+            check_restored_table("warmup policy", &self.base, &self.current)?;
+            // Warmup only ever caps the base downward.
+            for (l, (&b, &c)) in self.base.iter().zip(&self.current).enumerate() {
+                if c > b {
+                    bail!(
+                        "warmup policy state is inconsistent: interval {c} above the base \
+                         {b} at level {l} (warmup only caps the base downward)"
+                    );
+                }
+            }
+        }
+        if self.anchor > self.offset {
+            bail!(
+                "warmup policy state is inconsistent: anchor step {} past the {} steps \
+                 the saving run completed",
+                self.anchor,
+                self.offset
+            );
+        }
+        self.last_t = self.offset;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(ks: &[u64]) -> HierSchedule {
+        HierSchedule::new(ks.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn parse_and_spec_roundtrip() {
+        for s in ["static", "adaptive", "adaptive:0.5", "adaptive:0.5:0", "warmup", "warmup:32"]
+        {
+            let k = PolicyKind::parse(s).unwrap();
+            let k2 = PolicyKind::parse(&k.spec()).unwrap();
+            assert_eq!(k, k2, "spec {s:?} did not roundtrip");
+        }
+        assert_eq!(PolicyKind::parse("static").unwrap(), PolicyKind::Static);
+        assert_eq!(
+            PolicyKind::parse("adaptive").unwrap(),
+            PolicyKind::Adaptive { target: DEFAULT_ADAPTIVE_TARGET, gain: 1.0 }
+        );
+        assert_eq!(
+            PolicyKind::parse("warmup:8").unwrap(),
+            PolicyKind::Warmup { stage_steps: 8 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage_with_context() {
+        for bad in [
+            "static:1",
+            "adaptive:lots",
+            "adaptive:0",
+            "adaptive:-1",
+            "adaptive:0.5:-2",
+            "adaptive:0.5:1:9",
+            "warmup:0",
+            "warmup:soon",
+            "",
+        ] {
+            assert!(PolicyKind::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+        let err = PolicyKind::parse("adaptivee").unwrap_err().to_string();
+        assert!(err.contains("static | adaptive"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn static_policy_matches_base_schedule() {
+        let base = sched(&[2, 6]);
+        let mut p = StaticPolicy::new();
+        for t in 1..=200 {
+            assert_eq!(p.decide(t, &base), base.event_after(t));
+        }
+        assert!(p.changes().is_empty());
+        assert_eq!(p.intervals(&base), vec![2, 6]);
+    }
+
+    #[test]
+    fn zero_gain_adaptive_is_the_static_decision_stream() {
+        let base = sched(&[2, 3, 7]);
+        let mut a = AdaptivePolicy::new(0.25, 0.0, 1_000, 1e-3, 8);
+        let mut s = StaticPolicy::new();
+        for t in 1..=500 {
+            let d = a.decide(t, &base);
+            assert_eq!(d, s.decide(t, &base), "t={t}");
+            if let Some(level) = d {
+                // Feedback must be inert too.
+                a.observe(t, level, 123.0, 1e-6);
+            }
+        }
+        assert!(a.changes().is_empty());
+        assert_eq!(a.intervals(&base), base.intervals().to_vec());
+    }
+
+    #[test]
+    fn adaptive_widens_under_stall_and_respects_clamp() {
+        let base = sched(&[2, 8]);
+        let clamp = 32;
+        let step = 1e-3;
+        let p = 8;
+        let mut pol = AdaptivePolicy::new(0.25, 1.0, clamp, step, p);
+        let mut fired = vec![0u64; 2];
+        for t in 1..=2_000u64 {
+            if let Some(level) = pol.decide(t, &base) {
+                fired[level] += 1;
+                // Synthetic heavy stall: half the cluster's interval
+                // budget lost at every barrier.
+                let budget = p as f64 * pol.intervals(&base)[level] as f64 * step;
+                pol.observe(t, level, 0.5 * budget, 1e-6);
+            }
+        }
+        let current = pol.intervals(&base);
+        assert_eq!(current[1], clamp, "outermost did not widen to the clamp: {current:?}");
+        assert!(current[0] >= 2 && current[0] <= current[1], "chain broken: {current:?}");
+        assert!(!pol.changes().is_empty());
+        for c in pol.changes() {
+            assert!(*c.intervals.last().unwrap() <= clamp);
+            for w in c.intervals.windows(2) {
+                assert!(w[0] <= w[1], "non-monotone table {:?}", c.intervals);
+            }
+        }
+        // Fewer global events than the static schedule would have fired.
+        assert!(fired[1] < 2_000 / 8, "global tier did not thin out: {fired:?}");
+    }
+
+    #[test]
+    fn adaptive_event_gaps_never_shrink_below_base() {
+        // The invariant the CI smoke asserts from the JSON: realized
+        // global reductions <= static's, guaranteed because intervals
+        // never narrow below base and phase restarts only stretch gaps.
+        let base = sched(&[2, 8]);
+        let mut pol = AdaptivePolicy::new(0.25, 1.0, 64, 1e-3, 8);
+        let mut last_global = 0u64;
+        let mut globals = 0u64;
+        let horizon = 4_000u64;
+        for t in 1..=horizon {
+            if let Some(level) = pol.decide(t, &base) {
+                if level == 1 {
+                    assert!(t - last_global >= 8, "gap {} at t={t}", t - last_global);
+                    last_global = t;
+                    globals += 1;
+                }
+                // Alternate heavy and zero stall so the controller both
+                // widens and narrows over the run.
+                let stall = if (t / 512) % 2 == 0 { 1.0 } else { 0.0 };
+                pol.observe(t, level, stall, 1e-6);
+            }
+        }
+        assert!(globals <= horizon / 8);
+        // The floor holds even after narrowing cycles.
+        assert!(pol.intervals(&base)[1] >= 8);
+    }
+
+    #[test]
+    fn base_beyond_clamp_is_adopted_verbatim_never_densified() {
+        // A user schedule already past the condition-(3.5) clamp is the
+        // user's choice, exactly as in a static run: the controller must
+        // neither densify it down to the clamp (that would fire MORE
+        // global reductions than static) nor widen past it.
+        let base = sched(&[2, 512]);
+        let mut pol = AdaptivePolicy::new(0.25, 1.0, 14, 1e-3, 8);
+        let mut globals = 0u64;
+        for t in 1..=2_048u64 {
+            if let Some(level) = pol.decide(t, &base) {
+                if level == 1 {
+                    globals += 1;
+                }
+                // Heavy stall at every barrier.
+                pol.observe(t, level, 1.0, 1e-6);
+            }
+        }
+        assert_eq!(pol.intervals(&base)[1], 512);
+        assert!(globals <= 2_048 / 512, "adaptive fired {globals} global reductions");
+    }
+
+    #[test]
+    fn mid_run_base_change_is_recorded_and_reanchors() {
+        // The per-epoch k2_schedule path swaps the base schedule under a
+        // live controller: the reset must land in the trajectory (the
+        // emitted `adaptations` always reflect what actually ran) and
+        // the new table fires on a fresh phase.
+        let a = sched(&[2, 8]);
+        let b = sched(&[2, 4]);
+        let mut pol = AdaptivePolicy::new(0.25, 1.0, 64, 1e-3, 8);
+        for t in 1..=64u64 {
+            if let Some(level) = pol.decide(t, &a) {
+                pol.observe(t, level, 1.0, 1e-6); // heavy stall: widens
+            }
+        }
+        assert!(pol.intervals(&a)[1] > 8, "setup never widened");
+        let n_before = pol.changes().len();
+        pol.decide(65, &b);
+        assert_eq!(pol.changes().len(), n_before + 1, "base reset not recorded");
+        let last = pol.changes().last().unwrap();
+        assert_eq!((last.step, last.intervals.clone()), (65, vec![2, 4]));
+        assert_eq!(pol.intervals(&b), vec![2, 4]);
+        // Fresh phase: the first firing of the new table is 4 steps in.
+        let mut next_global = None;
+        for t in 65..=80u64 {
+            if t > 65 {
+                if pol.decide(t, &b) == Some(1) && next_global.is_none() {
+                    next_global = Some(t);
+                }
+            }
+        }
+        assert_eq!(next_global, Some(68));
+    }
+
+    #[test]
+    fn adaptive_state_roundtrips_and_resumes() {
+        let base = sched(&[2, 8]);
+        let mut a = AdaptivePolicy::new(0.25, 1.0, 64, 1e-3, 8);
+        for t in 1..=300u64 {
+            if let Some(level) = a.decide(t, &base) {
+                a.observe(t, level, 0.8 * 8.0 * 8.0 * 1e-3, 1e-6);
+            }
+        }
+        let state = a.state();
+        let mut b = AdaptivePolicy::new(0.25, 1.0, 64, 1e-3, 8);
+        b.restore(&state).unwrap();
+        // The resumed policy continues the original's decision stream:
+        // driving the original further must match the restored copy
+        // driven from t = 1.
+        for t in 1..=200u64 {
+            let da = a.decide(300 + t, &base);
+            let db = b.decide(t, &base);
+            assert_eq!(da, db, "t={t}");
+            if let Some(level) = da {
+                a.observe(300 + t, level, 0.0, 1e-6);
+                b.observe(t, level, 0.0, 1e-6);
+            }
+        }
+        assert_eq!(a.intervals(&base), b.intervals(&base));
+        // Corrupt state is rejected.
+        let mut broken = AdaptivePolicy::new(0.25, 1.0, 64, 1e-3, 8);
+        assert!(broken.restore(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn restore_rejects_tables_that_violate_controller_invariants() {
+        // The sidecar is editable JSON: a resumed run must fail loudly
+        // rather than fire from a table the schedule block would
+        // misreport.
+        let cases = [
+            // non-monotone current
+            r#"{"offset": 10, "anchors": [8, 0], "base": [2, 8], "intervals": [16, 8], "ratio": [0, 0], "quiet": [0, 0]}"#,
+            // below base
+            r#"{"offset": 10, "anchors": [8, 0], "base": [2, 8], "intervals": [2, 4], "ratio": [0, 0], "quiet": [0, 0]}"#,
+            // outermost above the widening cap (clamp 64, base 8)
+            r#"{"offset": 10, "anchors": [8, 0], "base": [2, 8], "intervals": [2, 512], "ratio": [0, 0], "quiet": [0, 0]}"#,
+            // zero interval
+            r#"{"offset": 10, "anchors": [8, 0], "base": [2, 8], "intervals": [0, 8], "ratio": [0, 0], "quiet": [0, 0]}"#,
+            // negative EWMA ratio
+            r#"{"offset": 10, "anchors": [8, 0], "base": [2, 8], "intervals": [2, 8], "ratio": [0, -1], "quiet": [0, 0]}"#,
+            // an anchor past the saved run's steps
+            r#"{"offset": 10, "anchors": [8, 99], "base": [2, 8], "intervals": [2, 8], "ratio": [0, 0], "quiet": [0, 0]}"#,
+            // anchors/quiet arity drift
+            r#"{"offset": 10, "anchors": [8], "base": [2, 8], "intervals": [2, 8], "ratio": [0, 0], "quiet": [0, 0]}"#,
+            // current with no base
+            r#"{"offset": 0, "anchors": [], "base": [], "intervals": [2, 8], "ratio": [], "quiet": []}"#,
+        ];
+        for s in cases {
+            let state = Json::parse(s).unwrap();
+            let mut pol = AdaptivePolicy::new(0.25, 1.0, 64, 1e-3, 8);
+            assert!(pol.restore(&state).is_err(), "accepted corrupt state {s}");
+        }
+        // Warmup: an interval above the base is impossible for a policy
+        // that only caps downward.
+        let state = Json::parse(
+            r#"{"offset": 10, "anchor": 8, "base": [2, 8], "intervals": [2, 16]}"#,
+        )
+        .unwrap();
+        let mut w = WarmupPolicy::new(8);
+        assert!(w.restore(&state).is_err());
+    }
+
+    #[test]
+    fn warmup_is_dense_early_and_decays_to_base() {
+        let base = sched(&[4, 16]);
+        let mut w = WarmupPolicy::new(8);
+        // Stage 0: cap 1 — a (global) reduction after every step.
+        for t in 1..=8u64 {
+            assert_eq!(w.decide(t, &base), Some(1), "t={t}");
+        }
+        assert_eq!(w.intervals(&base), vec![1, 1]);
+        // Stage 2: cap 4 — the inner tier is at base, outer still capped.
+        for t in 17..=24u64 {
+            w.decide(t, &base);
+        }
+        assert_eq!(w.intervals(&base), vec![4, 4]);
+        // Far past warmup: the base schedule, and no further changes.
+        for t in 25..=200u64 {
+            w.decide(t, &base);
+        }
+        assert_eq!(w.intervals(&base), base.intervals().to_vec());
+        let n_changes = w.changes().len();
+        for t in 201..=400u64 {
+            w.decide(t, &base);
+        }
+        assert_eq!(w.changes().len(), n_changes, "changes after warmup completed");
+        // The trajectory starts at the dense table.
+        assert_eq!(w.changes()[0].step, 1);
+        assert_eq!(w.changes()[0].intervals, vec![1, 1]);
+    }
+
+    #[test]
+    fn warmup_state_roundtrips() {
+        let base = sched(&[4, 16]);
+        let mut a = WarmupPolicy::new(8);
+        for t in 1..=20u64 {
+            a.decide(t, &base);
+        }
+        let mut b = WarmupPolicy::new(8);
+        b.restore(&a.state()).unwrap();
+        for t in 1..=50u64 {
+            assert_eq!(b.decide(t, &base), a.decide(20 + t, &base), "t={t}");
+        }
+    }
+
+    #[test]
+    fn build_dispatches_by_kind() {
+        for (spec, name) in
+            [("static", "static"), ("adaptive:0.5", "adaptive"), ("warmup:8", "warmup")]
+        {
+            let kind = PolicyKind::parse(spec).unwrap();
+            let policy = kind.build(100, 1e-3, 8);
+            assert_eq!(policy.name(), name);
+        }
+    }
+}

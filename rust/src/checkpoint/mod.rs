@@ -26,6 +26,21 @@ fn checksum(params: &[f32]) -> u64 {
 }
 
 pub fn save(path: &Path, model: &str, layout: &ParamLayout, params: &FlatParams) -> Result<()> {
+    save_with_schedule(path, model, layout, params, None)
+}
+
+/// [`save`] plus the schedule-policy sidecar fields: the run's canonical
+/// policy spec (`PolicyKind::spec`) and the controller's serializable
+/// state (`SchedulePolicy::state`).  A warm start restores both, so a
+/// resumed adaptive run continues its controller exactly; loading under a
+/// different `--schedule` fails loudly in `driver::run`.
+pub fn save_with_schedule(
+    path: &Path,
+    model: &str,
+    layout: &ParamLayout,
+    params: &FlatParams,
+    schedule: Option<(&str, &Json)>,
+) -> Result<()> {
     if params.len() != layout.total {
         bail!("params len {} != layout total {}", params.len(), layout.total);
     }
@@ -49,6 +64,11 @@ pub fn save(path: &Path, model: &str, layout: &ParamLayout, params: &FlatParams)
         .set("n_params", Json::from(layout.total))
         .set("checksum", Json::from(format!("{:016x}", checksum(params))))
         .set("params", Json::Arr(tensors));
+    if let Some((spec, state)) = schedule {
+        let mut sch = Json::obj();
+        sch.set("spec", Json::from(spec)).set("state", state.clone());
+        meta.set("schedule_policy", sch);
+    }
     std::fs::write(sidecar(path), meta.pretty())?;
     Ok(())
 }
@@ -58,6 +78,10 @@ pub struct Snapshot {
     pub model: String,
     pub layout: ParamLayout,
     pub params: FlatParams,
+    /// Schedule-policy spec + controller state, when the saving run
+    /// recorded them (checkpoints from before the policy layer have
+    /// none — loaders treat that as "no constraint").
+    pub schedule_policy: Option<(String, Json)>,
 }
 
 pub fn load(path: &Path) -> Result<Snapshot> {
@@ -72,7 +96,13 @@ pub fn load(path: &Path) -> Result<Snapshot> {
     if got != expect {
         bail!("checkpoint {} corrupt: checksum {got} != {expect}", path.display());
     }
-    Ok(Snapshot { model, layout, params })
+    let schedule_policy = match meta.get("schedule_policy") {
+        Some(sch) => {
+            Some((sch.req("spec")?.as_str()?.to_string(), sch.req("state")?.clone()))
+        }
+        None => None,
+    };
+    Ok(Snapshot { model, layout, params, schedule_policy })
 }
 
 fn sidecar(path: &Path) -> std::path::PathBuf {
@@ -110,6 +140,23 @@ mod tests {
         assert_eq!(snap.model, "test-model");
         assert_eq!(snap.layout, l);
         assert_eq!(snap.params, params);
+    }
+
+    #[test]
+    fn schedule_sidecar_roundtrips() {
+        let l = layout();
+        let params = vec![0.5f32; 9];
+        let p = tmp("sched.bin");
+        // Without schedule info the sidecar stays policy-free.
+        save(&p, "m", &l, &params).unwrap();
+        assert!(load(&p).unwrap().schedule_policy.is_none());
+        // With it, spec and controller state come back verbatim.
+        let state = Json::parse(r#"{"offset": 128, "intervals": [2, 16]}"#).unwrap();
+        save_with_schedule(&p, "m", &l, &params, Some(("adaptive:0.25", &state))).unwrap();
+        let snap = load(&p).unwrap();
+        let (spec, got) = snap.schedule_policy.unwrap();
+        assert_eq!(spec, "adaptive:0.25");
+        assert_eq!(got, state);
     }
 
     #[test]

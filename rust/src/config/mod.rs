@@ -4,7 +4,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::algorithms::{HierAvgSchedule, HierSchedule};
+use crate::algorithms::{policy, HierAvgSchedule, HierSchedule, PolicyKind};
 use crate::comm::{CollectiveKind, CostModel, ReduceStrategy};
 use crate::optimizer::LrSchedule;
 use crate::sim::{ExecKind, HetSpec};
@@ -45,6 +45,11 @@ pub struct RunConfig {
     /// Per-level averaging intervals matching `levels` (non-decreasing
     /// outward).  Empty = the two-level `[k1, k2]`.
     pub ks: Vec<u64>,
+    /// Which schedule policy decides, per step and per level, whether to
+    /// reduce (`--schedule static|adaptive[:target]|warmup[:k]`): the
+    /// base intervals verbatim, the online straggler-aware controller,
+    /// or the dense-to-sparse warmup (`algorithms::policy`).
+    pub schedule_policy: PolicyKind,
     /// Which collective engine executes reductions.
     pub collective: CollectiveKind,
     /// Execution slots of the persistent worker pool the pooled collective
@@ -112,6 +117,7 @@ impl RunConfig {
             k2: 32,
             levels: Vec::new(),
             ks: Vec::new(),
+            schedule_policy: PolicyKind::Static,
             collective: CollectiveKind::Simulated,
             pool_threads: 0,
             links: Vec::new(),
@@ -229,6 +235,23 @@ impl RunConfig {
         }
     }
 
+    /// The condition-(3.5) ceiling on the adaptive schedule controller's
+    /// widening: the largest K2 for which Theorem 3.4's bound is still a
+    /// convergence guarantee.  Built from the same `BoundParams`
+    /// construction as the planner's [`crate::planner::ScoreCtx`] (the
+    /// default regime with this run's P and B installed), so a replayed
+    /// candidate and a live engine run share one clamp by construction —
+    /// note condition (3.5) itself currently depends only on `L`, `γ`,
+    /// and `δ_grad`, so with the default regime the clamp is the same
+    /// number for every platform; `batch` matters only if the bound
+    /// regime ever becomes (P, B)-sensitive.
+    pub fn k2_clamp(&self, batch: usize) -> u64 {
+        let mut bp = crate::theory::BoundParams::default();
+        bp.p = self.p as f64;
+        bp.b = batch.max(1) as f64;
+        crate::theory::max_k2_condition_35(&bp, policy::K2_CLAMP_CAP).unwrap_or(1)
+    }
+
     /// Install a het spec (the inverse of [`RunConfig::het_spec`]): every
     /// knob including the seed, so the run's straggler streams match a
     /// replay built from the same spec.  Does not switch `exec` — callers
@@ -269,6 +292,7 @@ impl RunConfig {
         for &(e, _) in &self.k2_schedule {
             self.hier_schedule_at(e)?;
         }
+        self.schedule_policy.validate()?;
         if self.epochs == 0 || self.train_n == 0 {
             bail!("epochs and train_n must be positive");
         }
@@ -361,6 +385,7 @@ impl RunConfig {
                         })
                         .collect::<Result<Vec<_>>>()?
                 }
+                "schedule" => self.schedule_policy = PolicyKind::parse(v.as_str()?)?,
                 "exec" => self.exec = ExecKind::parse(v.as_str()?)?,
                 "het" => self.het = v.as_f64()?,
                 "straggler_prob" => self.straggler_prob = v.as_f64()?,
@@ -444,6 +469,9 @@ impl RunConfig {
                         .ok_or_else(|| anyhow!("invalid --links entry {x:?} (intra|inter|rack)"))
                 })
                 .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(s) = args.get("schedule") {
+            cfg.schedule_policy = PolicyKind::parse(s)?;
         }
         if let Some(e) = args.get("exec") {
             cfg.exec = ExecKind::parse(e)?;
@@ -732,6 +760,52 @@ mod tests {
             ["train", "--straggler", "often"].iter().map(|s| s.to_string()).collect();
         let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
         assert!(RunConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn schedule_policy_via_json_and_args() {
+        let mut c = RunConfig::defaults("m");
+        let j = Json::parse(r#"{"schedule": "adaptive:0.5", "backend": "native"}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.schedule_policy, PolicyKind::Adaptive { target: 0.5, gain: 1.0 });
+        c.validate().unwrap();
+
+        use crate::util::cli::Args;
+        let argv: Vec<String> = [
+            "train", "--model", "quickstart", "--backend", "native", "--schedule",
+            "warmup:32",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.schedule_policy, PolicyKind::Warmup { stage_steps: 32 });
+
+        // Unknown policies and out-of-range parameters are rejected with
+        // actionable errors, through both entry points.
+        let bad = Json::parse(r#"{"schedule": "sometimes"}"#).unwrap();
+        assert!(RunConfig::defaults("m").apply_json(&bad).is_err());
+        let argv: Vec<String> =
+            ["train", "--schedule", "adaptive:-1"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+        let err = RunConfig::from_args(&args).unwrap_err().to_string();
+        assert!(err.contains("target"), "unhelpful error: {err}");
+        // ... and validate() re-checks programmatically-built configs.
+        let mut c = RunConfig::defaults("m");
+        c.schedule_policy = PolicyKind::Adaptive { target: f64::NAN, gain: 1.0 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn k2_clamp_matches_theory_threshold() {
+        let c = RunConfig::defaults("m");
+        let clamp = c.k2_clamp(16);
+        let mut bp = crate::theory::BoundParams::default();
+        bp.p = c.p as f64;
+        bp.b = 16.0;
+        assert!(bp.condition_35(clamp));
+        assert!(!bp.condition_35(clamp + 1));
     }
 
     #[test]

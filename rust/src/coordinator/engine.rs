@@ -1,8 +1,10 @@
 //! The learner engine: owns the replicated learner state and drives one
 //! synchronous step at a time through the three pluggable layers —
-//! topology ([`HierTopology`]: who reduces with whom), schedule
-//! ([`HierSchedule`]: when each tier reduces), and collective (inside the
-//! [`Reducer`]: how the bytes move).
+//! topology ([`HierTopology`]: who reduces with whom), schedule policy
+//! ([`SchedulePolicy`]: *decides* when each tier reduces, consulting the
+//! epoch's base [`HierSchedule`] and, for the adaptive controller, the
+//! timeline's stall feedback), and collective (inside the [`Reducer`]:
+//! how the bytes move).
 //!
 //! The engine is deliberately backend- and epoch-agnostic: `Trainer`
 //! (coordinator/mod.rs) keeps the epoch loop, evaluation, and record
@@ -12,7 +14,7 @@
 
 use anyhow::Result;
 
-use crate::algorithms::HierSchedule;
+use crate::algorithms::{HierSchedule, SchedulePolicy};
 use crate::backend::{StepBackend, StepOut};
 use crate::comm::Reducer;
 use crate::config::RunConfig;
@@ -85,6 +87,15 @@ pub struct Engine<'a> {
     pub reducer: Reducer,
     pub learners: LearnerSet,
     pub timeline: Box<dyn ExecModel>,
+    /// The schedule-policy layer: decides, per step and per level,
+    /// whether to reduce, and receives the timeline's stall attribution
+    /// after every fired reduction (`--schedule`; built by the trainer
+    /// via `PolicyKind::build` so the condition-(3.5) clamp matches the
+    /// planner's).
+    pub policy: Box<dyn SchedulePolicy>,
+    /// Per-level realized reduction events (decisions the policy fired),
+    /// reported in the run record's `schedule` block.
+    pub realized: Vec<u64>,
     batch: BatchBuf,
     t: u64,
 }
@@ -93,12 +104,14 @@ impl<'a> Engine<'a> {
     /// `step_seconds` is the modelled base-rate compute time of one
     /// synchronous step ([`crate::coordinator::sim_step_seconds`]); the
     /// timeline charges it (scaled per learner in event mode) on every
-    /// step.
+    /// step.  `policy` is the schedule-policy layer the engine consults
+    /// instead of reading the interval table directly.
     pub fn new(
         cfg: &'a RunConfig,
         n_params: usize,
         init: &FlatParams,
         step_seconds: f64,
+        policy: Box<dyn SchedulePolicy>,
     ) -> Result<Engine<'a>> {
         let topo = cfg.hierarchy()?;
         // A pooled collective resolves against the run's `--pool-threads`,
@@ -109,12 +122,15 @@ impl<'a> Engine<'a> {
         let mut reducer = Reducer::with_collective(cfg.cost, cfg.strategy, n_params, collective);
         reducer.reserve_levels(topo.n_levels());
         let timeline = cfg.exec.build(cfg.p, topo.n_levels(), step_seconds, &cfg.het_spec());
+        let realized = vec![0u64; topo.n_levels()];
         Ok(Engine {
             cfg,
             topo,
             reducer,
             learners: LearnerSet::new(cfg, n_params, init),
             timeline,
+            policy,
+            realized,
             batch: BatchBuf::default(),
             t: 0,
         })
@@ -127,7 +143,9 @@ impl<'a> Engine<'a> {
 
     /// One synchronous step: every learner draws a mini-batch and takes one
     /// local SGD step (a single stacked backend dispatch), then the
-    /// schedule decides which hierarchy tier (if any) averages.
+    /// schedule policy decides which hierarchy tier (if any) averages —
+    /// `sched` is the epoch's base schedule the policy consults (and, for
+    /// `StaticPolicy`, follows verbatim).
     pub fn step(
         &mut self,
         backend: &mut dyn StepBackend,
@@ -152,14 +170,18 @@ impl<'a> Engine<'a> {
         }
         self.t += 1;
         self.timeline.on_step();
-        let reduce = match sched.event_after(self.t) {
+        let reduce = match self.policy.decide(self.t, sched) {
             Some(level) => {
+                self.realized[level] += 1;
                 let seconds =
                     self.reducer.reduce_level(&mut self.learners.replicas, &self.topo, level);
                 // Symmetric groups at one level cost the same, so the
                 // reducer's max-over-groups is also each group's barrier
-                // cost on the timeline.
-                self.timeline.on_reduction(&self.topo, level, seconds);
+                // cost on the timeline.  The stall the barrier charged is
+                // the policy's feedback signal — a pure function of the
+                // seeded timeline, so replays reproduce every adaptation.
+                let stall = self.timeline.on_reduction(&self.topo, level, seconds);
+                self.policy.observe(self.t, level, stall, seconds);
                 Some(ReduceOutcome { level, seconds, kind: self.topo.trace_kind(level) })
             }
             None => None,

@@ -6,8 +6,12 @@
 //!
 //! - **topology** (`HierTopology`) — who reduces with whom: an N-level
 //!   hierarchy of nested groups, each on a link class of the cost model;
-//! - **schedule** (`HierSchedule`) — when each tier reduces: per-level
-//!   intervals `K1 ≤ K2 ≤ …`, the outermost boundary subsuming inner ones;
+//! - **schedule policy** (`algorithms::SchedulePolicy`, `--schedule`) —
+//!   when each tier reduces: the static per-level interval table
+//!   `K1 ≤ K2 ≤ …` verbatim, an online straggler-aware controller that
+//!   widens/narrows intervals from the timeline's stall attribution
+//!   (clamped by condition (3.5)), or a dense-to-sparse warmup; the
+//!   outermost boundary always subsumes inner ones;
 //! - **collective** (`comm::Collective`) — how the bytes move: simulated
 //!   single-thread, spawn-per-call sharded, or persistent-pool pooled —
 //!   bit-identical numerics across all three.
@@ -56,6 +60,11 @@ pub struct Trainer<'a> {
     pub backend: Box<dyn StepBackend>,
     pub data: Box<dyn DataSource>,
     pub init: FlatParams,
+    /// Controller state from a checkpoint sidecar (`driver::run` sets it
+    /// when warm-starting): restored into the schedule policy before the
+    /// first step so a resumed adaptive run continues its controller
+    /// exactly where the saved run left it.
+    pub restore_policy_state: Option<crate::util::json::Json>,
 }
 
 impl<'a> Trainer<'a> {
@@ -69,7 +78,7 @@ impl<'a> Trainer<'a> {
         if init.len() != backend.n_params() {
             bail!("init has {} params, backend expects {}", init.len(), backend.n_params());
         }
-        Ok(Trainer { cfg, backend, data, init })
+        Ok(Trainer { cfg, backend, data, init, restore_policy_state: None })
     }
 
     /// Steps per epoch: one epoch processes `train_n` samples across all
@@ -90,7 +99,15 @@ impl<'a> Trainer<'a> {
         let b = self.backend.train_batch();
         let n_params = self.backend.n_params();
         let step_secs = self.sim_step_seconds();
-        let mut engine = Engine::new(cfg, n_params, &self.init, step_secs)?;
+        // The schedule-policy layer: the adaptive controller's interval
+        // ceiling comes from condition (3.5) in this run's (P, B) regime
+        // — the same clamp the planner scores with.
+        let k2_clamp = cfg.k2_clamp(b);
+        let mut policy = cfg.schedule_policy.build(k2_clamp, step_secs, p);
+        if let Some(state) = &self.restore_policy_state {
+            policy.restore(state)?;
+        }
+        let mut engine = Engine::new(cfg, n_params, &self.init, step_secs, policy)?;
 
         let mut record = RunRecord { label: cfg.label(), ..Default::default() };
         let spe = self.steps_per_epoch();
@@ -165,6 +182,18 @@ impl<'a> Trainer<'a> {
             .map(|l| engine.topo.link(l).name().to_string())
             .collect();
         record.total_steps = engine.t();
+        // The schedule block: what the policy actually decided (realized
+        // per-level events, interval trajectory) plus its serializable
+        // controller state for the checkpoint sidecar.
+        let final_base = cfg.hier_schedule_at(cfg.epochs.saturating_sub(1))?;
+        record.schedule = Some(crate::algorithms::ScheduleSummary {
+            policy: cfg.schedule_policy.spec(),
+            realized: engine.realized.clone(),
+            final_intervals: engine.policy.intervals(&final_base),
+            k2_clamp,
+            changes: engine.policy.changes().to_vec(),
+            state: engine.policy.state(),
+        });
         if cfg.keep_final_params {
             let mut final_params = Vec::new();
             engine.mean_params(&mut final_params);

@@ -159,12 +159,29 @@ pub fn layout_for(cfg: &RunConfig) -> Result<ParamLayout> {
 /// Run one training job end to end.
 pub fn run(cfg: &RunConfig) -> Result<RunRecord> {
     let (backend, data, mut init) = build(cfg)?;
+    let mut policy_state = None;
     if let Some(path) = &cfg.init_params {
         // Warm start: remap the snapshot into this backend's layout.
         let snap = crate::checkpoint::load(std::path::Path::new(path))?;
         init = remap_by_name(&snap.layout, &snap.params, &layout_for(cfg)?)?;
+        // A checkpoint that recorded its schedule policy only resumes
+        // under the same policy: controller state cannot transfer across
+        // policies, and silently restarting an adaptive controller cold
+        // would diverge from the run it claims to continue.
+        if let Some((spec, state)) = &snap.schedule_policy {
+            let want = cfg.schedule_policy.spec();
+            if *spec != want {
+                anyhow::bail!(
+                    "checkpoint {path} was saved by a --schedule {spec} run but this run \
+                     uses --schedule {want}; rerun with --schedule {spec} (or retrain from \
+                     scratch) — controller state does not transfer across policies"
+                );
+            }
+            policy_state = Some(state.clone());
+        }
     }
     let mut trainer = Trainer::new(cfg, backend, data, init)?;
+    trainer.restore_policy_state = policy_state;
     trainer.run()
 }
 

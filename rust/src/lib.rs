@@ -65,7 +65,9 @@ pub mod theory;
 pub mod topology;
 pub mod util;
 
-pub use algorithms::{HierAvgSchedule, HierSchedule, ReduceEvent};
+pub use algorithms::{
+    HierAvgSchedule, HierSchedule, PolicyKind, ReduceEvent, SchedulePolicy, StaticPolicy,
+};
 pub use comm::{
     Collective, CollectiveKind, CommStats, CostModel, LevelStats, PooledCollective,
     ReduceStrategy, Reducer, ShardedCollective, SimulatedCollective,

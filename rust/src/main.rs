@@ -17,6 +17,7 @@ USAGE:
                   [--links intra,inter,rack]
                   [--collective simulated|sharded[:N]|pooled[:N]]
                   [--pool-threads N]
+                  [--schedule static|adaptive[:target[:gain]]|warmup[:k]]
                   [--exec lockstep|event] [--het F] [--straggler P[:M]]
                   [--train-n N] [--test-n N] [--lr SCHED] [--seed N]
                   [--noise F] [--radius F] [--strategy ring|tree|naive]
@@ -27,9 +28,11 @@ USAGE:
                    asgd|adaptive|deep|all>
                   [--scale small|full] [--backend xla|native] [--out DIR]
                   [--from-sweep SWEEP_<p>.json]   (deep only)
+                  [--schedule static|adaptive[:target[:gain]]|warmup[:k]]  (deep only)
   hier-avg sweep  --p N [--model M] [--steps T] [--levels-min N]
                   [--levels-max N] [--k1-grid 1,2,4] [--k2-max N]
                   [--strategy ring|tree|naive] [--no-rack] [--no-local]
+                  [--schedule static|adaptive[:target[:gain]]|warmup[:k]]
                   [--het F] [--straggler P[:M]] [--seed N]
                   [--validate-top N] [--collective simulated|sharded|pooled]
                   [--top N] [--out SWEEP_<p>.json]
@@ -42,6 +45,22 @@ intervals; omit both for the paper's two-level --p/--s/--k1/--k2 shape.
 --links assigns each level's cost-model tier (default: innermost intra,
 outer levels inter).  E.g. a GPU->node->rack run:
   --levels 4,16,64 --ks 2,8,32 --links intra,inter,rack
+
+Schedule policy: --schedule selects who decides when each tier reduces.
+static (default) follows the configured intervals verbatim; adaptive runs
+the online straggler-aware controller — after every reduction it observes
+the barrier stall the event timeline attributed to that tier and widens
+the tier's interval when stall exceeds `target` (default 0.25) of the
+tier's compute budget, narrowing back when the signal fades; widening is
+capped by step-size condition (3.5) and narrowing floored at the base
+schedule, so an adaptive run never fires more global reductions than the
+static run of the same config (the optional gain is the controller's
+EWMA weight — 0 is the neutral controller, bit-identical to static);
+warmup averages densely early (interval cap doubles every k
+steps, default 64) and decays to the configured schedule.  Adaptation
+reads only the seeded virtual timeline, so runs stay deterministic and
+replayable; saved checkpoints carry the controller state and refuse to
+resume under a different --schedule.
 
 Execution: --collective pooled reduces over the persistent worker pool
 (no per-reduction thread spawn); --pool-threads sizes the pool shared by
@@ -63,7 +82,11 @@ step-size condition (3.5)), ranks by modelled time-to-target, optionally
 replays the top --validate-top candidates through the engine (reporting
 modelled-vs-measured comm deltas), and writes SWEEP_<p>.json.
 --no-local restricts the space to the K-AVG baseline family (no local
-averaging); --no-rack drops the rack-tier variants.
+averaging); --no-rack drops the rack-tier variants.  --schedule adds a
+policy variant of every shape next to its static closed-form entry:
+non-static candidates are priced by replaying their policy through the
+virtual-time event engine (realized events, not the interval table), so
+an adaptive schedule is ranked by what it would actually fire.
 
 LR schedules: const:0.05 | step:0.1@150=0.01 | cosine:0.1->0.001@200 |
               warmcos:0.1->0.001@5/200
@@ -115,7 +138,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     args.check_known(&[
         "p", "model", "steps", "strategy", "levels-min", "levels-max", "k2-max", "k1-grid",
         "no-rack", "no-local", "top", "validate-top", "collective", "out", "het",
-        "straggler", "seed",
+        "straggler", "seed", "schedule",
     ])?;
     if args.positional.len() > 1 {
         bail!(
@@ -155,6 +178,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if args.has("no-local") {
         space.local_averaging = false;
+    }
+    if let Some(s) = args.get("schedule") {
+        space.policy = hier_avg::algorithms::PolicyKind::parse(s)?;
     }
 
     let mut ctx = ScoreCtx::for_model(model, p, steps, strategy, CostModel::default())?;
@@ -233,19 +259,20 @@ fn cmd_train(args: &Args) -> Result<()> {
     // would train a different configuration than asked.
     args.check_known(&[
         "config", "model", "backend", "p", "s", "k1", "k2", "levels", "ks", "links",
-        "collective", "pool-threads", "exec", "het", "straggler", "epochs", "train-n",
-        "test-n", "lr", "seed", "noise", "radius", "momentum", "strategy", "record-steps",
-        "init-params", "save-params", "trace", "out", "help",
+        "collective", "pool-threads", "schedule", "exec", "het", "straggler", "epochs",
+        "train-n", "test-n", "lr", "seed", "noise", "radius", "momentum", "strategy",
+        "record-steps", "init-params", "save-params", "trace", "out", "help",
     ])?;
     let cfg = RunConfig::from_args(args)?;
     let topo = cfg.hierarchy()?;
     eprintln!(
-        "[train] {} backend={:?} P={} levels={:?} K={:?} collective={} exec={} epochs={}",
+        "[train] {} backend={:?} P={} levels={:?} K={:?} schedule={} collective={} exec={} epochs={}",
         cfg.model,
         cfg.backend,
         cfg.p,
         topo.sizes(),
         cfg.base_intervals(),
+        cfg.schedule_policy.spec(),
         cfg.collective.name(),
         cfg.exec.name(),
         cfg.epochs
@@ -292,6 +319,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         rec.idle_seconds.iter().sum::<f64>(),
         rec.straggler_events
     );
+    if let Some(s) = &rec.schedule {
+        println!(
+            "schedule {}: realized {:?}  final_intervals {:?}  adaptations {}  k2_clamp {}",
+            s.policy,
+            s.realized,
+            s.final_intervals,
+            s.changes.len(),
+            s.k2_clamp
+        );
+    }
     if let Some(out) = args.get("out") {
         rec.write_json(std::path::Path::new(out))?;
         eprintln!("wrote {out}");
@@ -302,7 +339,17 @@ fn cmd_train(args: &Args) -> Result<()> {
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("final params were not kept"))?;
         let layout = driver::layout_for(&cfg)?;
-        hier_avg::checkpoint::save(std::path::Path::new(path), &cfg.model, &layout, params)?;
+        // The sidecar carries the policy spec + controller state so a
+        // warm start resumes the controller (and refuses a different
+        // --schedule).
+        let schedule = rec.schedule.as_ref().map(|s| (s.policy.as_str(), &s.state));
+        hier_avg::checkpoint::save_with_schedule(
+            std::path::Path::new(path),
+            &cfg.model,
+            &layout,
+            params,
+            schedule,
+        )?;
         eprintln!("saved parameters to {path}");
     }
     if let Some(path) = args.get("trace") {

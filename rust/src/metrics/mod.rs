@@ -5,6 +5,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::algorithms::ScheduleSummary;
 use crate::comm::{CommStats, LevelStats};
 use crate::util::json::Json;
 
@@ -75,6 +76,11 @@ pub struct RunRecord {
     pub level_stall_seconds: Vec<f64>,
     /// Straggler spikes that fired over the run.
     pub straggler_events: u64,
+    /// What the schedule policy decided: realized per-level reduction
+    /// events, the interval trajectory, and the controller's serializable
+    /// state (filled by the trainer; `None` for runners without the
+    /// policy layer, e.g. ASGD).
+    pub schedule: Option<ScheduleSummary>,
 }
 
 impl RunRecord {
@@ -153,8 +159,35 @@ impl RunRecord {
             .set("epochs", Json::Arr(epochs))
             .set("comm", comm)
             .set("comm_levels", Json::Arr(comm_levels))
-            .set("exec", exec)
-            .set("total_steps", Json::from(self.total_steps as usize))
+            .set("exec", exec);
+        if let Some(s) = &self.schedule {
+            let mut changes = Vec::with_capacity(s.changes.len());
+            for c in &s.changes {
+                let mut e = Json::obj();
+                e.set("step", Json::from(c.step as usize)).set(
+                    "intervals",
+                    Json::Arr(c.intervals.iter().map(|&k| Json::from(k as usize)).collect()),
+                );
+                changes.push(e);
+            }
+            let mut sch = Json::obj();
+            sch.set("policy", Json::from(s.policy.as_str()))
+                .set(
+                    "realized",
+                    Json::Arr(s.realized.iter().map(|&v| Json::from(v as usize)).collect()),
+                )
+                .set(
+                    "final_intervals",
+                    Json::Arr(
+                        s.final_intervals.iter().map(|&k| Json::from(k as usize)).collect(),
+                    ),
+                )
+                .set("k2_clamp", Json::from(s.k2_clamp as usize))
+                .set("adaptations", Json::Arr(changes))
+                .set("state", s.state.clone());
+            o.set("schedule", sch);
+        }
+        o.set("total_steps", Json::from(self.total_steps as usize))
             .set("sim_compute_seconds", Json::from(self.sim_compute_seconds))
             .set("sim_total_seconds", Json::from(self.sim_total_seconds()))
             .set(
@@ -352,6 +385,37 @@ mod tests {
                 0.4
             );
             assert_eq!(e.req("straggler_events").unwrap().as_usize().unwrap(), 3);
+        }
+    }
+
+    #[test]
+    fn schedule_block_serializes() {
+        use crate::algorithms::{ScheduleChange, ScheduleSummary};
+        let mut r = record("s", 1);
+        // No policy layer (e.g. ASGD): the block is absent.
+        assert!(r.to_json().get("schedule").is_none());
+        r.schedule = Some(ScheduleSummary {
+            policy: "adaptive:0.25".into(),
+            realized: vec![12, 3],
+            final_intervals: vec![2, 16],
+            k2_clamp: 64,
+            changes: vec![ScheduleChange { step: 8, intervals: vec![2, 16] }],
+            state: Json::parse(r#"{"offset": 40}"#).unwrap(),
+        });
+        for j in [r.to_json(), r.to_golden_json()] {
+            let parsed = Json::parse(&j.pretty()).unwrap();
+            let s = parsed.req("schedule").unwrap();
+            assert_eq!(s.req("policy").unwrap().as_str().unwrap(), "adaptive:0.25");
+            assert_eq!(s.req("realized").unwrap().usize_arr().unwrap(), vec![12, 3]);
+            assert_eq!(s.req("final_intervals").unwrap().usize_arr().unwrap(), vec![2, 16]);
+            assert_eq!(s.req("k2_clamp").unwrap().as_usize().unwrap(), 64);
+            let ad = s.req("adaptations").unwrap().as_arr().unwrap();
+            assert_eq!(ad[0].req("step").unwrap().as_usize().unwrap(), 8);
+            assert_eq!(ad[0].req("intervals").unwrap().usize_arr().unwrap(), vec![2, 16]);
+            assert_eq!(
+                s.req("state").unwrap().req("offset").unwrap().as_usize().unwrap(),
+                40
+            );
         }
     }
 

@@ -41,7 +41,7 @@ pub mod report;
 
 use anyhow::{bail, Result};
 
-use crate::algorithms::HierSchedule;
+use crate::algorithms::{policy::K2_CLAMP_CAP, HierSchedule, PolicyKind};
 use crate::comm::{CollectiveKind, CostModel, ReduceStrategy};
 use crate::config::{BackendKind, RunConfig};
 use crate::coordinator::{self, Trainer};
@@ -76,6 +76,13 @@ pub struct SweepSpace {
     /// single-interval schedules — the paper's baseline, and the shape the
     /// planner must degenerate to when local averaging is disabled.
     pub local_averaging: bool,
+    /// Non-static schedule policy to enumerate *next to* the static
+    /// entries (`sweep --schedule`): every shape additionally gets a
+    /// policy variant, scored by replaying the policy through the
+    /// virtual-time event engine instead of the closed form.  `Static`
+    /// (the default) adds nothing — the space and its ranking stay
+    /// bit-stable with the pre-policy planner.
+    pub policy: PolicyKind,
 }
 
 impl SweepSpace {
@@ -91,6 +98,7 @@ impl SweepSpace {
             k2_max: 256,
             use_rack: true,
             local_averaging: true,
+            policy: PolicyKind::Static,
         })
     }
 
@@ -116,6 +124,7 @@ impl SweepSpace {
         if self.k2_max == 0 {
             bail!("k2-max must be >= 1");
         }
+        self.policy.validate()?;
         Ok(())
     }
 
@@ -191,8 +200,9 @@ impl ScoreCtx {
     }
 }
 
-/// One point of the search space: a topology shape plus its schedule.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// One point of the search space: a topology shape plus its schedule
+/// (base intervals and the policy that realizes them).
+#[derive(Debug, Clone, PartialEq)]
 pub struct Candidate {
     /// Group-size chain, innermost first, last = P.
     pub levels: Vec<usize>,
@@ -200,24 +210,32 @@ pub struct Candidate {
     pub links: Vec<LinkClass>,
     /// Per-level averaging intervals, parallel to `levels`.
     pub ks: Vec<u64>,
+    /// How the intervals are realized at run time: static (the closed
+    /// form scores it exactly) or a non-static policy (scored by replay).
+    pub policy: PolicyKind,
 }
 
 impl Candidate {
     /// A candidate under the topology's default link assignment
-    /// (innermost intra-node, outer levels inter-node).
+    /// (innermost intra-node, outer levels inter-node) and the static
+    /// schedule policy.
     pub fn with_default_links(levels: Vec<usize>, ks: Vec<u64>) -> Result<Candidate> {
         let topo = HierTopology::new(levels.clone())?;
         let links = (0..topo.n_levels()).map(|l| topo.link(l)).collect();
-        Ok(Candidate { levels, links, ks })
+        Ok(Candidate { levels, links, ks, policy: PolicyKind::Static })
     }
 
-    /// Stable identifier: `h<sizes>-k<intervals>[-rack]`.
+    /// Stable identifier: `h<sizes>-k<intervals>[-rack][-<policy>]`.
     pub fn label(&self) -> String {
         let sizes: Vec<String> = self.levels.iter().map(|s| s.to_string()).collect();
         let ks: Vec<String> = self.ks.iter().map(|k| k.to_string()).collect();
         let mut s = format!("h{}-k{}", sizes.join("x"), ks.join("_"));
         if self.links.last() == Some(&LinkClass::RackFabric) {
             s.push_str("-rack");
+        }
+        if self.policy != PolicyKind::Static {
+            s.push('-');
+            s.push_str(self.policy.name());
         }
         s
     }
@@ -243,6 +261,7 @@ impl Candidate {
         cfg.set_levels(self.levels.clone());
         cfg.set_ks(self.ks.clone());
         cfg.links = self.links.clone();
+        cfg.schedule_policy = self.policy;
         cfg
     }
 }
@@ -377,6 +396,15 @@ pub fn enumerate(space: &SweepSpace, ctx: &ScoreCtx) -> Vec<Candidate> {
             out.push(cand);
         }
     }
+    // Non-static policies ride next to their static twins: same shapes,
+    // same base intervals, scored by replay instead of the closed form.
+    if space.policy != PolicyKind::Static {
+        let variants: Vec<Candidate> = out
+            .iter()
+            .map(|c| Candidate { policy: space.policy, ..c.clone() })
+            .collect();
+        out.extend(variants);
+    }
     out
 }
 
@@ -416,9 +444,13 @@ pub struct Score {
     /// of the candidate's schedule replayed through the event timeline
     /// (heterogeneous rates + seeded straggler spikes).
     pub makespan_seconds: f64,
-    /// Fixed-budget convergence bound B(K1, K2, S) of Theorem 3.4.
+    /// Fixed-budget convergence bound B(K1, K2, S) of Theorem 3.4 — for
+    /// a non-static candidate, evaluated at the interval table its
+    /// policy replay *settled on* (the schedule it actually realized),
+    /// not the base table.
     pub bound: f64,
-    /// Whether the candidate's K2 satisfies step-size condition (3.5).
+    /// Whether the (realized, for non-static) K2 satisfies step-size
+    /// condition (3.5).
     pub condition_35: bool,
     /// `(compute + comm) × bound / bound_floor`; filled by [`rank`]
     /// (NaN straight out of [`score`]).
@@ -426,7 +458,12 @@ pub struct Score {
     pub levels: Vec<LevelCost>,
 }
 
-/// Closed-form cost + bound for one candidate over `ctx.horizon` steps.
+/// Cost + bound for one candidate over `ctx.horizon` steps: the exact
+/// closed form for static candidates, a policy replay through the
+/// virtual-time event engine for non-static ones (the realized event
+/// counts — not the interval table — price the communication, and the
+/// replay's makespan prices the wall clock; deterministic, because the
+/// policy's only input is the seeded timeline).
 pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
     let topo = cand.topology()?;
     let sched = cand.schedule()?;
@@ -438,60 +475,106 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
             topo.n_levels()
         );
     }
-    let counts = sched.reduction_counts(ctx.horizon);
     let msg = ctx.n_params * 4;
-    let mut levels = Vec::with_capacity(topo.n_levels());
+    // Per-level unit costs under the engine's reduce_level conventions:
+    // size-1 levels below the top are no-ops; otherwise every group
+    // counts its event and bytes, but symmetric groups run concurrently
+    // so the level is charged one group's seconds per event.
     let mut sec_per_events = Vec::with_capacity(topo.n_levels());
-    let mut comm_seconds = 0.0f64;
-    let mut comm_bytes = 0u64;
+    let mut bytes_per_groups = Vec::with_capacity(topo.n_levels());
+    let mut groups_per_level = Vec::with_capacity(topo.n_levels());
     for l in 0..topo.n_levels() {
         let size = topo.size(l);
-        let link = topo.link(l);
-        let events = counts[l];
-        // The engine's reduce_level conventions: size-1 levels below the
-        // top are no-ops; otherwise every group counts its event and
-        // bytes, but symmetric groups run concurrently so the level is
-        // charged one group's seconds per event.
         let (sec_per_event, bytes_per_group, groups) =
             if size <= 1 && l + 1 < topo.n_levels() {
                 (0.0, 0u64, 0u64)
             } else {
                 (
-                    ctx.cost.allreduce_seconds(size, msg, link, ctx.strategy),
+                    ctx.cost.allreduce_seconds(size, msg, topo.link(l), ctx.strategy),
                     ctx.cost.allreduce_bytes(size, msg, ctx.strategy),
                     topo.n_groups(l) as u64,
                 )
             };
         sec_per_events.push(sec_per_event);
-        let seconds = events as f64 * sec_per_event;
-        let bytes = events * groups * bytes_per_group;
+        bytes_per_groups.push(bytes_per_group);
+        groups_per_level.push(groups);
+    }
+    // Event counts + makespan: closed form for static, replay otherwise.
+    // For a replayed policy the *final* interval table also feeds the
+    // convergence bound below — an adaptive candidate that widened K2 up
+    // to the clamp must be ranked with the budget of the schedule it
+    // actually realized, not the tighter bound of its base table
+    // (otherwise every adaptive twin would beat its static twin by
+    // pairing a smaller makespan with an unearned bound).
+    let (counts, replay_makespan, realized_intervals) =
+        if cand.policy == PolicyKind::Static {
+            (sched.reduction_counts(ctx.horizon), None, None)
+        } else {
+            let clamp = theory::max_k2_condition_35(&ctx.bound, K2_CLAMP_CAP).unwrap_or(1);
+            let mut policy = cand.policy.build(clamp, ctx.step_seconds, topo.p());
+            let mut model =
+                sim::EventModel::new(topo.p(), topo.n_levels(), ctx.step_seconds, &ctx.het);
+            let realized = sim::drive_timeline_policy(
+                &mut model,
+                &topo,
+                policy.as_mut(),
+                &sched,
+                ctx.horizon,
+                &sec_per_events,
+            );
+            let final_intervals = policy.intervals(&sched);
+            (realized, Some(model.breakdown().makespan_seconds), Some(final_intervals))
+        };
+    let mut levels = Vec::with_capacity(topo.n_levels());
+    let mut comm_seconds = 0.0f64;
+    let mut comm_bytes = 0u64;
+    for l in 0..topo.n_levels() {
+        let events = counts[l];
+        let seconds = events as f64 * sec_per_events[l];
+        let bytes = events * groups_per_level[l] * bytes_per_groups[l];
         comm_seconds += seconds;
         comm_bytes += bytes;
         levels.push(LevelCost {
             level: l,
-            size,
-            link,
+            size: topo.size(l),
+            link: topo.link(l),
             events,
-            reductions: events * groups,
+            reductions: events * groups_per_level[l],
             bytes,
             seconds,
         });
     }
     let (k1, k2, s) = cand.k1k2s();
+    let (k1, k2) = match &realized_intervals {
+        Some(iv) => (iv[0], *iv.last().unwrap()),
+        None => (k1, k2),
+    };
     let bound = theory::thm34_budget_bound(&ctx.bound, ctx.horizon, k1, k2, s.max(1));
     let compute_seconds = ctx.horizon as f64 * ctx.step_seconds;
-    // Homogeneous compute keeps the exact closed form (bit-stable with the
-    // pre-event-engine ranking); heterogeneous contexts replay the
-    // schedule through the virtual timeline so barrier waits are priced.
+    // Static + homogeneous compute keeps the exact closed form
+    // (bit-stable with the pre-event-engine ranking); heterogeneous
+    // contexts replay the schedule through the virtual timeline so
+    // barrier waits are priced; non-static candidates always use their
+    // replay's makespan (its stepwise accumulation is exactly what a
+    // live engine run's timeline reports — the validation parity).
     // Known optimization if het sweeps ever feel slow: the per-learner
     // step-duration stream depends only on (P, het, seed) — one duration
     // matrix could be precomputed per ScoreCtx and shared across
     // candidates, leaving only the O(horizon·P) barrier walk per replay.
-    let makespan_seconds = if ctx.het.is_homogeneous() {
-        compute_seconds + comm_seconds
-    } else {
-        sim::replay_timeline(&topo, &sched, ctx.horizon, ctx.step_seconds, &sec_per_events, &ctx.het)
+    let makespan_seconds = match replay_makespan {
+        Some(m) => m,
+        None if ctx.het.is_homogeneous() => compute_seconds + comm_seconds,
+        None => {
+            sim::replay_timeline(
+                &topo,
+                &sched,
+                ctx.horizon,
+                ctx.step_seconds,
+                &sec_per_events,
+                &ctx.het,
+            )
             .makespan_seconds
+        }
     };
     Ok(Score {
         comm_seconds,
@@ -936,6 +1019,88 @@ mod tests {
         // Comm parity still holds under the event model (time model only).
         let rel = het.delta_seconds.abs() / het.measured_comm_seconds.max(1e-30);
         assert!(rel < 1e-9, "het comm drift {rel}");
+    }
+
+    #[test]
+    fn policy_variants_ride_next_to_static_entries() {
+        let mut space = SweepSpace::new(16).unwrap();
+        space.policy = PolicyKind::Adaptive { target: 0.25, gain: 1.0 };
+        // Short horizon: every adaptive candidate is priced by an
+        // O(horizon · P) replay, and this test ranks the space twice.
+        let ctx = ScoreCtx { horizon: 2_000, ..ctx16() };
+        let cands = enumerate(&space, &ctx);
+        let n_static = cands.iter().filter(|c| c.policy == PolicyKind::Static).count();
+        let n_adaptive = cands.len() - n_static;
+        assert_eq!(n_static, n_adaptive, "every shape needs both variants");
+        // Labels distinguish the twins.
+        let adaptive = cands.iter().find(|c| c.policy != PolicyKind::Static).unwrap();
+        assert!(adaptive.label().ends_with("-adaptive"), "{}", adaptive.label());
+        // ... and the whole space still ranks deterministically.
+        let a = rank(&space, &ctx).unwrap();
+        let b = rank(&space, &ctx).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.candidate, y.candidate);
+            assert_eq!(
+                x.score.makespan_seconds.to_bits(),
+                y.score.makespan_seconds.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_replay_scoring_thins_global_events_under_stragglers() {
+        let mut ctx = ScoreCtx { horizon: 2_048, ..ctx16() };
+        ctx.het = HetSpec { het: 0.6, straggler_prob: 0.1, straggler_mult: 4.0, seed: 7 };
+        let levels = vec![4usize, 16];
+        let ks = vec![2u64, 8];
+        let stat = Candidate::with_default_links(levels.clone(), ks.clone()).unwrap();
+        let mut adap = stat.clone();
+        adap.policy = PolicyKind::Adaptive { target: 0.05, gain: 1.0 };
+        let s_stat = score(&stat, &ctx).unwrap();
+        let s_adap = score(&adap, &ctx).unwrap();
+        // The controller widens the straggler-taxed tiers: fewer realized
+        // outer events than the static table fires, never more.
+        assert!(
+            s_adap.levels[1].events < s_stat.levels[1].events,
+            "adaptive {} vs static {} outer events",
+            s_adap.levels[1].events,
+            s_stat.levels[1].events
+        );
+        assert!(s_adap.comm_seconds < s_stat.comm_seconds);
+        assert!(s_adap.makespan_seconds.is_finite() && s_adap.makespan_seconds > 0.0);
+        // Warmup goes the other way: dense early averaging adds events.
+        let mut warm = stat.clone();
+        warm.policy = PolicyKind::Warmup { stage_steps: 64 };
+        let s_warm = score(&warm, &ctx).unwrap();
+        let total = |s: &Score| s.levels.iter().map(|l| l.events).sum::<u64>();
+        assert!(total(&s_warm) > total(&s_stat));
+    }
+
+    #[test]
+    fn adaptive_validation_measures_what_the_replay_modelled() {
+        // The engine run and the scoring replay must co-evolve: same
+        // decisions, same realized events, so modelled-vs-measured comm
+        // and makespan agree for a *policy-driven* candidate too.
+        let mut ctx = ctx16();
+        ctx.het = HetSpec { het: 0.5, straggler_prob: 0.1, straggler_mult: 4.0, seed: 13 };
+        let mut cand = Candidate::with_default_links(vec![4, 16], vec![2, 8]).unwrap();
+        cand.policy = PolicyKind::Adaptive { target: 0.05, gain: 1.0 };
+        let v = validate(&cand, &ctx, "quickstart", CollectiveKind::Simulated).unwrap();
+        let rel = v.delta_seconds.abs() / v.measured_comm_seconds.max(1e-30);
+        assert!(
+            rel < 1e-9,
+            "adaptive comm drift: modelled {} vs measured {}",
+            v.modelled_comm_seconds,
+            v.measured_comm_seconds
+        );
+        assert_eq!(v.modelled_comm_bytes, v.measured_comm_bytes);
+        let rel = v.makespan_delta_seconds.abs() / v.measured_makespan_seconds.max(1e-30);
+        assert!(
+            rel < 1e-9,
+            "adaptive makespan drift: modelled {} vs measured {}",
+            v.modelled_makespan_seconds,
+            v.measured_makespan_seconds
+        );
     }
 
     #[test]

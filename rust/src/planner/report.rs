@@ -11,10 +11,12 @@
 //!   "het": {"het": 0.0, "straggler_prob": 0.0, "straggler_mult": 4.0,
 //!           "seed": 42},
 //!   "space": {"min_levels": 2, "max_levels": 4, "k1_grid": [1,2,4],
-//!             "k2_max": 256, "use_rack": true, "local_averaging": true},
+//!             "k2_max": 256, "use_rack": true, "local_averaging": true,
+//!             "policy": "static"},
 //!   "k2_cap_condition_35": 199,
 //!   "candidates": [
-//!     {"rank": 0, "label": "h4x16-k2_8", "levels": [4,16], "ks": [2,8],
+//!     {"rank": 0, "label": "h4x16-k2_8", "policy": "static",
+//!      "levels": [4,16], "ks": [2,8],
 //!      "links": ["intra","inter"], "k1": 2, "k2": 8, "s": 4,
 //!      "score": {"time_to_target": 1.2, "comm_seconds": 0.3,
 //!                "comm_bytes": 123, "compute_seconds": 0.9,
@@ -92,6 +94,7 @@ fn candidate_json(rank: usize, r: &Ranked, validation: Option<&Validation>) -> J
     let mut o = Json::obj();
     o.set("rank", Json::from(rank))
         .set("label", Json::from(c.label()))
+        .set("policy", Json::from(c.policy.spec()))
         .set("levels", Json::Arr(c.levels.iter().map(|&v| Json::from(v)).collect()))
         .set("ks", Json::Arr(c.ks.iter().map(|&v| Json::from(v as usize)).collect()))
         .set(
@@ -127,7 +130,8 @@ pub fn sweep_json(
         )
         .set("k2_max", Json::from(space.k2_max as usize))
         .set("use_rack", Json::from(space.use_rack))
-        .set("local_averaging", Json::from(space.local_averaging));
+        .set("local_averaging", Json::from(space.local_averaging))
+        .set("policy", Json::from(space.policy.spec()));
     let candidates: Vec<Json> = ranked
         .iter()
         .enumerate()

@@ -471,8 +471,12 @@ pub fn adaptive(ctx: &ReproCtx) -> Result<()> {
 // 2-level shape still paid on the global fabric.
 // ---------------------------------------------------------------------------
 
-pub fn deep(ctx: &ReproCtx, from_sweep: Option<&str>) -> Result<()> {
-    let runs = match from_sweep {
+pub fn deep(
+    ctx: &ReproCtx,
+    from_sweep: Option<&str>,
+    schedule: Option<crate::algorithms::PolicyKind>,
+) -> Result<()> {
+    let mut runs = match from_sweep {
         // Planner follow-through: train the sweep's winner instead of the
         // hand-picked pair, against the best 2-level entry of the same
         // report as the paper-shaped reference.
@@ -490,6 +494,16 @@ pub fn deep(ctx: &ReproCtx, from_sweep: Option<&str>) -> Result<()> {
             vec![("two-level-s4".to_string(), two), ("three-level-4x16x32".to_string(), three)]
         }
     };
+    // `repro deep --schedule`: run every shape under the requested policy
+    // (overriding whatever the sweep report recorded), so the 2-level
+    // baseline and the deep winner are compared like for like.
+    if let Some(policy) = schedule {
+        println!("(schedule policy override: {})", policy.spec());
+        for (_, cfg) in runs.iter_mut() {
+            cfg.schedule_policy = policy;
+            cfg.validate()?;
+        }
+    }
     let mut records = Vec::new();
     println!(
         "{:<24} {:>12} {:>10} {:>12} {:>12} {:>14}",
@@ -578,6 +592,11 @@ fn sweep_deep_runs(
         cfg.set_levels(levels);
         cfg.set_ks(ks);
         cfg.links = links;
+        // Candidates ranked under a schedule policy train under it too
+        // (reports from before the policy field stay static).
+        if let Some(policy) = cand.get("policy") {
+            cfg.schedule_policy = crate::algorithms::PolicyKind::parse(policy.as_str()?)?;
+        }
         if !het.is_homogeneous() {
             cfg.exec = crate::sim::ExecKind::Event;
             cfg.set_het_spec(&het);

@@ -16,13 +16,24 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
     // A misspelled flag (e.g. `--from-swep`) would otherwise be silently
     // ignored and the harness would run a different experiment
     // configuration than asked.
-    args.check_known(&["scale", "backend", "out", "from-sweep", "help"])?;
+    args.check_known(&["scale", "backend", "out", "from-sweep", "schedule", "help"])?;
     let Some(exp) = args.positional.get(1) else {
         bail!("repro needs an experiment id (fig1..fig5, table1, thm34..thm36, comm, asgd, adaptive, deep, all)");
     };
     if args.get("from-sweep").is_some() && exp != "deep" {
         bail!("--from-sweep only applies to the deep experiment (got {exp:?})");
     }
+    // Parse eagerly so a bad policy spec fails before any runs start, and
+    // reject it outside `deep` rather than silently running static.
+    let schedule = match args.get("schedule") {
+        Some(s) => {
+            if exp != "deep" {
+                bail!("--schedule only applies to the deep experiment (got {exp:?})");
+            }
+            Some(crate::algorithms::PolicyKind::parse(s)?)
+        }
+        None => None,
+    };
     let scale = Scale::parse(args.get_or("scale", "small"))?;
     let backend = match args.get("backend") {
         Some(b) => crate::config::BackendKind::parse(b)?,
@@ -43,7 +54,7 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
         "comm" => experiments::comm(&ctx),
         "asgd" => experiments::asgd(&ctx),
         "adaptive" => experiments::adaptive(&ctx),
-        "deep" => experiments::deep(&ctx, args.get("from-sweep")),
+        "deep" => experiments::deep(&ctx, args.get("from-sweep"), schedule),
         "all" => {
             experiments::thm34(&ctx)?;
             experiments::thm35(&ctx)?;
@@ -56,7 +67,7 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
             experiments::fig5(&ctx)?;
             experiments::asgd(&ctx)?;
             experiments::adaptive(&ctx)?;
-            experiments::deep(&ctx, None)
+            experiments::deep(&ctx, None, None)
         }
         other => bail!("unknown experiment {other:?}"),
     }

@@ -37,7 +37,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::algorithms::HierSchedule;
+use crate::algorithms::{HierSchedule, SchedulePolicy, StaticPolicy};
 use crate::topology::HierTopology;
 use crate::util::rng::Pcg32;
 
@@ -217,8 +217,11 @@ pub trait ExecModel {
     /// barriers its members and pays `seconds` (one symmetric group's
     /// modelled collective cost — groups at one level are identical in
     /// size, link, and payload).  Size-1 levels below the top are no-ops,
-    /// mirroring `Reducer::reduce_level`.
-    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64);
+    /// mirroring `Reducer::reduce_level`.  Returns the barrier stall this
+    /// event charged (the sum of member waits across the level's groups;
+    /// always 0 under lockstep) — the feedback signal the engine hands to
+    /// an adaptive [`SchedulePolicy`].
+    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64) -> f64;
 
     /// Modelled wall clock so far (max over learner clocks).
     fn now(&self) -> f64;
@@ -256,11 +259,12 @@ impl ExecModel for LockstepModel {
         self.clock += self.base;
     }
 
-    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64) {
+    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64) -> f64 {
         if topo.size(level) <= 1 && level + 1 < topo.n_levels() {
-            return; // the reducer's no-op convention
+            return 0.0; // the reducer's no-op convention
         }
         self.clock += seconds;
+        0.0 // one shared clock: nobody ever waits
     }
 
     fn now(&self) -> f64 {
@@ -355,12 +359,13 @@ impl ExecModel for EventModel {
         }
     }
 
-    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64) {
+    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64) -> f64 {
         debug_assert_eq!(topo.n_levels(), self.n_levels);
         debug_assert_eq!(topo.p(), self.clocks.len());
         if topo.size(level) <= 1 && level + 1 < topo.n_levels() {
-            return; // the reducer's no-op convention
+            return 0.0; // the reducer's no-op convention
         }
+        let mut event_stall = 0.0;
         for g in 0..topo.n_groups(level) {
             let members = topo.group_members(level, g);
             // Group-local barrier: members meet at the slowest arrival,
@@ -374,9 +379,11 @@ impl ExecModel for EventModel {
                 let wait = arrival - self.clocks[j];
                 self.blocked[j] += wait;
                 self.level_stalls[level] += wait;
+                event_stall += wait;
                 self.clocks[j] = arrival + seconds;
             }
         }
+        event_stall
     }
 
     fn now(&self) -> f64 {
@@ -397,11 +404,41 @@ impl ExecModel for EventModel {
     }
 }
 
-/// Drive `model` through `horizon` steps of `sched`, charging
-/// `level_seconds[l]` per level-`l` event — the one canonical loop
-/// mirroring `Engine::step`'s on_step → on_reduction call order (the
-/// planner's replay, the property tests, and the event bench all reuse
-/// it, so they cannot drift from each other).
+/// Drive `model` through `horizon` steps under `policy` (consulting
+/// `sched` as the base schedule), charging `level_seconds[l]` per
+/// level-`l` event — the one canonical loop mirroring `Engine::step`'s
+/// decide → on_step → on_reduction → observe call order (the planner's
+/// replay, the property tests, and the benches all reuse it, so they
+/// cannot drift from each other or from the engine).  The stall each
+/// barrier charges is fed straight back to the policy, so adaptive
+/// decisions and the virtual clock co-evolve exactly as they do in a
+/// live engine run; replay stays deterministic because that feedback is
+/// a pure function of the seeded timeline.  Returns the per-level
+/// realized event counts.
+pub fn drive_timeline_policy(
+    model: &mut dyn ExecModel,
+    topo: &HierTopology,
+    policy: &mut dyn SchedulePolicy,
+    sched: &HierSchedule,
+    horizon: u64,
+    level_seconds: &[f64],
+) -> Vec<u64> {
+    debug_assert_eq!(level_seconds.len(), topo.n_levels());
+    let mut realized = vec![0u64; topo.n_levels()];
+    for t in 1..=horizon {
+        model.on_step();
+        if let Some(level) = policy.decide(t, sched) {
+            realized[level] += 1;
+            let stall = model.on_reduction(topo, level, level_seconds[level]);
+            policy.observe(t, level, stall, level_seconds[level]);
+        }
+    }
+    realized
+}
+
+/// [`drive_timeline_policy`] under the static policy: the legacy
+/// fixed-schedule loop (the event bench and the property tests drive
+/// this form).
 pub fn drive_timeline(
     model: &mut dyn ExecModel,
     topo: &HierTopology,
@@ -409,13 +446,8 @@ pub fn drive_timeline(
     horizon: u64,
     level_seconds: &[f64],
 ) {
-    debug_assert_eq!(level_seconds.len(), topo.n_levels());
-    for t in 1..=horizon {
-        model.on_step();
-        if let Some(level) = sched.event_after(t) {
-            model.on_reduction(topo, level, level_seconds[level]);
-        }
-    }
+    let mut policy = StaticPolicy::new();
+    drive_timeline_policy(model, topo, &mut policy, sched, horizon, level_seconds);
 }
 
 /// Drive a bare event timeline (no training): `horizon` steps under
@@ -581,6 +613,42 @@ mod tests {
         l.on_step();
         l.on_reduction(&topo, 0, 123.0);
         assert_eq!(l.now(), 1.0);
+    }
+
+    #[test]
+    fn policy_driven_loop_with_static_policy_matches_fixed_schedule() {
+        let topo = topo_2x8();
+        let sched = HierSchedule::new(vec![2, 8]).unwrap();
+        let spec =
+            HetSpec { het: 0.3, straggler_prob: 0.1, straggler_mult: 4.0, seed: 5 };
+        let secs = [1e-4, 1e-3];
+        let mut a = EventModel::new(8, 2, 1e-3, &spec);
+        drive_timeline(&mut a, &topo, &sched, 256, &secs);
+        let mut b = EventModel::new(8, 2, 1e-3, &spec);
+        let mut policy = StaticPolicy::new();
+        let realized =
+            drive_timeline_policy(&mut b, &topo, &mut policy, &sched, 256, &secs);
+        assert_eq!(a.breakdown(), b.breakdown());
+        // The realized counts are exactly the schedule's closed-form
+        // event counts.
+        assert_eq!(realized, sched.reduction_counts(256));
+    }
+
+    #[test]
+    fn on_reduction_returns_the_stall_it_charges() {
+        let topo = topo_2x8();
+        let spec = HetSpec { het: 1.0, ..Default::default() };
+        let mut m = EventModel::new(8, 2, 1.0, &spec);
+        m.on_step();
+        let before: f64 = m.breakdown().blocked_seconds.iter().sum();
+        let stall = m.on_reduction(&topo, 1, 0.0);
+        let after: f64 = m.breakdown().blocked_seconds.iter().sum();
+        assert!(stall > 0.0);
+        assert!((stall - (after - before)).abs() < 1e-12 * stall);
+        // Lockstep never reports a wait.
+        let mut l = LockstepModel::new(8, 2, 1.0);
+        l.on_step();
+        assert_eq!(l.on_reduction(&topo, 1, 0.5), 0.0);
     }
 
     #[test]

@@ -173,6 +173,22 @@ mod tests {
     }
 
     #[test]
+    fn schedule_flag_is_a_value_flag_and_guarded() {
+        // `--schedule` is an ordinary value flag on train/sweep/repro;
+        // misspellings must not slip past check_known (the policy-name
+        // grammar itself is validated by `PolicyKind::parse`).
+        let a = Args::parse(
+            sv(&["train", "--schedule", "adaptive:0.25"]),
+            &["record-steps", "help"],
+        )
+        .unwrap();
+        assert_eq!(a.get("schedule"), Some("adaptive:0.25"));
+        assert!(a.check_known(&["schedule"]).is_ok());
+        let typo = Args::parse(sv(&["train", "--schedle", "adaptive"]), &[]).unwrap();
+        assert!(typo.check_known(&["schedule"]).is_err());
+    }
+
+    #[test]
     fn exec_model_flags_are_value_flags_and_guarded() {
         // The execution-model knobs are ordinary value flags (never
         // switches), and misspellings must not slip past check_known.

@@ -170,6 +170,31 @@ fn golden_trace_event_straggler() {
     check_golden("validation_event_straggler", &run_straggler());
 }
 
+/// Pins the adaptive schedule controller end to end: the same straggler
+/// scenario under `--schedule adaptive` — every widening decision, the
+/// realized per-level counts, the interval trajectory, and the
+/// serialized controller state are pure functions of the seeded timeline
+/// and must stay byte-stable.
+#[test]
+fn golden_trace_adaptive_straggler() {
+    let mut cfg = planner::validation_config(
+        &golden_candidate(),
+        "quickstart",
+        CollectiveKind::Simulated,
+    )
+    .unwrap();
+    cfg.schedule_policy =
+        hier_avg::algorithms::PolicyKind::Adaptive { target: 0.05, gain: 1.0 };
+    cfg.exec = ExecKind::Event;
+    cfg.het = 0.25;
+    cfg.straggler_prob = 0.1;
+    cfg.straggler_mult = 4.0;
+    cfg.validate().unwrap();
+    let rec = planner::validation_record(&cfg).unwrap();
+    assert_eq!(rec.schedule.as_ref().unwrap().policy, "adaptive:0.05");
+    check_golden("validation_adaptive_straggler", &rec);
+}
+
 /// The load-bearing invariant of the execution-model layer: with
 /// homogeneous compute times, `--exec event` reproduces lockstep **bit
 /// for bit** — parameters, reduction trace, comm bytes, epoch curves, and

@@ -14,7 +14,7 @@
 //! plus end-to-end coverage of a ≥3-level hierarchy through the CLI
 //! config path with per-level reduction counts in the metrics.
 
-use hier_avg::algorithms::{HierAvgSchedule, HierSchedule, ReduceEvent};
+use hier_avg::algorithms::{HierAvgSchedule, HierSchedule, PolicyKind, ReduceEvent};
 use hier_avg::comm::{
     CollectiveKind, CostModel, PooledCollective, ReduceStrategy, Reducer, ShardedCollective,
 };
@@ -568,6 +568,163 @@ fn straggler_stall_attribution_favors_the_global_tier() {
     assert!(rec.makespan_seconds > lockstep.makespan_seconds);
     // training numerics are still bit-identical to the lockstep twin
     assert_records_identical(&lockstep, &rec);
+}
+
+// ---------------------------------------------------------------------------
+// Schedule-policy layer: neutral adaptive ≡ static bit for bit, the
+// straggler-aware controller's acceptance behaviour, and the checkpoint
+// sidecar's policy guard
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_neutral_adaptive_is_bit_identical_to_static() {
+    // The satellite invariant: AdaptivePolicy with zero gain (the neutral
+    // controller) is bit-identical to StaticPolicy — random topologies,
+    // both exec models, all three collectives.
+    let shapes: &[&[usize]] = &[&[2, 4], &[4, 8], &[1, 8], &[2, 4, 8], &[8]];
+    let collectives = [
+        CollectiveKind::Simulated,
+        CollectiveKind::Sharded { threads: 3 },
+        CollectiveKind::Pooled { threads: 2 },
+    ];
+    let execs = [hier_avg::sim::ExecKind::Lockstep, hier_avg::sim::ExecKind::Event];
+    let mut rng = Pcg32::seeded(0xADA7);
+    for case in 0..8 {
+        let shape = shapes[rng.next_below(shapes.len() as u32) as usize];
+        let mut ks = Vec::with_capacity(shape.len());
+        let mut k = 1 + rng.next_below(3) as u64;
+        for _ in 0..shape.len() {
+            ks.push(k);
+            k += rng.next_below(5) as u64;
+        }
+        let collective = collectives[rng.next_below(3) as usize];
+        let exec = execs[rng.next_below(2) as usize];
+        let mut stat = quick_cfg();
+        stat.set_levels(shape.to_vec());
+        stat.set_ks(ks.clone());
+        stat.collective = collective;
+        stat.exec = exec;
+        stat.record_trace = true;
+        stat.keep_final_params = true;
+        let mut neutral = stat.clone();
+        neutral.schedule_policy = PolicyKind::Adaptive { target: 0.25, gain: 0.0 };
+        let ra = run_native(&stat);
+        let rb = run_native(&neutral);
+        assert_records_identical(&ra, &rb);
+        assert_eq!(ra.comm_levels, rb.comm_levels, "case {case}: {shape:?} ks {ks:?}");
+        assert_eq!(ra.trace, rb.trace, "case {case}");
+        assert_eq!(ra.final_params, rb.final_params, "case {case}");
+        assert_exec_breakdowns_identical(&ra, &rb);
+        // The schedule block agrees on everything but the policy name.
+        let (sa, sb) = (ra.schedule.as_ref().unwrap(), rb.schedule.as_ref().unwrap());
+        assert_eq!(sa.policy, "static");
+        assert_eq!(sb.policy, "adaptive:0.25:0");
+        assert_eq!(sa.realized, sb.realized, "case {case}");
+        assert!(sb.changes.is_empty(), "neutral controller adapted: case {case}");
+    }
+}
+
+#[test]
+fn adaptive_straggler_run_thins_the_global_tier() {
+    // The acceptance scenario, engine-level: under a seeded
+    // --het/--straggler event run the adaptive policy must fire at most
+    // as many global-tier reductions as the static run, keep every
+    // realized interval within the condition-(3.5) clamp, and still
+    // train.
+    let mut stat = quick_cfg();
+    stat.set_levels(vec![2, 8]);
+    stat.set_ks(vec![2, 8]);
+    stat.exec = hier_avg::sim::ExecKind::Event;
+    stat.het = 0.8;
+    stat.straggler_prob = 0.1;
+    stat.straggler_mult = 4.0;
+    let mut adap = stat.clone();
+    adap.schedule_policy = PolicyKind::Adaptive { target: 0.05, gain: 1.0 };
+    let rs = run_native(&stat);
+    let ra = run_native(&adap);
+    assert_eq!(rs.total_steps, ra.total_steps);
+    let (ss, sa) = (rs.schedule.as_ref().unwrap(), ra.schedule.as_ref().unwrap());
+    let global = |s: &hier_avg::algorithms::ScheduleSummary| *s.realized.last().unwrap();
+    assert!(
+        global(sa) < global(ss),
+        "adaptive fired {} global reductions vs static {}",
+        global(sa),
+        global(ss)
+    );
+    // Every realized interval stays inside the theory clamp and at or
+    // above the base schedule.
+    assert!(sa.k2_clamp >= 8);
+    for c in &sa.changes {
+        for (l, &k) in c.intervals.iter().enumerate() {
+            assert!(k <= sa.k2_clamp, "interval {k} above clamp {}", sa.k2_clamp);
+            assert!(k >= [2u64, 8][l], "interval {k} narrowed below base at level {l}");
+        }
+    }
+    assert!(!sa.changes.is_empty(), "controller never adapted");
+    // Fewer wide barriers => the adaptive timeline finishes no later.
+    assert!(ra.makespan_seconds <= rs.makespan_seconds);
+    // ... and the run still learns (chance for 5 classes is 0.2).
+    assert!(ra.epochs.last().unwrap().train_loss.is_finite());
+    assert!(ra.epochs.last().unwrap().test_acc > 0.3);
+}
+
+#[test]
+fn warmup_run_is_dense_early() {
+    let mut stat = quick_cfg();
+    stat.set_levels(vec![2, 8]);
+    stat.set_ks(vec![2, 8]);
+    let mut warm = stat.clone();
+    warm.schedule_policy = PolicyKind::Warmup { stage_steps: 8 };
+    let rs = run_native(&stat);
+    let rw = run_native(&warm);
+    let total = |r: &RunRecord| {
+        r.schedule.as_ref().unwrap().realized.iter().sum::<u64>()
+    };
+    assert!(total(&rw) > total(&rs), "warmup {} vs static {}", total(&rw), total(&rs));
+    // By the end of the run the warmup has decayed to the base schedule.
+    assert_eq!(rw.schedule.as_ref().unwrap().final_intervals, vec![2, 8]);
+    assert!(rw.epochs.last().unwrap().train_loss.is_finite());
+}
+
+#[test]
+fn checkpoint_policy_mismatch_fails_loudly() {
+    use hier_avg::util::json::Json;
+    let dir = std::env::temp_dir().join("hier_avg_policy_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ckpt.bin");
+    let mut cfg = RunConfig::defaults("quickstart");
+    cfg.backend = BackendKind::Native;
+    cfg.p = 4;
+    cfg.s = 2;
+    cfg.k1 = 2;
+    cfg.k2 = 4;
+    cfg.epochs = 1;
+    cfg.train_n = 256;
+    cfg.test_n = 64;
+    let layout = hier_avg::driver::layout_for(&cfg).unwrap();
+    let params = vec![0.01f32; layout.total];
+    let state = Json::parse(
+        r#"{"offset": 0, "anchors": [], "base": [], "intervals": [], "ratio": [], "quiet": []}"#,
+    )
+    .unwrap();
+    hier_avg::checkpoint::save_with_schedule(
+        &path,
+        "quickstart",
+        &layout,
+        &params,
+        Some(("adaptive:0.25", &state)),
+    )
+    .unwrap();
+    cfg.init_params = Some(path.to_string_lossy().into_owned());
+    // Resuming under a different --schedule is rejected with an
+    // actionable error naming both policies.
+    let err = hier_avg::driver::run(&cfg).unwrap_err().to_string();
+    assert!(err.contains("--schedule adaptive:0.25"), "unhelpful error: {err}");
+    assert!(err.contains("static"), "unhelpful error: {err}");
+    // The matching policy resumes and restores the controller state.
+    cfg.schedule_policy = PolicyKind::parse("adaptive:0.25").unwrap();
+    let rec = hier_avg::driver::run(&cfg).unwrap();
+    assert_eq!(rec.schedule.as_ref().unwrap().policy, "adaptive:0.25");
 }
 
 #[test]
