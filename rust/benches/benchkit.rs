@@ -38,6 +38,11 @@ pub struct Stats {
     pub mean_ns: f64,
     pub p95_ns: f64,
     pub iters_per_sample: u64,
+    /// Work items (e.g. timeline events) per iteration; 0 when the bench
+    /// didn't declare any.  `> 0` adds items/s to the console line and
+    /// `units_per_iter` / `units_per_sec` to the JSON — how the event
+    /// bench emits its events/sec-vs-P scaling curve.
+    pub units_per_iter: u64,
 }
 
 const TARGET_SAMPLE_MS: u64 = 80;
@@ -66,14 +71,26 @@ impl Bench {
     }
 
     pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
-        self.bench_with_throughput(name, 0, f)
+        self.run(name, 0, 0, f)
     }
 
     /// `bytes_per_iter > 0` additionally reports GiB/s.
-    pub fn bench_with_throughput<F: FnMut()>(
+    pub fn bench_with_throughput<F: FnMut()>(&mut self, name: &str, bytes_per_iter: usize, f: F) {
+        self.run(name, bytes_per_iter, 0, f)
+    }
+
+    /// `units_per_iter > 0` additionally reports items/s (and writes
+    /// `units_per_sec` into the JSON) — for benches whose natural
+    /// throughput axis is work items, not bytes (e.g. timeline events).
+    pub fn bench_units<F: FnMut()>(&mut self, name: &str, units_per_iter: u64, f: F) {
+        self.run(name, 0, units_per_iter, f)
+    }
+
+    fn run<F: FnMut()>(
         &mut self,
         name: &str,
         bytes_per_iter: usize,
+        units_per_iter: u64,
         mut f: F,
     ) {
         if let Some(filter) = &self.filter {
@@ -113,11 +130,17 @@ impl Bench {
             mean_ns: samples.iter().sum::<f64>() / n_samples as f64,
             p95_ns: samples[((n_samples as f64 * 0.95) as usize).saturating_sub(1)],
             iters_per_sample: iters,
+            units_per_iter,
         };
         let thr = if bytes_per_iter > 0 {
             format!(
                 "  {:>8.3} GiB/s",
                 bytes_per_iter as f64 / stats.median_ns * 1e9 / (1u64 << 30) as f64
+            )
+        } else if units_per_iter > 0 {
+            format!(
+                "  {:>8.3} Mitems/s",
+                units_per_iter as f64 / stats.median_ns * 1e9 / 1e6
             )
         } else {
             String::new()
@@ -163,6 +186,12 @@ impl Bench {
                 .set("p95_ns", Json::from(s.p95_ns))
                 .set("iters_per_sample", Json::from(s.iters_per_sample as usize))
                 .set("samples", Json::from(self.samples));
+            if s.units_per_iter > 0 {
+                o.set("units_per_iter", Json::from(s.units_per_iter as usize)).set(
+                    "units_per_sec",
+                    Json::from(s.units_per_iter as f64 / s.median_ns * 1e9),
+                );
+            }
             benches.set(name, o);
         }
         let mut root = Json::obj();

@@ -8,11 +8,19 @@
 //! Each iteration drives one model through a fixed 512-step two-level
 //! schedule (K = [4, 32]) — the measured number is the whole timeline,
 //! so per-step cost = reported time / 512.
+//!
+//! The `replay_timeline_only/*` benches emit the events/sec-vs-P scaling
+//! curve for the heap core's timeline-only replay (the planner's pricing
+//! path) at P ∈ {64, 4096, 65536, 1048576}: each declares its timeline
+//! event count per iteration via `bench_units`, so `BENCH_event.json`
+//! carries `units_per_sec` (events/sec) directly.  Homogeneous replay
+//! rides the shared step node — the curve should be flat in P — while
+//! the straggler variant pays the flat pooled per-learner arrays.
 
 mod benchkit;
 
 use hier_avg::algorithms::HierSchedule;
-use hier_avg::sim::{drive_timeline, ExecKind, ExecModel, HetSpec};
+use hier_avg::sim::{drive_timeline, replay_timeline_stats, ExecKind, ExecModel, HetSpec};
 use hier_avg::topology::HierTopology;
 
 const STEPS: u64 = 512;
@@ -51,6 +59,43 @@ fn main() {
             let mut m = ExecKind::Event.build(p, 2, base, &straggler);
             drive_timeline(m.as_mut(), &topo, &sched, STEPS, &level_seconds);
             std::hint::black_box(m.breakdown());
+        });
+    }
+
+    // events/sec-vs-P scaling curve: timeline-only replay of a 4096-step
+    // two-level schedule.  units = steps + barrier nodes fired, so the
+    // JSON's units_per_sec is timeline events per second at each P.
+    let horizon = 4096u64;
+    let sched = HierSchedule::new(vec![4, 32]).unwrap();
+    let n_reductions: u64 = sched.reduction_counts(horizon).iter().sum();
+    let units = horizon + n_reductions;
+    for &p in &[64usize, 4096, 65536, 1_048_576] {
+        let topo = HierTopology::new(vec![64, p]).unwrap();
+        b.bench_units(&format!("replay_timeline_only/p{p}/4096steps"), units, || {
+            std::hint::black_box(replay_timeline_stats(
+                &topo,
+                &sched,
+                horizon,
+                base,
+                &level_seconds,
+                &HetSpec::default(),
+            ));
+        });
+    }
+    // The heterogeneous curve pays the flat pooled per-learner arrays
+    // (O(horizon · P) exact RNG replay), so it is measured at smaller P.
+    let straggler = HetSpec { het: 0.2, straggler_prob: 0.05, straggler_mult: 4.0, seed: 42 };
+    for &p in &[64usize, 1024] {
+        let topo = HierTopology::new(vec![64, p]).unwrap();
+        b.bench_units(&format!("replay_timeline_only_straggler/p{p}/4096steps"), units, || {
+            std::hint::black_box(replay_timeline_stats(
+                &topo,
+                &sched,
+                horizon,
+                base,
+                &level_seconds,
+                &straggler,
+            ));
         });
     }
     b.finish();

@@ -35,7 +35,7 @@ USAGE:
                   [--schedule static|adaptive[:target[:gain]]|warmup[:k]]
                   [--het F] [--straggler P[:M]] [--seed N]
                   [--validate-top N] [--collective simulated|sharded|pooled]
-                  [--top N] [--out SWEEP_<p>.json]
+                  [--timeline-only] [--top N] [--out SWEEP_<p>.json]
   hier-avg list                      # models in the artifact manifest
   hier-avg info   --model M          # manifest entry details
 
@@ -87,6 +87,11 @@ policy variant of every shape next to its static closed-form entry:
 non-static candidates are priced by replaying their policy through the
 virtual-time event engine (realized events, not the interval table), so
 an adaptive schedule is ranked by what it would actually fire.
+--timeline-only prices every candidate by timeline-only replay (the
+event engine's O(1)-per-gap heap core, no parameter math, no validation
+runs) — auto-selected at --p >= 16384, where it sweeps 2-4 level
+hierarchies at up to --p 1048576 in seconds; pass --timeline-only=0 to
+force closed-form pricing at large P.
 
 LR schedules: const:0.05 | step:0.1@150=0.01 | cosine:0.1->0.001@200 |
               warmcos:0.1->0.001@5/200
@@ -100,7 +105,7 @@ fn main() {
 }
 
 fn real_main() -> Result<()> {
-    let args = Args::from_env(&["record-steps", "help", "no-rack", "no-local"])?;
+    let args = Args::from_env(&["record-steps", "help", "no-rack", "no-local", "timeline-only"])?;
     if args.has("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -109,7 +114,7 @@ fn real_main() -> Result<()> {
     // switch list up front); any other subcommand must reject them rather
     // than silently run a different configuration than asked.
     if args.positional[0] != "sweep" {
-        for s in ["no-rack", "no-local"] {
+        for s in ["no-rack", "no-local", "timeline-only"] {
             // saw_switch also catches the explicit-off form (--no-rack=0),
             // which has() deliberately reports as false.
             if args.saw_switch(s) {
@@ -138,7 +143,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     args.check_known(&[
         "p", "model", "steps", "strategy", "levels-min", "levels-max", "k2-max", "k1-grid",
         "no-rack", "no-local", "top", "validate-top", "collective", "out", "het",
-        "straggler", "seed", "schedule",
+        "straggler", "seed", "schedule", "timeline-only",
     ])?;
     if args.positional.len() > 1 {
         bail!(
@@ -187,16 +192,32 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     ctx.het.apply_args(args)?;
     ctx.het.seed = args.parse_or("seed", ctx.het.seed)?;
     ctx.het.validate()?;
+    // Timeline-only pricing: explicit flag wins (either polarity);
+    // otherwise auto-select at large P, where closed-form validation runs
+    // are off the table anyway.
+    ctx.timeline_only = if args.saw_switch("timeline-only") {
+        args.has("timeline-only")
+    } else {
+        p >= planner::TIMELINE_ONLY_AUTO_P
+    };
+    if ctx.timeline_only && !args.saw_switch("timeline-only") {
+        eprintln!(
+            "[sweep] p={p} >= {}: timeline-only replay pricing auto-selected \
+             (pass --timeline-only=0 to override)",
+            planner::TIMELINE_ONLY_AUTO_P
+        );
+    }
     let ranked = planner::rank(&space, &ctx)?;
     eprintln!(
         "[sweep] p={p} model={model} horizon={steps} candidates={} k2_cap={} strategy={} \
-         het={} straggler={}:{}",
+         het={} straggler={}:{} timeline_only={}",
         ranked.len(),
         space.k2_cap(&ctx.bound),
         strategy.name(),
         ctx.het.het,
         ctx.het.straggler_prob,
         ctx.het.straggler_mult,
+        ctx.timeline_only,
     );
 
     let top: usize = args.parse_or("top", 20usize)?;
@@ -218,7 +239,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         );
     }
 
-    let validate_top: usize = args.parse_or("validate-top", 3usize)?;
+    let mut validate_top: usize = args.parse_or("validate-top", 3usize)?;
+    if ctx.timeline_only && validate_top > 0 {
+        if args.get("validate-top").is_some() {
+            bail!(
+                "--validate-top {validate_top} conflicts with timeline-only pricing \
+                 (explicit --timeline-only, or auto-selected at --p >= {}): \
+                 timeline-only sweeps never run training validation — pass \
+                 --validate-top 0, or --timeline-only=0 to validate at small P",
+                planner::TIMELINE_ONLY_AUTO_P
+            );
+        }
+        eprintln!("[sweep] timeline-only: skipping validation runs (validate-top -> 0)");
+        validate_top = 0;
+    }
     let collective = match args.get("collective") {
         Some(c) => CollectiveKind::parse(c)?,
         None => CollectiveKind::Simulated,

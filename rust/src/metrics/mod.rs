@@ -83,6 +83,31 @@ pub struct RunRecord {
     pub schedule: Option<ScheduleSummary>,
 }
 
+/// Above this learner count, `RunRecord` JSON replaces the per-learner
+/// busy/blocked/idle vectors with min/mean/max/p99 summaries — three
+/// million-entry f64 arrays are not a report, they are a dump.  At or
+/// below it the exact vectors are emitted, so every existing golden
+/// (P ≤ 64) serializes byte-identically.
+pub const EXEC_VECTOR_P_LIMIT: usize = 4096;
+
+/// Distribution summary of one per-learner timeline vector:
+/// `{min, mean, max, p99}` (p99 = nearest-rank over a total_cmp sort).
+fn summary_json(xs: &[f64]) -> Json {
+    let mut o = Json::obj();
+    if xs.is_empty() {
+        return o;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let n = sorted.len();
+    let p99 = sorted[((n as f64 * 0.99).ceil() as usize).clamp(1, n) - 1];
+    o.set("min", Json::from(sorted[0]))
+        .set("mean", Json::from(xs.iter().sum::<f64>() / n as f64))
+        .set("max", Json::from(sorted[n - 1]))
+        .set("p99", Json::from(p99));
+    o
+}
+
 impl RunRecord {
     pub fn last(&self) -> Option<&EpochStats> {
         self.epochs.last()
@@ -149,11 +174,22 @@ impl RunRecord {
         let mut exec = Json::obj();
         exec.set("model", Json::from(self.exec_model.as_str()))
             .set("makespan_seconds", Json::from(self.makespan_seconds))
-            .set("busy_seconds", Json::from_f64_slice(&self.busy_seconds))
-            .set("blocked_seconds", Json::from_f64_slice(&self.blocked_seconds))
-            .set("idle_seconds", Json::from_f64_slice(&self.idle_seconds))
             .set("level_stall_seconds", Json::from_f64_slice(&self.level_stall_seconds))
             .set("straggler_events", Json::from(self.straggler_events as usize));
+        if self.busy_seconds.len() > EXEC_VECTOR_P_LIMIT {
+            // A million-learner record would serialize three million f64s
+            // here; above the limit the per-learner vectors collapse to
+            // distribution summaries.  Below it the exact vectors are kept,
+            // so existing goldens (P <= 64) are untouched.
+            exec.set("p", Json::from(self.busy_seconds.len()))
+                .set("busy_seconds_summary", summary_json(&self.busy_seconds))
+                .set("blocked_seconds_summary", summary_json(&self.blocked_seconds))
+                .set("idle_seconds_summary", summary_json(&self.idle_seconds));
+        } else {
+            exec.set("busy_seconds", Json::from_f64_slice(&self.busy_seconds))
+                .set("blocked_seconds", Json::from_f64_slice(&self.blocked_seconds))
+                .set("idle_seconds", Json::from_f64_slice(&self.idle_seconds));
+        }
         let mut o = Json::obj();
         o.set("label", Json::from(self.label.as_str()))
             .set("epochs", Json::Arr(epochs))
@@ -386,6 +422,46 @@ mod tests {
             );
             assert_eq!(e.req("straggler_events").unwrap().as_usize().unwrap(), 3);
         }
+    }
+
+    #[test]
+    fn exec_breakdown_summarizes_above_p_limit() {
+        let p = EXEC_VECTOR_P_LIMIT + 1;
+        let mut r = record("big", 1);
+        r.exec_model = "event".into();
+        r.busy_seconds = (0..p).map(|j| j as f64).collect();
+        r.blocked_seconds = vec![0.0; p];
+        r.idle_seconds = vec![0.25; p];
+        for j in [r.to_json(), r.to_golden_json()] {
+            let parsed = Json::parse(&j.pretty()).unwrap();
+            let e = parsed.req("exec").unwrap();
+            assert!(e.get("busy_seconds").is_none());
+            assert!(e.get("blocked_seconds").is_none());
+            assert!(e.get("idle_seconds").is_none());
+            assert_eq!(e.req("p").unwrap().as_usize().unwrap(), p);
+            let busy = e.req("busy_seconds_summary").unwrap();
+            assert_eq!(busy.req("min").unwrap().as_f64().unwrap(), 0.0);
+            assert_eq!(busy.req("max").unwrap().as_f64().unwrap(), (p - 1) as f64);
+            let mean = busy.req("mean").unwrap().as_f64().unwrap();
+            assert!((mean - (p - 1) as f64 / 2.0).abs() < 1e-6, "{mean}");
+            let p99 = busy.req("p99").unwrap().as_f64().unwrap();
+            assert!(p99 > 0.98 * p as f64 && p99 <= (p - 1) as f64, "{p99}");
+            assert_eq!(
+                e.req("idle_seconds_summary").unwrap().req("p99").unwrap().as_f64().unwrap(),
+                0.25
+            );
+        }
+        // At the limit exactly, the per-learner vectors are still emitted.
+        r.busy_seconds.truncate(EXEC_VECTOR_P_LIMIT);
+        r.blocked_seconds.truncate(EXEC_VECTOR_P_LIMIT);
+        r.idle_seconds.truncate(EXEC_VECTOR_P_LIMIT);
+        let parsed = Json::parse(&r.to_json().pretty()).unwrap();
+        let e = parsed.req("exec").unwrap();
+        assert!(e.get("busy_seconds_summary").is_none());
+        assert_eq!(
+            e.req("busy_seconds").unwrap().as_arr().unwrap().len(),
+            EXEC_VECTOR_P_LIMIT
+        );
     }
 
     #[test]

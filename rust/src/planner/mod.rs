@@ -108,6 +108,14 @@ impl SweepSpace {
         if self.p < 2 {
             bail!("sweep needs p >= 2 learners (got {})", self.p);
         }
+        if self.p > crate::topology::MAX_P {
+            bail!(
+                "sweep --p {} exceeds the supported maximum of {} learners (2^24); \
+                 timeline-only sweeps handle up to --p 1048576",
+                self.p,
+                crate::topology::MAX_P
+            );
+        }
         if self.min_levels < 2 {
             bail!("levels-min must be >= 2 (got {})", self.min_levels);
         }
@@ -155,10 +163,24 @@ pub struct ScoreCtx {
     /// `--straggler` on the sweep CLI).  Homogeneous (the default) keeps
     /// the legacy closed-form `compute + comm` makespan; otherwise each
     /// candidate's schedule is replayed through the virtual-time event
-    /// engine ([`sim::replay_timeline`]) so frequent wide barriers pay
-    /// the straggler tax they would pay in an event-mode run.
+    /// engine ([`sim::replay_timeline_stats`]) so frequent wide barriers
+    /// pay the straggler tax they would pay in an event-mode run.
     pub het: HetSpec,
+    /// Price every static candidate by timeline-only replay
+    /// ([`sim::replay_timeline_stats`]) even when the spec is homogeneous
+    /// (`sweep --timeline-only`; auto-selected at
+    /// P ≥ [`TIMELINE_ONLY_AUTO_P`]).  The replay rides the heap core's
+    /// shared step node, so a P = 1,000,000 candidate prices in
+    /// microseconds — and the ranking exercises the exact event timeline
+    /// a run would see rather than the closed form.
+    pub timeline_only: bool,
 }
+
+/// Learner count at or above which the sweep CLI switches to
+/// timeline-only pricing automatically (and skips validation runs —
+/// training even one candidate at this scale is not what a shape sweep
+/// is for).
+pub const TIMELINE_ONLY_AUTO_P: usize = 1 << 14;
 
 impl ScoreCtx {
     /// A context for one of the native model registry entries (the same
@@ -196,6 +218,7 @@ impl ScoreCtx {
             horizon,
             step_seconds: coordinator::sim_step_seconds(batch, n_params),
             het: HetSpec::default(),
+            timeline_only: false,
         })
     }
 }
@@ -531,7 +554,25 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
     for l in 0..topo.n_levels() {
         let events = counts[l];
         let seconds = events as f64 * sec_per_events[l];
-        let bytes = events * groups_per_level[l] * bytes_per_groups[l];
+        // events × groups × bytes overflows u64 around P ~ 10^6 with long
+        // horizons; a silently wrapped byte total would corrupt the
+        // ranking, so fail loudly with the knobs that caused it.
+        let bytes = events
+            .checked_mul(groups_per_level[l])
+            .and_then(|x| x.checked_mul(bytes_per_groups[l]))
+            .and_then(|b| comm_bytes.checked_add(b).map(|_| b))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "candidate {}: modelled comm bytes overflow u64 at level {l} \
+                     ({events} events x {} groups x {} bytes/group) — reduce the \
+                     horizon ({}) or the learner count ({})",
+                    cand.label(),
+                    groups_per_level[l],
+                    bytes_per_groups[l],
+                    ctx.horizon,
+                    topo.p()
+                )
+            })?;
         comm_seconds += seconds;
         comm_bytes += bytes;
         levels.push(LevelCost {
@@ -552,20 +593,26 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
     let bound = theory::thm34_budget_bound(&ctx.bound, ctx.horizon, k1, k2, s.max(1));
     let compute_seconds = ctx.horizon as f64 * ctx.step_seconds;
     // Static + homogeneous compute keeps the exact closed form
-    // (bit-stable with the pre-event-engine ranking); heterogeneous
-    // contexts replay the schedule through the virtual timeline so
-    // barrier waits are priced; non-static candidates always use their
-    // replay's makespan (its stepwise accumulation is exactly what a
-    // live engine run's timeline reports — the validation parity).
+    // (bit-stable with the pre-event-engine ranking) unless the context
+    // asks for timeline-only pricing; heterogeneous or timeline-only
+    // contexts replay the schedule through the virtual timeline — the
+    // stats form, which never materializes O(P) breakdown vectors, so a
+    // million-learner candidate prices in microseconds on the heap
+    // core's shared step node (and in one flat pooled pass under
+    // heterogeneity).  Non-static candidates always use their replay's
+    // makespan (its stepwise accumulation is exactly what a live engine
+    // run's timeline reports — the validation parity).
     // Known optimization if het sweeps ever feel slow: the per-learner
     // step-duration stream depends only on (P, het, seed) — one duration
     // matrix could be precomputed per ScoreCtx and shared across
     // candidates, leaving only the O(horizon·P) barrier walk per replay.
     let makespan_seconds = match replay_makespan {
         Some(m) => m,
-        None if ctx.het.is_homogeneous() => compute_seconds + comm_seconds,
+        None if ctx.het.is_homogeneous() && !ctx.timeline_only => {
+            compute_seconds + comm_seconds
+        }
         None => {
-            sim::replay_timeline(
+            sim::replay_timeline_stats(
                 &topo,
                 &sched,
                 ctx.horizon,
@@ -856,6 +903,27 @@ mod tests {
         assert_eq!(s.levels[1].reductions, 8);
         assert!((s.comm_seconds - (24.0 * inner + 8.0 * outer)).abs() < 1e-12);
         assert!(s.bound.is_finite() && s.bound > 0.0);
+    }
+
+    #[test]
+    fn timeline_only_matches_closed_form_under_homogeneity() {
+        // Pricing through the shared-step-node replay instead of the
+        // closed form must not move a homogeneous candidate's score:
+        // same makespan (to fp tolerance), identical comm account.
+        let ctx = ScoreCtx { horizon: 64, ..ctx16() };
+        let tctx = ScoreCtx { timeline_only: true, ..ctx };
+        let cand = Candidate::with_default_links(vec![4, 16], vec![2, 8]).unwrap();
+        let closed = score(&cand, &ctx).unwrap();
+        let replayed = score(&cand, &tctx).unwrap();
+        assert!(
+            (replayed.makespan_seconds - closed.makespan_seconds).abs()
+                <= 1e-9 * closed.makespan_seconds,
+            "{} vs {}",
+            replayed.makespan_seconds,
+            closed.makespan_seconds
+        );
+        assert_eq!(replayed.comm_bytes, closed.comm_bytes);
+        assert_eq!(replayed.comm_seconds.to_bits(), closed.comm_seconds.to_bits());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! {
 //!   "p": 16, "model": "quickstart", "horizon_steps": 20000,
 //!   "n_params": 2762, "bytes_per_reduction": 11048, "strategy": "ring",
+//!   "timeline_only": false,
 //!   "het": {"het": 0.0, "straggler_prob": 0.0, "straggler_mult": 4.0,
 //!           "seed": 42},
 //!   "space": {"min_levels": 2, "max_levels": 4, "k1_grid": [1,2,4],
@@ -151,6 +152,10 @@ pub fn sweep_json(
         .set("n_params", Json::from(ctx.n_params))
         .set("bytes_per_reduction", Json::from(ctx.n_params * 4))
         .set("strategy", Json::from(ctx.strategy.name()))
+        // Whether makespans came from timeline-only replay (true) or the
+        // closed form / validation-backed path — rankings are only
+        // comparable across reports priced the same way.
+        .set("timeline_only", Json::from(ctx.timeline_only))
         .set("het", het)
         .set("space", sp)
         .set("k2_cap_condition_35", Json::from(space.k2_cap(&ctx.bound) as usize))

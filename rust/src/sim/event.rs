@@ -1,0 +1,377 @@
+//! The heap/calendar event core: lazily-advanced, memory-pooled learner
+//! timelines.
+//!
+//! The reference model ([`super::ScanEventModel`]) walks every learner
+//! clock on every step and materializes five O(P) vectors before the
+//! first event — fine at P = 64, infeasible at P = 1,000,000.  This core
+//! restructures the same semantics around next-event nodes:
+//!
+//! - **Shared step node** — `on_step`/`on_steps` only bump a pending-step
+//!   counter (O(1)); learner clocks are advanced lazily when a barrier
+//!   node, `now()`, or `breakdown()` actually needs them.  The pending
+//!   counter is the degenerate calendar entry every learner's next event
+//!   points at (all learners step in lockstep between barriers, so one
+//!   node stands for all P).
+//! - **Group-local barrier nodes** — `on_reduction` advances only the
+//!   fired level's members to the current step node and fires each
+//!   group's barrier at max arrival.  Stall tallies keep the reference's
+//!   group-then-member accumulation order, so every f64 is bit-identical.
+//! - **Pooled, lazily-materialized state** — under a homogeneous
+//!   [`HetSpec`] all P learners share one op sequence, so the pool is two
+//!   scalars: building and driving a million-learner homogeneous model
+//!   allocates no O(P) vector at all (the planner's timeline-only sweep
+//!   rides this path).  A heterogeneous spec materializes flat clock /
+//!   busy / blocked / synced arrays on first touch, and straggler `Pcg32`
+//!   streams are forked from the root strictly in learner order but only
+//!   up to the highest learner actually advanced — the same streams the
+//!   reference forks up front.
+//!
+//! Determinism: per-learner clock and busy accumulations replay the
+//! reference's per-step additions in the learner's own step order, and
+//! group arrival maxima are order-free, so the heap core reproduces the
+//! scan timeline bit for bit under every heterogeneity spec
+//! (rust/tests/event_heap.rs drives both across random topologies).
+
+use crate::topology::HierTopology;
+use crate::util::rng::Pcg32;
+
+use super::{ExecBreakdown, ExecKind, ExecModel, HetSpec, STRAGGLER_STREAM};
+
+/// The production virtual-time event engine: per-learner clocks,
+/// group-local barriers, straggler spikes — advanced lazily from a shared
+/// step node instead of eager O(P) scans.
+///
+/// Bit-for-bit note: under a homogeneous [`HetSpec`] every operation the
+/// shared pool performs is the exact IEEE operation `LockstepModel`
+/// performs in the same order (`rate = 1.0` multiplications are exact,
+/// equal-clock maxima return the shared value, `x − x = +0.0` waits), so
+/// the homogeneous-equivalence golden tests stay byte-stable.
+#[derive(Debug, Clone)]
+pub struct EventModel {
+    base: f64,
+    p: usize,
+    n_levels: usize,
+    spec: HetSpec,
+    /// Steps announced so far — the shared step node every learner's
+    /// next-event pointer refers to.
+    step: u64,
+    pool: Pool,
+    level_stalls: Vec<f64>,
+    straggler_events: u64,
+}
+
+#[derive(Debug, Clone)]
+enum Pool {
+    /// Homogeneous learners: one representative op sequence stands for
+    /// all P.  `synced` is the step the scalars are advanced to.
+    Shared { clock: f64, busy: f64, synced: u64 },
+    /// Heterogeneous spec, but no learner touched yet: the O(P) arrays
+    /// are not materialized until a barrier or query needs them.
+    Lazy,
+    /// Heterogeneous learners in flat pooled arrays.
+    Learners(LearnerPool),
+}
+
+#[derive(Debug, Clone)]
+struct LearnerPool {
+    clocks: Vec<f64>,
+    busy: Vec<f64>,
+    blocked: Vec<f64>,
+    /// Step each learner's clock is advanced to (lags `EventModel::step`
+    /// between barriers).
+    synced: Vec<u64>,
+    /// Root of the straggler streams; children fork lazily in learner
+    /// order (each fork advances this state exactly as the reference's
+    /// up-front fork loop does).
+    root: Pcg32,
+    /// Forked spike streams for learners `0..rngs.len()`; empty while
+    /// `straggler_prob == 0` (the reference never draws from them then,
+    /// so their state is unobservable).
+    rngs: Vec<Pcg32>,
+}
+
+impl LearnerPool {
+    fn new(p: usize, seed: u64) -> LearnerPool {
+        LearnerPool {
+            clocks: vec![0.0; p],
+            busy: vec![0.0; p],
+            blocked: vec![0.0; p],
+            synced: vec![0; p],
+            root: Pcg32::new(seed, STRAGGLER_STREAM),
+            rngs: Vec::new(),
+        }
+    }
+}
+
+/// Replay learner `j`'s pending steps: the reference's per-step additions
+/// in the learner's own step order (hoisting `base × rate` is exact —
+/// the product is the same f64 every step).
+fn flush_learner(
+    pool: &mut LearnerPool,
+    base: f64,
+    spec: &HetSpec,
+    p: usize,
+    j: usize,
+    to: u64,
+    spikes: &mut u64,
+) {
+    let from = pool.synced[j];
+    if from >= to {
+        return;
+    }
+    pool.synced[j] = to;
+    let rate = if p > 1 { 1.0 + spec.het * j as f64 / (p - 1) as f64 } else { 1.0 };
+    let dt_base = base * rate;
+    let mut clock = pool.clocks[j];
+    let mut busy = pool.busy[j];
+    if spec.straggler_prob > 0.0 {
+        // Fork spike streams lazily but strictly in learner order, so
+        // stream j is the identical stream the reference forked.
+        while pool.rngs.len() <= j {
+            let tag = pool.rngs.len() as u64;
+            let child = pool.root.fork(tag);
+            pool.rngs.push(child);
+        }
+        let rng = &mut pool.rngs[j];
+        for _ in from..to {
+            let mut dt = dt_base;
+            if rng.next_f64() < spec.straggler_prob {
+                dt *= spec.straggler_mult;
+                *spikes += 1;
+            }
+            busy += dt;
+            clock += dt;
+        }
+    } else {
+        for _ in from..to {
+            busy += dt_base;
+            clock += dt_base;
+        }
+    }
+    pool.clocks[j] = clock;
+    pool.busy[j] = busy;
+}
+
+impl EventModel {
+    pub fn new(p: usize, n_levels: usize, step_seconds: f64, spec: &HetSpec) -> EventModel {
+        let pool = if spec.is_homogeneous() {
+            Pool::Shared { clock: 0.0, busy: 0.0, synced: 0 }
+        } else {
+            Pool::Lazy
+        };
+        EventModel {
+            base: step_seconds,
+            p,
+            n_levels,
+            spec: *spec,
+            step: 0,
+            pool,
+            level_stalls: vec![0.0; n_levels],
+            straggler_events: 0,
+        }
+    }
+
+    fn ensure_learners(&mut self) {
+        if matches!(self.pool, Pool::Lazy) {
+            self.pool = Pool::Learners(LearnerPool::new(self.p, self.spec.seed));
+        }
+    }
+
+    /// Advance every learner to the current step node.
+    fn flush(&mut self) {
+        let step = self.step;
+        if !matches!(self.pool, Pool::Shared { .. }) {
+            self.ensure_learners();
+        }
+        match &mut self.pool {
+            Pool::Shared { clock, busy, synced } => {
+                for _ in *synced..step {
+                    *busy += self.base;
+                    *clock += self.base;
+                }
+                *synced = step;
+            }
+            Pool::Learners(pool) => {
+                for j in 0..self.p {
+                    flush_learner(
+                        pool,
+                        self.base,
+                        &self.spec,
+                        self.p,
+                        j,
+                        step,
+                        &mut self.straggler_events,
+                    );
+                }
+            }
+            Pool::Lazy => unreachable!("materialized above"),
+        }
+    }
+
+    /// Learner `j`'s clock, flushed to the current step node (test and
+    /// diagnostic accessor).
+    pub fn clock_of(&mut self, j: usize) -> f64 {
+        assert!(j < self.p, "learner {j} out of range (p = {})", self.p);
+        self.flush();
+        match &self.pool {
+            Pool::Shared { clock, .. } => *clock,
+            Pool::Learners(pool) => pool.clocks[j],
+            Pool::Lazy => unreachable!("flush materializes"),
+        }
+    }
+
+    /// Sum of per-learner compute time (no O(P) vector materialized on
+    /// the shared path — this is a stats view, not the bit-pinned
+    /// breakdown).
+    pub fn busy_seconds_total(&mut self) -> f64 {
+        self.flush();
+        match &self.pool {
+            Pool::Shared { busy, .. } => *busy * self.p as f64,
+            Pool::Learners(pool) => pool.busy.iter().sum(),
+            Pool::Lazy => unreachable!("flush materializes"),
+        }
+    }
+
+    /// Sum of per-learner barrier waits.
+    pub fn blocked_seconds_total(&mut self) -> f64 {
+        self.flush();
+        match &self.pool {
+            Pool::Shared { .. } => 0.0,
+            Pool::Learners(pool) => pool.blocked.iter().sum(),
+            Pool::Lazy => unreachable!("flush materializes"),
+        }
+    }
+
+    /// Barrier wait time attributed to each level so far.
+    pub fn level_stall_seconds(&self) -> &[f64] {
+        &self.level_stalls
+    }
+
+    /// Straggler spikes fired so far (flushed learners only — call after
+    /// a flush-inducing query for the run total).
+    pub fn straggler_events(&self) -> u64 {
+        self.straggler_events
+    }
+}
+
+impl ExecModel for EventModel {
+    fn name(&self) -> &'static str {
+        ExecKind::Event.name()
+    }
+
+    fn on_step(&mut self) {
+        // O(1): learners advance lazily when the next barrier node or
+        // query needs their clocks.
+        self.step += 1;
+    }
+
+    fn on_steps(&mut self, n: u64) {
+        self.step = self.step.saturating_add(n);
+    }
+
+    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64) -> f64 {
+        debug_assert_eq!(topo.n_levels(), self.n_levels);
+        debug_assert_eq!(topo.p(), self.p);
+        if topo.size(level) <= 1 && level + 1 < topo.n_levels() {
+            return 0.0; // the reducer's no-op convention
+        }
+        let step = self.step;
+        if !matches!(self.pool, Pool::Shared { .. }) {
+            self.ensure_learners();
+        }
+        match &mut self.pool {
+            Pool::Shared { clock, busy, synced } => {
+                for _ in *synced..step {
+                    *busy += self.base;
+                    *clock += self.base;
+                }
+                *synced = step;
+                // Every learner arrives at the shared clock: arrival is
+                // the clock itself, waits are x − x = +0.0, and the
+                // reference's per-member `+= 0.0` tallies leave blocked
+                // and level stalls untouched — so one shared barrier node
+                // replaces the whole O(P) member walk, bit for bit.
+                *clock += seconds;
+                0.0
+            }
+            Pool::Learners(pool) => {
+                let mut event_stall = 0.0;
+                for g in 0..topo.n_groups(level) {
+                    let members = topo.group_members(level, g);
+                    // Advance the group's members to the current step
+                    // node, then fire the barrier at max arrival.  The
+                    // max is order-free; the stall tallies below keep the
+                    // reference's group-then-member order.
+                    for j in members.clone() {
+                        flush_learner(
+                            pool,
+                            self.base,
+                            &self.spec,
+                            self.p,
+                            j,
+                            step,
+                            &mut self.straggler_events,
+                        );
+                    }
+                    let arrival = members
+                        .clone()
+                        .map(|j| pool.clocks[j])
+                        .fold(f64::NEG_INFINITY, f64::max);
+                    for j in members {
+                        let wait = arrival - pool.clocks[j];
+                        pool.blocked[j] += wait;
+                        self.level_stalls[level] += wait;
+                        event_stall += wait;
+                        pool.clocks[j] = arrival + seconds;
+                    }
+                }
+                event_stall
+            }
+            Pool::Lazy => unreachable!("materialized above"),
+        }
+    }
+
+    fn now(&mut self) -> f64 {
+        if self.p == 0 {
+            return 0.0;
+        }
+        self.flush();
+        match &self.pool {
+            Pool::Shared { clock, .. } => f64::max(0.0, *clock),
+            Pool::Learners(pool) => pool.clocks.iter().cloned().fold(0.0, f64::max),
+            Pool::Lazy => unreachable!("flush materializes"),
+        }
+    }
+
+    fn breakdown(&mut self) -> ExecBreakdown {
+        self.flush();
+        match &self.pool {
+            Pool::Shared { clock, busy, .. } => {
+                let makespan = if self.p == 0 { 0.0 } else { f64::max(0.0, *clock) };
+                ExecBreakdown {
+                    model: ExecKind::Event.name(),
+                    makespan_seconds: makespan,
+                    busy_seconds: vec![*busy; self.p],
+                    blocked_seconds: vec![0.0; self.p],
+                    // the reference's makespan − clock is c − c = +0.0
+                    idle_seconds: vec![0.0; self.p],
+                    level_stall_seconds: self.level_stalls.clone(),
+                    straggler_events: self.straggler_events,
+                }
+            }
+            Pool::Learners(pool) => {
+                let makespan = pool.clocks.iter().cloned().fold(0.0, f64::max);
+                ExecBreakdown {
+                    model: ExecKind::Event.name(),
+                    makespan_seconds: makespan,
+                    busy_seconds: pool.busy.clone(),
+                    blocked_seconds: pool.blocked.clone(),
+                    idle_seconds: pool.clocks.iter().map(|&c| makespan - c).collect(),
+                    level_stall_seconds: self.level_stalls.clone(),
+                    straggler_events: self.straggler_events,
+                }
+            }
+            Pool::Lazy => unreachable!("flush materializes"),
+        }
+    }
+}

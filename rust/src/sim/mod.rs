@@ -10,6 +10,26 @@
 //! by construction), while the selected [`ExecModel`] accounts for how
 //! those steps and reductions land on a virtual timeline.
 //!
+//! Module layout (the heap/calendar core of the event engine):
+//!
+//! - [`mod@event`] — [`EventModel`], the production virtual-time core.
+//!   Learner state lives in flat memory-pooled arrays that are
+//!   materialized lazily (a homogeneous run never allocates an O(P)
+//!   vector: one shared step node stands for all P learners), steps are
+//!   announced as shared next-event nodes (`on_steps` is O(1), not an
+//!   O(P) clock scan), and level-ℓ reductions fire as group-local
+//!   barrier nodes at max arrival.
+//! - [`mod@scan`] — [`ScanEventModel`], the legacy O(P)-per-step scan
+//!   implementation, kept verbatim as the executable reference the
+//!   property tests compare the heap core against bit for bit
+//!   (rust/tests/event_heap.rs).
+//! - [`mod@replay`] — the timeline-only replay mode: an
+//!   [`EventCalendar`] (binary min-heap merging the per-level event
+//!   streams of a static schedule) drives a model from barrier node to
+//!   barrier node without any parameter math, which is how the planner
+//!   prices straggler-aware makespans at P up to 1,000,000
+//!   (`sweep --timeline-only`).
+//!
 //! Two models (`--exec lockstep|event`):
 //!
 //! - [`LockstepModel`] — the legacy semantics: one shared clock, every
@@ -26,20 +46,35 @@
 //!   wall clock is the makespan of the timeline (max over learner
 //!   clocks).
 //!
-//! Determinism contract (enforced by rust/tests/golden_trace.rs and the
-//! property tests in rust/tests/hierarchy.rs): with homogeneous compute
-//! times (`het = 0`, `straggler_prob = 0`) the event model reproduces
-//! lockstep **bit for bit** — same parameters, same reduction trace, same
-//! comm bytes, and the identical timeline breakdown — because every
-//! arithmetic operation the two models perform is then the same IEEE
-//! operation in the same order.  Heterogeneity changes *time only*: the
-//! parameter path never consults the timeline.
+//! Determinism contract (enforced by rust/tests/golden_trace.rs,
+//! rust/tests/event_heap.rs, and the property tests in
+//! rust/tests/hierarchy.rs): with homogeneous compute times (`het = 0`,
+//! `straggler_prob = 0`) the event model reproduces lockstep **bit for
+//! bit** — same parameters, same reduction trace, same comm bytes, and
+//! the identical timeline breakdown — because every arithmetic operation
+//! the two models perform is then the same IEEE operation in the same
+//! order.  Heterogeneity changes *time only*: the parameter path never
+//! consults the timeline.  The heap core additionally reproduces the
+//! legacy scan timeline exactly under *every* heterogeneity spec, because
+//! lazy advancement replays each learner's per-step accumulation in the
+//! learner's own step order (cross-learner values never mix into any
+//! single f64 accumulation except the stall tallies, which keep the
+//! legacy group-then-member order).
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::algorithms::{HierSchedule, SchedulePolicy, StaticPolicy};
 use crate::topology::HierTopology;
-use crate::util::rng::Pcg32;
+
+pub mod event;
+pub mod replay;
+pub mod scan;
+
+pub use event::EventModel;
+pub use replay::{
+    drive_timeline, drive_timeline_policy, replay_timeline, replay_timeline_stats,
+    EventCalendar, TimelineStats,
+};
+pub use scan::ScanEventModel;
 
 /// Which execution model accounts the run's virtual time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -138,7 +173,8 @@ impl HetSpec {
     }
 
     /// Whether this spec leaves every learner at base rate — the regime
-    /// where event mode must reproduce lockstep bit for bit.
+    /// where event mode must reproduce lockstep bit for bit (and where
+    /// the heap core collapses all P learners onto one shared step node).
     pub fn is_homogeneous(&self) -> bool {
         self.het == 0.0 && self.straggler_prob == 0.0
     }
@@ -180,6 +216,13 @@ pub fn parse_straggler(s: &str, default_mult: f64) -> Result<(f64, f64)> {
     Ok((prob, mult))
 }
 
+/// Stream id of the straggler PRNGs ("SIMT"): distinct from the training
+/// streams ("HIER" in `LearnerSet::new`, the data/init streams), so the
+/// time model owns its own randomness.  Shared by the heap core and the
+/// scan reference so their per-learner spike streams are the same
+/// streams.
+pub(crate) const STRAGGLER_STREAM: u64 = 0x53494D54;
+
 /// Final timeline accounting, per learner and per hierarchy level.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExecBreakdown {
@@ -207,11 +250,26 @@ pub struct ExecBreakdown {
 /// (after the parameter update) and [`ExecModel::on_reduction`] for every
 /// fired reduction, in the same order the `Reducer` applies them.  Models
 /// account time only — they never influence what the engine computes.
+///
+/// `now` and `breakdown` take `&mut self` because the heap core advances
+/// learner clocks lazily: a query must first flush every learner to the
+/// current step node (consuming straggler RNG state in the process).
 pub trait ExecModel {
     fn name(&self) -> &'static str;
 
     /// Charge one local SGD step to every learner's clock.
     fn on_step(&mut self);
+
+    /// Charge `n` consecutive steps — the calendar fast path used by the
+    /// timeline-only replay driver between barrier nodes.  The default
+    /// body repeats [`ExecModel::on_step`] (statically dispatched within
+    /// the impl, so scan-style models pay no per-step vtable cost); the
+    /// heap core overrides it with an O(1) shared step-node bump.
+    fn on_steps(&mut self, n: u64) {
+        for _ in 0..n {
+            self.on_step();
+        }
+    }
 
     /// Charge a level-`level` reduction: every group at that level
     /// barriers its members and pays `seconds` (one symmetric group's
@@ -220,14 +278,14 @@ pub trait ExecModel {
     /// mirroring `Reducer::reduce_level`.  Returns the barrier stall this
     /// event charged (the sum of member waits across the level's groups;
     /// always 0 under lockstep) — the feedback signal the engine hands to
-    /// an adaptive [`SchedulePolicy`].
+    /// an adaptive `SchedulePolicy`.
     fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64) -> f64;
 
     /// Modelled wall clock so far (max over learner clocks).
-    fn now(&self) -> f64;
+    fn now(&mut self) -> f64;
 
     /// Snapshot the per-learner / per-level accounting.
-    fn breakdown(&self) -> ExecBreakdown;
+    fn breakdown(&mut self) -> ExecBreakdown;
 }
 
 /// The legacy shared-clock model: every learner is charged the same step
@@ -267,11 +325,11 @@ impl ExecModel for LockstepModel {
         0.0 // one shared clock: nobody ever waits
     }
 
-    fn now(&self) -> f64 {
+    fn now(&mut self) -> f64 {
         self.clock
     }
 
-    fn breakdown(&self) -> ExecBreakdown {
+    fn breakdown(&mut self) -> ExecBreakdown {
         ExecBreakdown {
             model: self.name(),
             makespan_seconds: self.clock,
@@ -284,193 +342,10 @@ impl ExecModel for LockstepModel {
     }
 }
 
-/// The virtual-time event engine: per-learner clocks, group-local
-/// barriers, straggler spikes.
-///
-/// Bit-for-bit note: under a homogeneous [`HetSpec`] every operation here
-/// degenerates to the exact IEEE operation [`LockstepModel`] performs in
-/// the same order (`rate = 1.0` multiplications are exact, equal-clock
-/// maxima return the shared value, `x − x = +0.0` waits), which is what
-/// makes the homogeneous-equivalence golden tests byte-stable.
-#[derive(Debug, Clone)]
-pub struct EventModel {
-    base: f64,
-    n_levels: usize,
-    rates: Vec<f64>,
-    spike_prob: f64,
-    spike_mult: f64,
-    rngs: Vec<Pcg32>,
-    clocks: Vec<f64>,
-    busy: Vec<f64>,
-    blocked: Vec<f64>,
-    level_stalls: Vec<f64>,
-    straggler_events: u64,
-}
-
-/// Stream id of the straggler PRNGs ("SIMT"): distinct from the training
-/// streams ("HIER" in `LearnerSet::new`, the data/init streams), so the
-/// time model owns its own randomness.
-const STRAGGLER_STREAM: u64 = 0x53494D54;
-
-impl EventModel {
-    pub fn new(p: usize, n_levels: usize, step_seconds: f64, spec: &HetSpec) -> EventModel {
-        let rates = (0..p)
-            .map(|j| {
-                if p > 1 {
-                    1.0 + spec.het * j as f64 / (p - 1) as f64
-                } else {
-                    1.0
-                }
-            })
-            .collect();
-        let mut root = Pcg32::new(spec.seed, STRAGGLER_STREAM);
-        EventModel {
-            base: step_seconds,
-            n_levels,
-            rates,
-            spike_prob: spec.straggler_prob,
-            spike_mult: spec.straggler_mult,
-            rngs: (0..p).map(|j| root.fork(j as u64)).collect(),
-            clocks: vec![0.0; p],
-            busy: vec![0.0; p],
-            blocked: vec![0.0; p],
-            level_stalls: vec![0.0; n_levels],
-            straggler_events: 0,
-        }
-    }
-}
-
-impl ExecModel for EventModel {
-    fn name(&self) -> &'static str {
-        ExecKind::Event.name()
-    }
-
-    fn on_step(&mut self) {
-        for j in 0..self.clocks.len() {
-            let mut dt = self.base * self.rates[j];
-            // prob = 0 draws nothing, keeping the homogeneous path free of
-            // RNG state (and bit-identical to lockstep).
-            if self.spike_prob > 0.0 && self.rngs[j].next_f64() < self.spike_prob {
-                dt *= self.spike_mult;
-                self.straggler_events += 1;
-            }
-            self.busy[j] += dt;
-            self.clocks[j] += dt;
-        }
-    }
-
-    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64) -> f64 {
-        debug_assert_eq!(topo.n_levels(), self.n_levels);
-        debug_assert_eq!(topo.p(), self.clocks.len());
-        if topo.size(level) <= 1 && level + 1 < topo.n_levels() {
-            return 0.0; // the reducer's no-op convention
-        }
-        let mut event_stall = 0.0;
-        for g in 0..topo.n_groups(level) {
-            let members = topo.group_members(level, g);
-            // Group-local barrier: members meet at the slowest arrival,
-            // then pay the collective together.  Other groups' clocks are
-            // untouched — they keep stepping.
-            let arrival = members
-                .clone()
-                .map(|j| self.clocks[j])
-                .fold(f64::NEG_INFINITY, f64::max);
-            for j in members {
-                let wait = arrival - self.clocks[j];
-                self.blocked[j] += wait;
-                self.level_stalls[level] += wait;
-                event_stall += wait;
-                self.clocks[j] = arrival + seconds;
-            }
-        }
-        event_stall
-    }
-
-    fn now(&self) -> f64 {
-        self.clocks.iter().cloned().fold(0.0, f64::max)
-    }
-
-    fn breakdown(&self) -> ExecBreakdown {
-        let makespan = self.now();
-        ExecBreakdown {
-            model: self.name(),
-            makespan_seconds: makespan,
-            busy_seconds: self.busy.clone(),
-            blocked_seconds: self.blocked.clone(),
-            idle_seconds: self.clocks.iter().map(|&c| makespan - c).collect(),
-            level_stall_seconds: self.level_stalls.clone(),
-            straggler_events: self.straggler_events,
-        }
-    }
-}
-
-/// Drive `model` through `horizon` steps under `policy` (consulting
-/// `sched` as the base schedule), charging `level_seconds[l]` per
-/// level-`l` event — the one canonical loop mirroring `Engine::step`'s
-/// decide → on_step → on_reduction → observe call order (the planner's
-/// replay, the property tests, and the benches all reuse it, so they
-/// cannot drift from each other or from the engine).  The stall each
-/// barrier charges is fed straight back to the policy, so adaptive
-/// decisions and the virtual clock co-evolve exactly as they do in a
-/// live engine run; replay stays deterministic because that feedback is
-/// a pure function of the seeded timeline.  Returns the per-level
-/// realized event counts.
-pub fn drive_timeline_policy(
-    model: &mut dyn ExecModel,
-    topo: &HierTopology,
-    policy: &mut dyn SchedulePolicy,
-    sched: &HierSchedule,
-    horizon: u64,
-    level_seconds: &[f64],
-) -> Vec<u64> {
-    debug_assert_eq!(level_seconds.len(), topo.n_levels());
-    let mut realized = vec![0u64; topo.n_levels()];
-    for t in 1..=horizon {
-        model.on_step();
-        if let Some(level) = policy.decide(t, sched) {
-            realized[level] += 1;
-            let stall = model.on_reduction(topo, level, level_seconds[level]);
-            policy.observe(t, level, stall, level_seconds[level]);
-        }
-    }
-    realized
-}
-
-/// [`drive_timeline_policy`] under the static policy: the legacy
-/// fixed-schedule loop (the event bench and the property tests drive
-/// this form).
-pub fn drive_timeline(
-    model: &mut dyn ExecModel,
-    topo: &HierTopology,
-    sched: &HierSchedule,
-    horizon: u64,
-    level_seconds: &[f64],
-) {
-    let mut policy = StaticPolicy::new();
-    drive_timeline_policy(model, topo, &mut policy, sched, horizon, level_seconds);
-}
-
-/// Drive a bare event timeline (no training): `horizon` steps under
-/// `sched`, charging `level_seconds[l]` per level-`l` group event.  This
-/// is the planner's straggler-aware makespan estimator — it prices a
-/// candidate schedule against heterogeneous learners without running the
-/// engine (O(horizon · P), no allocation in the loop).
-pub fn replay_timeline(
-    topo: &HierTopology,
-    sched: &HierSchedule,
-    horizon: u64,
-    step_seconds: f64,
-    level_seconds: &[f64],
-    spec: &HetSpec,
-) -> ExecBreakdown {
-    let mut model = EventModel::new(topo.p(), topo.n_levels(), step_seconds, spec);
-    drive_timeline(&mut model, topo, sched, horizon, level_seconds);
-    model.breakdown()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algorithms::{HierSchedule, StaticPolicy};
 
     fn topo_2x8() -> HierTopology {
         HierTopology::new(vec![2, 8]).unwrap()
@@ -554,13 +429,13 @@ mod tests {
         m.on_step();
         m.on_reduction(&topo, 0, 0.0);
         // after the local barrier, clocks agree within groups only
-        assert_eq!(m.clocks[0], m.clocks[1]);
-        assert_eq!(m.clocks[6], m.clocks[7]);
-        assert!(m.clocks[1] < m.clocks[6]);
+        assert_eq!(m.clock_of(0), m.clock_of(1));
+        assert_eq!(m.clock_of(6), m.clock_of(7));
+        assert!(m.clock_of(1) < m.clock_of(6));
         // a global barrier then aligns everyone
         m.on_reduction(&topo, 1, 0.0);
         for j in 1..8 {
-            assert_eq!(m.clocks[0], m.clocks[j]);
+            assert_eq!(m.clock_of(0), m.clock_of(j));
         }
     }
 
@@ -604,9 +479,9 @@ mod tests {
         let topo = HierTopology::new(vec![1, 8]).unwrap();
         let mut m = EventModel::new(8, 2, 1.0, &HetSpec { het: 0.5, ..Default::default() });
         m.on_step();
-        let before: Vec<u64> = m.clocks.iter().map(|c| c.to_bits()).collect();
+        let before: Vec<u64> = (0..8).map(|j| m.clock_of(j).to_bits()).collect();
         m.on_reduction(&topo, 0, 123.0);
-        let after: Vec<u64> = m.clocks.iter().map(|c| c.to_bits()).collect();
+        let after: Vec<u64> = (0..8).map(|j| m.clock_of(j).to_bits()).collect();
         assert_eq!(before, after);
         assert_eq!(m.breakdown().level_stall_seconds[0], 0.0);
         let mut l = LockstepModel::new(8, 2, 1.0);
@@ -677,5 +552,23 @@ mod tests {
             b.makespan_seconds / (512.0 * 1e-3 + events as f64 * 1e-3)
         };
         assert!(run(1) > run(32), "sync {} vs sparse {}", run(1), run(32));
+    }
+
+    #[test]
+    fn homogeneous_core_allocates_no_per_learner_state() {
+        // The shared step node stands for all P learners: a homogeneous
+        // million-learner model is O(1) to build and drive, and only the
+        // final breakdown materializes O(P) vectors.
+        let p = 1 << 20;
+        let topo = HierTopology::new(vec![1 << 10, p]).unwrap();
+        let sched = HierSchedule::new(vec![4, 32]).unwrap();
+        let mut m = EventModel::new(p, 2, 1e-3, &HetSpec::default());
+        drive_timeline(&mut m, &topo, &sched, 512, &[1e-4, 1e-3]);
+        let expect = 512.0 * 1e-3 + 112.0 * 1e-4 + 16.0 * 1e-3;
+        assert!((m.now() - expect).abs() < 1e-9, "{}", m.now());
+        let s = replay_timeline_stats(&topo, &sched, 512, 1e-3, &[1e-4, 1e-3], &HetSpec::default());
+        assert_eq!(s.makespan_seconds.to_bits(), m.now().to_bits());
+        assert_eq!(s.straggler_events, 0);
+        assert_eq!(s.blocked_seconds_total, 0.0);
     }
 }

@@ -1,0 +1,278 @@
+//! Timeline-only replay: drive an execution model from barrier node to
+//! barrier node, with no parameter math in between.
+//!
+//! A static [`HierSchedule`] fires level ℓ at every multiple of its
+//! interval `k_ℓ`, outermost level winning shared boundaries.  The
+//! [`EventCalendar`] merges those L periodic event streams in a binary
+//! min-heap: `next()` pops the earliest pending boundary in O(log L),
+//! fires the outermost level that shares it, and re-arms each popped
+//! level at its next multiple.  Between consecutive barrier nodes the
+//! driver announces the whole step gap with one [`ExecModel::on_steps`]
+//! call, which the heap core absorbs in O(1) — so replaying a
+//! 1,000,000-learner homogeneous timeline costs O(events · log L), not
+//! O(horizon · P).
+//!
+//! [`replay_timeline_stats`] is the planner-facing entry point: it prices
+//! a candidate (topology, schedule) pair into a [`TimelineStats`] summary
+//! without materializing any O(P) vector, which is what makes
+//! `sweep --timeline-only` feasible at P up to 1,000,000.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::algorithms::{HierSchedule, SchedulePolicy, StaticPolicy};
+use crate::topology::HierTopology;
+
+use super::{EventModel, ExecBreakdown, ExecModel, HetSpec};
+
+/// Merged per-level event calendar of a static schedule: a min-heap of
+/// `(step, level)` nodes, one live node per level, each re-armed at its
+/// next interval multiple after it pops.
+#[derive(Debug, Clone)]
+pub struct EventCalendar {
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    intervals: Vec<u64>,
+    horizon: u64,
+}
+
+impl EventCalendar {
+    pub fn new(sched: &HierSchedule, horizon: u64) -> EventCalendar {
+        let intervals = sched.intervals().to_vec();
+        let mut heap = BinaryHeap::with_capacity(intervals.len());
+        for (l, &k) in intervals.iter().enumerate() {
+            if k <= horizon {
+                heap.push(Reverse((k, l)));
+            }
+        }
+        EventCalendar { heap, intervals, horizon }
+    }
+
+    fn rearm(&mut self, t: u64, level: usize) {
+        let next = t.saturating_add(self.intervals[level]);
+        if next <= self.horizon {
+            self.heap.push(Reverse((next, level)));
+        }
+    }
+
+    /// The next barrier node: `(step, level)` where `level` is the
+    /// outermost level whose interval divides `step` — exactly
+    /// [`HierSchedule::event_after`], because the heap holds level ℓ's
+    /// node precisely at ℓ's multiples and every node sharing the popped
+    /// step is consumed here (inner boundaries are subsumed, then
+    /// re-armed at their next multiple).  O(log L) per event.
+    pub fn next(&mut self) -> Option<(u64, usize)> {
+        let Reverse((t, first)) = self.heap.pop()?;
+        debug_assert!(t <= self.horizon);
+        let mut fired = first;
+        self.rearm(t, first);
+        while let Some(&Reverse((t2, level))) = self.heap.peek() {
+            if t2 != t {
+                break;
+            }
+            self.heap.pop();
+            if level > fired {
+                fired = level;
+            }
+            self.rearm(t, level);
+        }
+        Some((t, fired))
+    }
+}
+
+/// Drive `model` through `horizon` steps under `policy` (consulting
+/// `sched` as the base schedule), charging `level_seconds[l]` per
+/// level-`l` event — the one canonical loop mirroring `Engine::step`'s
+/// decide → on_step → on_reduction → observe call order (the planner's
+/// adaptive replay, the property tests, and the benches all reuse it, so
+/// they cannot drift from each other or from the engine).  The stall each
+/// barrier charges is fed straight back to the policy, so adaptive
+/// decisions and the virtual clock co-evolve exactly as they do in a
+/// live engine run; replay stays deterministic because that feedback is
+/// a pure function of the seeded timeline.  Returns the per-level
+/// realized event counts.
+///
+/// This loop is necessarily per-step — a policy may fire at any `t` — so
+/// it cannot ride the calendar fast path.  Static schedules should go
+/// through [`drive_timeline`] instead.
+pub fn drive_timeline_policy(
+    model: &mut dyn ExecModel,
+    topo: &HierTopology,
+    policy: &mut dyn SchedulePolicy,
+    sched: &HierSchedule,
+    horizon: u64,
+    level_seconds: &[f64],
+) -> Vec<u64> {
+    debug_assert_eq!(level_seconds.len(), topo.n_levels());
+    let mut realized = vec![0u64; topo.n_levels()];
+    for t in 1..=horizon {
+        model.on_step();
+        if let Some(level) = policy.decide(t, sched) {
+            realized[level] += 1;
+            let stall = model.on_reduction(topo, level, level_seconds[level]);
+            policy.observe(t, level, stall, level_seconds[level]);
+        }
+    }
+    realized
+}
+
+/// The fixed-schedule driver, calendar-driven: walk [`EventCalendar`]
+/// nodes and announce each inter-barrier step gap with one
+/// [`ExecModel::on_steps`] call.  Produces the identical op sequence the
+/// per-step [`drive_timeline_policy`] + [`StaticPolicy`] loop produces
+/// (the calendar fires exactly `event_after`'s events; `on_steps`
+/// defaults to repeated `on_step`), which the sim tests pin — but lets
+/// the heap core skip per-step dispatch entirely.
+pub fn drive_timeline(
+    model: &mut dyn ExecModel,
+    topo: &HierTopology,
+    sched: &HierSchedule,
+    horizon: u64,
+    level_seconds: &[f64],
+) {
+    debug_assert_eq!(level_seconds.len(), topo.n_levels());
+    let mut cal = EventCalendar::new(sched, horizon);
+    let mut done = 0u64;
+    while let Some((t, level)) = cal.next() {
+        model.on_steps(t - done);
+        done = t;
+        model.on_reduction(topo, level, level_seconds[level]);
+    }
+    model.on_steps(horizon - done);
+}
+
+/// Drive a bare event timeline (no training): `horizon` steps under
+/// `sched`, charging `level_seconds[l]` per level-`l` group event.  This
+/// is the planner's straggler-aware makespan estimator — it prices a
+/// candidate schedule against heterogeneous learners without running the
+/// engine.
+pub fn replay_timeline(
+    topo: &HierTopology,
+    sched: &HierSchedule,
+    horizon: u64,
+    step_seconds: f64,
+    level_seconds: &[f64],
+    spec: &HetSpec,
+) -> ExecBreakdown {
+    let mut model = EventModel::new(topo.p(), topo.n_levels(), step_seconds, spec);
+    drive_timeline(&mut model, topo, sched, horizon, level_seconds);
+    model.breakdown()
+}
+
+/// Aggregate accounting of a timeline-only replay: everything the
+/// planner needs to rank a candidate, nothing per-learner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineStats {
+    /// Modelled wall clock: max over learner clocks.
+    pub makespan_seconds: f64,
+    /// Total compute time summed over learners.
+    pub busy_seconds_total: f64,
+    /// Total barrier wait summed over learners.
+    pub blocked_seconds_total: f64,
+    /// Barrier wait attributed to each hierarchy level.
+    pub level_stall_seconds: Vec<f64>,
+    /// Straggler spikes that fired over the run.
+    pub straggler_events: u64,
+    /// Steps driven (the horizon).
+    pub steps: u64,
+    /// Barrier nodes fired (reduction events, all levels).
+    pub reduction_events: u64,
+}
+
+impl TimelineStats {
+    /// Timeline nodes processed: step announcements + barrier firings
+    /// (the unit the events/sec bench curve counts).
+    pub fn timeline_events(&self) -> u64 {
+        self.steps + self.reduction_events
+    }
+}
+
+/// [`replay_timeline`] without the O(P) breakdown vectors: the
+/// timeline-only pricing path (`sweep --timeline-only`).  A homogeneous
+/// spec never allocates per-learner state at all, so P = 1,000,000
+/// candidates price in microseconds; heterogeneous specs pay the flat
+/// pooled arrays but skip the four breakdown clones.
+pub fn replay_timeline_stats(
+    topo: &HierTopology,
+    sched: &HierSchedule,
+    horizon: u64,
+    step_seconds: f64,
+    level_seconds: &[f64],
+    spec: &HetSpec,
+) -> TimelineStats {
+    debug_assert_eq!(level_seconds.len(), topo.n_levels());
+    let mut model = EventModel::new(topo.p(), topo.n_levels(), step_seconds, spec);
+    let mut cal = EventCalendar::new(sched, horizon);
+    let mut done = 0u64;
+    let mut reduction_events = 0u64;
+    while let Some((t, level)) = cal.next() {
+        model.on_steps(t - done);
+        done = t;
+        model.on_reduction(topo, level, level_seconds[level]);
+        reduction_events += 1;
+    }
+    model.on_steps(horizon - done);
+    TimelineStats {
+        makespan_seconds: model.now(),
+        busy_seconds_total: model.busy_seconds_total(),
+        blocked_seconds_total: model.blocked_seconds_total(),
+        level_stall_seconds: model.level_stall_seconds().to_vec(),
+        straggler_events: model.straggler_events(),
+        steps: horizon,
+        reduction_events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calendar_matches_event_after_exactly() {
+        for intervals in [vec![2u64, 8], vec![1, 4, 8], vec![3, 3, 9], vec![5, 20, 20, 40]] {
+            let sched = HierSchedule::new(intervals).unwrap();
+            let horizon = 97;
+            let mut cal = EventCalendar::new(&sched, horizon);
+            for t in 1..=horizon {
+                let expect = sched.event_after(t);
+                if let Some(level) = expect {
+                    assert_eq!(cal.next(), Some((t, level)), "t={t}");
+                }
+            }
+            assert_eq!(cal.next(), None);
+        }
+    }
+
+    #[test]
+    fn calendar_driver_matches_per_step_driver() {
+        let topo = HierTopology::new(vec![2, 4, 16]).unwrap();
+        let sched = HierSchedule::new(vec![2, 6, 24]).unwrap();
+        let spec = HetSpec { het: 0.4, straggler_prob: 0.15, straggler_mult: 3.0, seed: 13 };
+        let secs = [1e-4, 5e-4, 2e-3];
+        let mut a = EventModel::new(16, 3, 1e-3, &spec);
+        drive_timeline(&mut a, &topo, &sched, 240, &secs);
+        let mut b = EventModel::new(16, 3, 1e-3, &spec);
+        let mut policy = StaticPolicy::new();
+        drive_timeline_policy(&mut b, &topo, &mut policy, &sched, 240, &secs);
+        assert_eq!(a.breakdown(), b.breakdown());
+    }
+
+    #[test]
+    fn stats_agree_with_breakdown() {
+        let topo = HierTopology::new(vec![4, 16]).unwrap();
+        let sched = HierSchedule::new(vec![4, 16]).unwrap();
+        let spec = HetSpec { het: 0.7, straggler_prob: 0.1, straggler_mult: 4.0, seed: 3 };
+        let b = replay_timeline(&topo, &sched, 128, 1e-3, &[1e-4, 1e-3], &spec);
+        let s = replay_timeline_stats(&topo, &sched, 128, 1e-3, &[1e-4, 1e-3], &spec);
+        assert_eq!(s.makespan_seconds.to_bits(), b.makespan_seconds.to_bits());
+        assert_eq!(s.straggler_events, b.straggler_events);
+        assert_eq!(s.level_stall_seconds, b.level_stall_seconds);
+        let blocked: f64 = b.blocked_seconds.iter().sum();
+        assert!((s.blocked_seconds_total - blocked).abs() <= 1e-12 * blocked.max(1.0));
+        let busy: f64 = b.busy_seconds.iter().sum();
+        assert!((s.busy_seconds_total - busy).abs() <= 1e-9 * busy.max(1.0));
+        // 128 steps, 24 local + 8 global barrier nodes
+        assert_eq!(s.steps, 128);
+        assert_eq!(s.reduction_events, 32);
+        assert_eq!(s.timeline_events(), 160);
+    }
+}

@@ -1,0 +1,135 @@
+//! The legacy scan-based event model, kept as the executable reference
+//! specification for the heap/calendar core.
+//!
+//! [`ScanEventModel`] is the original `EventModel` implementation: every
+//! `on_step` walks all P learner clocks, every reduction iterates each
+//! group's members.  It is O(P) per step and materializes every
+//! per-learner vector up front — exactly the costs the heap core
+//! ([`super::EventModel`]) removes — but its semantics are the contract:
+//! the property tests in rust/tests/event_heap.rs drive both models over
+//! random topologies × heterogeneity specs and require bit-identical
+//! timelines.  Any behavioural change to the event engine must land here
+//! first, as a deliberate edit to the reference, never as a silent
+//! divergence of the fast path.
+
+use crate::topology::HierTopology;
+use crate::util::rng::Pcg32;
+
+use super::{ExecBreakdown, ExecKind, ExecModel, HetSpec, STRAGGLER_STREAM};
+
+/// The reference virtual-time event engine: per-learner clocks, group-local
+/// barriers, straggler spikes, all advanced by eager O(P) scans.
+///
+/// Bit-for-bit note: under a homogeneous [`HetSpec`] every operation here
+/// degenerates to the exact IEEE operation `LockstepModel` performs in
+/// the same order (`rate = 1.0` multiplications are exact, equal-clock
+/// maxima return the shared value, `x − x = +0.0` waits), which is what
+/// makes the homogeneous-equivalence golden tests byte-stable.
+#[derive(Debug, Clone)]
+pub struct ScanEventModel {
+    base: f64,
+    n_levels: usize,
+    rates: Vec<f64>,
+    spike_prob: f64,
+    spike_mult: f64,
+    rngs: Vec<Pcg32>,
+    clocks: Vec<f64>,
+    busy: Vec<f64>,
+    blocked: Vec<f64>,
+    level_stalls: Vec<f64>,
+    straggler_events: u64,
+}
+
+impl ScanEventModel {
+    pub fn new(p: usize, n_levels: usize, step_seconds: f64, spec: &HetSpec) -> ScanEventModel {
+        let rates = (0..p)
+            .map(|j| {
+                if p > 1 {
+                    1.0 + spec.het * j as f64 / (p - 1) as f64
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let mut root = Pcg32::new(spec.seed, STRAGGLER_STREAM);
+        ScanEventModel {
+            base: step_seconds,
+            n_levels,
+            rates,
+            spike_prob: spec.straggler_prob,
+            spike_mult: spec.straggler_mult,
+            rngs: (0..p).map(|j| root.fork(j as u64)).collect(),
+            clocks: vec![0.0; p],
+            busy: vec![0.0; p],
+            blocked: vec![0.0; p],
+            level_stalls: vec![0.0; n_levels],
+            straggler_events: 0,
+        }
+    }
+}
+
+impl ExecModel for ScanEventModel {
+    fn name(&self) -> &'static str {
+        // The reference reports the same model name: it is the same
+        // semantics, and breakdown comparisons must not differ on a label.
+        ExecKind::Event.name()
+    }
+
+    fn on_step(&mut self) {
+        for j in 0..self.clocks.len() {
+            let mut dt = self.base * self.rates[j];
+            // prob = 0 draws nothing, keeping the homogeneous path free of
+            // RNG state (and bit-identical to lockstep).
+            if self.spike_prob > 0.0 && self.rngs[j].next_f64() < self.spike_prob {
+                dt *= self.spike_mult;
+                self.straggler_events += 1;
+            }
+            self.busy[j] += dt;
+            self.clocks[j] += dt;
+        }
+    }
+
+    fn on_reduction(&mut self, topo: &HierTopology, level: usize, seconds: f64) -> f64 {
+        debug_assert_eq!(topo.n_levels(), self.n_levels);
+        debug_assert_eq!(topo.p(), self.clocks.len());
+        if topo.size(level) <= 1 && level + 1 < topo.n_levels() {
+            return 0.0; // the reducer's no-op convention
+        }
+        let mut event_stall = 0.0;
+        for g in 0..topo.n_groups(level) {
+            let members = topo.group_members(level, g);
+            // Group-local barrier: members meet at the slowest arrival,
+            // then pay the collective together.  Other groups' clocks are
+            // untouched — they keep stepping.
+            let arrival = members
+                .clone()
+                .map(|j| self.clocks[j])
+                .fold(f64::NEG_INFINITY, f64::max);
+            for j in members {
+                let wait = arrival - self.clocks[j];
+                self.blocked[j] += wait;
+                self.level_stalls[level] += wait;
+                event_stall += wait;
+                self.clocks[j] = arrival + seconds;
+            }
+        }
+        event_stall
+    }
+
+    fn now(&mut self) -> f64 {
+        self.clocks.iter().cloned().fold(0.0, f64::max)
+    }
+
+    fn breakdown(&mut self) -> ExecBreakdown {
+        let makespan = self.clocks.iter().cloned().fold(0.0, f64::max);
+        ExecBreakdown {
+            model: self.name(),
+            makespan_seconds: makespan,
+            busy_seconds: self.busy.clone(),
+            blocked_seconds: self.blocked.clone(),
+            idle_seconds: self.clocks.iter().map(|&c| makespan - c).collect(),
+            level_stall_seconds: self.level_stalls.clone(),
+            straggler_events: self.straggler_events,
+        }
+    }
+}

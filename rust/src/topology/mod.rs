@@ -57,6 +57,12 @@ impl Topology {
         if p == 0 || s == 0 {
             bail!("topology requires p >= 1 and s >= 1 (got p={p}, s={s})");
         }
+        if p > MAX_P {
+            bail!(
+                "topology has p={p} learners, above the supported maximum of {MAX_P} \
+                 (2^24) — timeline-only sweeps handle up to --p 1048576"
+            );
+        }
         if p % s != 0 {
             bail!("S must divide P (paper assumption S|P): p={p}, s={s}");
         }
@@ -124,6 +130,14 @@ pub struct HierTopology {
 /// (2^L subsets) stops being cheap; real platforms have 2-4 tiers.
 pub const MAX_LEVELS: usize = 12;
 
+/// Largest learner count a hierarchy will model (16,777,216).  The event
+/// engine's timeline-only mode handles P = 1,048,576 comfortably; this
+/// cap is headroom above that, placed where every construction path
+/// (config, CLI, sweep) funnels through, so a typo'd `--p` fails with an
+/// actionable error instead of exhausting memory or overflowing the
+/// planner's byte accounting downstream.
+pub const MAX_P: usize = 1 << 24;
+
 impl HierTopology {
     pub fn new(sizes: Vec<usize>) -> Result<HierTopology> {
         let links = default_links(sizes.len());
@@ -143,6 +157,14 @@ impl HierTopology {
         for (l, &s) in sizes.iter().enumerate() {
             if s == 0 {
                 bail!("level {l} has group size 0");
+            }
+            if s > MAX_P {
+                bail!(
+                    "level {l} has group size {s}, above the supported maximum of \
+                     {MAX_P} learners (2^24) — timeline-only sweeps handle up to \
+                     --p 1048576; larger platforms need a coarser model, not more \
+                     simulated learners"
+                );
             }
         }
         for l in 0..sizes.len() - 1 {

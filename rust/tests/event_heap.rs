@@ -1,0 +1,248 @@
+//! The heap/calendar event core vs the scan reference: bit-identity
+//! across random topologies × heterogeneity specs, plus the large-P
+//! timeline-only smoke the new core exists for.
+//!
+//! `ScanEventModel` (rust/src/sim/scan.rs) is the executable
+//! specification — the legacy O(P)-per-step implementation kept
+//! verbatim.  These tests drive both models over randomized shapes,
+//! schedules, and het/straggler regimes and require the heap core's
+//! timeline to reproduce the reference **bit for bit**: same clocks,
+//! same busy/blocked/idle vectors, same stall attribution, same spike
+//! counts.  Any intentional semantic change must be made to the
+//! reference first; a diff here is a fast-path regression by definition.
+
+use hier_avg::algorithms::{HierSchedule, StaticPolicy};
+use hier_avg::sim::{
+    drive_timeline, drive_timeline_policy, replay_timeline, replay_timeline_stats,
+    EventCalendar, EventModel, ExecBreakdown, ExecModel, HetSpec, ScanEventModel,
+};
+use hier_avg::topology::HierTopology;
+use hier_avg::util::rng::Pcg32;
+
+fn assert_bitwise_eq(a: &ExecBreakdown, b: &ExecBreakdown, ctx: &str) {
+    assert_eq!(a.model, b.model, "{ctx}: model name");
+    assert_eq!(
+        a.makespan_seconds.to_bits(),
+        b.makespan_seconds.to_bits(),
+        "{ctx}: makespan {} vs {}",
+        a.makespan_seconds,
+        b.makespan_seconds
+    );
+    assert_eq!(a.straggler_events, b.straggler_events, "{ctx}: straggler_events");
+    for (name, xa, xb) in [
+        ("busy", &a.busy_seconds, &b.busy_seconds),
+        ("blocked", &a.blocked_seconds, &b.blocked_seconds),
+        ("idle", &a.idle_seconds, &b.idle_seconds),
+        ("level_stall", &a.level_stall_seconds, &b.level_stall_seconds),
+    ] {
+        assert_eq!(xa.len(), xb.len(), "{ctx}: {name} length");
+        for (j, (x, y)) in xa.iter().zip(xb.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name}[{j}] {x} vs {y}");
+        }
+    }
+}
+
+/// A random divisor chain over a random P, innermost first, last = P.
+fn random_chain(rng: &mut Pcg32) -> Vec<usize> {
+    let ps = [8usize, 12, 16, 24, 32, 48, 64];
+    let p = ps[rng.next_below(ps.len() as u32) as usize];
+    let n_levels = 2 + rng.next_below(3) as usize; // 2..=4
+    let mut sizes = vec![p];
+    for _ in 1..n_levels {
+        let inner = sizes[0];
+        let divs: Vec<usize> = (1..inner).filter(|d| inner % d == 0).collect();
+        if divs.is_empty() {
+            break;
+        }
+        sizes.insert(0, divs[rng.next_below(divs.len() as u32) as usize]);
+    }
+    sizes
+}
+
+/// A random non-decreasing interval chain for `n` levels.
+fn random_intervals(rng: &mut Pcg32, n: usize) -> Vec<u64> {
+    let mut ks = Vec::with_capacity(n);
+    let mut k = 1 + rng.next_below(4) as u64;
+    for _ in 0..n {
+        ks.push(k);
+        k += rng.next_below(9) as u64; // non-decreasing, not necessarily divisible
+    }
+    ks
+}
+
+#[test]
+fn heap_core_matches_scan_reference_bitwise() {
+    let mut rng = Pcg32::seeded(0xE7E_47);
+    let hets = [0.0, 0.3, 1.1];
+    let probs = [0.0, 0.05, 0.3];
+    for case in 0..40 {
+        let sizes = random_chain(&mut rng);
+        let topo = HierTopology::new(sizes.clone()).unwrap();
+        let ks = random_intervals(&mut rng, topo.n_levels());
+        let sched = HierSchedule::new(ks.clone()).unwrap();
+        let spec = HetSpec {
+            het: hets[rng.next_below(3) as usize],
+            straggler_prob: probs[rng.next_below(3) as usize],
+            straggler_mult: 3.0,
+            seed: 100 + case as u64,
+        };
+        let horizon = 50 + rng.next_below(251) as u64;
+        let secs: Vec<f64> = (0..topo.n_levels()).map(|l| 1e-4 * (l + 1) as f64).collect();
+        let ctx = format!(
+            "case {case}: sizes={sizes:?} ks={ks:?} het={} prob={} horizon={horizon}",
+            spec.het, spec.straggler_prob
+        );
+
+        let mut scan = ScanEventModel::new(topo.p(), topo.n_levels(), 1e-3, &spec);
+        drive_timeline(&mut scan, &topo, &sched, horizon, &secs);
+        let mut heap = EventModel::new(topo.p(), topo.n_levels(), 1e-3, &spec);
+        drive_timeline(&mut heap, &topo, &sched, horizon, &secs);
+        assert_eq!(scan.now().to_bits(), heap.now().to_bits(), "{ctx}: now()");
+        assert_bitwise_eq(&scan.breakdown(), &heap.breakdown(), &ctx);
+
+        // The per-step policy driver must agree with the calendar driver
+        // on both models (same op sequence, batched differently).
+        let mut heap2 = EventModel::new(topo.p(), topo.n_levels(), 1e-3, &spec);
+        let mut policy = StaticPolicy::new();
+        drive_timeline_policy(&mut heap2, &topo, &mut policy, &sched, horizon, &secs);
+        assert_bitwise_eq(&scan.breakdown(), &heap2.breakdown(), &ctx);
+    }
+}
+
+#[test]
+fn mid_run_queries_do_not_perturb_the_timeline() {
+    // now()/clock_of flush lazily-advanced learners; interleaving them
+    // mid-run must leave the final timeline bit-identical to the
+    // reference (flushing is a pure reordering of the same FLOPs).
+    let topo = HierTopology::new(vec![4, 16]).unwrap();
+    let sched = HierSchedule::new(vec![2, 8]).unwrap();
+    let spec = HetSpec { het: 0.6, straggler_prob: 0.2, straggler_mult: 4.0, seed: 77 };
+    let secs = [1e-4, 1e-3];
+
+    let mut scan = ScanEventModel::new(16, 2, 1e-3, &spec);
+    let mut heap = EventModel::new(16, 2, 1e-3, &spec);
+    for t in 1..=96u64 {
+        scan.on_step();
+        heap.on_step();
+        if t % 7 == 0 {
+            assert_eq!(scan.now().to_bits(), heap.now().to_bits(), "t={t}");
+            // Flushing is idempotent: a second query sees the same clock.
+            let c1 = heap.clock_of(3);
+            let c2 = heap.clock_of(3);
+            assert_eq!(c1.to_bits(), c2.to_bits());
+        }
+        if let Some(level) = sched.event_after(t) {
+            let a = scan.on_reduction(&topo, level, secs[level]);
+            let b = heap.on_reduction(&topo, level, secs[level]);
+            assert_eq!(a.to_bits(), b.to_bits(), "stall at t={t}");
+        }
+        if t % 13 == 0 {
+            assert_bitwise_eq(&scan.breakdown(), &heap.breakdown(), &format!("t={t}"));
+        }
+    }
+    assert_bitwise_eq(&scan.breakdown(), &heap.breakdown(), "final");
+}
+
+#[test]
+fn calendar_fires_exactly_the_schedule_events() {
+    let mut rng = Pcg32::seeded(31);
+    for case in 0..20 {
+        let n = 2 + rng.next_below(3) as usize;
+        let ks = random_intervals(&mut rng, n);
+        let sched = HierSchedule::new(ks.clone()).unwrap();
+        let horizon = 500u64;
+        let mut cal = EventCalendar::new(&sched, horizon);
+        let mut fired = 0u64;
+        for t in 1..=horizon {
+            if let Some(level) = sched.event_after(t) {
+                assert_eq!(cal.next(), Some((t, level)), "case {case} ks={ks:?} t={t}");
+                fired += 1;
+            }
+        }
+        assert_eq!(cal.next(), None, "case {case}: calendar overran the horizon");
+        let counts: u64 = sched.reduction_counts(horizon).iter().sum();
+        assert_eq!(fired, counts, "case {case}");
+    }
+}
+
+#[test]
+fn timeline_only_smoke_at_p_100k() {
+    // The acceptance smoke: a 100,000-learner straggler replay must be
+    // feasible, monotone in virtual time, and conserve per-learner time:
+    // busy + blocked + comm + idle = makespan for every learner.
+    let p = 100_000;
+    let topo = HierTopology::new(vec![100, p]).unwrap();
+    let sched = HierSchedule::new(vec![4, 16]).unwrap();
+    let spec = HetSpec { het: 0.5, straggler_prob: 0.05, straggler_mult: 4.0, seed: 9 };
+    let horizon = 48u64;
+    let secs = [1e-4, 1e-3];
+
+    // Event times are monotone: now() never decreases across barrier
+    // nodes (virtual time only moves forward).
+    let mut model = EventModel::new(p, 2, 1e-3, &spec);
+    let mut cal = EventCalendar::new(&sched, horizon);
+    let mut done = 0u64;
+    let mut prev = 0.0f64;
+    while let Some((t, level)) = cal.next() {
+        model.on_steps(t - done);
+        done = t;
+        model.on_reduction(&topo, level, secs[level]);
+        let now = model.now();
+        assert!(now >= prev, "virtual time went backwards: {now} < {prev} at t={t}");
+        prev = now;
+    }
+    model.on_steps(horizon - done);
+    assert!(model.now() >= prev);
+
+    // Conservation: every learner pays every fired barrier's collective
+    // cost (it is a member of exactly one group per level), so
+    // clock_j = busy_j + blocked_j + comm and makespan = clock_j + idle_j.
+    let b = replay_timeline(&topo, &sched, horizon, 1e-3, &secs, &spec);
+    let counts = sched.reduction_counts(horizon);
+    let comm: f64 = counts.iter().zip(secs.iter()).map(|(&c, &s)| c as f64 * s).sum();
+    assert_eq!(b.busy_seconds.len(), p);
+    assert!(b.makespan_seconds.is_finite() && b.makespan_seconds > 0.0);
+    assert!(b.straggler_events > 0);
+    for j in 0..p {
+        let total = b.busy_seconds[j] + b.blocked_seconds[j] + comm + b.idle_seconds[j];
+        assert!(
+            (total - b.makespan_seconds).abs() <= 1e-9 * b.makespan_seconds,
+            "learner {j}: busy {} + blocked {} + comm {comm} + idle {} != makespan {}",
+            b.busy_seconds[j],
+            b.blocked_seconds[j],
+            b.idle_seconds[j],
+            b.makespan_seconds
+        );
+    }
+
+    // The no-allocation stats path agrees with the full breakdown.
+    let s = replay_timeline_stats(&topo, &sched, horizon, 1e-3, &secs, &spec);
+    assert_eq!(s.makespan_seconds.to_bits(), b.makespan_seconds.to_bits());
+    assert_eq!(s.straggler_events, b.straggler_events);
+    assert_eq!(s.steps, horizon);
+    assert_eq!(s.reduction_events, counts.iter().sum::<u64>());
+}
+
+#[test]
+fn homogeneous_heap_core_is_order_of_magnitude_cheap_at_p_1m() {
+    // A 2-level million-learner homogeneous replay rides the shared step
+    // node: no O(P) state, and the answer matches the closed form.
+    let p = 1 << 20;
+    let topo = HierTopology::new(vec![1 << 10, p]).unwrap();
+    let sched = HierSchedule::new(vec![8, 64]).unwrap();
+    let horizon = 4096u64;
+    let secs = [1e-4, 1e-3];
+    let s = replay_timeline_stats(&topo, &sched, horizon, 1e-3, &secs, &HetSpec::default());
+    let counts = sched.reduction_counts(horizon);
+    let expect = horizon as f64 * 1e-3
+        + counts[0] as f64 * secs[0]
+        + counts[1] as f64 * secs[1];
+    assert!(
+        (s.makespan_seconds - expect).abs() <= 1e-9 * expect,
+        "{} vs {expect}",
+        s.makespan_seconds
+    );
+    assert_eq!(s.blocked_seconds_total, 0.0);
+    assert_eq!(s.straggler_events, 0);
+    assert_eq!(s.reduction_events, counts.iter().sum::<u64>());
+}

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Bench regression gate: fresh BENCH_<group>.json vs committed baselines.
+
+Usage:
+    python3 scripts/bench_gate.py <baseline_dir> BENCH_a.json [BENCH_b.json ...]
+
+For each fresh report, the committed copy stashed under <baseline_dir> is
+the baseline.  A group is *unarmed* (skipped with a notice) while its
+committed file is still a schema placeholder — a `note` key and/or an
+empty `benches` object, as emitted by the seed tree before the first real
+bless.  Once a maintainer commits a real BENCH_<group>.json (run the bench
+locally at full fidelity and commit the output), the gate arms itself for
+that group automatically.
+
+Armed groups fail the build when any bench shared between baseline and
+fresh run regresses by more than REGRESSION_FRAC in median ns/iter
+(throughput drop > 20%).  Benches present only in the baseline are
+warnings (a rename silently un-gates a number); new benches pass — they
+become gated once the refreshed baseline is committed.
+
+CI runs the benches with reduced sampling (BENCHKIT_SAMPLES/
+BENCHKIT_TARGET_MS), so the threshold is deliberately loose: it catches
+step-change regressions (an accidental O(P) loop on the hot path), not
+single-digit-percent drift.  Noise-level failures on shared runners should
+be resolved by re-blessing the baseline, not by widening the threshold.
+"""
+
+import json
+import os
+import sys
+
+REGRESSION_FRAC = 0.20
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def gate_group(fresh_path, baseline_dir):
+    name = os.path.basename(fresh_path)
+    base_path = os.path.join(baseline_dir, name)
+    fresh = load(fresh_path)
+    group = fresh.get("group", name)
+    if not os.path.exists(base_path):
+        print(f"[{group}] no committed baseline ({name}) — gate unarmed")
+        return []
+    base = load(base_path)
+    base_benches = base.get("benches") or {}
+    if "note" in base or not base_benches:
+        print(f"[{group}] committed baseline is a schema placeholder — gate unarmed")
+        return []
+
+    failures = []
+    fresh_benches = fresh.get("benches") or {}
+    for bench, b in sorted(base_benches.items()):
+        f = fresh_benches.get(bench)
+        if f is None:
+            print(f"::warning::[{group}] bench '{bench}' present in baseline "
+                  f"but missing from the fresh run — renamed or removed?")
+            continue
+        base_ns, fresh_ns = b["ns_per_iter"], f["ns_per_iter"]
+        ratio = fresh_ns / base_ns if base_ns > 0 else float("inf")
+        status = "ok"
+        if ratio > 1.0 + REGRESSION_FRAC:
+            status = "REGRESSION"
+            failures.append((bench, base_ns, fresh_ns, ratio))
+        print(f"[{group}] {bench:<48} base {base_ns:>12.1f} ns  "
+              f"fresh {fresh_ns:>12.1f} ns  x{ratio:.3f}  {status}")
+    for bench in sorted(set(fresh_benches) - set(base_benches)):
+        print(f"[{group}] {bench:<48} (new bench, ungated until the "
+              f"refreshed baseline is committed)")
+    return failures
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    baseline_dir = argv[1]
+    all_failures = []
+    for fresh_path in argv[2:]:
+        all_failures += gate_group(fresh_path, baseline_dir)
+    if all_failures:
+        print()
+        for bench, base_ns, fresh_ns, ratio in all_failures:
+            print(f"::error::bench '{bench}' regressed x{ratio:.3f} "
+                  f"({base_ns:.1f} -> {fresh_ns:.1f} ns/iter, "
+                  f"threshold x{1.0 + REGRESSION_FRAC:.2f})")
+        return 1
+    print("bench gate: no regressions above "
+          f"{int(REGRESSION_FRAC * 100)}% on armed groups")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
