@@ -1,0 +1,111 @@
+//! Elastic-fleet sweep: the same hierarchy trained under increasing
+//! spot-preemption pressure — how much loss quality and wall clock an
+//! elastic run gives up as learners drop out and re-enter.
+//!
+//!     cargo run --release --example elastic_fleet [--p 16] [--k1 2]
+//!         [--k2 8] [--epochs N] [--mttr N] [--het F] [--straggler P[:M]]
+//!
+//! Each row arms the fault layer at one preemption hazard (probability a
+//! live learner is preempted at each virtual step; repair after --mttr
+//! steps).  While a learner is down its groups reduce over the
+//! survivors; on repair it restores from the fleet's checkpointed
+//! average and warm-syncs to its innermost group.  Expected shape of the
+//! table: preemptions and lost time grow with the hazard, the makespan
+//! stretches by roughly the re-entry restore surcharges, and the final
+//! loss degrades gracefully — survivors keep averaging, so training
+//! never collapses the way a full-fleet barrier stall would.
+
+use anyhow::Result;
+
+use hier_avg::config::{BackendKind, RunConfig};
+use hier_avg::driver;
+use hier_avg::optimizer::LrSchedule;
+use hier_avg::sim::{ExecKind, FaultPlan, FaultSpec, HetSpec};
+use hier_avg::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let p: usize = args.parse_or("p", 16)?;
+    let k1: u64 = args.parse_or("k1", 2)?;
+    let k2: u64 = args.parse_or("k2", 8)?;
+    let epochs: usize = args.parse_or("epochs", 8)?;
+    let mttr: u64 = args.parse_or("mttr", 16)?;
+    let mut spec = HetSpec { het: 0.4, straggler_prob: 0.05, ..HetSpec::default() };
+    spec.apply_args(&args)?;
+
+    let mk = |faults: Option<FaultPlan>| -> Result<RunConfig> {
+        let mut cfg = RunConfig::defaults("resnet18_sim");
+        cfg.backend = BackendKind::Native;
+        cfg.p = p;
+        cfg.s = 4;
+        cfg.k1 = k1;
+        cfg.k2 = k2;
+        cfg.epochs = epochs;
+        cfg.train_n = 64 * p * 16;
+        cfg.test_n = 1024;
+        cfg.lr = LrSchedule::Constant(0.1);
+        cfg.exec = ExecKind::Event;
+        cfg.set_het_spec(&spec);
+        cfg.faults = faults;
+        cfg.validate()?;
+        Ok(cfg)
+    };
+
+    println!(
+        "elastic fleet at P={p}, K=[{k1},{k2}], S=4, event exec \
+         (het={} straggler={}:{} mttr={mttr})",
+        spec.het, spec.straggler_prob, spec.straggler_mult
+    );
+    println!(
+        "{:<12} {:>8} {:>8} {:>10} {:>10} {:>10} {:>12} {:>12} {:>10}",
+        "hazard", "preempt", "reenter", "surv_reds", "mem_epoch", "lost_s", "makespan_s",
+        "train_loss", "test_acc"
+    );
+    let mut base_makespan = 0.0f64;
+    let mut base_loss = 0.0f64;
+    for &prob in &[0.0f64, 0.002, 0.01, 0.05] {
+        let faults =
+            (prob > 0.0).then(|| FaultPlan::Sampled(FaultSpec { prob, mttr }));
+        let rec = driver::run(&mk(faults)?)?;
+        let (preempt, reenter, surv, epoch, lost) = match &rec.faults {
+            Some(f) => (
+                f.preemptions,
+                f.reentries,
+                f.survivor_reductions,
+                f.membership_epoch,
+                f.lost_seconds,
+            ),
+            None => (0, 0, 0, 0, 0.0),
+        };
+        println!(
+            "{:<12} {:>8} {:>8} {:>10} {:>10} {:>10.4} {:>12.4} {:>12.4} {:>10.4}",
+            if prob > 0.0 { format!("{prob}") } else { "fault-free".to_string() },
+            preempt,
+            reenter,
+            surv,
+            epoch,
+            lost,
+            rec.makespan_seconds,
+            rec.final_train_loss(),
+            rec.final_test_acc(),
+        );
+        if prob == 0.0 {
+            base_makespan = rec.makespan_seconds;
+            base_loss = rec.final_train_loss();
+        } else {
+            println!(
+                "  -> hazard {prob}: {:+.1}% makespan, {:+.4} final train loss vs fault-free",
+                100.0 * (rec.makespan_seconds / base_makespan - 1.0),
+                rec.final_train_loss() - base_loss,
+            );
+        }
+    }
+    println!(
+        "\nreading the table: a down learner's time lands in lost_s (its groups keep \
+         reducing over the survivors, reweighted to the members that arrived); every \
+         re-entry restores from the checkpointed average and warm-syncs to its \
+         innermost group, charging the restore surcharge to the timeline.  The same \
+         seed replays the same outages bit for bit."
+    );
+    Ok(())
+}

@@ -20,7 +20,10 @@
 mod benchkit;
 
 use hier_avg::algorithms::HierSchedule;
-use hier_avg::sim::{drive_timeline, replay_timeline_stats, ExecKind, ExecModel, HetSpec};
+use hier_avg::sim::{
+    drive_timeline, replay_timeline_stats, replay_timeline_stats_faults, ExecKind, ExecModel,
+    FaultPlan, FaultSpec, HetSpec,
+};
 use hier_avg::topology::HierTopology;
 
 const STEPS: u64 = 512;
@@ -50,6 +53,15 @@ fn main() {
         // over the homogeneous path.
         b.bench(&format!("timeline/event_straggler/p{p}/512steps"), || {
             let mut m = ExecKind::Event.build(p, 2, base, &straggler);
+            drive_timeline(m.as_mut(), &topo, &sched, STEPS, &level_seconds);
+            std::hint::black_box(m.now());
+        });
+        // The elastic layer's marginal cost: membership resolution per
+        // step + survivor-aware barriers on the same hot path.
+        let plan = FaultPlan::Sampled(FaultSpec { prob: 0.01, mttr: 10 });
+        b.bench(&format!("timeline/event_faults/p{p}/512steps"), || {
+            let mut m = ExecKind::Event.build(p, 2, base, &straggler);
+            m.install_faults(straggler.seed, &plan);
             drive_timeline(m.as_mut(), &topo, &sched, STEPS, &level_seconds);
             std::hint::black_box(m.now());
         });
@@ -95,6 +107,24 @@ fn main() {
                 base,
                 &level_seconds,
                 &straggler,
+            ));
+        });
+    }
+    // Fault-armed replay (the planner's `sweep --faults` pricing path):
+    // forces per-learner state like the straggler curve, plus the
+    // membership trace — measured at the same P points for comparison.
+    let plan = FaultPlan::Sampled(FaultSpec { prob: 0.01, mttr: 10 });
+    for &p in &[64usize, 1024] {
+        let topo = HierTopology::new(vec![64, p]).unwrap();
+        b.bench_units(&format!("replay_timeline_only_faults/p{p}/4096steps"), units, || {
+            std::hint::black_box(replay_timeline_stats_faults(
+                &topo,
+                &sched,
+                horizon,
+                base,
+                &level_seconds,
+                &straggler,
+                &plan,
             ));
         });
     }

@@ -313,6 +313,32 @@ pub trait SchedulePolicy: std::fmt::Debug + Send {
     /// group's modelled collective cost.
     fn observe(&mut self, _t: u64, _level: usize, _stall_seconds: f64, _comm_seconds: f64) {}
 
+    /// Culprit feedback, delivered only when the elastic fault layer
+    /// (`--faults`) is active: `learner` is the participant the whole
+    /// barrier at step `t` waited for (the timeline's globally latest
+    /// arrival across the reduction).  Like [`SchedulePolicy::observe`],
+    /// a pure function of the seeded timeline, so replays reproduce
+    /// every migration.  Default: ignored.
+    fn observe_culprit(
+        &mut self,
+        _t: u64,
+        _level: usize,
+        _learner: usize,
+        _stall_seconds: f64,
+        _comm_seconds: f64,
+    ) {
+    }
+
+    /// Drain a pending membership decision: a learner the policy wants
+    /// migrated out of its sub-top group (it then barriers only at the
+    /// outermost level) instead of widening everyone's interval around
+    /// one persistently slow machine.  The engine polls this after every
+    /// reduction and applies at most one migration per poll.  Default:
+    /// never migrates.
+    fn take_migration(&mut self) -> Option<usize> {
+        None
+    }
+
     /// The interval table currently in effect (the base schedule's, for
     /// policies that never deviate from it).
     fn intervals(&self, base: &HierSchedule) -> Vec<u64>;
@@ -409,12 +435,31 @@ pub struct AdaptivePolicy {
     /// it).
     quiet: Vec<u32>,
     changes: Vec<ScheduleChange>,
+    /// The learner the last expensive barrier waited for (fault layer
+    /// only; see [`SchedulePolicy::observe_culprit`]).
+    last_culprit: Option<usize>,
+    /// Consecutive expensive barriers blamed on `last_culprit`.
+    culprit_streak: u32,
+    /// A migration decided but not yet drained by the engine.
+    pending_migration: Option<usize>,
+    /// Learners already migrated (never migrated twice).
+    migrated: Vec<bool>,
+    /// Migrations granted so far, capped at `max(1, P/16)` so the policy
+    /// degrades groups, never dissolves them.
+    migrations_done: usize,
 }
 
 /// Consecutive observations below a quarter of the target a tier must
 /// see before it narrows (damping against widen/narrow ping-pong under
 /// stochastic spikes).
 const NARROW_STREAK: u32 = 3;
+
+/// Consecutive expensive barriers one learner must be blamed for before
+/// the controller migrates it out of its sub-top group.  High enough
+/// that a single straggler spike (or a just-repaired machine paying its
+/// restore surcharge) never triggers a migration; a persistent EWMA
+/// stall does.
+pub const MIGRATE_STREAK: u32 = 4;
 
 impl AdaptivePolicy {
     pub fn new(
@@ -438,7 +483,19 @@ impl AdaptivePolicy {
             ratio: Vec::new(),
             quiet: Vec::new(),
             changes: Vec::new(),
+            last_culprit: None,
+            culprit_streak: 0,
+            pending_migration: None,
+            migrated: vec![false; p.max(1)],
+            migrations_done: 0,
         }
+    }
+
+    /// Migration budget: at most one learner per 16, and always at least
+    /// one, so a persistent straggler can be detached even in a tiny
+    /// fleet but groups are degraded, never dissolved.
+    fn migration_cap(&self) -> usize {
+        (self.p / 16).max(1)
     }
 
     /// (Re)derive the working table from the base schedule: on the first
@@ -589,6 +646,55 @@ impl SchedulePolicy for AdaptivePolicy {
         }
     }
 
+    fn observe_culprit(
+        &mut self,
+        _t: u64,
+        level: usize,
+        learner: usize,
+        stall_seconds: f64,
+        _comm_seconds: f64,
+    ) {
+        if self.gain == 0.0 || learner >= self.migrated.len() {
+            return; // the neutral controller adapts nothing, membership included
+        }
+        // A culprit only counts while its barrier actually hurts: the
+        // same target threshold `observe` widens on, against the tier's
+        // current interval budget.
+        let interval = self.current.get(level).copied().unwrap_or(1).max(1);
+        let budget =
+            (self.p as f64 * interval as f64 * self.step_seconds).max(1e-300);
+        if stall_seconds <= self.target * budget {
+            // Quiet barrier: whoever was accumulating blame is forgiven.
+            self.last_culprit = None;
+            self.culprit_streak = 0;
+            return;
+        }
+        if self.last_culprit == Some(learner) {
+            self.culprit_streak = self.culprit_streak.saturating_add(1);
+        } else {
+            self.last_culprit = Some(learner);
+            self.culprit_streak = 1;
+        }
+        if self.culprit_streak >= MIGRATE_STREAK
+            && !self.migrated[learner]
+            && self.migrations_done < self.migration_cap()
+            && self.pending_migration.is_none()
+        {
+            // Persistent straggler: move *it* to the outermost-only
+            // cadence instead of widening every learner's interval
+            // around it.
+            self.migrated[learner] = true;
+            self.migrations_done += 1;
+            self.pending_migration = Some(learner);
+            self.last_culprit = None;
+            self.culprit_streak = 0;
+        }
+    }
+
+    fn take_migration(&mut self) -> Option<usize> {
+        self.pending_migration.take()
+    }
+
     fn intervals(&self, base: &HierSchedule) -> Vec<u64> {
         if self.current.is_empty() {
             base.intervals().to_vec()
@@ -601,6 +707,11 @@ impl SchedulePolicy for AdaptivePolicy {
         &self.changes
     }
 
+    // Migration bookkeeping is deliberately NOT serialized in `state()`:
+    // membership is owned by the run's fault layer (a resumed run
+    // re-derives outages from its own seeded trace), and keeping the
+    // sidecar schema unchanged is what keeps pre-fault checkpoints and
+    // the adaptive goldens byte-stable.
     fn state(&self) -> Json {
         let mut o = Json::obj();
         o.set("offset", Json::from(self.last_t.max(self.offset) as usize))
@@ -1102,6 +1213,77 @@ mod tests {
         .unwrap();
         let mut w = WarmupPolicy::new(8);
         assert!(w.restore(&state).is_err());
+    }
+
+    #[test]
+    fn default_policies_ignore_culprit_feedback() {
+        let base = sched(&[2, 8]);
+        let mut s = StaticPolicy::new();
+        let mut w = WarmupPolicy::new(8);
+        for t in 1..=64u64 {
+            s.decide(t, &base);
+            w.decide(t, &base);
+            s.observe_culprit(t, 1, 3, 1e9, 1e-6);
+            w.observe_culprit(t, 1, 3, 1e9, 1e-6);
+        }
+        assert_eq!(s.take_migration(), None);
+        assert_eq!(w.take_migration(), None);
+        // The neutral (zero-gain) adaptive controller is inert here too.
+        let mut n = AdaptivePolicy::new(0.25, 0.0, 64, 1e-3, 8);
+        for t in 1..=64u64 {
+            n.decide(t, &base);
+            n.observe_culprit(t, 1, 3, 1e9, 1e-6);
+        }
+        assert_eq!(n.take_migration(), None);
+    }
+
+    #[test]
+    fn adaptive_migrates_persistent_culprit_and_respects_cap() {
+        let base = sched(&[2, 8]);
+        let p = 32; // cap = max(1, 32/16) = 2 migrations
+        let step = 1e-3;
+        let mut pol = AdaptivePolicy::new(0.25, 1.0, 64, step, p);
+        let mut migrated = Vec::new();
+        // Three learners take turns being the persistent culprit; only
+        // the first two fit the migration budget.
+        for (round, culprit) in [(0u64, 7usize), (1, 19), (2, 28)] {
+            for i in 0..(MIGRATE_STREAK as u64 + 2) {
+                let t = round * 800 + (i + 1) * 8; // every global boundary
+                let level = pol.decide(t, &base).expect("global fires on its interval");
+                assert_eq!(level, 1);
+                let budget = p as f64 * pol.intervals(&base)[level] as f64 * step;
+                // Well past target × budget: an expensive barrier.
+                pol.observe_culprit(t, level, culprit, budget, 1e-6);
+                if let Some(m) = pol.take_migration() {
+                    migrated.push(m);
+                }
+            }
+        }
+        assert_eq!(migrated, vec![7, 19], "cap of 2 not honoured");
+        // A quiet barrier resets the streak: intermittent blame never
+        // triggers a migration even with budget left.
+        let mut pol = AdaptivePolicy::new(0.25, 1.0, 64, step, p);
+        for i in 0..20u64 {
+            let t = (i + 1) * 8;
+            let level = pol.decide(t, &base).unwrap();
+            let budget = p as f64 * pol.intervals(&base)[level] as f64 * step;
+            let stall = if i % 2 == 0 { budget } else { 0.0 };
+            pol.observe_culprit(t, level, 7, stall, 1e-6);
+            assert_eq!(pol.take_migration(), None, "migrated at t={t}");
+        }
+        // ... and a learner is never migrated twice.
+        let mut pol = AdaptivePolicy::new(0.25, 1.0, 64, step, p);
+        let mut count = 0;
+        for i in 0..40u64 {
+            let t = (i + 1) * 8;
+            let level = pol.decide(t, &base).unwrap();
+            let budget = p as f64 * pol.intervals(&base)[level] as f64 * step;
+            pol.observe_culprit(t, level, 7, budget, 1e-6);
+            if pol.take_migration().is_some() {
+                count += 1;
+            }
+        }
+        assert_eq!(count, 1, "learner 7 migrated more than once");
     }
 
     #[test]

@@ -41,6 +41,26 @@ pub fn save_with_schedule(
     params: &FlatParams,
     schedule: Option<(&str, &Json)>,
 ) -> Result<()> {
+    save_with_meta(path, model, layout, params, schedule, None, 0)
+}
+
+/// [`save_with_schedule`] plus the elastic-run sidecar fields: the
+/// saving run's topology chain (`levels`, innermost first, last = P) and
+/// its final membership epoch.  Both are resume guards: a warm start
+/// under a different hierarchy, or of an elastic run without its fault
+/// layer, fails loudly in `driver::run` instead of silently averaging
+/// across a topology the saved parameters never saw.  `levels = None`
+/// and `membership_epoch = 0` write a sidecar byte-identical to
+/// [`save_with_schedule`]'s, so pre-fault readers stay compatible.
+pub fn save_with_meta(
+    path: &Path,
+    model: &str,
+    layout: &ParamLayout,
+    params: &FlatParams,
+    schedule: Option<(&str, &Json)>,
+    levels: Option<&[usize]>,
+    membership_epoch: u64,
+) -> Result<()> {
     if params.len() != layout.total {
         bail!("params len {} != layout total {}", params.len(), layout.total);
     }
@@ -69,6 +89,12 @@ pub fn save_with_schedule(
         sch.set("spec", Json::from(spec)).set("state", state.clone());
         meta.set("schedule_policy", sch);
     }
+    if let Some(levels) = levels {
+        meta.set("levels", Json::Arr(levels.iter().map(|&s| Json::from(s)).collect()));
+    }
+    if membership_epoch > 0 {
+        meta.set("membership_epoch", Json::from(membership_epoch as usize));
+    }
     std::fs::write(sidecar(path), meta.pretty())?;
     Ok(())
 }
@@ -82,6 +108,12 @@ pub struct Snapshot {
     /// recorded them (checkpoints from before the policy layer have
     /// none — loaders treat that as "no constraint").
     pub schedule_policy: Option<(String, Json)>,
+    /// The saving run's topology chain (innermost first, last = P), when
+    /// recorded.  Legacy sidecars have none — "no constraint".
+    pub levels: Option<Vec<usize>>,
+    /// The saving run's final membership epoch (None or 0 = the run was
+    /// not elastic / saw no membership events).
+    pub membership_epoch: Option<u64>,
 }
 
 pub fn load(path: &Path) -> Result<Snapshot> {
@@ -102,7 +134,15 @@ pub fn load(path: &Path) -> Result<Snapshot> {
         }
         None => None,
     };
-    Ok(Snapshot { model, layout, params, schedule_policy })
+    let levels = match meta.get("levels") {
+        Some(v) => Some(v.usize_arr()?),
+        None => None,
+    };
+    let membership_epoch = match meta.get("membership_epoch") {
+        Some(v) => Some(v.as_usize()? as u64),
+        None => None,
+    };
+    Ok(Snapshot { model, layout, params, schedule_policy, levels, membership_epoch })
 }
 
 fn sidecar(path: &Path) -> std::path::PathBuf {
@@ -157,6 +197,39 @@ mod tests {
         let (spec, got) = snap.schedule_policy.unwrap();
         assert_eq!(spec, "adaptive:0.25");
         assert_eq!(got, state);
+    }
+
+    #[test]
+    fn elastic_meta_roundtrips_and_stays_legacy_compatible() {
+        let l = layout();
+        let params = vec![0.25f32; 9];
+        let p = tmp("meta.bin");
+        // Legacy save: no topology, no membership epoch — and the sidecar
+        // bytes are identical to what save_with_schedule wrote before the
+        // fault layer existed.
+        save_with_schedule(&p, "m", &l, &params, None).unwrap();
+        let legacy_sidecar = std::fs::read_to_string(sidecar(&p)).unwrap();
+        let snap = load(&p).unwrap();
+        assert!(snap.levels.is_none());
+        assert!(snap.membership_epoch.is_none());
+        save_with_meta(&p, "m", &l, &params, None, None, 0).unwrap();
+        assert_eq!(std::fs::read_to_string(sidecar(&p)).unwrap(), legacy_sidecar);
+        // Full metadata round-trips.
+        let state = Json::parse(r#"{"offset": 64}"#).unwrap();
+        save_with_meta(
+            &p,
+            "m",
+            &l,
+            &params,
+            Some(("adaptive:0.25", &state)),
+            Some(&[4, 16]),
+            7,
+        )
+        .unwrap();
+        let snap = load(&p).unwrap();
+        assert_eq!(snap.levels.as_deref(), Some(&[4usize, 16][..]));
+        assert_eq!(snap.membership_epoch, Some(7));
+        assert_eq!(snap.schedule_policy.unwrap().0, "adaptive:0.25");
     }
 
     #[test]

@@ -87,23 +87,7 @@ impl Reducer {
         link: LinkClass,
     ) -> (f64, u64) {
         let (secs, moved) = self.group_once(replicas, group, link);
-        match link {
-            LinkClass::IntraNode => {
-                self.stats.local_reductions += 1;
-                self.stats.local_bytes += moved;
-                self.stats.local_seconds += secs;
-            }
-            LinkClass::InterNode => {
-                self.stats.global_reductions += 1;
-                self.stats.global_bytes += moved;
-                self.stats.global_seconds += secs;
-            }
-            LinkClass::RackFabric => {
-                self.stats.rack_reductions += 1;
-                self.stats.rack_bytes += moved;
-                self.stats.rack_seconds += secs;
-            }
-        }
+        self.charge_to_link(link, secs, moved);
         (secs, moved)
     }
 
@@ -161,6 +145,134 @@ impl Reducer {
         ls.bytes += bytes;
         ls.seconds += max_secs;
         max_secs
+    }
+
+    /// Charge one reduction's seconds/bytes to `link`'s aggregate account.
+    fn charge_to_link(&mut self, link: LinkClass, secs: f64, moved: u64) {
+        match link {
+            LinkClass::IntraNode => {
+                self.stats.local_reductions += 1;
+                self.stats.local_bytes += moved;
+                self.stats.local_seconds += secs;
+            }
+            LinkClass::InterNode => {
+                self.stats.global_reductions += 1;
+                self.stats.global_bytes += moved;
+                self.stats.global_seconds += secs;
+            }
+            LinkClass::RackFabric => {
+                self.stats.rack_reductions += 1;
+                self.stats.rack_bytes += moved;
+                self.stats.rack_seconds += secs;
+            }
+        }
+    }
+
+    /// A degraded group's survivor mean: serial learner-index-ascending
+    /// sum over the participating members, written back to participants
+    /// only.  Deliberately *not* delegated to the collective — the serial
+    /// sum is deterministic and identical across all collectives by
+    /// construction, which keeps the fault layer's parameter math a
+    /// single documented rule rather than three.  Priced and charged as
+    /// an `n_part`-way allreduce on `link`.
+    fn survivor_group(
+        &mut self,
+        replicas: &mut [FlatParams],
+        members: std::ops::Range<usize>,
+        n_part: usize,
+        part: &[bool],
+        link: LinkClass,
+    ) -> (f64, u64) {
+        debug_assert!(n_part >= 1);
+        let n = self.scratch.len();
+        let bytes = n * 4;
+        for x in self.scratch.iter_mut() {
+            *x = 0.0;
+        }
+        for j in members.clone() {
+            if part[j] {
+                let r = &replicas[j];
+                for i in 0..n {
+                    self.scratch[i] += r[i];
+                }
+            }
+        }
+        let inv = 1.0 / n_part as f32;
+        for x in self.scratch.iter_mut() {
+            *x *= inv;
+        }
+        for j in members {
+            if part[j] {
+                replicas[j].copy_from_slice(&self.scratch);
+            }
+        }
+        let secs = self.cost.allreduce_seconds(n_part, bytes, link, self.strategy);
+        let moved = self.cost.allreduce_bytes(n_part, bytes, self.strategy);
+        self.charge_to_link(link, secs, moved);
+        (secs, moved)
+    }
+
+    /// [`Reducer::reduce_level`] over each group's *participants* only
+    /// (`part[j]` false = preempted or migrated-out learner): the
+    /// elastic-membership barrier.  A full group takes the exact legacy
+    /// path — same collective call, same stats — so an armed fault layer
+    /// with an empty trace reduces bit-identically to `reduce_level`.  A
+    /// degraded group fires over its survivors with reweighted averaging
+    /// (each survivor weighted `1/|survivors|`, absentees' frozen
+    /// parameters untouched) via [`Reducer::survivor_group`], and a group
+    /// with no participants fires no barrier at all.
+    ///
+    /// Returns `(max_secs, degraded_groups)`: the charged level time
+    /// (same concurrent-groups convention as `reduce_level`) and how many
+    /// groups fired over a strict subset of their members.
+    pub fn reduce_level_survivors(
+        &mut self,
+        replicas: &mut [FlatParams],
+        topo: &HierTopology,
+        level: usize,
+        part: &[bool],
+    ) -> (f64, u64) {
+        debug_assert_eq!(part.len(), topo.p());
+        let size = topo.size(level);
+        if size <= 1 && level + 1 < topo.n_levels() {
+            return (0.0, 0);
+        }
+        let link = topo.link(level);
+        let mut max_secs: f64 = 0.0;
+        let mut total_secs: f64 = 0.0;
+        let mut reductions = 0u64;
+        let mut bytes = 0u64;
+        let mut degraded = 0u64;
+        for g in 0..topo.n_groups(level) {
+            let members = topo.group_members(level, g);
+            let n_part = members.clone().filter(|&j| part[j]).count();
+            if n_part == 0 {
+                continue; // whole group down: no barrier fires
+            }
+            let (secs, moved) = if n_part == members.len() {
+                self.charged_group(replicas, members, link)
+            } else {
+                degraded += 1;
+                self.survivor_group(replicas, members, n_part, part, link)
+            };
+            max_secs = max_secs.max(secs);
+            total_secs += secs;
+            reductions += 1;
+            bytes += moved;
+        }
+        // Groups are concurrent: subtract the serialized surplus.
+        let surplus = total_secs - max_secs;
+        match link {
+            LinkClass::IntraNode => self.stats.local_seconds -= surplus,
+            LinkClass::InterNode => self.stats.global_seconds -= surplus,
+            LinkClass::RackFabric => self.stats.rack_seconds -= surplus,
+        }
+        self.reserve_levels(level + 1);
+        let ls = &mut self.level_stats[level];
+        ls.reductions += reductions;
+        ls.bytes += bytes;
+        ls.seconds += max_secs;
+        (max_secs, degraded)
     }
 
     /// Local averaging step: average within every cluster of the two-level
@@ -339,5 +451,79 @@ mod tests {
         // concurrent-group convention: aggregate seconds equal the per-level maxima
         let total: f64 = ls.iter().map(|l| l.seconds).sum();
         assert!((red.stats.total_seconds() - total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn survivor_reduction_with_full_groups_matches_legacy_bitwise() {
+        use crate::topology::HierTopology;
+        let topo = HierTopology::new(vec![2, 4, 8]).unwrap();
+        let mut a = replicas(8, 16);
+        let mut b = a.clone();
+        let mut ra = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 16);
+        let mut rb = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 16);
+        let all = vec![true; 8];
+        for level in 0..3 {
+            let legacy = ra.reduce_level(&mut a, &topo, level);
+            let (surv, degraded) = rb.reduce_level_survivors(&mut b, &topo, level, &all);
+            assert_eq!(legacy.to_bits(), surv.to_bits());
+            assert_eq!(degraded, 0);
+        }
+        assert_eq!(a, b);
+        assert_eq!(ra.stats, rb.stats);
+        assert_eq!(ra.level_stats(), rb.level_stats());
+    }
+
+    #[test]
+    fn degraded_group_averages_survivors_and_freezes_absentees() {
+        use crate::topology::HierTopology;
+        let topo = HierTopology::new(vec![4, 8]).unwrap();
+        let mut r = replicas(8, 4);
+        let before = r.clone();
+        let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 4);
+        let mut part = vec![true; 8];
+        part[1] = false; // group {0..4} degrades to {0,2,3}
+        part[4] = false;
+        part[5] = false; // group {4..8} degrades to {6,7}
+        let (secs, degraded) = red.reduce_level_survivors(&mut r, &topo, 0, &part);
+        assert!(secs > 0.0);
+        assert_eq!(degraded, 2);
+        // Survivor mean: serial index-ascending sum times 1/|survivors| —
+        // the documented reweighted-averaging rule, reproduced here
+        // operation for operation.
+        let inv3 = 1.0f32 / 3.0;
+        let expect0: Vec<f32> =
+            (0..4).map(|i| (before[0][i] + before[2][i] + before[3][i]) * inv3).collect();
+        for j in [0, 2, 3] {
+            assert_eq!(r[j], expect0, "survivor {j}");
+        }
+        assert_eq!(r[1], before[1], "absentee keeps frozen parameters");
+        let inv2 = 1.0f32 / 2.0;
+        let expect1: Vec<f32> = (0..4).map(|i| (before[6][i] + before[7][i]) * inv2).collect();
+        for j in [6, 7] {
+            assert_eq!(r[j], expect1, "survivor {j}");
+        }
+        assert_eq!(r[4], before[4]);
+        assert_eq!(r[5], before[5]);
+        // priced as 3-way and 2-way allreduces on the intra-node tier
+        assert_eq!(red.stats.local_reductions, 2);
+    }
+
+    #[test]
+    fn all_down_group_fires_no_barrier() {
+        use crate::topology::HierTopology;
+        let topo = HierTopology::new(vec![4, 8]).unwrap();
+        let mut r = replicas(8, 4);
+        let before = r.clone();
+        let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 4);
+        let mut part = vec![true; 8];
+        for p in part.iter_mut().take(4) {
+            *p = false;
+        }
+        let (_, degraded) = red.reduce_level_survivors(&mut r, &topo, 0, &part);
+        assert_eq!(degraded, 0, "the surviving group is full, not degraded");
+        for j in 0..4 {
+            assert_eq!(r[j], before[j], "dead group left untouched");
+        }
+        assert_eq!(red.stats.local_reductions, 1);
     }
 }

@@ -7,7 +7,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::algorithms::{policy, HierAvgSchedule, HierSchedule, PolicyKind};
 use crate::comm::{CollectiveKind, CostModel, ReduceStrategy};
 use crate::optimizer::LrSchedule;
-use crate::sim::{ExecKind, HetSpec};
+use crate::sim::{parse_faults, ExecKind, FaultPlan, HetSpec};
 use crate::topology::{HierTopology, LinkClass, Topology};
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -73,6 +73,12 @@ pub struct RunConfig {
     /// Spike slowdown factor (a spiked step takes `straggler_mult ×` the
     /// learner's nominal step time).
     pub straggler_mult: f64,
+    /// Elastic-membership fault plan (`--faults PROB[:MTTR]` or
+    /// `--faults trace:STEP@LEARNERxDOWN,...`, event mode only): seeded
+    /// preemption/repair traces the timeline prices and the engine's
+    /// parameter math degrades around (`sim::faults`).  None = the fault
+    /// layer is absent and runs are bit-identical to pre-fault builds.
+    pub faults: Option<FaultPlan>,
     pub epochs: usize,
     /// Nominal training-set size; steps/epoch = train_n / (P·B).
     pub train_n: usize,
@@ -125,6 +131,7 @@ impl RunConfig {
             het: 0.0,
             straggler_prob: 0.0,
             straggler_mult: 4.0,
+            faults: None,
             epochs: 20,
             train_n: 4096,
             test_n: 1024,
@@ -304,6 +311,16 @@ impl RunConfig {
                  every learner the same step time against one shared clock)"
             );
         }
+        if let Some(plan) = &self.faults {
+            plan.validate(self.p)?;
+            if self.exec == ExecKind::Lockstep {
+                bail!(
+                    "--faults models preempted learners and survivor-only barriers, \
+                     which the lockstep execution model cannot represent: add --exec \
+                     event (lockstep advances one shared clock for the whole fleet)"
+                );
+            }
+        }
         Ok(())
     }
 
@@ -390,6 +407,7 @@ impl RunConfig {
                 "het" => self.het = v.as_f64()?,
                 "straggler_prob" => self.straggler_prob = v.as_f64()?,
                 "straggler_mult" => self.straggler_mult = v.as_f64()?,
+                "faults" => self.faults = Some(parse_faults(v.as_str()?)?),
                 "epochs" => self.epochs = v.as_usize()?,
                 "train_n" => self.train_n = v.as_usize()?,
                 "test_n" => self.test_n = v.as_usize()?,
@@ -481,6 +499,9 @@ impl RunConfig {
         let mut het = cfg.het_spec();
         het.apply_args(args)?;
         cfg.set_het_spec(&het);
+        if let Some(f) = args.get("faults") {
+            cfg.faults = Some(parse_faults(f)?);
+        }
         cfg.p = args.parse_or("p", cfg.p)?;
         cfg.s = args.parse_or("s", cfg.s)?;
         cfg.k1 = args.parse_or("k1", cfg.k1)?;
@@ -795,6 +816,71 @@ mod tests {
         let mut c = RunConfig::defaults("m");
         c.schedule_policy = PolicyKind::Adaptive { target: f64::NAN, gain: 1.0 };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn faults_via_json_and_args() {
+        let mut c = RunConfig::defaults("m");
+        let j = Json::parse(
+            r#"{"exec": "event", "faults": "0.01:30", "backend": "native"}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        c.validate().unwrap();
+        let spec = c.faults.as_ref().unwrap().sampled().unwrap();
+        assert_eq!((spec.prob, spec.mttr), (0.01, 30));
+
+        use crate::util::cli::Args;
+        let argv: Vec<String> = [
+            "train", "--model", "quickstart", "--backend", "native", "--exec", "event",
+            "--faults", "trace:5@0x10",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+        let cfg = RunConfig::from_args(&args).unwrap();
+        match cfg.faults.as_ref().unwrap() {
+            FaultPlan::Scripted(events) => {
+                assert_eq!(events.len(), 1);
+                assert_eq!((events[0].step, events[0].learner, events[0].down_steps), (5, 0, 10));
+            }
+            other => panic!("expected a scripted trace, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fault_knobs_rejected_with_actionable_errors() {
+        // faults without the event model is a contradiction, not a no-op
+        let mut c = RunConfig::defaults("m");
+        c.faults = Some(parse_faults("0.1").unwrap());
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("--exec event"), "unhelpful error: {err}");
+        // out-of-range hazard probability
+        let mut c = RunConfig::defaults("m");
+        c.exec = ExecKind::Event;
+        c.faults = Some(parse_faults("1.5:10").unwrap());
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("[0, 1]"), "unhelpful error: {err}");
+        // zero repair time
+        let mut c = RunConfig::defaults("m");
+        c.exec = ExecKind::Event;
+        c.faults = Some(parse_faults("0.1:0").unwrap());
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("mttr"), "unhelpful error: {err}");
+        // a trace naming a learner the fleet doesn't have
+        let mut c = RunConfig::defaults("m");
+        c.exec = ExecKind::Event;
+        c.faults = Some(parse_faults("trace:5@99x10").unwrap());
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("99") && err.contains("--p"), "unhelpful error: {err}");
+        // ... and the CLI grammar rejects garbage with context
+        use crate::util::cli::Args;
+        let argv: Vec<String> =
+            ["train", "--faults", "often"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+        let err = RunConfig::from_args(&args).unwrap_err().to_string();
+        assert!(err.contains("PROB"), "unhelpful error: {err}");
     }
 
     #[test]

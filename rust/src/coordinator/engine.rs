@@ -21,7 +21,7 @@ use crate::config::RunConfig;
 use crate::data::{BatchBuf, DataSource};
 use crate::optimizer::Sgd;
 use crate::params::FlatParams;
-use crate::sim::ExecModel;
+use crate::sim::{ExecModel, MembershipModel};
 use crate::topology::HierTopology;
 use crate::util::rng::Pcg32;
 
@@ -51,6 +51,54 @@ impl LearnerSet {
     pub fn p(&self) -> usize {
         self.replicas.len()
     }
+}
+
+/// Membership-event counters the engine accumulates when the elastic
+/// fault layer (`--faults`) is active, reported in the run record's
+/// `faults` block.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    /// Up→down edges: a learner was preempted mid-run.
+    pub preemptions: u64,
+    /// Down→up edges: a repaired learner rejoined the fleet.
+    pub reentries: u64,
+    /// Parameter restores from the in-memory checkpoint cache (one per
+    /// re-entry: the learner reloads the last global average before
+    /// warm-syncing to its group).
+    pub checkpoint_restores: u64,
+    /// Learners the schedule policy migrated out of their sub-top groups
+    /// after a persistent stall streak.
+    pub migrations: u64,
+    /// Groups that ran a degraded survivor-only barrier (reweighted
+    /// averaging over the live members) instead of the full collective.
+    pub survivor_reductions: u64,
+    /// Monotone membership version: bumped on every preemption, re-entry,
+    /// and migration.  Persisted in checkpoint sidecars so a resume can
+    /// refuse to silently replay an elastic run without its fault layer.
+    pub membership_epoch: u64,
+}
+
+/// Parameter-side elastic-membership state (`--faults`): the engine's
+/// mirror of the timeline's [`MembershipModel`], driven from the *same*
+/// seed and plan so both sides agree step by step on who is up.  The
+/// timeline prices outages; this struct owns the deterministic parameter
+/// consequences — frozen replicas while down, checkpoint restore +
+/// group warm-sync on re-entry, survivor-only reductions.
+struct FaultRuntime {
+    membership: MembershipModel,
+    /// Was learner j down during the previous step? (edge detection)
+    down_prev: Vec<bool>,
+    /// Is learner j up for the step being executed?
+    alive: Vec<bool>,
+    /// Learners migrated out of their sub-top groups by the policy; they
+    /// participate only in outermost reductions.
+    detached: Vec<bool>,
+    /// In-memory checkpoint: the last globally averaged parameter vector,
+    /// refreshed after every outermost reduction (all participants hold
+    /// the identical average then, so one copy suffices).  Seeded with
+    /// the initial parameters — the "epoch 0" checkpoint.
+    cache: FlatParams,
+    counts: FaultCounts,
 }
 
 /// A reduction that fired after a step.
@@ -96,6 +144,10 @@ pub struct Engine<'a> {
     /// Per-level realized reduction events (decisions the policy fired),
     /// reported in the run record's `schedule` block.
     pub realized: Vec<u64>,
+    /// Elastic-membership runtime, Some only when `cfg.faults` is set.
+    /// With it None the step path is exactly the legacy code, so
+    /// fault-free runs stay bit-identical to pre-fault builds.
+    faults: Option<FaultRuntime>,
     batch: BatchBuf,
     t: u64,
 }
@@ -121,7 +173,22 @@ impl<'a> Engine<'a> {
         let collective = cfg.collective.build_for(cfg.pool_threads);
         let mut reducer = Reducer::with_collective(cfg.cost, cfg.strategy, n_params, collective);
         reducer.reserve_levels(topo.n_levels());
-        let timeline = cfg.exec.build(cfg.p, topo.n_levels(), step_seconds, &cfg.het_spec());
+        let mut timeline = cfg.exec.build(cfg.p, topo.n_levels(), step_seconds, &cfg.het_spec());
+        let faults = cfg.faults.as_ref().map(|plan| {
+            // Timeline and engine each build a MembershipModel from the
+            // same (p, seed, plan): membership is a pure function of
+            // those, so the two stay in lockstep without any channel
+            // between them.
+            timeline.install_faults(cfg.seed, plan);
+            FaultRuntime {
+                membership: MembershipModel::new(cfg.p, cfg.seed, plan),
+                down_prev: vec![false; cfg.p],
+                alive: vec![true; cfg.p],
+                detached: vec![false; cfg.p],
+                cache: init.clone(),
+                counts: FaultCounts::default(),
+            }
+        });
         let realized = vec![0u64; topo.n_levels()];
         Ok(Engine {
             cfg,
@@ -131,6 +198,7 @@ impl<'a> Engine<'a> {
             timeline,
             policy,
             realized,
+            faults,
             batch: BatchBuf::default(),
             t: 0,
         })
@@ -154,8 +222,15 @@ impl<'a> Engine<'a> {
         sched: &HierSchedule,
     ) -> Result<StepOutcome> {
         let p = self.learners.p();
+        if self.faults.is_some() {
+            self.resolve_membership();
+        }
         let b = backend.train_batch();
         self.batch.clear();
+        // Every learner draws its batch even while down: the per-learner
+        // data streams must stay aligned with the fault-free run so that
+        // `--faults 0` (and any two runs differing only in outages) see
+        // identical sample sequences.
         for rng in self.learners.rngs.iter_mut() {
             data.fill_train(rng, b, &mut self.batch);
         }
@@ -166,6 +241,11 @@ impl<'a> Engine<'a> {
             &mut self.learners.outs,
         )?;
         for j in 0..p {
+            if let Some(fs) = &self.faults {
+                if !fs.alive[j] {
+                    continue; // down: parameters freeze until re-entry
+                }
+            }
             self.learners.opts[j].apply(&mut self.learners.replicas[j], &self.learners.grads[j], lr);
         }
         self.t += 1;
@@ -173,8 +253,30 @@ impl<'a> Engine<'a> {
         let reduce = match self.policy.decide(self.t, sched) {
             Some(level) => {
                 self.realized[level] += 1;
-                let seconds =
-                    self.reducer.reduce_level(&mut self.learners.replicas, &self.topo, level);
+                let top = level + 1 == self.topo.n_levels();
+                let seconds = match self.faults.as_mut() {
+                    Some(fs) => {
+                        // Survivor barrier: down learners — and, below
+                        // the top, migrated learners — are excluded.
+                        // Full groups take the exact legacy collective
+                        // path inside the reducer, so fault-free groups
+                        // stay bit-identical.
+                        let part: Vec<bool> = (0..p)
+                            .map(|j| fs.alive[j] && (top || !fs.detached[j]))
+                            .collect();
+                        let (secs, degraded) = self.reducer.reduce_level_survivors(
+                            &mut self.learners.replicas,
+                            &self.topo,
+                            level,
+                            &part,
+                        );
+                        fs.counts.survivor_reductions += degraded;
+                        secs
+                    }
+                    None => {
+                        self.reducer.reduce_level(&mut self.learners.replicas, &self.topo, level)
+                    }
+                };
                 // Symmetric groups at one level cost the same, so the
                 // reducer's max-over-groups is also each group's barrier
                 // cost on the timeline.  The stall the barrier charged is
@@ -182,14 +284,115 @@ impl<'a> Engine<'a> {
                 // seeded timeline, so replays reproduce every adaptation.
                 let stall = self.timeline.on_reduction(&self.topo, level, seconds);
                 self.policy.observe(self.t, level, stall, seconds);
+                if self.faults.is_some() {
+                    // The timeline knows which participant the whole
+                    // barrier waited for; the policy turns a persistent
+                    // culprit into a migration instead of widening
+                    // everyone's interval.
+                    if let Some(culprit) = self.timeline.last_culprit() {
+                        self.policy.observe_culprit(self.t, level, culprit, stall, seconds);
+                    }
+                    if let Some(moved) = self.policy.take_migration() {
+                        let fs = self.faults.as_mut().expect("fault runtime present");
+                        if moved < p && !fs.detached[moved] {
+                            fs.detached[moved] = true;
+                            fs.counts.migrations += 1;
+                            fs.counts.membership_epoch += 1;
+                            self.timeline.set_detached(moved);
+                        }
+                    }
+                    if top {
+                        // All participants of an outermost reduction now
+                        // hold the identical global average: refresh the
+                        // in-memory checkpoint from the first one.
+                        let fs = self.faults.as_mut().expect("fault runtime present");
+                        if let Some(src) = (0..p).find(|&j| fs.alive[j]) {
+                            fs.cache.copy_from_slice(&self.learners.replicas[src]);
+                        }
+                    }
+                }
                 Some(ReduceOutcome { level, seconds, kind: self.topo.trace_kind(level) })
             }
             None => None,
         };
-        let mean_loss =
-            self.learners.outs.iter().map(|o| o.loss as f64).sum::<f64>() / p as f64;
+        // Mean loss averages the *live* fleet (a preempted machine reports
+        // nothing); `ncorrect` keeps the full-fleet sum because the
+        // trainer's accuracy denominator is the fixed `p·b` per step.
+        let mean_loss = match &self.faults {
+            Some(fs) if fs.alive.iter().any(|&a| a) => {
+                let mut n = 0u64;
+                let mut sum = 0.0f64;
+                for j in 0..p {
+                    if fs.alive[j] {
+                        n += 1;
+                        sum += self.learners.outs[j].loss as f64;
+                    }
+                }
+                sum / n as f64
+            }
+            _ => self.learners.outs.iter().map(|o| o.loss as f64).sum::<f64>() / p as f64,
+        };
         let ncorrect = self.learners.outs.iter().map(|o| o.ncorrect as f64).sum::<f64>();
         Ok(StepOutcome { mean_loss, ncorrect, reduce })
+    }
+
+    /// Membership pass for the step about to execute (`self.t + 1`,
+    /// matching the timeline's 1-based step ordinals): resolve who is up,
+    /// count preemption edges, and run re-entry recovery for learners
+    /// whose repair completed — restore the last checkpointed global
+    /// average, then warm-sync to the current mean of the live
+    /// innermost-group peers so the returnee rejoins near its group's
+    /// state rather than a stale snapshot.  Both restores are plain
+    /// deterministic parameter math: serial, ascending-index, reciprocal
+    /// multiply — independent of the collective backend.
+    fn resolve_membership(&mut self) {
+        let p = self.learners.p();
+        let t = self.t + 1;
+        let fs = self.faults.as_mut().expect("resolve_membership requires faults");
+        for j in 0..p {
+            let down = fs.membership.is_down(j, t);
+            fs.alive[j] = !down;
+            if down && !fs.down_prev[j] {
+                fs.down_prev[j] = true;
+                fs.counts.preemptions += 1;
+                fs.counts.membership_epoch += 1;
+            }
+        }
+        for j in 0..p {
+            if !(fs.alive[j] && fs.down_prev[j]) {
+                continue;
+            }
+            // Down→up edge: re-entry.
+            fs.down_prev[j] = false;
+            fs.counts.reentries += 1;
+            fs.counts.checkpoint_restores += 1;
+            fs.counts.membership_epoch += 1;
+            self.learners.replicas[j].copy_from_slice(&fs.cache);
+            let g = self.topo.group_of(0, j);
+            let peers: Vec<usize> = self
+                .topo
+                .group_members(0, g)
+                .filter(|&i| i != j && fs.alive[i])
+                .collect();
+            if peers.is_empty() {
+                continue; // no live peer: the checkpoint is the best state
+            }
+            let mut acc = std::mem::take(&mut self.learners.replicas[j]);
+            acc.iter_mut().for_each(|x| *x = 0.0);
+            for &i in &peers {
+                for (a, &v) in acc.iter_mut().zip(self.learners.replicas[i].iter()) {
+                    *a += v;
+                }
+            }
+            let inv = 1.0 / peers.len() as f32;
+            acc.iter_mut().for_each(|x| *x *= inv);
+            self.learners.replicas[j] = acc;
+        }
+    }
+
+    /// Fault counters so far, Some only when the elastic layer is active.
+    pub fn fault_counts(&self) -> Option<FaultCounts> {
+        self.faults.as_ref().map(|fs| fs.counts)
     }
 
     /// The paper's w̃: the mean of all replicas, without perturbing them.

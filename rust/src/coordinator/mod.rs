@@ -43,7 +43,7 @@ use crate::params::FlatParams;
 // boxed timeline.
 use crate::sim::ExecModel as _;
 
-pub use engine::{Engine, LearnerSet, ReduceOutcome, StepOutcome};
+pub use engine::{Engine, FaultCounts, LearnerSet, ReduceOutcome, StepOutcome};
 
 /// Per-step modelled compute seconds on the simulated cluster: all P
 /// learners step concurrently; fwd+bwd ≈ 6·B·n_params flops on a
@@ -194,6 +194,22 @@ impl<'a> Trainer<'a> {
             changes: engine.policy.changes().to_vec(),
             state: engine.policy.state(),
         });
+        // The faults block: what the elastic-membership layer did.  Lost
+        // time comes from the timeline's breakdown (down steps + restore
+        // surcharges); the event counters come from the engine, which owns
+        // the parameter-side consequences.
+        if let Some(counts) = engine.fault_counts() {
+            record.faults = Some(crate::metrics::FaultSummary {
+                spec: cfg.faults.as_ref().map(|f| f.spec()).unwrap_or_default(),
+                preemptions: counts.preemptions,
+                reentries: counts.reentries,
+                checkpoint_restores: counts.checkpoint_restores,
+                migrations: counts.migrations,
+                survivor_reductions: counts.survivor_reductions,
+                lost_seconds: breakdown.lost_seconds.iter().sum(),
+                membership_epoch: counts.membership_epoch,
+            });
+        }
         if cfg.keep_final_params {
             let mut final_params = Vec::new();
             engine.mean_params(&mut final_params);
@@ -364,6 +380,60 @@ mod tests {
         assert!(rb.makespan_seconds > ra.makespan_seconds);
         assert!(rb.straggler_events > 0);
         assert!(rb.blocked_seconds.iter().sum::<f64>() > 0.0);
+    }
+
+    #[test]
+    fn zero_fault_run_matches_plain_event_training() {
+        // Arming the fault layer with prob 0 must not perturb one bit:
+        // the layer forces the event core onto its per-learner pool, and
+        // this pin is what guarantees that switch is invisible.
+        let mut plain = quick_cfg();
+        plain.exec = crate::sim::ExecKind::Event;
+        let mut armed = plain.clone();
+        armed.faults = Some(crate::sim::parse_faults("0").unwrap());
+        let ra = make_trainer(&plain).run().unwrap();
+        let rb = make_trainer(&armed).run().unwrap();
+        for (x, y) in ra.epochs.iter().zip(&rb.epochs) {
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+            assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits());
+            assert_eq!(x.sim_seconds.to_bits(), y.sim_seconds.to_bits());
+        }
+        assert_eq!(ra.comm, rb.comm);
+        assert_eq!(ra.makespan_seconds.to_bits(), rb.makespan_seconds.to_bits());
+        let f = rb.faults.expect("armed run reports a faults block");
+        assert_eq!(f.preemptions, 0);
+        assert_eq!(f.reentries, 0);
+        assert_eq!(f.migrations, 0);
+        assert_eq!(f.survivor_reductions, 0);
+        assert_eq!(f.lost_seconds, 0.0);
+        assert!(ra.faults.is_none());
+    }
+
+    #[test]
+    fn scripted_outage_degrades_and_recovers() {
+        // Learner 1 of the first innermost group goes down for steps 3-6
+        // and re-enters at step 7.  The run must complete with finite
+        // losses, count exactly one preemption/re-entry/restore, run the
+        // intervening innermost reductions degraded, and lose time on the
+        // modelled clock.
+        let mut cfg = quick_cfg();
+        cfg.exec = crate::sim::ExecKind::Event;
+        cfg.faults = Some(crate::sim::parse_faults("trace:3@1x4").unwrap());
+        let rec = make_trainer(&cfg).run().unwrap();
+        for e in &rec.epochs {
+            assert!(e.train_loss.is_finite());
+        }
+        assert!(rec.epochs.last().unwrap().train_loss < rec.epochs[0].train_loss);
+        let f = rec.faults.expect("faults block present");
+        assert_eq!(f.preemptions, 1);
+        assert_eq!(f.reentries, 1);
+        assert_eq!(f.checkpoint_restores, 1);
+        // K1 = 2: the innermost reductions at steps 4 and 6 ran without
+        // learner 1.
+        assert_eq!(f.survivor_reductions, 2);
+        assert!(f.lost_seconds > 0.0, "lost_seconds={}", f.lost_seconds);
+        // One preemption + one re-entry bump the membership epoch twice.
+        assert_eq!(f.membership_epoch, 2);
     }
 
     #[test]

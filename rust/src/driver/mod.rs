@@ -156,6 +156,44 @@ pub fn layout_for(cfg: &RunConfig) -> Result<ParamLayout> {
     }
 }
 
+/// Resume guards for the topology / elastic-membership sidecar fields
+/// (beside the `--schedule` guard in [`run`]): a checkpoint that
+/// recorded its hierarchy only resumes onto the same chain, and one
+/// whose saving run saw membership events (preemptions, re-entries,
+/// migrations) only resumes with a `--faults` layer armed — its
+/// parameters embed survivor-weighted averages that a fault-free run
+/// would silently misread as a clean history.  Legacy sidecars record
+/// neither field: no constraint.
+pub(crate) fn check_resume_meta(
+    path: &str,
+    snap_levels: Option<&[usize]>,
+    snap_membership_epoch: Option<u64>,
+    cfg: &RunConfig,
+) -> Result<()> {
+    if let Some(levels) = snap_levels {
+        let want = cfg.hierarchy()?.sizes().to_vec();
+        if levels != want.as_slice() {
+            bail!(
+                "checkpoint {path} was saved by a run reducing over hierarchy {levels:?} \
+                 but this run reduces over {want:?}; rerun with --levels {} (or retrain \
+                 from scratch) — group membership does not transfer across topologies",
+                levels.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+            );
+        }
+    }
+    if let Some(epoch) = snap_membership_epoch {
+        if epoch > 0 && cfg.faults.is_none() {
+            bail!(
+                "checkpoint {path} was saved by an elastic run that saw {epoch} membership \
+                 event(s) (--faults), but this run has no fault layer; add --faults (e.g. \
+                 --faults 0 to arm the layer without new outages) so the resumed run's \
+                 records stay attributable, or retrain from scratch"
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Run one training job end to end.
 pub fn run(cfg: &RunConfig) -> Result<RunRecord> {
     let (backend, data, mut init) = build(cfg)?;
@@ -179,6 +217,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunRecord> {
             }
             policy_state = Some(state.clone());
         }
+        check_resume_meta(path, snap.levels.as_deref(), snap.membership_epoch, cfg)?;
     }
     let mut trainer = Trainer::new(cfg, backend, data, init)?;
     trainer.restore_policy_state = policy_state;
@@ -224,6 +263,28 @@ mod tests {
         }])
         .unwrap();
         assert!(remap_by_name(&src, &[0.0], &dst).is_err());
+    }
+
+    #[test]
+    fn resume_meta_guards_topology_and_membership() {
+        let cfg = RunConfig::defaults("m"); // hierarchy [4, 16]
+        // Legacy sidecar: no constraint.
+        check_resume_meta("ck", None, None, &cfg).unwrap();
+        // Matching topology, quiet membership: fine.
+        check_resume_meta("ck", Some(&[4, 16]), Some(0), &cfg).unwrap();
+        // Topology mismatch fails loudly and names both chains.
+        let err =
+            check_resume_meta("ck", Some(&[2, 8, 32]), None, &cfg).unwrap_err().to_string();
+        assert!(err.contains("[2, 8, 32]") && err.contains("[4, 16]"), "unhelpful: {err}");
+        assert!(err.contains("--levels 2,8,32"), "no fix suggested: {err}");
+        // An elastic checkpoint refuses a fault-free resume...
+        let err = check_resume_meta("ck", None, Some(3), &cfg).unwrap_err().to_string();
+        assert!(err.contains("--faults"), "no fix suggested: {err}");
+        // ... and resumes once a fault layer is armed.
+        let mut elastic = RunConfig::defaults("m");
+        elastic.exec = crate::sim::ExecKind::Event;
+        elastic.faults = Some(crate::sim::parse_faults("0").unwrap());
+        check_resume_meta("ck", Some(&[4, 16]), Some(3), &elastic).unwrap();
     }
 
     #[test]

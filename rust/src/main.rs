@@ -19,6 +19,7 @@ USAGE:
                   [--pool-threads N]
                   [--schedule static|adaptive[:target[:gain]]|warmup[:k]]
                   [--exec lockstep|event] [--het F] [--straggler P[:M]]
+                  [--faults PROB[:mttr] | trace:STEP@LEARNERxDOWN,..]
                   [--train-n N] [--test-n N] [--lr SCHED] [--seed N]
                   [--noise F] [--radius F] [--strategy ring|tree|naive]
                   [--out results/run.json] [--record-steps]
@@ -33,7 +34,8 @@ USAGE:
                   [--levels-max N] [--k1-grid 1,2,4] [--k2-max N]
                   [--strategy ring|tree|naive] [--no-rack] [--no-local]
                   [--schedule static|adaptive[:target[:gain]]|warmup[:k]]
-                  [--het F] [--straggler P[:M]] [--seed N]
+                  [--het F] [--straggler P[:M]] [--faults PROB[:mttr]]
+                  [--seed N]
                   [--validate-top N] [--collective simulated|sharded|pooled]
                   [--timeline-only] [--top N] [--out SWEEP_<p>.json]
   hier-avg list                      # models in the artifact manifest
@@ -73,6 +75,22 @@ Event mode accepts --het F (learner j's step time scales by
 duration with probability P; seeded, never perturbs training numerics).
 Homogeneous event runs are bit-identical to lockstep (DESIGN.md
 section "Execution models").
+
+Faults: --faults arms the elastic-membership layer (event mode only).
+PROB[:mttr] preempts each live learner-step with probability PROB and
+repairs the learner after mttr virtual steps (default 25);
+trace:STEP@LEARNERxDOWN,.. scripts exact outages instead.  While a
+learner is down its groups reduce over the survivors (reweighted
+averaging over the members that arrived); on repair it restores from
+the fleet's checkpointed average, warm-syncs to its innermost group,
+and rejoins.  Under --schedule adaptive, a learner that persistently
+stalls its group's barriers is migrated to outermost-only cadence
+rather than widening everyone's interval.  Outages draw from a
+dedicated seeded stream disjoint from training and straggler streams,
+so fault runs replay bit-identically — and --faults 0 (armed layer,
+zero events) is bit-identical to the plain event run.  sweep --faults
+takes only the PROB[:mttr] form and prices every candidate against the
+seeded outage regime (DESIGN.md section "Fault model").
 
 Sweep: enumerates hierarchy shapes for P learners (level counts
 --levels-min..--levels-max, divisor fan-outs, optional rack-tier
@@ -143,7 +161,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     args.check_known(&[
         "p", "model", "steps", "strategy", "levels-min", "levels-max", "k2-max", "k1-grid",
         "no-rack", "no-local", "top", "validate-top", "collective", "out", "het",
-        "straggler", "seed", "schedule", "timeline-only",
+        "straggler", "faults", "seed", "schedule", "timeline-only",
     ])?;
     if args.positional.len() > 1 {
         bail!(
@@ -192,6 +210,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     ctx.het.apply_args(args)?;
     ctx.het.seed = args.parse_or("seed", ctx.het.seed)?;
     ctx.het.validate()?;
+    if let Some(f) = args.get("faults") {
+        let plan = hier_avg::sim::parse_faults(f)?;
+        plan.validate(p)?;
+        ctx.faults = Some(plan.sampled().ok_or_else(|| {
+            anyhow::anyhow!(
+                "sweep --faults takes only the sampled PROB[:mttr] form: a scripted \
+                 trace names learner indices, which do not transfer across candidate \
+                 topologies (got {f:?}; replay a trace with train --faults instead)"
+            )
+        })?);
+    }
     // Timeline-only pricing: explicit flag wins (either polarity);
     // otherwise auto-select at large P, where closed-form validation runs
     // are off the table anyway.
@@ -210,13 +239,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let ranked = planner::rank(&space, &ctx)?;
     eprintln!(
         "[sweep] p={p} model={model} horizon={steps} candidates={} k2_cap={} strategy={} \
-         het={} straggler={}:{} timeline_only={}",
+         het={} straggler={}:{} faults={} timeline_only={}",
         ranked.len(),
         space.k2_cap(&ctx.bound),
         strategy.name(),
         ctx.het.het,
         ctx.het.straggler_prob,
         ctx.het.straggler_mult,
+        ctx.faults
+            .map(|f| format!("{}:{}", f.prob, f.mttr))
+            .unwrap_or_else(|| "off".into()),
         ctx.timeline_only,
     );
 
@@ -293,8 +325,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     // would train a different configuration than asked.
     args.check_known(&[
         "config", "model", "backend", "p", "s", "k1", "k2", "levels", "ks", "links",
-        "collective", "pool-threads", "schedule", "exec", "het", "straggler", "epochs",
-        "train-n", "test-n", "lr", "seed", "noise", "radius", "momentum", "strategy",
+        "collective", "pool-threads", "schedule", "exec", "het", "straggler", "faults",
+        "epochs", "train-n", "test-n", "lr", "seed", "noise", "radius", "momentum", "strategy",
         "record-steps", "init-params", "save-params", "trace", "out", "help",
     ])?;
     let cfg = RunConfig::from_args(args)?;
@@ -363,6 +395,20 @@ fn cmd_train(args: &Args) -> Result<()> {
             s.k2_clamp
         );
     }
+    if let Some(f) = &rec.faults {
+        println!(
+            "faults {}: preemptions {}  reentries {}  restores {}  migrations {}  \
+             survivor_reductions {}  lost {:.4}s  membership_epoch {}",
+            f.spec,
+            f.preemptions,
+            f.reentries,
+            f.checkpoint_restores,
+            f.migrations,
+            f.survivor_reductions,
+            f.lost_seconds,
+            f.membership_epoch
+        );
+    }
     if let Some(out) = args.get("out") {
         rec.write_json(std::path::Path::new(out))?;
         eprintln!("wrote {out}");
@@ -375,14 +421,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         let layout = driver::layout_for(&cfg)?;
         // The sidecar carries the policy spec + controller state so a
         // warm start resumes the controller (and refuses a different
-        // --schedule).
+        // --schedule), plus the run's topology chain and final membership
+        // epoch so a resume under a different hierarchy — or of an
+        // elastic run without its fault layer — fails loudly
+        // (driver::check_resume_meta).
         let schedule = rec.schedule.as_ref().map(|s| (s.policy.as_str(), &s.state));
-        hier_avg::checkpoint::save_with_schedule(
+        hier_avg::checkpoint::save_with_meta(
             std::path::Path::new(path),
             &cfg.model,
             &layout,
             params,
             schedule,
+            Some(topo.sizes()),
+            rec.faults.as_ref().map(|f| f.membership_epoch).unwrap_or(0),
         )?;
         eprintln!("saved parameters to {path}");
     }

@@ -34,6 +34,33 @@ pub struct TraceEvent {
     pub seconds: f64,
 }
 
+/// What the elastic fault layer (`--faults`) did over a run: membership
+/// events, their parameter-side recoveries, and the time they cost
+/// (the JSON `faults` block; absent when the layer is off, which keeps
+/// fault-free records byte-identical to pre-fault builds).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSummary {
+    /// Canonical `--faults` spec the run was configured with
+    /// (`sim::FaultPlan::spec`).
+    pub spec: String,
+    /// Up→down membership edges (learners preempted).
+    pub preemptions: u64,
+    /// Down→up membership edges (repaired learners rejoining).
+    pub reentries: u64,
+    /// Parameter restores from the latest checkpoint on re-entry.
+    pub checkpoint_restores: u64,
+    /// Learners the schedule policy migrated to outermost-only cadence.
+    pub migrations: u64,
+    /// Groups that reduced degraded (survivor-only barriers).
+    pub survivor_reductions: u64,
+    /// Modelled seconds lost to outages: down time plus re-entry restore
+    /// surcharges, summed over learners (the timeline's `lost` account).
+    pub lost_seconds: f64,
+    /// Final membership version (one bump per preemption / re-entry /
+    /// migration; checkpoint sidecars persist it).
+    pub membership_epoch: u64,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct RunRecord {
     pub label: String,
@@ -81,6 +108,10 @@ pub struct RunRecord {
     /// state (filled by the trainer; `None` for runners without the
     /// policy layer, e.g. ASGD).
     pub schedule: Option<ScheduleSummary>,
+    /// What the elastic fault layer did (filled by the trainer; `None`
+    /// when `--faults` is off, so fault-free JSON is byte-identical to
+    /// pre-fault builds).
+    pub faults: Option<FaultSummary>,
 }
 
 /// Above this learner count, `RunRecord` JSON replaces the per-learner
@@ -222,6 +253,18 @@ impl RunRecord {
                 .set("adaptations", Json::Arr(changes))
                 .set("state", s.state.clone());
             o.set("schedule", sch);
+        }
+        if let Some(f) = &self.faults {
+            let mut fb = Json::obj();
+            fb.set("spec", Json::from(f.spec.as_str()))
+                .set("preemptions", Json::from(f.preemptions as usize))
+                .set("reentries", Json::from(f.reentries as usize))
+                .set("checkpoint_restores", Json::from(f.checkpoint_restores as usize))
+                .set("migrations", Json::from(f.migrations as usize))
+                .set("survivor_reductions", Json::from(f.survivor_reductions as usize))
+                .set("lost_seconds", Json::from(f.lost_seconds))
+                .set("membership_epoch", Json::from(f.membership_epoch as usize));
+            o.set("faults", fb);
         }
         o.set("total_steps", Json::from(self.total_steps as usize))
             .set("sim_compute_seconds", Json::from(self.sim_compute_seconds))
@@ -493,6 +536,40 @@ mod tests {
                 40
             );
         }
+    }
+
+    #[test]
+    fn faults_block_serializes_and_absence_changes_nothing() {
+        let mut r = record("f", 1);
+        // No fault layer: the block is absent and the JSON is what a
+        // pre-fault build emitted.
+        let plain = r.to_json().pretty();
+        assert!(r.to_json().get("faults").is_none());
+        r.faults = Some(FaultSummary {
+            spec: "0.003:20".into(),
+            preemptions: 5,
+            reentries: 4,
+            checkpoint_restores: 4,
+            migrations: 1,
+            survivor_reductions: 9,
+            lost_seconds: 1.25,
+            membership_epoch: 10,
+        });
+        for j in [r.to_json(), r.to_golden_json()] {
+            let parsed = Json::parse(&j.pretty()).unwrap();
+            let f = parsed.req("faults").unwrap();
+            assert_eq!(f.req("spec").unwrap().as_str().unwrap(), "0.003:20");
+            assert_eq!(f.req("preemptions").unwrap().as_usize().unwrap(), 5);
+            assert_eq!(f.req("reentries").unwrap().as_usize().unwrap(), 4);
+            assert_eq!(f.req("checkpoint_restores").unwrap().as_usize().unwrap(), 4);
+            assert_eq!(f.req("migrations").unwrap().as_usize().unwrap(), 1);
+            assert_eq!(f.req("survivor_reductions").unwrap().as_usize().unwrap(), 9);
+            assert_eq!(f.req("lost_seconds").unwrap().as_f64().unwrap(), 1.25);
+            assert_eq!(f.req("membership_epoch").unwrap().as_usize().unwrap(), 10);
+        }
+        // Clearing the block restores the byte-identical fault-free form.
+        r.faults = None;
+        assert_eq!(r.to_json().pretty(), plain);
     }
 
     #[test]

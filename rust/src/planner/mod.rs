@@ -50,7 +50,7 @@ use crate::driver;
 use crate::metrics::RunRecord;
 use crate::native::NativeMlp;
 use crate::optimizer::LrSchedule;
-use crate::sim::{self, HetSpec};
+use crate::sim::{self, FaultPlan, FaultSpec, HetSpec};
 use crate::theory::{self, BoundParams};
 use crate::topology::{HierTopology, LinkClass};
 use crate::util::rng::Pcg32;
@@ -174,6 +174,17 @@ pub struct ScoreCtx {
     /// microseconds — and the ranking exercises the exact event timeline
     /// a run would see rather than the closed form.
     pub timeline_only: bool,
+    /// Preemption regime the candidates are priced against (`sweep
+    /// --faults PROB[:mttr]`).  `Some` replaces closed-form pricing with
+    /// a fault-armed timeline replay
+    /// ([`sim::replay_timeline_stats_faults`]): outages drawn from the
+    /// dedicated fault stream of `het.seed` charge lost time and leave
+    /// survivor barriers to the remaining group members, so a shape with
+    /// frequent wide barriers pays for every learner it would wait out.
+    /// Only the sampled spot-preemption form makes sense here — a
+    /// scripted trace names learner indices, which don't transfer across
+    /// candidate topologies.
+    pub faults: Option<FaultSpec>,
 }
 
 /// Learner count at or above which the sweep CLI switches to
@@ -219,6 +230,7 @@ impl ScoreCtx {
             step_seconds: coordinator::sim_step_seconds(batch, n_params),
             het: HetSpec::default(),
             timeline_only: false,
+            faults: None,
         })
     }
 }
@@ -537,6 +549,10 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
             let mut policy = cand.policy.build(clamp, ctx.step_seconds, topo.p());
             let mut model =
                 sim::EventModel::new(topo.p(), topo.n_levels(), ctx.step_seconds, &ctx.het);
+            if let Some(spec) = ctx.faults {
+                use crate::sim::ExecModel;
+                model.install_faults(ctx.het.seed, &FaultPlan::Sampled(spec));
+            }
             let realized = sim::drive_timeline_policy(
                 &mut model,
                 &topo,
@@ -606,12 +622,26 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
     // step-duration stream depends only on (P, het, seed) — one duration
     // matrix could be precomputed per ScoreCtx and shared across
     // candidates, leaving only the O(horizon·P) barrier walk per replay.
-    let makespan_seconds = match replay_makespan {
-        Some(m) => m,
-        None if ctx.het.is_homogeneous() && !ctx.timeline_only => {
+    let makespan_seconds = match (replay_makespan, ctx.faults) {
+        (Some(m), _) => m,
+        // A fault regime always prices through the timeline: preempted
+        // learners charge lost time the closed form cannot see.
+        (None, Some(spec)) => {
+            sim::replay_timeline_stats_faults(
+                &topo,
+                &sched,
+                ctx.horizon,
+                ctx.step_seconds,
+                &sec_per_events,
+                &ctx.het,
+                &FaultPlan::Sampled(spec),
+            )
+            .makespan_seconds
+        }
+        (None, None) if ctx.het.is_homogeneous() && !ctx.timeline_only => {
             compute_seconds + comm_seconds
         }
-        None => {
+        (None, None) => {
             sim::replay_timeline_stats(
                 &topo,
                 &sched,
@@ -771,14 +801,15 @@ pub fn validate(
     // delta would be spurious for non-default `--strategy`/cost settings.
     cfg.strategy = ctx.strategy;
     cfg.cost = ctx.cost;
-    // A heterogeneous sweep ranks by the event timeline's makespan, so the
-    // validation run must execute under the same event model and het spec
-    // (seed included — the run's straggler streams derive from cfg.seed),
-    // or the quantity driving the ranking would never be checked against a
-    // measured run.
-    if !ctx.het.is_homogeneous() {
+    // A heterogeneous or fault-armed sweep ranks by the event timeline's
+    // makespan, so the validation run must execute under the same event
+    // model, het spec, and fault regime (seed included — the run's
+    // straggler and fault streams derive from cfg.seed), or the quantity
+    // driving the ranking would never be checked against a measured run.
+    if !ctx.het.is_homogeneous() || ctx.faults.is_some() {
         cfg.exec = crate::sim::ExecKind::Event;
         cfg.set_het_spec(&ctx.het);
+        cfg.faults = ctx.faults.map(FaultPlan::Sampled);
         cfg.validate()?;
     }
     let rec = validation_record(&cfg)?;
@@ -1169,6 +1200,57 @@ mod tests {
             v.modelled_makespan_seconds,
             v.measured_makespan_seconds
         );
+    }
+
+    #[test]
+    fn fault_aware_scoring_prices_preemptions() {
+        let ctx = ScoreCtx { horizon: 512, ..ctx16() };
+        let cand = Candidate::with_default_links(vec![4, 16], vec![2, 8]).unwrap();
+        let baseline = score(&cand, &ctx).unwrap();
+        // An armed fault regime charges lost time the closed form cannot
+        // see: the makespan strictly exceeds compute + comm.
+        let fctx = ScoreCtx {
+            faults: Some(FaultSpec { prob: 0.02, mttr: 10 }),
+            ..ctx
+        };
+        let s = score(&cand, &fctx).unwrap();
+        assert!(
+            s.makespan_seconds > baseline.makespan_seconds,
+            "fault-armed makespan {} vs baseline {}",
+            s.makespan_seconds,
+            baseline.makespan_seconds
+        );
+        // ... deterministically (same seed, same bits), and without
+        // touching the communication account (the closed form still
+        // prices full groups — see replay_timeline_stats_faults).
+        let s2 = score(&cand, &fctx).unwrap();
+        assert_eq!(s.makespan_seconds.to_bits(), s2.makespan_seconds.to_bits());
+        assert_eq!(s.comm_seconds.to_bits(), baseline.comm_seconds.to_bits());
+        assert_eq!(s.comm_bytes, baseline.comm_bytes);
+        // A zero-probability regime arms the layer but draws no outages:
+        // its price matches the plain timeline replay (and hence the
+        // closed form, to fp-accumulation tolerance).
+        let zctx = ScoreCtx {
+            faults: Some(FaultSpec { prob: 0.0, mttr: 10 }),
+            ..ctx
+        };
+        let z = score(&cand, &zctx).unwrap();
+        assert!(
+            (z.makespan_seconds - baseline.makespan_seconds).abs()
+                <= 1e-9 * baseline.makespan_seconds,
+            "zero-prob fault pricing drifted: {} vs {}",
+            z.makespan_seconds,
+            baseline.makespan_seconds
+        );
+        // Ranking under a fault regime stays fully ordered and finite.
+        let space = SweepSpace::new(16).unwrap();
+        let ranked = rank(&space, &fctx).unwrap();
+        for w in ranked.windows(2) {
+            assert!(w[0].score.time_to_target <= w[1].score.time_to_target);
+        }
+        for r in &ranked {
+            assert!(r.score.makespan_seconds.is_finite() && r.score.makespan_seconds > 0.0);
+        }
     }
 
     #[test]

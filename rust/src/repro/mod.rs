@@ -16,12 +16,23 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
     // A misspelled flag (e.g. `--from-swep`) would otherwise be silently
     // ignored and the harness would run a different experiment
     // configuration than asked.
-    args.check_known(&["scale", "backend", "out", "from-sweep", "schedule", "help"])?;
+    args.check_known(&["scale", "backend", "out", "from-sweep", "schedule", "faults", "help"])?;
     let Some(exp) = args.positional.get(1) else {
         bail!("repro needs an experiment id (fig1..fig5, table1, thm34..thm36, comm, asgd, adaptive, deep, all)");
     };
     if args.get("from-sweep").is_some() && exp != "deep" {
         bail!("--from-sweep only applies to the deep experiment (got {exp:?})");
+    }
+    // Known (so a typo'd value still gets a targeted message) but always
+    // rejected: the repro harness pins the paper's fault-free
+    // configurations, and injecting outages would silently change every
+    // figure it regenerates.
+    if args.get("faults").is_some() {
+        bail!(
+            "repro experiments reproduce the paper's fault-free runs and do not take \
+             --faults; use `train --faults` for elastic runs or `sweep --faults` for \
+             fault-aware shape pricing"
+        );
     }
     // Parse eagerly so a bad policy spec fails before any runs start, and
     // reject it outside `deep` rather than silently running static.

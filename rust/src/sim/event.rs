@@ -35,7 +35,10 @@
 use crate::topology::HierTopology;
 use crate::util::rng::Pcg32;
 
-use super::{ExecBreakdown, ExecKind, ExecModel, HetSpec, STRAGGLER_STREAM};
+use super::{
+    ExecBreakdown, ExecKind, ExecModel, FaultPlan, HetSpec, MembershipModel,
+    REENTRY_RESTORE_STEPS, STRAGGLER_STREAM,
+};
 
 /// The production virtual-time event engine: per-learner clocks,
 /// group-local barriers, straggler spikes — advanced lazily from a shared
@@ -58,6 +61,36 @@ pub struct EventModel {
     pool: Pool,
     level_stalls: Vec<f64>,
     straggler_events: u64,
+    /// Elastic-membership layer (`--faults`), None when not installed.
+    /// Installing it forces the pooled per-learner arrays — the shared
+    /// fast path cannot represent per-learner downtime.
+    faults: Option<FaultState>,
+    last_culprit: Option<usize>,
+}
+
+/// The heap core's fault-layer state: its own [`MembershipModel`]
+/// realization plus the per-learner edge detectors and counters.
+#[derive(Debug, Clone)]
+struct FaultState {
+    membership: MembershipModel,
+    /// Was learner j down during its previously flushed step?
+    down_prev: Vec<bool>,
+    /// Learners migrated out of their sub-top reduction groups.
+    detached: Vec<bool>,
+    preemptions: u64,
+    reentries: u64,
+}
+
+impl FaultState {
+    fn new(p: usize, seed: u64, plan: &FaultPlan) -> FaultState {
+        FaultState {
+            membership: MembershipModel::new(p, seed, plan),
+            down_prev: vec![false; p],
+            detached: vec![false; p],
+            preemptions: 0,
+            reentries: 0,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -77,6 +110,9 @@ struct LearnerPool {
     clocks: Vec<f64>,
     busy: Vec<f64>,
     blocked: Vec<f64>,
+    /// Time lost to preemption (down steps + restore surcharge); stays
+    /// all-zero unless a fault layer is installed.
+    lost: Vec<f64>,
     /// Step each learner's clock is advanced to (lags `EventModel::step`
     /// between barriers).
     synced: Vec<u64>,
@@ -96,6 +132,7 @@ impl LearnerPool {
             clocks: vec![0.0; p],
             busy: vec![0.0; p],
             blocked: vec![0.0; p],
+            lost: vec![0.0; p],
             synced: vec![0; p],
             root: Pcg32::new(seed, STRAGGLER_STREAM),
             rngs: Vec::new(),
@@ -105,7 +142,11 @@ impl LearnerPool {
 
 /// Replay learner `j`'s pending steps: the reference's per-step additions
 /// in the learner's own step order (hoisting `base × rate` is exact —
-/// the product is the same f64 every step).
+/// the product is the same f64 every step).  With a fault layer, down
+/// steps charge `lost` instead of `busy` and draw no spike (the spike
+/// stream only advances while up), and the first up step after an outage
+/// pays the restore surcharge — the same per-step branch order as the
+/// scan reference, so the timelines stay bit-identical.
 fn flush_learner(
     pool: &mut LearnerPool,
     base: f64,
@@ -114,6 +155,7 @@ fn flush_learner(
     j: usize,
     to: u64,
     spikes: &mut u64,
+    faults: Option<&mut FaultState>,
 ) {
     let from = pool.synced[j];
     if from >= to {
@@ -132,20 +174,57 @@ fn flush_learner(
             let child = pool.root.fork(tag);
             pool.rngs.push(child);
         }
-        let rng = &mut pool.rngs[j];
-        for _ in from..to {
-            let mut dt = dt_base;
-            if rng.next_f64() < spec.straggler_prob {
-                dt *= spec.straggler_mult;
-                *spikes += 1;
+    }
+    match faults {
+        None => {
+            if spec.straggler_prob > 0.0 {
+                let rng = &mut pool.rngs[j];
+                for _ in from..to {
+                    let mut dt = dt_base;
+                    if rng.next_f64() < spec.straggler_prob {
+                        dt *= spec.straggler_mult;
+                        *spikes += 1;
+                    }
+                    busy += dt;
+                    clock += dt;
+                }
+            } else {
+                for _ in from..to {
+                    busy += dt_base;
+                    clock += dt_base;
+                }
             }
-            busy += dt;
-            clock += dt;
         }
-    } else {
-        for _ in from..to {
-            busy += dt_base;
-            clock += dt_base;
+        Some(fs) => {
+            let mut lost = pool.lost[j];
+            for s in from..to {
+                let t = s + 1; // 1-based step ordinal, as the scan counts
+                if fs.membership.is_down(j, t) {
+                    if !fs.down_prev[j] {
+                        fs.preemptions += 1;
+                        fs.down_prev[j] = true;
+                    }
+                    lost += dt_base;
+                    clock += dt_base;
+                    continue;
+                }
+                if fs.down_prev[j] {
+                    fs.down_prev[j] = false;
+                    fs.reentries += 1;
+                    let restore = REENTRY_RESTORE_STEPS * dt_base;
+                    lost += restore;
+                    clock += restore;
+                }
+                let mut dt = dt_base;
+                if spec.straggler_prob > 0.0 && pool.rngs[j].next_f64() < spec.straggler_prob
+                {
+                    dt *= spec.straggler_mult;
+                    *spikes += 1;
+                }
+                busy += dt;
+                clock += dt;
+            }
+            pool.lost[j] = lost;
         }
     }
     pool.clocks[j] = clock;
@@ -168,6 +247,8 @@ impl EventModel {
             pool,
             level_stalls: vec![0.0; n_levels],
             straggler_events: 0,
+            faults: None,
+            last_culprit: None,
         }
     }
 
@@ -201,6 +282,7 @@ impl EventModel {
                         j,
                         step,
                         &mut self.straggler_events,
+                        self.faults.as_mut(),
                     );
                 }
             }
@@ -252,6 +334,29 @@ impl EventModel {
     pub fn straggler_events(&self) -> u64 {
         self.straggler_events
     }
+
+    /// Sum of per-learner time lost to preemption (down steps + restore
+    /// surcharges); 0 unless a fault layer is installed.
+    pub fn lost_seconds_total(&mut self) -> f64 {
+        if self.faults.is_none() {
+            return 0.0;
+        }
+        self.flush();
+        match &self.pool {
+            Pool::Learners(pool) => pool.lost.iter().sum(),
+            _ => 0.0,
+        }
+    }
+
+    /// Timeline-side fault counters: `(preemptions, reentries)` observed
+    /// by flushed learners so far — call after a flush-inducing query
+    /// (`now`/`breakdown`) for the run total.
+    pub fn fault_counts(&self) -> (u64, u64) {
+        match &self.faults {
+            Some(fs) => (fs.preemptions, fs.reentries),
+            None => (0, 0),
+        }
+    }
 }
 
 impl ExecModel for EventModel {
@@ -295,6 +400,9 @@ impl ExecModel for EventModel {
                 0.0
             }
             Pool::Learners(pool) => {
+                let top = level + 1 == topo.n_levels();
+                self.last_culprit = None;
+                let mut best_clock = f64::NEG_INFINITY;
                 let mut event_stall = 0.0;
                 for g in 0..topo.n_groups(level) {
                     let members = topo.group_members(level, g);
@@ -311,18 +419,61 @@ impl ExecModel for EventModel {
                             j,
                             step,
                             &mut self.straggler_events,
+                            self.faults.as_mut(),
                         );
                     }
-                    let arrival = members
-                        .clone()
-                        .map(|j| pool.clocks[j])
-                        .fold(f64::NEG_INFINITY, f64::max);
-                    for j in members {
-                        let wait = arrival - pool.clocks[j];
-                        pool.blocked[j] += wait;
-                        self.level_stalls[level] += wait;
-                        event_stall += wait;
-                        pool.clocks[j] = arrival + seconds;
+                    match self.faults.as_mut() {
+                        None => {
+                            let arrival = members
+                                .clone()
+                                .map(|j| pool.clocks[j])
+                                .fold(f64::NEG_INFINITY, f64::max);
+                            for j in members {
+                                let wait = arrival - pool.clocks[j];
+                                pool.blocked[j] += wait;
+                                self.level_stalls[level] += wait;
+                                event_stall += wait;
+                                pool.clocks[j] = arrival + seconds;
+                            }
+                        }
+                        Some(fs) => {
+                            // Barrier over the group's participants only:
+                            // down learners — and, below the top,
+                            // detached learners — neither wait nor are
+                            // waited for.  Same rule, same order, as the
+                            // scan reference.
+                            let mut arrival = f64::NEG_INFINITY;
+                            let mut any = false;
+                            for j in members.clone() {
+                                let part = !fs.membership.is_down(j, step)
+                                    && (top || !fs.detached[j]);
+                                if part {
+                                    any = true;
+                                    if pool.clocks[j] > arrival {
+                                        arrival = pool.clocks[j];
+                                    }
+                                    if pool.clocks[j] > best_clock {
+                                        best_clock = pool.clocks[j];
+                                        self.last_culprit = Some(j);
+                                    }
+                                }
+                            }
+                            if !any {
+                                continue; // whole group down: no barrier
+                            }
+                            for j in members {
+                                if fs.membership.is_down(j, step)
+                                    || (!top && fs.detached[j])
+                                {
+                                    continue;
+                                }
+                                let wait = arrival - pool.clocks[j];
+                                pool.blocked[j] += wait;
+                                self.level_stalls[level] += wait;
+                                event_stall += wait;
+                                pool.clocks[j] = arrival + seconds;
+                            }
+                        }
                     }
                 }
                 event_stall
@@ -356,6 +507,7 @@ impl ExecModel for EventModel {
                     // the reference's makespan − clock is c − c = +0.0
                     idle_seconds: vec![0.0; self.p],
                     level_stall_seconds: self.level_stalls.clone(),
+                    lost_seconds: vec![0.0; self.p],
                     straggler_events: self.straggler_events,
                 }
             }
@@ -368,10 +520,34 @@ impl ExecModel for EventModel {
                     blocked_seconds: pool.blocked.clone(),
                     idle_seconds: pool.clocks.iter().map(|&c| makespan - c).collect(),
                     level_stall_seconds: self.level_stalls.clone(),
+                    lost_seconds: pool.lost.clone(),
                     straggler_events: self.straggler_events,
                 }
             }
             Pool::Lazy => unreachable!("flush materializes"),
+        }
+    }
+
+    fn install_faults(&mut self, seed: u64, plan: &FaultPlan) {
+        debug_assert_eq!(self.step, 0, "install the fault layer before driving the model");
+        // The shared fast path cannot represent per-learner downtime:
+        // force the pooled per-learner arrays.  A homogeneous pooled walk
+        // performs the identical IEEE additions the shared scalars
+        // perform (pinned by the heap ≡ scan property tests), so arming
+        // an *empty* fault layer stays bit-identical to the un-armed run.
+        self.pool = Pool::Learners(LearnerPool::new(self.p, self.spec.seed));
+        self.faults = Some(FaultState::new(self.p, seed, plan));
+    }
+
+    fn last_culprit(&self) -> Option<usize> {
+        self.last_culprit
+    }
+
+    fn set_detached(&mut self, learner: usize) {
+        if let Some(fs) = self.faults.as_mut() {
+            if learner < fs.detached.len() {
+                fs.detached[learner] = true;
+            }
         }
     }
 }

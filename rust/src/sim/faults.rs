@@ -1,0 +1,507 @@
+//! Seeded fault injection: membership traces for the elastic-fleet layer.
+//!
+//! A membership trace says, for every learner and every step, whether the
+//! learner is up.  Traces come in two forms: a sampled spot-preemption
+//! model (`--faults PROB[:mttr]` — each up learner is preempted with
+//! probability `PROB` per step and repairs after `mttr` steps) and an
+//! explicit scripted form (`--faults trace:STEP@LEARNERxDOWN,...`).  Both
+//! are pure functions of `(seed, plan, p)`: the sampled form draws from
+//! per-learner Pcg32 streams forked, in learner order, from a root on the
+//! dedicated fault stream [`FAULT_STREAM`] — disjoint from the training
+//! ("HIER") and straggler ("SIMT") streams, so arming the fault layer
+//! perturbs neither batch draws nor straggler spikes.
+//!
+//! The engine (parameter path), the heap event model (time path), and the
+//! scan reference each hold their *own* [`MembershipModel`] instance;
+//! because a trace is a pure function of its inputs, the three instances
+//! agree step for step, and faults stay seeded-timeline data only — no
+//! cross-layer mutable channel exists for them to disagree through.
+//!
+//! Step ordinals are 1-based, matching the driver loop (`t in
+//! 1..=horizon`) and the engine's post-increment step counter.  A down
+//! interval `[start, end)` means the learner is down during steps
+//! `start..end` and re-enters (pays its restore, rejoins barriers) at
+//! step `end`.  Sampled gaps are geometric with per-step hazard `prob`,
+//! so the sampled form is distributionally identical to flipping a
+//! per-step Bernoulli coin while up — but closed-form, so advancing a
+//! learner's trace to step `t` costs O(intervals), not O(t).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Pcg32;
+
+/// Pcg32 stream id for fault traces ("FAUL"), disjoint from the training
+/// ("HIER") and straggler ("SIMT") streams.
+pub const FAULT_STREAM: u64 = 0x4641_554C;
+
+/// Default repair time (steps) when `--faults PROB` omits `:mttr`.
+pub const DEFAULT_MTTR: u64 = 25;
+
+/// Warm-restart surcharge a re-entering learner pays at its first up
+/// step, in units of its own base step time: checkpoint read + parameter
+/// install + rejoin handshake, modelled as two lost steps.
+pub const REENTRY_RESTORE_STEPS: f64 = 2.0;
+
+/// The sampled spot-preemption model: per-step preemption hazard plus a
+/// fixed repair time.  `Copy` so the planner's `ScoreCtx` stays `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Per-step, per-learner preemption probability while up.
+    pub prob: f64,
+    /// Repair time in steps (mean time to repair; fixed, not sampled).
+    pub mttr: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec { prob: 0.0, mttr: DEFAULT_MTTR }
+    }
+}
+
+/// One scripted outage: learner `learner` is down for `down_steps` steps
+/// starting at step `step` (1-based), re-entering at `step + down_steps`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub step: u64,
+    pub learner: usize,
+    pub down_steps: u64,
+}
+
+/// A parsed `--faults` argument: sampled spot-preemption or an explicit
+/// scripted trace.  `--faults 0` is `Sampled { prob: 0.0, .. }` — the
+/// elastic layer installs (forced per-learner pool, membership queries,
+/// survivor-aware reduction path) but the trace is empty, which is what
+/// the zero-fault bit-identity tests pin against plain event mode.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultPlan {
+    Sampled(FaultSpec),
+    Scripted(Vec<FaultEvent>),
+}
+
+impl FaultPlan {
+    /// Canonical spec string: parses back to an equal plan.
+    pub fn spec(&self) -> String {
+        match self {
+            FaultPlan::Sampled(s) => format!("{}:{}", s.prob, s.mttr),
+            FaultPlan::Scripted(events) => {
+                let parts: Vec<String> = events
+                    .iter()
+                    .map(|e| format!("{}@{}x{}", e.step, e.learner, e.down_steps))
+                    .collect();
+                format!("trace:{}", parts.join(","))
+            }
+        }
+    }
+
+    /// The sampled spec, if this is the sampled form (the only form the
+    /// sweep accepts: a scripted trace names specific learners, which
+    /// cannot transfer across candidate topologies of varying P).
+    pub fn sampled(&self) -> Option<FaultSpec> {
+        match self {
+            FaultPlan::Sampled(s) => Some(*s),
+            FaultPlan::Scripted(_) => None,
+        }
+    }
+
+    /// Validate against a fleet of `p` learners, with actionable errors.
+    pub fn validate(&self, p: usize) -> Result<()> {
+        match self {
+            FaultPlan::Sampled(s) => {
+                if !s.prob.is_finite() || !(0.0..=1.0).contains(&s.prob) {
+                    bail!(
+                        "--faults probability {} is outside [0, 1]: it is a per-step, \
+                         per-learner preemption hazard (0.003 preempts each learner about \
+                         once every 333 steps)",
+                        s.prob
+                    );
+                }
+                if s.mttr == 0 {
+                    bail!(
+                        "--faults mttr must be at least 1 step: a repair time of 0 means \
+                         the learner never actually leaves, so no trace exists for it"
+                    );
+                }
+            }
+            FaultPlan::Scripted(events) => {
+                if events.is_empty() {
+                    bail!("--faults trace: lists no outages; use --faults 0 for an armed-but-empty fault layer");
+                }
+                let mut per: Vec<Vec<(u64, u64)>> = vec![Vec::new(); p];
+                for e in events {
+                    if e.step == 0 {
+                        bail!("--faults trace step 0 is invalid: steps are 1-based (the first trainable step is 1)");
+                    }
+                    if e.down_steps == 0 {
+                        bail!("--faults trace outage {}@{}x0 lasts zero steps: down_steps must be at least 1", e.step, e.learner);
+                    }
+                    if e.learner >= p {
+                        bail!(
+                            "--faults trace names learner {} but this run has only {} learners (0..={}): \
+                             fix the trace or raise --p",
+                            e.learner,
+                            p,
+                            p.saturating_sub(1)
+                        );
+                    }
+                    per[e.learner].push((e.step, e.step.saturating_add(e.down_steps)));
+                }
+                for (j, list) in per.iter_mut().enumerate() {
+                    list.sort_unstable();
+                    for w in list.windows(2) {
+                        if w[1].0 <= w[0].1 {
+                            bail!(
+                                "--faults trace outages for learner {j} overlap or touch \
+                                 (steps {}..{} then {}..{}): a learner must be up for at \
+                                 least one step between outages so its re-entry is well defined",
+                                w[0].0, w[0].1, w[1].0, w[1].1
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a `--faults` argument: `PROB[:mttr]` (e.g. `0.003:20`) or
+/// `trace:STEP@LEARNERxDOWN[,...]` (e.g. `trace:10@3x20,50@7x30`).
+/// Range validation happens in [`FaultPlan::validate`], which knows `p`.
+pub fn parse_faults(s: &str) -> Result<FaultPlan> {
+    if let Some(rest) = s.strip_prefix("trace:") {
+        let mut events = Vec::new();
+        for part in rest.split(',').filter(|p| !p.is_empty()) {
+            let (step_s, rest2) = part.split_once('@').with_context(|| {
+                format!("--faults trace entry {part:?} is not STEP@LEARNERxDOWN (e.g. 10@3x20)")
+            })?;
+            let (learner_s, down_s) = rest2.split_once('x').with_context(|| {
+                format!("--faults trace entry {part:?} is not STEP@LEARNERxDOWN (e.g. 10@3x20)")
+            })?;
+            let step: u64 = step_s
+                .parse()
+                .with_context(|| format!("--faults trace entry {part:?}: bad step {step_s:?}"))?;
+            let learner: usize = learner_s
+                .parse()
+                .with_context(|| format!("--faults trace entry {part:?}: bad learner {learner_s:?}"))?;
+            let down_steps: u64 = down_s
+                .parse()
+                .with_context(|| format!("--faults trace entry {part:?}: bad down-step count {down_s:?}"))?;
+            events.push(FaultEvent { step, learner, down_steps });
+        }
+        if events.is_empty() {
+            bail!("--faults trace: lists no outages; use --faults 0 for an armed-but-empty fault layer");
+        }
+        return Ok(FaultPlan::Scripted(events));
+    }
+    let (prob_s, mttr_s) = match s.split_once(':') {
+        Some((a, b)) => (a, Some(b)),
+        None => (s, None),
+    };
+    let prob: f64 = prob_s.parse().with_context(|| {
+        format!("--faults {s:?} is neither PROB[:mttr] (e.g. 0.003:20) nor trace:STEP@LEARNERxDOWN,...")
+    })?;
+    let mttr: u64 = match mttr_s {
+        Some(m) => m
+            .parse()
+            .with_context(|| format!("--faults {s:?}: bad mttr {m:?} (steps, e.g. 0.003:20)"))?,
+        None => DEFAULT_MTTR,
+    };
+    Ok(FaultPlan::Sampled(FaultSpec { prob, mttr }))
+}
+
+/// The queryable membership trace: per-learner down intervals, realized
+/// lazily.  Queries must be monotone non-decreasing in `t` per learner
+/// (every consumer walks the timeline forward); learners may be touched
+/// in any order — sampled streams fork in strictly ascending learner
+/// order regardless, so lazy realization equals eager realization.
+#[derive(Debug, Clone)]
+pub struct MembershipModel {
+    prob: f64,
+    mttr: u64,
+    root: Pcg32,
+    rngs: Vec<Pcg32>,
+    /// Scripted form: per-learner sorted `[start, end)` outage lists.
+    script: Option<Vec<Vec<(u64, u64)>>>,
+    /// Scripted form: per-learner index of the next unconsumed outage.
+    cursor: Vec<usize>,
+    /// Current-or-next interval per learner (the first with `end > t`).
+    cur: Vec<Option<(u64, u64)>>,
+    /// End of the most recently passed interval (0 if none): `last_end[j]
+    /// == t` exactly at learner `j`'s re-entry step.
+    last_end: Vec<u64>,
+    ready: Vec<bool>,
+}
+
+impl MembershipModel {
+    pub fn new(p: usize, seed: u64, plan: &FaultPlan) -> MembershipModel {
+        let (prob, mttr, script) = match plan {
+            FaultPlan::Sampled(s) => (s.prob, s.mttr, None),
+            FaultPlan::Scripted(events) => {
+                let mut per: Vec<Vec<(u64, u64)>> = vec![Vec::new(); p];
+                for e in events {
+                    if e.learner < p {
+                        per[e.learner].push((e.step, e.step.saturating_add(e.down_steps)));
+                    }
+                }
+                for list in &mut per {
+                    list.sort_unstable();
+                }
+                (0.0, 0, Some(per))
+            }
+        };
+        MembershipModel {
+            prob,
+            mttr,
+            root: Pcg32::new(seed, FAULT_STREAM),
+            rngs: Vec::new(),
+            script,
+            cursor: vec![0; p],
+            cur: vec![None; p],
+            last_end: vec![0; p],
+            ready: vec![false; p],
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.cur.len()
+    }
+
+    /// True iff the trace can never mark anyone down (the `--faults 0`
+    /// armed-but-empty case, or a scripted plan with no entries).
+    pub fn is_empty(&self) -> bool {
+        match &self.script {
+            Some(per) => per.iter().all(|list| list.is_empty()),
+            None => self.prob <= 0.0,
+        }
+    }
+
+    fn next_interval(&mut self, j: usize, from: u64) -> Option<(u64, u64)> {
+        if let Some(script) = &self.script {
+            let i = self.cursor[j];
+            self.cursor[j] += 1;
+            return script[j].get(i).copied();
+        }
+        if self.prob <= 0.0 {
+            return None;
+        }
+        // Fork per-learner streams in ascending learner order, exactly
+        // once each, no matter which learner is queried first — so lazy
+        // realization is bit-identical to eager realization.
+        while self.rngs.len() <= j {
+            let tag = self.rngs.len() as u64;
+            let fork = self.root.fork(tag);
+            self.rngs.push(fork);
+        }
+        let u = self.rngs[j].next_f64();
+        // Geometric gap with per-step hazard `prob`: support {1, 2, ...},
+        // P(gap = 1) = prob — distributionally a per-step Bernoulli coin.
+        // u in [0, 1) keeps the numerator finite; prob == 1 sends the
+        // denominator to -inf and the ratio to -0.0, i.e. gap 1 always.
+        let denom = (1.0 - self.prob).ln();
+        let mut gap = ((1.0 - u).ln() / denom).floor() + 1.0;
+        if !gap.is_finite() || gap < 1.0 {
+            gap = 1.0;
+        }
+        let start = from.saturating_add(gap as u64);
+        Some((start, start.saturating_add(self.mttr)))
+    }
+
+    fn ensure(&mut self, j: usize) {
+        if !self.ready[j] {
+            self.ready[j] = true;
+            self.cur[j] = self.next_interval(j, 0);
+        }
+    }
+
+    fn advance(&mut self, j: usize, t: u64) {
+        self.ensure(j);
+        while let Some((_, end)) = self.cur[j] {
+            if end > t {
+                break;
+            }
+            self.last_end[j] = end;
+            self.cur[j] = self.next_interval(j, end);
+        }
+    }
+
+    /// Is learner `j` down during step `t`?  (1-based step ordinals.)
+    pub fn is_down(&mut self, j: usize, t: u64) -> bool {
+        self.advance(j, t);
+        matches!(self.cur[j], Some((start, _)) if start <= t)
+    }
+
+    /// Does learner `j` re-enter exactly at step `t` (first up step after
+    /// an outage)?  Requires the same monotone query discipline as
+    /// [`Self::is_down`].
+    pub fn reentered_at(&mut self, j: usize, t: u64) -> bool {
+        self.advance(j, t);
+        self.last_end[j] == t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sampled_forms() {
+        assert_eq!(
+            parse_faults("0.01").unwrap(),
+            FaultPlan::Sampled(FaultSpec { prob: 0.01, mttr: DEFAULT_MTTR })
+        );
+        assert_eq!(
+            parse_faults("0.25:40").unwrap(),
+            FaultPlan::Sampled(FaultSpec { prob: 0.25, mttr: 40 })
+        );
+        assert_eq!(
+            parse_faults("0").unwrap(),
+            FaultPlan::Sampled(FaultSpec { prob: 0.0, mttr: DEFAULT_MTTR })
+        );
+    }
+
+    #[test]
+    fn parse_scripted_form() {
+        let plan = parse_faults("trace:10@3x20,50@7x30").unwrap();
+        assert_eq!(
+            plan,
+            FaultPlan::Scripted(vec![
+                FaultEvent { step: 10, learner: 3, down_steps: 20 },
+                FaultEvent { step: 50, learner: 7, down_steps: 30 },
+            ])
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in ["bogus", "0.1:x", "trace:", "trace:10@3", "trace:10x3@20", "trace:a@b*c"] {
+            assert!(parse_faults(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        for s in ["0.003:20", "0:25", "trace:10@3x20,50@7x30"] {
+            let plan = parse_faults(s).unwrap();
+            assert_eq!(parse_faults(&plan.spec()).unwrap(), plan, "spec {s:?}");
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_specs() {
+        assert!(FaultPlan::Sampled(FaultSpec { prob: 1.5, mttr: 10 }).validate(4).is_err());
+        assert!(FaultPlan::Sampled(FaultSpec { prob: -0.1, mttr: 10 }).validate(4).is_err());
+        assert!(FaultPlan::Sampled(FaultSpec { prob: f64::NAN, mttr: 10 }).validate(4).is_err());
+        assert!(FaultPlan::Sampled(FaultSpec { prob: 0.1, mttr: 0 }).validate(4).is_err());
+        assert!(FaultPlan::Sampled(FaultSpec { prob: 0.1, mttr: 1 }).validate(4).is_ok());
+        // learner out of range
+        let plan = FaultPlan::Scripted(vec![FaultEvent { step: 5, learner: 4, down_steps: 2 }]);
+        assert!(plan.validate(4).is_err());
+        assert!(plan.validate(5).is_ok());
+        // zero-length outage, step 0
+        assert!(FaultPlan::Scripted(vec![FaultEvent { step: 5, learner: 0, down_steps: 0 }])
+            .validate(4)
+            .is_err());
+        assert!(FaultPlan::Scripted(vec![FaultEvent { step: 0, learner: 0, down_steps: 2 }])
+            .validate(4)
+            .is_err());
+        // touching outages: down 5..8, then down again at 8 — re-entry undefined
+        let touching = FaultPlan::Scripted(vec![
+            FaultEvent { step: 5, learner: 1, down_steps: 3 },
+            FaultEvent { step: 8, learner: 1, down_steps: 2 },
+        ]);
+        assert!(touching.validate(4).is_err());
+        let gapped = FaultPlan::Scripted(vec![
+            FaultEvent { step: 5, learner: 1, down_steps: 3 },
+            FaultEvent { step: 9, learner: 1, down_steps: 2 },
+        ]);
+        assert!(gapped.validate(4).is_ok());
+    }
+
+    #[test]
+    fn scripted_trace_is_exact() {
+        let plan = FaultPlan::Scripted(vec![FaultEvent { step: 4, learner: 1, down_steps: 3 }]);
+        let mut m = MembershipModel::new(3, 42, &plan);
+        for t in 1..=12 {
+            for j in 0..3 {
+                let expect = j == 1 && (4..7).contains(&t);
+                assert_eq!(m.is_down(j, t), expect, "j={j} t={t}");
+                assert_eq!(m.reentered_at(j, t), j == 1 && t == 7, "reenter j={j} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_prob_never_goes_down() {
+        let plan = FaultPlan::Sampled(FaultSpec { prob: 0.0, mttr: 10 });
+        let mut m = MembershipModel::new(8, 7, &plan);
+        assert!(m.is_empty());
+        for t in 1..=200 {
+            for j in 0..8 {
+                assert!(!m.is_down(j, t));
+                assert!(!m.reentered_at(j, t));
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_trace_is_deterministic_and_lazy_order_invariant() {
+        let plan = FaultPlan::Sampled(FaultSpec { prob: 0.2, mttr: 3 });
+        // a queries learners in ascending order, c in descending order:
+        // the realized grids must agree because stream forking is
+        // order-invariant (streams fork 0..=j ascending on first touch).
+        let mut a = MembershipModel::new(6, 99, &plan);
+        let mut c = MembershipModel::new(6, 99, &plan);
+        let mut grid_a = Vec::new();
+        let mut grid_c = Vec::new();
+        let mut downs = 0usize;
+        for t in 1..=400u64 {
+            for j in 0..6 {
+                let d = a.is_down(j, t);
+                downs += d as usize;
+                grid_a.push(d);
+            }
+            let mut row = vec![false; 6];
+            for j in (0..6).rev() {
+                row[j] = c.is_down(j, t);
+            }
+            grid_c.extend(row);
+        }
+        assert_eq!(grid_a, grid_c);
+        // hazard 0.2 over 6×400 learner-steps: outages are plentiful
+        assert!(downs > 100, "expected a busy trace, got {downs} down learner-steps");
+    }
+
+    #[test]
+    fn sampled_learners_draw_disjoint_streams() {
+        let plan = FaultPlan::Sampled(FaultSpec { prob: 0.3, mttr: 2 });
+        let mut m = MembershipModel::new(2, 11, &plan);
+        let mut traces: Vec<Vec<bool>> = vec![Vec::new(); 2];
+        for t in 1..=300 {
+            for j in 0..2 {
+                traces[j].push(m.is_down(j, t));
+            }
+        }
+        assert_ne!(traces[0], traces[1], "two learners realized identical 300-step traces");
+    }
+
+    #[test]
+    fn down_intervals_respect_mttr() {
+        let plan = FaultPlan::Sampled(FaultSpec { prob: 0.05, mttr: 4 });
+        let mut m = MembershipModel::new(1, 5, &plan);
+        let mut run = 0u64;
+        let mut saw_outage = false;
+        for t in 1..=2000 {
+            if m.is_down(0, t) {
+                run += 1;
+            } else {
+                if run > 0 {
+                    saw_outage = true;
+                    assert_eq!(run, 4, "every outage lasts exactly mttr steps");
+                    assert!(m.reentered_at(0, t), "first up step is the re-entry step");
+                }
+                run = 0;
+            }
+        }
+        assert!(saw_outage, "hazard 0.05 over 2000 steps produced no outage");
+    }
+}

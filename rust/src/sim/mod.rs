@@ -29,6 +29,16 @@
 //!   barrier node without any parameter math, which is how the planner
 //!   prices straggler-aware makespans at P up to 1,000,000
 //!   (`sweep --timeline-only`).
+//! - [`mod@faults`] — seeded membership traces for the elastic-fleet
+//!   layer (`--faults`): per-learner preempt/repair intervals drawn from
+//!   a dedicated Pcg32 stream ("FAUL"), consulted by the event models via
+//!   [`ExecModel::install_faults`].  A down learner's steps are charged
+//!   to `lost_seconds` instead of `busy_seconds`, its group's barriers
+//!   fire over the survivors only, and its first up step pays a
+//!   deterministic restore surcharge.  Faults are seeded-timeline data
+//!   only: the parameter path holds its own identical `MembershipModel`,
+//!   and zero-fault traces leave both paths bit-identical to plain event
+//!   mode.
 //!
 //! Two models (`--exec lockstep|event`):
 //!
@@ -66,13 +76,18 @@ use anyhow::{anyhow, bail, Result};
 use crate::topology::HierTopology;
 
 pub mod event;
+pub mod faults;
 pub mod replay;
 pub mod scan;
 
 pub use event::EventModel;
+pub use faults::{
+    parse_faults, FaultEvent, FaultPlan, FaultSpec, MembershipModel, DEFAULT_MTTR,
+    FAULT_STREAM, REENTRY_RESTORE_STEPS,
+};
 pub use replay::{
     drive_timeline, drive_timeline_policy, replay_timeline, replay_timeline_stats,
-    EventCalendar, TimelineStats,
+    replay_timeline_stats_faults, EventCalendar, TimelineStats,
 };
 pub use scan::ScanEventModel;
 
@@ -240,6 +255,9 @@ pub struct ExecBreakdown {
     /// Barrier wait time attributed to each hierarchy level (sum over the
     /// waits its barriers caused, across all learners and events).
     pub level_stall_seconds: Vec<f64>,
+    /// Per-learner time lost to preemption: down steps plus the re-entry
+    /// restore surcharge.  All zeros unless a fault layer is installed.
+    pub lost_seconds: Vec<f64>,
     /// Straggler spikes that fired over the run.
     pub straggler_events: u64,
 }
@@ -286,6 +304,28 @@ pub trait ExecModel {
 
     /// Snapshot the per-learner / per-level accounting.
     fn breakdown(&mut self) -> ExecBreakdown;
+
+    /// Arm the elastic-membership layer: the model realizes its own
+    /// [`MembershipModel`] from `(p, seed, plan)` and thereafter charges
+    /// down steps to `lost_seconds`, fires barriers over survivors only,
+    /// and adds the re-entry restore surcharge.  Default: unsupported
+    /// no-op — only the event models implement it, and config validation
+    /// rejects `--faults` under lockstep before any model is built.
+    fn install_faults(&mut self, _seed: u64, _plan: &FaultPlan) {}
+
+    /// The learner whose late arrival set the barrier height at the most
+    /// recent [`ExecModel::on_reduction`] (first index on ties), if the
+    /// fault layer is installed and any learner participated.  The engine
+    /// feeds this to `SchedulePolicy::observe_culprit` so a persistent
+    /// straggler can be migrated instead of widening everyone's K2.
+    fn last_culprit(&self) -> Option<usize> {
+        None
+    }
+
+    /// Detach `learner` from its sub-top reduction groups (group
+    /// migration): from now on it barriers only at the outermost level.
+    /// Default no-op for models without a fault layer.
+    fn set_detached(&mut self, _learner: usize) {}
 }
 
 /// The legacy shared-clock model: every learner is charged the same step
@@ -337,6 +377,7 @@ impl ExecModel for LockstepModel {
             blocked_seconds: vec![0.0; self.p],
             idle_seconds: vec![0.0; self.p],
             level_stall_seconds: vec![0.0; self.n_levels],
+            lost_seconds: vec![0.0; self.p],
             straggler_events: 0,
         }
     }

@@ -23,7 +23,7 @@ use std::collections::BinaryHeap;
 use crate::algorithms::{HierSchedule, SchedulePolicy, StaticPolicy};
 use crate::topology::HierTopology;
 
-use super::{EventModel, ExecBreakdown, ExecModel, HetSpec};
+use super::{EventModel, ExecBreakdown, ExecModel, FaultPlan, HetSpec};
 
 /// Merged per-level event calendar of a static schedule: a min-heap of
 /// `(step, level)` nodes, one live node per level, each re-armed at its
@@ -176,6 +176,14 @@ pub struct TimelineStats {
     pub steps: u64,
     /// Barrier nodes fired (reduction events, all levels).
     pub reduction_events: u64,
+    /// Total time lost to preemption (down steps + restore surcharges);
+    /// 0 when no fault layer is installed.
+    pub lost_seconds_total: f64,
+    /// Preemptions observed on the timeline (0 without a fault layer).
+    pub preemptions: u64,
+    /// Checkpoint re-entries observed on the timeline (0 without a fault
+    /// layer).
+    pub reentries: u64,
 }
 
 impl TimelineStats {
@@ -199,8 +207,51 @@ pub fn replay_timeline_stats(
     level_seconds: &[f64],
     spec: &HetSpec,
 ) -> TimelineStats {
+    replay_stats_inner(topo, sched, horizon, step_seconds, level_seconds, spec, None)
+}
+
+/// [`replay_timeline_stats`] with an armed fault layer: the planner's
+/// fault-aware makespan estimator.  The membership trace forks from
+/// `spec.seed` on the dedicated fault stream, so the same `--seed` that
+/// fixes the straggler spikes fixes the outages — a candidate's price is
+/// a pure function of `(topology, schedule, spec, plan)`.  Note an armed
+/// fault layer forces per-learner state, so this path is O(horizon · P)
+/// like any heterogeneous replay — `sweep --faults` keeps its existing P
+/// bounds rather than riding the O(1) homogeneous fast path.
+///
+/// One deliberate approximation: each barrier is charged the full-group
+/// collective cost even when preemptions shrink it to a survivor subset
+/// (a live engine run reprices degraded groups to the survivor count via
+/// `reduce_level_survivors`).  The replay therefore upper-bounds the
+/// engine's fault-mode makespan slightly; the ranking only needs the
+/// relative ordering, and the pessimism lands on exactly the shapes that
+/// lean hardest on wide barriers.
+pub fn replay_timeline_stats_faults(
+    topo: &HierTopology,
+    sched: &HierSchedule,
+    horizon: u64,
+    step_seconds: f64,
+    level_seconds: &[f64],
+    spec: &HetSpec,
+    plan: &FaultPlan,
+) -> TimelineStats {
+    replay_stats_inner(topo, sched, horizon, step_seconds, level_seconds, spec, Some(plan))
+}
+
+fn replay_stats_inner(
+    topo: &HierTopology,
+    sched: &HierSchedule,
+    horizon: u64,
+    step_seconds: f64,
+    level_seconds: &[f64],
+    spec: &HetSpec,
+    plan: Option<&FaultPlan>,
+) -> TimelineStats {
     debug_assert_eq!(level_seconds.len(), topo.n_levels());
     let mut model = EventModel::new(topo.p(), topo.n_levels(), step_seconds, spec);
+    if let Some(plan) = plan {
+        model.install_faults(spec.seed, plan);
+    }
     let mut cal = EventCalendar::new(sched, horizon);
     let mut done = 0u64;
     let mut reduction_events = 0u64;
@@ -211,14 +262,19 @@ pub fn replay_timeline_stats(
         reduction_events += 1;
     }
     model.on_steps(horizon - done);
+    let makespan_seconds = model.now(); // flushes every learner first
+    let (preemptions, reentries) = model.fault_counts();
     TimelineStats {
-        makespan_seconds: model.now(),
+        makespan_seconds,
         busy_seconds_total: model.busy_seconds_total(),
         blocked_seconds_total: model.blocked_seconds_total(),
         level_stall_seconds: model.level_stall_seconds().to_vec(),
         straggler_events: model.straggler_events(),
         steps: horizon,
         reduction_events,
+        lost_seconds_total: model.lost_seconds_total(),
+        preemptions,
+        reentries,
     }
 }
 
@@ -274,5 +330,30 @@ mod tests {
         assert_eq!(s.steps, 128);
         assert_eq!(s.reduction_events, 32);
         assert_eq!(s.timeline_events(), 160);
+    }
+
+    #[test]
+    fn fault_replay_loses_time_and_stays_deterministic() {
+        use super::super::{FaultPlan, FaultSpec};
+        let topo = HierTopology::new(vec![4, 16]).unwrap();
+        let sched = HierSchedule::new(vec![4, 16]).unwrap();
+        let spec = HetSpec { het: 0.3, straggler_prob: 0.05, straggler_mult: 4.0, seed: 17 };
+        let secs = [1e-4, 1e-3];
+        let plan = FaultPlan::Sampled(FaultSpec { prob: 0.01, mttr: 10 });
+        let a = replay_timeline_stats_faults(&topo, &sched, 256, 1e-3, &secs, &spec, &plan);
+        let b = replay_timeline_stats_faults(&topo, &sched, 256, 1e-3, &secs, &spec, &plan);
+        assert_eq!(a.makespan_seconds.to_bits(), b.makespan_seconds.to_bits());
+        assert_eq!((a.preemptions, a.reentries), (b.preemptions, b.reentries));
+        assert!(a.preemptions > 0, "hazard 0.01 over 16×256 learner-steps fired nothing");
+        assert!(a.reentries > 0);
+        assert!(a.lost_seconds_total > 0.0);
+        // an armed-but-empty fault layer prices identically to no layer
+        let empty = FaultPlan::Sampled(FaultSpec { prob: 0.0, mttr: 10 });
+        let z = replay_timeline_stats_faults(&topo, &sched, 256, 1e-3, &secs, &spec, &empty);
+        let plain = replay_timeline_stats(&topo, &sched, 256, 1e-3, &secs, &spec);
+        assert_eq!(z.makespan_seconds.to_bits(), plain.makespan_seconds.to_bits());
+        assert_eq!(z.blocked_seconds_total.to_bits(), plain.blocked_seconds_total.to_bits());
+        assert_eq!(z.lost_seconds_total, 0.0);
+        assert_eq!((z.preemptions, z.reentries), (0, 0));
     }
 }

@@ -15,7 +15,10 @@
 use crate::topology::HierTopology;
 use crate::util::rng::Pcg32;
 
-use super::{ExecBreakdown, ExecKind, ExecModel, HetSpec, STRAGGLER_STREAM};
+use super::{
+    ExecBreakdown, ExecKind, ExecModel, FaultPlan, HetSpec, MembershipModel,
+    REENTRY_RESTORE_STEPS, STRAGGLER_STREAM,
+};
 
 /// The reference virtual-time event engine: per-learner clocks, group-local
 /// barriers, straggler spikes, all advanced by eager O(P) scans.
@@ -38,6 +41,21 @@ pub struct ScanEventModel {
     blocked: Vec<f64>,
     level_stalls: Vec<f64>,
     straggler_events: u64,
+    /// Steps announced so far — the 1-based ordinal membership queries use.
+    step: u64,
+    /// Elastic-membership layer (`--faults`), None when not installed.
+    faults: Option<MembershipModel>,
+    /// Was learner j down during the previous step?  Drives the
+    /// preemption/re-entry edge detection and the restore surcharge.
+    down_prev: Vec<bool>,
+    /// Learners migrated out of their sub-top groups: they barrier only
+    /// at the outermost level.
+    detached: Vec<bool>,
+    /// Per-learner time lost to outages (down steps + restore surcharge).
+    lost: Vec<f64>,
+    preemptions: u64,
+    reentries: u64,
+    last_culprit: Option<usize>,
 }
 
 impl ScanEventModel {
@@ -64,7 +82,30 @@ impl ScanEventModel {
             blocked: vec![0.0; p],
             level_stalls: vec![0.0; n_levels],
             straggler_events: 0,
+            step: 0,
+            faults: None,
+            down_prev: vec![false; p],
+            detached: vec![false; p],
+            lost: vec![0.0; p],
+            preemptions: 0,
+            reentries: 0,
+            last_culprit: None,
         }
+    }
+
+    /// Does learner `j` take part in a barrier at step `t`?  Down
+    /// learners never do; detached (migrated) learners rejoin only at the
+    /// outermost level.
+    fn participates(&mut self, j: usize, t: u64, top: bool) -> bool {
+        match self.faults.as_mut() {
+            Some(m) => !m.is_down(j, t) && (top || !self.detached[j]),
+            None => true,
+        }
+    }
+
+    /// Timeline-side fault counters: `(preemptions, reentries)`.
+    pub fn fault_counts(&self) -> (u64, u64) {
+        (self.preemptions, self.reentries)
     }
 }
 
@@ -76,8 +117,37 @@ impl ExecModel for ScanEventModel {
     }
 
     fn on_step(&mut self) {
+        self.step += 1;
+        let t = self.step;
         for j in 0..self.clocks.len() {
-            let mut dt = self.base * self.rates[j];
+            let dt_base = self.base * self.rates[j];
+            if let Some(m) = self.faults.as_mut() {
+                if m.is_down(j, t) {
+                    // A down step advances the learner's clock at its own
+                    // base rate (wall time passes while the machine is
+                    // gone) but is charged to `lost`, not `busy`, and
+                    // draws no straggler spike — the spike stream only
+                    // advances while the learner is up.
+                    if !self.down_prev[j] {
+                        self.preemptions += 1;
+                        self.down_prev[j] = true;
+                    }
+                    self.lost[j] += dt_base;
+                    self.clocks[j] += dt_base;
+                    continue;
+                }
+                if self.down_prev[j] {
+                    // First up step after an outage: pay the restore
+                    // surcharge (checkpoint read + warm sync) before the
+                    // step's own compute.
+                    self.down_prev[j] = false;
+                    self.reentries += 1;
+                    let restore = REENTRY_RESTORE_STEPS * dt_base;
+                    self.lost[j] += restore;
+                    self.clocks[j] += restore;
+                }
+            }
+            let mut dt = dt_base;
             // prob = 0 draws nothing, keeping the homogeneous path free of
             // RNG state (and bit-identical to lockstep).
             if self.spike_prob > 0.0 && self.rngs[j].next_f64() < self.spike_prob {
@@ -95,17 +165,44 @@ impl ExecModel for ScanEventModel {
         if topo.size(level) <= 1 && level + 1 < topo.n_levels() {
             return 0.0; // the reducer's no-op convention
         }
+        let t = self.step;
+        let top = level + 1 == topo.n_levels();
+        // Culprit tracking is a fault-layer feature: without one,
+        // `last_culprit` stays None (matching the heap core).
+        let track_culprit = self.faults.is_some();
+        self.last_culprit = None;
+        let mut best_clock = f64::NEG_INFINITY;
         let mut event_stall = 0.0;
         for g in 0..topo.n_groups(level) {
             let members = topo.group_members(level, g);
-            // Group-local barrier: members meet at the slowest arrival,
-            // then pay the collective together.  Other groups' clocks are
-            // untouched — they keep stepping.
-            let arrival = members
-                .clone()
-                .map(|j| self.clocks[j])
-                .fold(f64::NEG_INFINITY, f64::max);
+            // Group-local barrier over the group's *participants*: down
+            // learners — and, below the top, detached learners — neither
+            // wait nor are waited for, so the barrier degrades gracefully
+            // to the survivors.  Other groups' clocks are untouched —
+            // they keep stepping.  Without a fault layer everyone
+            // participates and this is the legacy max-arrival barrier,
+            // operation for operation.
+            let mut arrival = f64::NEG_INFINITY;
+            let mut any = false;
+            for j in members.clone() {
+                if self.participates(j, t, top) {
+                    any = true;
+                    if self.clocks[j] > arrival {
+                        arrival = self.clocks[j];
+                    }
+                    if track_culprit && self.clocks[j] > best_clock {
+                        best_clock = self.clocks[j];
+                        self.last_culprit = Some(j);
+                    }
+                }
+            }
+            if !any {
+                continue; // whole group down: the barrier never fires
+            }
             for j in members {
+                if !self.participates(j, t, top) {
+                    continue;
+                }
                 let wait = arrival - self.clocks[j];
                 self.blocked[j] += wait;
                 self.level_stalls[level] += wait;
@@ -129,7 +226,22 @@ impl ExecModel for ScanEventModel {
             blocked_seconds: self.blocked.clone(),
             idle_seconds: self.clocks.iter().map(|&c| makespan - c).collect(),
             level_stall_seconds: self.level_stalls.clone(),
+            lost_seconds: self.lost.clone(),
             straggler_events: self.straggler_events,
+        }
+    }
+
+    fn install_faults(&mut self, seed: u64, plan: &FaultPlan) {
+        self.faults = Some(MembershipModel::new(self.clocks.len(), seed, plan));
+    }
+
+    fn last_culprit(&self) -> Option<usize> {
+        self.last_culprit
+    }
+
+    fn set_detached(&mut self, learner: usize) {
+        if learner < self.detached.len() {
+            self.detached[learner] = true;
         }
     }
 }

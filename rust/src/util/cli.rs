@@ -204,4 +204,22 @@ mod tests {
         let typo = Args::parse(sv(&["train", "--stragler", "0.05"]), &[]).unwrap();
         assert!(typo.check_known(&["exec", "het", "straggler"]).is_err());
     }
+
+    #[test]
+    fn faults_flag_is_a_value_flag_and_guarded() {
+        // `--faults` is an ordinary value flag (both the PROB[:mttr] and
+        // trace forms); misspellings must not slip past check_known (the
+        // spec grammar itself is validated by `sim::parse_faults`).
+        let a = Args::parse(
+            sv(&["train", "--faults", "0.01:25", "--exec", "event"]),
+            &["record-steps", "help"],
+        )
+        .unwrap();
+        assert_eq!(a.get("faults"), Some("0.01:25"));
+        assert!(a.check_known(&["faults", "exec"]).is_ok());
+        let trace = Args::parse(sv(&["train", "--faults=trace:5@0x10"]), &[]).unwrap();
+        assert_eq!(trace.get("faults"), Some("trace:5@0x10"));
+        let typo = Args::parse(sv(&["train", "--fualts", "0.01"]), &[]).unwrap();
+        assert!(typo.check_known(&["faults", "exec"]).is_err());
+    }
 }

@@ -14,7 +14,8 @@
 use hier_avg::algorithms::{HierSchedule, StaticPolicy};
 use hier_avg::sim::{
     drive_timeline, drive_timeline_policy, replay_timeline, replay_timeline_stats,
-    EventCalendar, EventModel, ExecBreakdown, ExecModel, HetSpec, ScanEventModel,
+    EventCalendar, EventModel, ExecBreakdown, ExecModel, FaultPlan, FaultSpec, HetSpec,
+    ScanEventModel,
 };
 use hier_avg::topology::HierTopology;
 use hier_avg::util::rng::Pcg32;
@@ -34,6 +35,7 @@ fn assert_bitwise_eq(a: &ExecBreakdown, b: &ExecBreakdown, ctx: &str) {
         ("blocked", &a.blocked_seconds, &b.blocked_seconds),
         ("idle", &a.idle_seconds, &b.idle_seconds),
         ("level_stall", &a.level_stall_seconds, &b.level_stall_seconds),
+        ("lost", &a.lost_seconds, &b.lost_seconds),
     ] {
         assert_eq!(xa.len(), xb.len(), "{ctx}: {name} length");
         for (j, (x, y)) in xa.iter().zip(xb.iter()).enumerate() {
@@ -106,6 +108,94 @@ fn heap_core_matches_scan_reference_bitwise() {
         let mut policy = StaticPolicy::new();
         drive_timeline_policy(&mut heap2, &topo, &mut policy, &sched, horizon, &secs);
         assert_bitwise_eq(&scan.breakdown(), &heap2.breakdown(), &ctx);
+    }
+}
+
+#[test]
+fn heap_core_matches_scan_reference_under_faults() {
+    // The elastic layer must not split the two cores: with an armed fault
+    // plan, the heap model's timeline — lost-time ledger included — and
+    // its membership-event counts reproduce the scan reference bit for
+    // bit across random shapes and regimes.
+    let mut rng = Pcg32::seeded(0xFA_17);
+    for case in 0..20 {
+        let sizes = random_chain(&mut rng);
+        let topo = HierTopology::new(sizes.clone()).unwrap();
+        let ks = random_intervals(&mut rng, topo.n_levels());
+        let sched = HierSchedule::new(ks.clone()).unwrap();
+        let spec = HetSpec {
+            het: 0.4,
+            straggler_prob: 0.05,
+            straggler_mult: 3.0,
+            seed: 500 + case as u64,
+        };
+        let plan = FaultPlan::Sampled(FaultSpec { prob: 0.02, mttr: 6 });
+        let horizon = 50 + rng.next_below(151) as u64;
+        let secs: Vec<f64> = (0..topo.n_levels()).map(|l| 1e-4 * (l + 1) as f64).collect();
+        let ctx = format!("case {case}: sizes={sizes:?} ks={ks:?} horizon={horizon}");
+
+        let mut scan = ScanEventModel::new(topo.p(), topo.n_levels(), 1e-3, &spec);
+        scan.install_faults(spec.seed, &plan);
+        drive_timeline(&mut scan, &topo, &sched, horizon, &secs);
+        let mut heap = EventModel::new(topo.p(), topo.n_levels(), 1e-3, &spec);
+        heap.install_faults(spec.seed, &plan);
+        drive_timeline(&mut heap, &topo, &sched, horizon, &secs);
+        assert_eq!(scan.now().to_bits(), heap.now().to_bits(), "{ctx}: now()");
+        assert_bitwise_eq(&scan.breakdown(), &heap.breakdown(), &ctx);
+        assert_eq!(scan.fault_counts(), heap.fault_counts(), "{ctx}: fault counts");
+
+        // ... and through the per-step policy driver too.
+        let mut heap2 = EventModel::new(topo.p(), topo.n_levels(), 1e-3, &spec);
+        heap2.install_faults(spec.seed, &plan);
+        let mut policy = StaticPolicy::new();
+        drive_timeline_policy(&mut heap2, &topo, &mut policy, &sched, horizon, &secs);
+        assert_bitwise_eq(&scan.breakdown(), &heap2.breakdown(), &ctx);
+    }
+}
+
+#[test]
+fn fault_timeline_conserves_per_learner_time() {
+    // Every learner's ledger must close: with zero collective costs,
+    // busy + blocked + lost + idle = makespan for each learner — a
+    // preempted step's time lands in exactly one bucket (lost), never
+    // two and never none.
+    let topo = HierTopology::new(vec![4, 32]).unwrap();
+    let sched = HierSchedule::new(vec![2, 8]).unwrap();
+    let spec = HetSpec { het: 0.5, straggler_prob: 0.1, straggler_mult: 4.0, seed: 21 };
+    let plan = FaultPlan::Sampled(FaultSpec { prob: 0.03, mttr: 8 });
+    let secs = [0.0, 0.0];
+    for scan_core in [true, false] {
+        let b = if scan_core {
+            let mut m = ScanEventModel::new(32, 2, 1e-3, &spec);
+            m.install_faults(spec.seed, &plan);
+            drive_timeline(&mut m, &topo, &sched, 256, &secs);
+            let (pre, re) = m.fault_counts();
+            assert!(pre > 0 && re > 0, "fault stream drew nothing");
+            m.breakdown()
+        } else {
+            let mut m = EventModel::new(32, 2, 1e-3, &spec);
+            m.install_faults(spec.seed, &plan);
+            drive_timeline(&mut m, &topo, &sched, 256, &secs);
+            m.breakdown()
+        };
+        let lost_total: f64 = b.lost_seconds.iter().sum();
+        assert!(lost_total > 0.0, "no time was ever lost to preemption");
+        for j in 0..32 {
+            let total = b.busy_seconds[j]
+                + b.blocked_seconds[j]
+                + b.lost_seconds[j]
+                + b.idle_seconds[j];
+            assert!(
+                (total - b.makespan_seconds).abs() <= 1e-9 * b.makespan_seconds,
+                "learner {j} (scan={scan_core}): busy {} + blocked {} + lost {} + idle {} \
+                 != makespan {}",
+                b.busy_seconds[j],
+                b.blocked_seconds[j],
+                b.lost_seconds[j],
+                b.idle_seconds[j],
+                b.makespan_seconds
+            );
+        }
     }
 }
 

@@ -70,6 +70,28 @@ fn run_straggler() -> RunRecord {
     planner::validation_record(&cfg).unwrap()
 }
 
+/// The elastic scenario pinned by the faults golden: the straggler
+/// scenario with the fault layer armed — seeded spot preemptions (hazard
+/// 0.1 per live learner-step, repair after 4 virtual steps), survivor
+/// reductions, checkpoint re-entries.  Every membership event and every
+/// reweighted average is a pure function of the seeded timeline and must
+/// stay byte-stable.
+fn run_faults() -> RunRecord {
+    let mut cfg = planner::validation_config(
+        &golden_candidate(),
+        "quickstart",
+        CollectiveKind::Simulated,
+    )
+    .unwrap();
+    cfg.exec = ExecKind::Event;
+    cfg.het = 0.25;
+    cfg.straggler_prob = 0.1;
+    cfg.straggler_mult = 4.0;
+    cfg.faults = Some(hier_avg::sim::parse_faults("0.1:4").unwrap());
+    cfg.validate().unwrap();
+    planner::validation_record(&cfg).unwrap()
+}
+
 /// The golden JSON with the execution-model *name* neutralized: the
 /// determinism contract says a homogeneous event run matches lockstep on
 /// every byte of the golden view except `exec.model` itself.
@@ -193,6 +215,69 @@ fn golden_trace_adaptive_straggler() {
     let rec = planner::validation_record(&cfg).unwrap();
     assert_eq!(rec.schedule.as_ref().unwrap().policy, "adaptive:0.05");
     check_golden("validation_adaptive_straggler", &rec);
+}
+
+/// Pins the elastic-membership layer end to end: the preemption trace,
+/// survivor-reduction parameter math, warm-sync re-entries, and the
+/// faults accounting block must all stay byte-stable.
+#[test]
+fn golden_trace_faults_simulated() {
+    check_golden("validation_faults_simulated", &run_faults());
+}
+
+/// The fault scenario genuinely exercises the elastic machinery — and
+/// still trains: losses stay finite through every preemption and
+/// recovery.
+#[test]
+fn fault_run_reports_membership_events() {
+    let rec = run_faults();
+    let f = rec.faults.as_ref().expect("fault-armed run must carry a faults block");
+    assert!(f.preemptions > 0, "hazard 0.1 over the run fired no preemption");
+    assert!(f.reentries > 0, "no learner recovered within the run");
+    assert_eq!(f.checkpoint_restores, f.reentries, "every re-entry restores");
+    assert!(f.survivor_reductions > 0, "no barrier ever degraded");
+    assert!(f.lost_seconds > 0.0);
+    assert!(f.membership_epoch >= f.preemptions.min(f.reentries));
+    for e in &rec.epochs {
+        assert!(e.train_loss.is_finite() && e.test_loss.is_finite(), "loss diverged");
+    }
+}
+
+/// The fault layer's determinism contract: `--faults 0` arms the layer
+/// (membership machinery installed, zero events drawn) and is
+/// bit-identical to the plain event run on every golden byte except the
+/// faults block itself — across all three collectives.
+#[test]
+fn zero_fault_run_is_bit_identical_to_plain_event() {
+    for collective in [
+        CollectiveKind::Simulated,
+        CollectiveKind::Sharded { threads: 3 },
+        CollectiveKind::Pooled { threads: 2 },
+    ] {
+        let plain = run_with_exec(collective, ExecKind::Event);
+        let mut cfg =
+            planner::validation_config(&golden_candidate(), "quickstart", collective)
+                .unwrap();
+        cfg.exec = ExecKind::Event;
+        cfg.faults = Some(hier_avg::sim::parse_faults("0").unwrap());
+        cfg.validate().unwrap();
+        let mut armed = planner::validation_record(&cfg).unwrap();
+        let f = armed.faults.take().expect("armed run must carry a faults block");
+        assert_eq!(
+            (f.preemptions, f.reentries, f.checkpoint_restores, f.migrations),
+            (0, 0, 0, 0),
+            "--faults 0 drew a membership event ({collective:?})"
+        );
+        assert_eq!(f.survivor_reductions, 0);
+        assert_eq!(f.lost_seconds, 0.0);
+        assert_eq!(f.membership_epoch, 0);
+        // With the (all-zero) faults block stripped, every byte matches.
+        assert_eq!(
+            plain.to_golden_json().pretty(),
+            armed.to_golden_json().pretty(),
+            "--faults 0 perturbed the event run ({collective:?})"
+        );
+    }
 }
 
 /// The load-bearing invariant of the execution-model layer: with

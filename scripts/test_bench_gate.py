@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Unit tests for scripts/bench_gate.py (run: python3 scripts/test_bench_gate.py).
+
+The gate guards the perf trajectory, so its own arming/threshold logic
+must be pinned: a placeholder baseline must stay unarmed, a >20% median
+regression must fail, renames must warn rather than silently un-gate,
+and new benches must pass until their baseline is committed.
+"""
+
+import importlib.util
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_gate", os.path.join(_HERE, "bench_gate.py")
+)
+bench_gate = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_gate)
+
+
+def report(group, benches, note=None):
+    out = {"group": group, "target_sample_ms": 80, "benches": benches}
+    if note is not None:
+        out["note"] = note
+    return out
+
+
+def bench(ns):
+    return {"ns_per_iter": ns, "samples": 5}
+
+
+class GateGroupTests(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.dir = self._tmp.name
+        self.baseline_dir = os.path.join(self.dir, "baseline")
+        os.makedirs(self.baseline_dir)
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def write(self, where, name, payload):
+        path = os.path.join(where, name)
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        return path
+
+    def gate(self, fresh, baseline=None):
+        if baseline is not None:
+            self.write(self.baseline_dir, "BENCH_t.json", baseline)
+        fresh_path = self.write(self.dir, "BENCH_t.json", fresh)
+        return bench_gate.gate_group(fresh_path, self.baseline_dir)
+
+    def test_missing_baseline_is_unarmed(self):
+        failures = self.gate(report("t", {"a": bench(100.0)}))
+        self.assertEqual(failures, [])
+
+    def test_placeholder_note_is_unarmed(self):
+        base = report("t", {"a": bench(1.0)}, note="schema placeholder")
+        fresh = report("t", {"a": bench(1e9)})
+        self.assertEqual(self.gate(fresh, base), [])
+
+    def test_empty_benches_is_unarmed(self):
+        base = report("t", {})
+        fresh = report("t", {"a": bench(1e9)})
+        self.assertEqual(self.gate(fresh, base), [])
+
+    def test_within_threshold_passes(self):
+        frac = bench_gate.REGRESSION_FRAC
+        base = report("t", {"a": bench(100.0), "b": bench(200.0)})
+        fresh = report(
+            "t", {"a": bench(100.0 * (1.0 + frac)), "b": bench(150.0)}
+        )
+        self.assertEqual(self.gate(fresh, base), [])
+
+    def test_regression_beyond_threshold_fails(self):
+        frac = bench_gate.REGRESSION_FRAC
+        base = report("t", {"a": bench(100.0), "b": bench(200.0)})
+        fresh = report("t", {"a": bench(100.0 * (1.0 + frac) + 1.0), "b": bench(200.0)})
+        failures = self.gate(fresh, base)
+        self.assertEqual(len(failures), 1)
+        self.assertEqual(failures[0][0], "a")
+
+    def test_zero_baseline_regression_is_infinite(self):
+        base = report("t", {"a": bench(0.0)})
+        fresh = report("t", {"a": bench(5.0)})
+        failures = self.gate(fresh, base)
+        self.assertEqual(len(failures), 1)
+        self.assertEqual(failures[0][3], float("inf"))
+
+    def test_bench_missing_from_fresh_run_warns_not_fails(self):
+        base = report("t", {"renamed_away": bench(100.0)})
+        fresh = report("t", {"new_name": bench(100.0)})
+        self.assertEqual(self.gate(fresh, base), [])
+
+    def test_new_bench_is_ungated(self):
+        base = report("t", {"a": bench(100.0)})
+        fresh = report("t", {"a": bench(100.0), "fresh_case": bench(1e9)})
+        self.assertEqual(self.gate(fresh, base), [])
+
+    def test_main_exit_codes(self):
+        base = report("t", {"a": bench(100.0)})
+        self.write(self.baseline_dir, "BENCH_t.json", base)
+        ok = self.write(self.dir, "BENCH_t.json", report("t", {"a": bench(90.0)}))
+        self.assertEqual(bench_gate.main(["bench_gate.py", self.baseline_dir, ok]), 0)
+        bad = self.write(self.dir, "BENCH_t.json", report("t", {"a": bench(500.0)}))
+        self.assertEqual(bench_gate.main(["bench_gate.py", self.baseline_dir, bad]), 1)
+        self.assertEqual(bench_gate.main(["bench_gate.py"]), 2)
+
+
+if __name__ == "__main__":
+    unittest.main()
