@@ -1,0 +1,66 @@
+//! Payload-compression hot path: what one learner's `compress_split`
+//! costs per barrier at n_params ∈ {4k, 256k}, and what the
+//! `CompressedCollective` wrapper adds on top of the dense simulated
+//! engine for a full 8-learner group barrier.
+//!
+//! Top-k carries the O(n log n) magnitude sort, rand-k the partial
+//! Fisher–Yates, q8/q4 a pure per-coordinate pass — the `dense` rows
+//! (spec `none`) are the floor the lossy variants are judged against
+//! (`BENCH_compress.json`).
+
+mod benchkit;
+
+use hier_avg::comm::compress::compress_split;
+use hier_avg::comm::{Collective, CompressedCollective, Compression, SimulatedCollective};
+use hier_avg::params::FlatParams;
+use hier_avg::util::rng::Pcg32;
+
+const SPECS: [&str; 5] = ["none", "topk:0.05", "randk:0.05", "q8", "q4"];
+
+fn main() {
+    let mut b = benchkit::Bench::new("compress");
+    // One learner's split at two payload scales (quickstart-sized and a
+    // quarter-million-parameter model).
+    for &n in &[4096usize, 262_144] {
+        let acc: Vec<f32> = {
+            let mut rng = Pcg32::seeded(0xACC);
+            (0..n).map(|_| rng.next_normal()).collect()
+        };
+        let mut t = vec![0.0f32; n];
+        let mut e = vec![0.0f32; n];
+        for spec_str in SPECS {
+            let spec = Compression::parse(spec_str).unwrap();
+            let label = format!("split/{}/n{n}", spec_str.replace(':', ""));
+            let mut rng = Pcg32::seeded(0x5EED);
+            b.bench_with_throughput(&label, n * 4, || {
+                std::hint::black_box(compress_split(spec, &acc, &mut t, &mut e, &mut rng));
+            });
+        }
+    }
+    // A full group barrier through the wrapper vs the bare dense engine:
+    // the wrapper's delta/reference bookkeeping plus P splits.
+    let (p, n) = (8usize, 4096usize);
+    let base: Vec<FlatParams> = {
+        let mut rng = Pcg32::seeded(0xF1EE7);
+        (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect()
+    };
+    let mut scratch = vec![0.0f32; n];
+    {
+        let mut replicas = base.clone();
+        b.bench(&format!("group/dense/p{p}/n{n}"), || {
+            SimulatedCollective.average_group(&mut replicas, 0..p, &mut scratch);
+            std::hint::black_box(&replicas);
+        });
+    }
+    for spec_str in ["topk:0.05", "randk:0.05", "q8", "q4"] {
+        let spec = Compression::parse(spec_str).unwrap();
+        let (cc, _state) = CompressedCollective::new(Box::new(SimulatedCollective), spec, 42);
+        let mut replicas = base.clone();
+        let label = format!("group/{}/p{p}/n{n}", spec_str.replace(':', ""));
+        b.bench(&label, || {
+            cc.average_group(&mut replicas, 0..p, &mut scratch);
+            std::hint::black_box(&replicas);
+        });
+    }
+    b.finish();
+}

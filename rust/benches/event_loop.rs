@@ -116,6 +116,11 @@ fn main() {
     let plan = FaultPlan::Sampled(FaultSpec { prob: 0.01, mttr: 10 });
     for &p in &[64usize, 1024] {
         let topo = HierTopology::new(vec![64, p]).unwrap();
+        // survivor pricing scales the level charge by the participant
+        // fraction — shape-realistic without dragging in a CostModel
+        let survivor = |level: usize, n_part: usize| {
+            level_seconds[level] * n_part as f64 / topo.size(level) as f64
+        };
         b.bench_units(&format!("replay_timeline_only_faults/p{p}/4096steps"), units, || {
             std::hint::black_box(replay_timeline_stats_faults(
                 &topo,
@@ -125,6 +130,7 @@ fn main() {
                 &level_seconds,
                 &straggler,
                 &plan,
+                &survivor,
             ));
         });
     }

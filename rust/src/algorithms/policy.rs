@@ -339,6 +339,16 @@ pub trait SchedulePolicy: std::fmt::Debug + Send {
         None
     }
 
+    /// Learners this policy has already migrated to outermost-only
+    /// cadence (granted via [`SchedulePolicy::take_migration`], including
+    /// migrations restored from a checkpoint).  The engine re-applies
+    /// these as detachments when a resumed run rebuilds its fault
+    /// runtime, so a warm restart does not silently re-attach a learner
+    /// the saving run had already given up on.  Default: none.
+    fn migrated_learners(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
     /// The interval table currently in effect (the base schedule's, for
     /// policies that never deviate from it).
     fn intervals(&self, base: &HierSchedule) -> Vec<u64>;
@@ -695,6 +705,10 @@ impl SchedulePolicy for AdaptivePolicy {
         self.pending_migration.take()
     }
 
+    fn migrated_learners(&self) -> Vec<usize> {
+        (0..self.migrated.len()).filter(|&l| self.migrated[l]).collect()
+    }
+
     fn intervals(&self, base: &HierSchedule) -> Vec<u64> {
         if self.current.is_empty() {
             base.intervals().to_vec()
@@ -707,11 +721,14 @@ impl SchedulePolicy for AdaptivePolicy {
         &self.changes
     }
 
-    // Migration bookkeeping is deliberately NOT serialized in `state()`:
-    // membership is owned by the run's fault layer (a resumed run
-    // re-derives outages from its own seeded trace), and keeping the
-    // sidecar schema unchanged is what keeps pre-fault checkpoints and
-    // the adaptive goldens byte-stable.
+    // The `migration` sub-object is emitted only once the controller has
+    // actually touched membership (a migration granted, a streak in
+    // flight): a fault-free or pre-migration run serializes exactly the
+    // pre-elastic schema, so those sidecars — and the adaptive goldens —
+    // stay byte-stable.  Omitting it when non-default would silently
+    // reset detachment decisions on warm restart (the learner would be
+    // re-attached and the streak forgotten), so it is always written the
+    // moment there is anything to lose.
     fn state(&self) -> Json {
         let mut o = Json::obj();
         o.set("offset", Json::from(self.last_t.max(self.offset) as usize))
@@ -732,6 +749,26 @@ impl SchedulePolicy for AdaptivePolicy {
                 "quiet",
                 Json::Arr(self.quiet.iter().map(|&q| Json::from(q as usize)).collect()),
             );
+        if self.migrations_done > 0
+            || self.culprit_streak > 0
+            || self.pending_migration.is_some()
+        {
+            let mut m = Json::obj();
+            m.set("done", Json::from(self.migrations_done)).set(
+                "migrated",
+                Json::Arr(
+                    self.migrated_learners().into_iter().map(Json::from).collect(),
+                ),
+            );
+            m.set("streak", Json::from(self.culprit_streak as usize));
+            if let Some(c) = self.last_culprit {
+                m.set("culprit", Json::from(c));
+            }
+            if let Some(p) = self.pending_migration {
+                m.set("pending", Json::from(p));
+            }
+            o.set("migration", m);
+        }
         o
     }
 
@@ -816,6 +853,94 @@ impl SchedulePolicy for AdaptivePolicy {
                  steps the saving run completed",
                 self.offset
             );
+        }
+        // Migration bookkeeping: absent in pre-elastic sidecars (and in
+        // any run that never touched membership) — restore to the
+        // all-clear default.  When present, every invariant the live
+        // controller maintains is re-checked, because a warm restart
+        // acts on this table (the engine re-detaches `migrated`): a
+        // corrupt sidecar must fail loudly, never silently re-attach or
+        // over-migrate.
+        self.last_culprit = None;
+        self.culprit_streak = 0;
+        self.pending_migration = None;
+        self.migrated = vec![false; self.p];
+        self.migrations_done = 0;
+        if let Some(m) = state.get("migration") {
+            let done = m.req("done")?.as_usize()?;
+            let migrated = m.req("migrated")?.usize_arr()?;
+            if migrated.len() != done {
+                bail!(
+                    "adaptive migration state is inconsistent: done = {done} but {} \
+                     migrated learners listed",
+                    migrated.len()
+                );
+            }
+            if done > self.migration_cap() {
+                bail!(
+                    "adaptive migration state is inconsistent: {done} migrations past \
+                     the cap of {} for P = {}",
+                    self.migration_cap(),
+                    self.p
+                );
+            }
+            for w in migrated.windows(2) {
+                if w[0] >= w[1] {
+                    bail!(
+                        "adaptive migration state is inconsistent: migrated learners \
+                         {migrated:?} are not strictly increasing"
+                    );
+                }
+            }
+            for &l in &migrated {
+                if l >= self.p {
+                    bail!(
+                        "adaptive migration state is inconsistent: migrated learner {l} \
+                         out of range for P = {}",
+                        self.p
+                    );
+                }
+                self.migrated[l] = true;
+            }
+            self.migrations_done = done;
+            let streak = m.req("streak")?.as_usize()?;
+            self.culprit_streak = streak.min(u32::MAX as usize) as u32;
+            self.last_culprit = match m.get("culprit") {
+                Some(c) => Some(c.as_usize()?),
+                None => None,
+            };
+            match (streak > 0, self.last_culprit) {
+                (true, None) => bail!(
+                    "adaptive migration state is inconsistent: a culprit streak of \
+                     {streak} with no culprit learner"
+                ),
+                (false, Some(c)) => bail!(
+                    "adaptive migration state is inconsistent: culprit learner {c} \
+                     with a zero streak"
+                ),
+                _ => {}
+            }
+            if let Some(c) = self.last_culprit {
+                if c >= self.p {
+                    bail!(
+                        "adaptive migration state is inconsistent: culprit learner {c} \
+                         out of range for P = {}",
+                        self.p
+                    );
+                }
+            }
+            self.pending_migration = match m.get("pending") {
+                Some(pm) => Some(pm.as_usize()?),
+                None => None,
+            };
+            if let Some(pm) = self.pending_migration {
+                if pm >= self.p || !self.migrated[pm] {
+                    bail!(
+                        "adaptive migration state is inconsistent: pending migration \
+                         {pm} is not among the migrated learners {migrated:?}"
+                    );
+                }
+            }
         }
         self.last_t = self.offset;
         Ok(())
@@ -1175,6 +1300,144 @@ mod tests {
         // Corrupt state is rejected.
         let mut broken = AdaptivePolicy::new(0.25, 1.0, 64, 1e-3, 8);
         assert!(broken.restore(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn migration_state_roundtrips_through_the_sidecar() {
+        // PR 7 regression: migration bookkeeping must survive a warm
+        // restart — a resumed controller that forgot its detachments
+        // would re-attach the straggler and re-burn a migration slot on
+        // it.
+        let base = sched(&[2, 8]);
+        let p = 32;
+        let step = 1e-3;
+        let mut a = AdaptivePolicy::new(0.25, 1.0, 64, step, p);
+        for i in 0..(MIGRATE_STREAK as u64 + 2) {
+            let t = (i + 1) * 8;
+            let level = a.decide(t, &base).unwrap();
+            let budget = p as f64 * a.intervals(&base)[level] as f64 * step;
+            a.observe_culprit(t, level, 7, budget, 1e-6);
+        }
+        assert_eq!(a.take_migration(), Some(7));
+        assert_eq!(a.migrated_learners(), vec![7]);
+        // Build a fresh streak (not yet a migration) so the in-flight
+        // counters roundtrip too.
+        let t = 100 * 8;
+        let level = a.decide(t, &base).unwrap();
+        let budget = p as f64 * a.intervals(&base)[level] as f64 * step;
+        a.observe_culprit(t, level, 19, budget, 1e-6);
+
+        let state = a.state();
+        let m = state.req("migration").unwrap();
+        assert_eq!(m.req("done").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(m.req("migrated").unwrap().usize_arr().unwrap(), vec![7]);
+        assert_eq!(m.req("streak").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(m.req("culprit").unwrap().as_usize().unwrap(), 19);
+
+        let mut b = AdaptivePolicy::new(0.25, 1.0, 64, step, p);
+        b.restore(&state).unwrap();
+        assert_eq!(b.migrated_learners(), vec![7], "detachments lost on restore");
+        // The restored streak continues: learner 19 needs only the
+        // remaining expensive barriers, same as the original.
+        let mut granted = (None, None);
+        for (who, pol) in [(0, &mut a), (1, &mut b)] {
+            for i in 0..MIGRATE_STREAK as u64 {
+                let t = (200 + i + 1) * 8;
+                let level = pol.decide(t, &base).unwrap();
+                let budget = p as f64 * pol.intervals(&base)[level] as f64 * step;
+                pol.observe_culprit(t, level, 19, budget, 1e-6);
+                if let Some(g) = pol.take_migration() {
+                    let slot = if who == 0 { &mut granted.0 } else { &mut granted.1 };
+                    assert!(slot.is_none());
+                    *slot = Some((i, g));
+                }
+            }
+        }
+        assert_eq!(granted.0, granted.1, "restored streak diverged from the original");
+        assert!(granted.0.is_some(), "setup: streak never completed");
+        // A migration pending (granted, not yet drained by the engine)
+        // also survives.
+        let state = a.state();
+        assert_eq!(state.req("migration").unwrap().req("done").unwrap().as_usize().unwrap(), 2);
+        let mut c = AdaptivePolicy::new(0.25, 1.0, 64, step, p);
+        // a's pending was drained in the loop above; fabricate one via a
+        // fresh grant on a restored copy instead.
+        c.restore(&state).unwrap();
+        assert_eq!(c.migrated_learners(), vec![7, 19]);
+        assert_eq!(c.take_migration(), None, "no pending migration was saved");
+        // Legacy sidecar (no migration block) restores to the all-clear
+        // default — pre-elastic checkpoints stay loadable.
+        let legacy = match a.state() {
+            Json::Obj(mut kvs) => {
+                kvs.remove("migration");
+                Json::Obj(kvs)
+            }
+            other => other,
+        };
+        let mut d = AdaptivePolicy::new(0.25, 1.0, 64, step, p);
+        d.restore(&legacy).unwrap();
+        assert!(d.migrated_learners().is_empty());
+    }
+
+    #[test]
+    fn pending_migration_roundtrips() {
+        let base = sched(&[2, 8]);
+        let p = 32;
+        let step = 1e-3;
+        let mut a = AdaptivePolicy::new(0.25, 1.0, 64, step, p);
+        for i in 0..(MIGRATE_STREAK as u64 + 2) {
+            let t = (i + 1) * 8;
+            let level = a.decide(t, &base).unwrap();
+            let budget = p as f64 * a.intervals(&base)[level] as f64 * step;
+            a.observe_culprit(t, level, 7, budget, 1e-6);
+        }
+        // NOT drained: the checkpoint fired between the grant and the
+        // engine's poll.
+        let state = a.state();
+        assert_eq!(state.req("migration").unwrap().req("pending").unwrap().as_usize().unwrap(), 7);
+        let mut b = AdaptivePolicy::new(0.25, 1.0, 64, step, p);
+        b.restore(&state).unwrap();
+        assert_eq!(b.take_migration(), Some(7), "pending migration lost on restore");
+        assert_eq!(b.take_migration(), None);
+    }
+
+    #[test]
+    fn restore_rejects_corrupt_migration_state() {
+        let table = r#""anchors": [8, 0], "base": [2, 8], "intervals": [2, 8], "ratio": [0, 0], "quiet": [0, 0]"#;
+        let cases = [
+            // done disagrees with the migrated list
+            r#"{"done": 2, "migrated": [7], "streak": 0}"#,
+            // past the cap (P = 32 -> cap 2)
+            r#"{"done": 3, "migrated": [3, 7, 9], "streak": 0}"#,
+            // out-of-range learner
+            r#"{"done": 1, "migrated": [99], "streak": 0}"#,
+            // duplicate / unsorted list
+            r#"{"done": 2, "migrated": [7, 7], "streak": 0}"#,
+            // a streak with no culprit
+            r#"{"done": 0, "migrated": [], "streak": 3}"#,
+            // a culprit with no streak
+            r#"{"done": 0, "migrated": [], "streak": 0, "culprit": 7}"#,
+            // out-of-range culprit
+            r#"{"done": 0, "migrated": [], "streak": 2, "culprit": 99}"#,
+            // pending not among the migrated
+            r#"{"done": 1, "migrated": [7], "streak": 0, "pending": 9}"#,
+            // missing required field
+            r#"{"done": 1, "migrated": [7]}"#,
+        ];
+        for m in cases {
+            let s = format!(r#"{{"offset": 10, {table}, "migration": {m}}}"#);
+            let state = Json::parse(&s).unwrap();
+            let mut pol = AdaptivePolicy::new(0.25, 1.0, 64, 1e-3, 32);
+            assert!(pol.restore(&state).is_err(), "accepted corrupt migration state {m}");
+        }
+        // The same table with a consistent block is accepted (the harness
+        // above is testing the block, not the table).
+        let ok = format!(
+            r#"{{"offset": 10, {table}, "migration": {{"done": 1, "migrated": [7], "streak": 2, "culprit": 9}}}}"#
+        );
+        let mut pol = AdaptivePolicy::new(0.25, 1.0, 64, 1e-3, 32);
+        pol.restore(&Json::parse(&ok).unwrap()).unwrap();
+        assert_eq!(pol.migrated_learners(), vec![7]);
     }
 
     #[test]

@@ -1,0 +1,594 @@
+//! Payload compression for the collective stack: sparsification (top-k /
+//! random-k) and low-bit linear quantization (q8 / q4), each with a
+//! per-learner error-feedback residual accumulator.
+//!
+//! The paper trades global for local reduction to cut *how often* learners
+//! communicate; this layer is the orthogonal axis — *how much* each barrier
+//! moves.  The design follows the error-feedback sparsified-SGD line
+//! (Stich, Cordonnier & Jaggi, 2018): what a learner fails to transmit is
+//! kept in a local residual and re-offered at the next barrier, so nothing
+//! is ever silently dropped.
+//!
+//! ## What is compressed
+//!
+//! Collectives here average *parameters*, not gradients, so compressing the
+//! raw vectors would destroy them (a top-5% mask zeroes 95% of the model).
+//! Instead each learner transmits its **delta from a reference point**: the
+//! parameter value it held right after its last compressed barrier.  For
+//! learner `j` with reference `ref_j` and residual `e_j`:
+//!
+//! ```text
+//! acc_j = (x_j − ref_j) + e_j          // accumulated untransmitted update
+//! t_j   = C(acc_j)                     // compressed payload (what is sent)
+//! e_j'  = acc_j − t_j                  // error feedback, kept locally
+//! mean  = mean_j(ref_j) + mean_j(t_j)  // new group value
+//! x_j, ref_j ← mean  for every member
+//! ```
+//!
+//! `mean_j(ref_j)` is *not* transmitted: every member tracks its peers'
+//! references locally (they are deterministic — each barrier leaves all
+//! members on the same value), the same bookkeeping CHOCO-SGD style
+//! gossip methods use.  Only `t_j` crosses the wire and only `t_j` is
+//! priced.  With `C = identity` the barrier is an exact mean; with lossy
+//! `C` the residual `e_j'` carries the shortfall forward.
+//!
+//! ## Wire format (what `payload_bytes` prices)
+//!
+//! Sparse payloads use an index-exchange format modeled on a sparse
+//! reduce-scatter: a 4-byte count header plus `(u32 index, f32 value)`
+//! pairs for the k selected coordinates.  Shard ownership ("skip
+//! self-owned rows") is already captured by the per-strategy allreduce
+//! byte formulas in [`CostModel`](crate::comm::cost::CostModel) — e.g. the
+//! ring's `(n−1)/n` factor — so the payload here is the full k-pair
+//! message and the strategy scales it.  Quantized payloads are a scale +
+//! count header plus 1 byte (q8) or a half byte (q4) per coordinate.
+//! Every encoding is capped at the dense size: a compressed barrier never
+//! prices more than `4·n_params` bytes per message.
+//!
+//! ## Determinism contract
+//!
+//! Top-k selects by magnitude with ties broken toward the lower index —
+//! no RNG, bit-stable across collectives and thread counts.  Random-k
+//! draws from a dedicated `Pcg32` stream seeded by `(run seed, learner,
+//! per-learner round counter)`, so selection depends only on the run
+//! config and how many barriers the learner has participated in — never
+//! on group iteration order or the engine's thread count.  Quantization
+//! is pure per-coordinate arithmetic.  The wrapper serializes barrier
+//! math behind a mutex; the wrapped engine still moves the dense mean of
+//! references however it likes, so `--collective` stays a pure
+//! throughput knob.
+//!
+//! With `--compress none` no wrapper is constructed at all: the dense
+//! path is the exact legacy code, bit-identical to every existing golden.
+
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::comm::collective::Collective;
+use crate::params::FlatParams;
+use crate::util::rng::Pcg32;
+
+/// Dedicated RNG stream for random-k index draws (disjoint from the
+/// dataset/init/fault streams).
+const COMPRESS_STREAM: u64 = 0xc0_11ec71;
+
+/// Config-level compression selector.  `Copy` so the planner's `ScoreCtx`
+/// and candidate set stay copyable.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Compression {
+    /// Dense payloads; the exact legacy path (no wrapper is built).
+    #[default]
+    None,
+    /// Keep the `ratio` fraction of coordinates with the largest
+    /// magnitude (deterministic, ties toward the lower index).
+    TopK { ratio: f64, ef: bool },
+    /// Keep a seeded uniform sample of `ratio · n` coordinates.
+    RandK { ratio: f64, ef: bool },
+    /// 8-bit linear quantization (scale = max|acc| / 127).
+    Q8 { ef: bool },
+    /// 4-bit linear quantization (scale = max|acc| / 7).
+    Q4 { ef: bool },
+}
+
+impl Compression {
+    /// Parse `none | topk:RATIO | randk:RATIO | q8 | q4`, each with an
+    /// optional trailing `:ef` / `:noef` (error feedback defaults to on).
+    pub fn parse(s: &str) -> Result<Compression> {
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or("");
+        let mut rest: Vec<&str> = parts.collect();
+        let ef = match rest.last() {
+            Some(&"ef") => {
+                rest.pop();
+                true
+            }
+            Some(&"noef") => {
+                rest.pop();
+                false
+            }
+            _ => true,
+        };
+        let ratio_of = |rest: &[&str]| -> Result<f64> {
+            let [r] = rest else {
+                bail!("compression {s:?} wants exactly one ratio (e.g. topk:0.05)");
+            };
+            let ratio: f64 = r
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad compression ratio {r:?} in {s:?}"))?;
+            if !(ratio > 0.0 && ratio <= 1.0) {
+                bail!("compression ratio must be in (0, 1], got {ratio} in {s:?}");
+            }
+            Ok(ratio)
+        };
+        match head {
+            "none" => {
+                if !rest.is_empty() {
+                    bail!("compression \"none\" takes no arguments, got {s:?}");
+                }
+                Ok(Compression::None)
+            }
+            "topk" => Ok(Compression::TopK { ratio: ratio_of(&rest)?, ef }),
+            "randk" => Ok(Compression::RandK { ratio: ratio_of(&rest)?, ef }),
+            "q8" => {
+                if !rest.is_empty() {
+                    bail!("compression \"q8\" takes no ratio, got {s:?}");
+                }
+                Ok(Compression::Q8 { ef })
+            }
+            "q4" => {
+                if !rest.is_empty() {
+                    bail!("compression \"q4\" takes no ratio, got {s:?}");
+                }
+                Ok(Compression::Q4 { ef })
+            }
+            _ => bail!("unknown compression {s:?} (none|topk:RATIO|randk:RATIO|q8|q4[:ef|:noef])"),
+        }
+    }
+
+    /// Canonical spec string (round-trips through [`Compression::parse`];
+    /// the default `ef = true` is omitted).
+    pub fn spec(&self) -> String {
+        let suffix = |ef: bool| if ef { "" } else { ":noef" };
+        match self {
+            Compression::None => "none".to_string(),
+            Compression::TopK { ratio, ef } => format!("topk:{ratio}{}", suffix(*ef)),
+            Compression::RandK { ratio, ef } => format!("randk:{ratio}{}", suffix(*ef)),
+            Compression::Q8 { ef } => format!("q8{}", suffix(*ef)),
+            Compression::Q4 { ef } => format!("q4{}", suffix(*ef)),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, Compression::None)
+    }
+
+    /// Selected coordinate count for sparse variants (`None`/quantized
+    /// keep every coordinate).
+    pub fn k_of(&self, n_params: usize) -> usize {
+        match self {
+            Compression::TopK { ratio, .. } | Compression::RandK { ratio, .. } => {
+                ((ratio * n_params as f64).ceil() as usize).clamp(1, n_params.max(1))
+            }
+            _ => n_params,
+        }
+    }
+
+    /// On-wire bytes of one learner's payload under this compression's
+    /// wire format (see the module docs), capped at the dense `4·n` size.
+    /// This is the `bytes` fed to the per-strategy allreduce formulas.
+    pub fn payload_bytes(&self, n_params: usize) -> usize {
+        let dense = n_params * 4;
+        match self {
+            Compression::None => dense,
+            Compression::TopK { .. } | Compression::RandK { .. } => {
+                // count header + (u32 index, f32 value) per selected coord
+                dense.min(4 + 8 * self.k_of(n_params))
+            }
+            // f32 scale + u32 count header, then 1 byte per coordinate
+            Compression::Q8 { .. } => dense.min(8 + n_params),
+            // ... or a half byte per coordinate
+            Compression::Q4 { .. } => dense.min(8 + n_params.div_ceil(2)),
+        }
+    }
+}
+
+/// One learner's compression pass: split `acc` into the transmitted
+/// payload `t` and the error-feedback residual `e` (`acc == t + e`
+/// coordinate-wise; bit-exact for the sparse variants, which copy selected
+/// values verbatim).  With `ef = false` the residual is discarded (zeroed)
+/// after the split.  Returns the number of coordinates transmitted.
+///
+/// Pure function of `(spec, acc, rng)` — the engine/thread layout never
+/// sees it.  Exposed for the conservation tests and the bench.
+pub fn compress_split(
+    spec: Compression,
+    acc: &[f32],
+    t: &mut [f32],
+    e: &mut [f32],
+    rng: &mut Pcg32,
+) -> usize {
+    debug_assert_eq!(acc.len(), t.len());
+    debug_assert_eq!(acc.len(), e.len());
+    let n = acc.len();
+    let sent = match spec {
+        Compression::None => {
+            t.copy_from_slice(acc);
+            e.fill(0.0);
+            n
+        }
+        Compression::TopK { .. } => {
+            let k = spec.k_of(n);
+            // Select the k largest |acc|, ties toward the lower index:
+            // sort indexes by (-|v|, i).  O(n log n) per barrier; fine for
+            // the simulated scale and deterministic by construction.
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            idx.sort_by(|&a, &b| {
+                let (ma, mb) = (acc[a as usize].abs(), acc[b as usize].abs());
+                mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+            });
+            t.fill(0.0);
+            e.copy_from_slice(acc);
+            for &i in &idx[..k] {
+                t[i as usize] = acc[i as usize];
+                e[i as usize] = 0.0;
+            }
+            k
+        }
+        Compression::RandK { .. } => {
+            let k = spec.k_of(n);
+            t.fill(0.0);
+            e.copy_from_slice(acc);
+            // Partial Fisher–Yates over an index array: the first k
+            // positions are a uniform sample without replacement.
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            for i in 0..k.min(n.saturating_sub(1)) {
+                let j = i + rng.next_below((n - i) as u32) as usize;
+                idx.swap(i, j);
+            }
+            for &i in &idx[..k] {
+                t[i as usize] = acc[i as usize];
+                e[i as usize] = 0.0;
+            }
+            k
+        }
+        Compression::Q8 { .. } | Compression::Q4 { .. } => {
+            let levels: f32 = if matches!(spec, Compression::Q8 { .. }) { 127.0 } else { 7.0 };
+            let max_abs = acc.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if max_abs == 0.0 {
+                t.fill(0.0);
+                e.fill(0.0);
+            } else {
+                let scale = max_abs / levels;
+                let inv = 1.0 / scale;
+                for i in 0..n {
+                    let q = (acc[i] * inv).round().clamp(-levels, levels);
+                    t[i] = q * scale;
+                    e[i] = acc[i] - t[i];
+                }
+            }
+            n
+        }
+    };
+    let keep_residual = match spec {
+        Compression::None => false,
+        Compression::TopK { ef, .. }
+        | Compression::RandK { ef, .. }
+        | Compression::Q8 { ef }
+        | Compression::Q4 { ef } => ef,
+    };
+    if !keep_residual {
+        e.fill(0.0);
+    }
+    sent
+}
+
+/// Per-learner compression state, shared between the collective wrapper
+/// and the run's metrics (residual norms, payload accounting).
+#[derive(Default)]
+pub struct EfState {
+    /// `ref_j`: the value learner j held right after its last compressed
+    /// barrier (lazily initialized to its current value on first
+    /// participation, which makes the first barrier exact).
+    refs: Vec<FlatParams>,
+    /// `e_j`: the error-feedback residual (empty = zero).
+    residuals: Vec<FlatParams>,
+    /// Per-learner barrier counter; seeds the random-k draw.
+    rounds: Vec<u64>,
+    /// Total coordinates transmitted across all barriers (diagnostics).
+    pub coords_sent: u64,
+    // Scratch buffers reused across barriers.
+    acc: Vec<f32>,
+    tx: Vec<f32>,
+    tx_mean: Vec<f32>,
+}
+
+impl EfState {
+    fn ensure(&mut self, p: usize) {
+        if self.refs.len() < p {
+            self.refs.resize(p, FlatParams::new());
+            self.residuals.resize(p, FlatParams::new());
+            self.rounds.resize(p, 0);
+        }
+    }
+
+    /// Σ_j ‖e_j‖₂² over all learners (the un-transmitted mass currently
+    /// held in residual accumulators), and its root.
+    pub fn residual_l2(&self) -> f64 {
+        self.residuals
+            .iter()
+            .flat_map(|e| e.iter())
+            .map(|&v| (v as f64) * (v as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// A [`Collective`] wrapper that applies the compression transform at
+/// every full-group barrier.  The wrapped engine's name is passed
+/// through: compression is orthogonal to *how* the dense bookkeeping
+/// moves.  `mean_of` (the paper's mid-interval w̃ probe) is a local read,
+/// not a barrier — it delegates densely and touches no state.
+pub struct CompressedCollective {
+    inner: Box<dyn Collective>,
+    spec: Compression,
+    seed: u64,
+    state: Arc<Mutex<EfState>>,
+}
+
+impl CompressedCollective {
+    pub fn new(
+        inner: Box<dyn Collective>,
+        spec: Compression,
+        seed: u64,
+    ) -> (CompressedCollective, Arc<Mutex<EfState>>) {
+        let state = Arc::new(Mutex::new(EfState::default()));
+        (CompressedCollective { inner, spec, seed, state: Arc::clone(&state) }, state)
+    }
+}
+
+impl Collective for CompressedCollective {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn average_group(&self, replicas: &mut [FlatParams], group: Range<usize>, scratch: &mut [f32]) {
+        let n = scratch.len();
+        let members = group.len();
+        if members == 0 {
+            return;
+        }
+        let mut st = self.state.lock().expect("compression state poisoned");
+        let st = &mut *st;
+        st.ensure(replicas.len());
+        st.acc.resize(n, 0.0);
+        st.tx.resize(n, 0.0);
+        st.tx_mean.resize(n, 0.0);
+        // scratch accumulates mean_j(ref_j); tx_mean accumulates
+        // mean_j(t_j).  Summation is learner-index ascending (the group
+        // range is ascending), so the result is independent of engine.
+        scratch.fill(0.0);
+        st.tx_mean.fill(0.0);
+        let inv = 1.0 / members as f32;
+        for j in group.clone() {
+            if st.refs[j].is_empty() {
+                st.refs[j] = replicas[j].clone();
+            }
+            if st.residuals[j].is_empty() {
+                st.residuals[j] = vec![0.0; n];
+            }
+            // acc_j = (x_j − ref_j) + e_j
+            {
+                let (x, r, e) = (&replicas[j], &st.refs[j], &st.residuals[j]);
+                for i in 0..n {
+                    st.acc[i] = (x[i] - r[i]) + e[i];
+                }
+            }
+            let mut rng = Pcg32::new(
+                self.seed ^ (j as u64).wrapping_mul(0x9e3779b97f4a7c15),
+                COMPRESS_STREAM ^ st.rounds[j],
+            );
+            let residual = std::mem::take(&mut st.residuals[j]);
+            let mut residual = residual;
+            let sent = compress_split(self.spec, &st.acc, &mut st.tx, &mut residual, &mut rng);
+            st.residuals[j] = residual;
+            st.coords_sent += sent as u64;
+            st.rounds[j] += 1;
+            for i in 0..n {
+                scratch[i] += st.refs[j][i];
+                st.tx_mean[i] += st.tx[i];
+            }
+        }
+        for i in 0..n {
+            scratch[i] = scratch[i] * inv + st.tx_mean[i] * inv;
+        }
+        for j in group {
+            replicas[j].copy_from_slice(scratch);
+            st.refs[j].copy_from_slice(scratch);
+        }
+    }
+
+    fn mean_of(&self, replicas: &[FlatParams], group: Range<usize>, out: &mut [f32]) {
+        self.inner.mean_of(replicas, group, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collective::SimulatedCollective;
+
+    fn vecs(p: usize, n: usize, seed: u64) -> Vec<FlatParams> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect()
+    }
+
+    #[test]
+    fn parse_and_spec_roundtrip() {
+        for s in ["none", "topk:0.05", "randk:0.25", "q8", "q4", "topk:0.1:noef", "q8:noef"] {
+            let c = Compression::parse(s).unwrap();
+            assert_eq!(c.spec(), s, "roundtrip {s}");
+            assert_eq!(Compression::parse(&c.spec()).unwrap(), c);
+        }
+        assert_eq!(Compression::parse("topk:0.05:ef").unwrap(), Compression::parse("topk:0.05").unwrap());
+        for bad in ["", "topk", "topk:0", "topk:2", "topk:x", "q8:0.5", "none:1", "zip", "randk:-0.1"] {
+            assert!(Compression::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn payload_bytes_shapes() {
+        let n = 1000;
+        assert_eq!(Compression::None.payload_bytes(n), 4000);
+        // topk 5% of 1000 = 50 coords: 4 + 50*8
+        assert_eq!(Compression::parse("topk:0.05").unwrap().payload_bytes(n), 404);
+        assert_eq!(Compression::parse("q8").unwrap().payload_bytes(n), 1008);
+        assert_eq!(Compression::parse("q4").unwrap().payload_bytes(n), 508);
+        // caps: sparse encoding of everything never exceeds dense
+        assert_eq!(Compression::parse("topk:1").unwrap().payload_bytes(n), 4000);
+        assert_eq!(Compression::parse("q8").unwrap().payload_bytes(1), 4);
+        // k floors at one coordinate
+        assert_eq!(Compression::parse("topk:0.001").unwrap().k_of(10), 1);
+    }
+
+    #[test]
+    fn topk_split_conserves_bit_exactly() {
+        // residual + transmitted == accumulated payload, bit for bit —
+        // the error-feedback conservation contract.
+        let acc: Vec<f32> = {
+            let mut rng = Pcg32::seeded(9);
+            (0..257).map(|_| rng.next_normal()).collect()
+        };
+        let spec = Compression::parse("topk:0.05").unwrap();
+        let (mut t, mut e) = (vec![0.0f32; acc.len()], vec![0.0f32; acc.len()]);
+        let mut rng = Pcg32::seeded(1);
+        let sent = compress_split(spec, &acc, &mut t, &mut e, &mut rng);
+        assert_eq!(sent, spec.k_of(acc.len()));
+        let mut nonzero = 0;
+        for i in 0..acc.len() {
+            // each coordinate lands wholly in t or wholly in e
+            assert!(t[i].to_bits() == acc[i].to_bits() && e[i] == 0.0
+                 || e[i].to_bits() == acc[i].to_bits() && t[i] == 0.0);
+            if t[i] != 0.0 {
+                nonzero += 1;
+            }
+        }
+        assert!(nonzero <= sent);
+        // the k selected really are the largest magnitudes
+        let min_sent =
+            t.iter().filter(|v| **v != 0.0).fold(f32::INFINITY, |m, &v| m.min(v.abs()));
+        let max_kept = e.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(min_sent >= max_kept, "min_sent={min_sent} max_kept={max_kept}");
+    }
+
+    #[test]
+    fn randk_is_seed_deterministic() {
+        let acc: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let spec = Compression::parse("randk:0.25").unwrap();
+        let run = |seed| {
+            let (mut t, mut e) = (vec![0.0f32; 64], vec![0.0f32; 64]);
+            let mut rng = Pcg32::seeded(seed);
+            compress_split(spec, &acc, &mut t, &mut e, &mut rng);
+            t
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn quantization_is_bounded_and_ef_captures_error() {
+        let acc: Vec<f32> = {
+            let mut rng = Pcg32::seeded(3);
+            (0..500).map(|_| rng.next_normal()).collect()
+        };
+        for spec in [Compression::parse("q8").unwrap(), Compression::parse("q4").unwrap()] {
+            let levels = if matches!(spec, Compression::Q8 { .. }) { 127.0f32 } else { 7.0 };
+            let max_abs = acc.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let (mut t, mut e) = (vec![0.0f32; acc.len()], vec![0.0f32; acc.len()]);
+            let mut rng = Pcg32::seeded(1);
+            compress_split(spec, &acc, &mut t, &mut e, &mut rng);
+            let half_step = 0.5 * max_abs / levels + 1e-6;
+            for i in 0..acc.len() {
+                assert!((t[i] - acc[i]).abs() <= half_step, "quantization error exceeds half a step");
+                assert!((t[i] + e[i] - acc[i]).abs() <= 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn noef_discards_the_residual() {
+        let acc: Vec<f32> = (0..32).map(|i| i as f32 - 16.0).collect();
+        let spec = Compression::parse("topk:0.1:noef").unwrap();
+        let (mut t, mut e) = (vec![0.0f32; 32], vec![0.0f32; 32]);
+        let mut rng = Pcg32::seeded(1);
+        compress_split(spec, &acc, &mut t, &mut e, &mut rng);
+        assert!(e.iter().all(|&v| v == 0.0));
+        assert!(t.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn first_barrier_is_exact_and_residuals_accumulate() {
+        // Lazy reference init makes the first compressed barrier an exact
+        // dense mean; afterwards the residual holds the untransmitted mass.
+        let base = vecs(4, 64, 11);
+        let mut dense = base.clone();
+        let mut comp = base.clone();
+        let mut s1 = vec![0.0f32; 64];
+        let mut s2 = vec![0.0f32; 64];
+        SimulatedCollective.average_group(&mut dense, 0..4, &mut s1);
+        let (cc, state) = CompressedCollective::new(
+            Box::new(SimulatedCollective),
+            Compression::parse("topk:0.05").unwrap(),
+            42,
+        );
+        cc.average_group(&mut comp, 0..4, &mut s2);
+        for j in 0..4 {
+            for i in 0..64 {
+                assert!((comp[j][i] - dense[j][i]).abs() < 1e-6, "first barrier ≈ dense mean");
+            }
+        }
+        assert_eq!(state.lock().unwrap().residual_l2(), 0.0, "nothing untransmitted yet");
+        // Drift one learner and fire again: top-k keeps the big coords,
+        // the rest lands in its residual.
+        for i in 0..64 {
+            comp[2][i] += (i as f32 + 1.0) * 0.01;
+        }
+        cc.average_group(&mut comp, 0..4, &mut s2);
+        assert!(state.lock().unwrap().residual_l2() > 0.0);
+        // EF conservation end-to-end: transmitted mean + residual account
+        // for the whole drift.  With one drifted learner the group mean
+        // moved by mean(t_2)/1, and e_2 = drift − t_2.
+        for j in [0, 1, 3] {
+            assert_eq!(comp[j], comp[2], "barrier leaves members in agreement");
+        }
+    }
+
+    #[test]
+    fn repeated_barriers_drain_the_residual() {
+        // With EF, repeated barriers over a static drift transmit it all:
+        // the residual shrinks to zero and the mean converges to dense.
+        let base = vecs(2, 40, 5);
+        let mut dense = base.clone();
+        let mut comp = base.clone();
+        let mut s = vec![0.0f32; 40];
+        SimulatedCollective.average_group(&mut dense, 0..2, &mut s);
+        let (cc, state) = CompressedCollective::new(
+            Box::new(SimulatedCollective),
+            Compression::parse("topk:0.2").unwrap(),
+            42,
+        );
+        cc.average_group(&mut comp, 0..2, &mut s); // exact (lazy refs)
+        for i in 0..40 {
+            comp[0][i] += 1.0; // drift
+        }
+        for _ in 0..8 {
+            cc.average_group(&mut comp, 0..2, &mut s);
+        }
+        // 20% per barrier × 8 barriers ≥ full coverage: residual drained
+        assert!(state.lock().unwrap().residual_l2() < 1e-4);
+        for i in 0..40 {
+            assert!((comp[0][i] - (dense[0][i] + 0.5)).abs() < 1e-4, "mean caught up with drift");
+        }
+    }
+}

@@ -8,6 +8,7 @@
 //! charged when a hierarchy level is explicitly assigned to it via the
 //! config's per-level `links` override.
 
+use crate::comm::compress::Compression;
 use crate::topology::LinkClass;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -104,6 +105,32 @@ impl CostModel {
                 2.0 * (n_f - 1.0) * alpha + 2.0 * ((n_f - 1.0) / n_f) * m * beta
             }
         }
+    }
+
+    /// [`CostModel::allreduce_seconds`] with the payload priced under a
+    /// compression's wire format (see `comm::compress` for the per-spec
+    /// byte math; the per-strategy round structure is unchanged — fewer
+    /// bytes ride the same schedule).
+    pub fn compressed_allreduce_seconds(
+        &self,
+        n: usize,
+        n_params: usize,
+        comp: Compression,
+        link: LinkClass,
+        strategy: ReduceStrategy,
+    ) -> f64 {
+        self.allreduce_seconds(n, comp.payload_bytes(n_params), link, strategy)
+    }
+
+    /// [`CostModel::allreduce_bytes`] under a compression's wire format.
+    pub fn compressed_allreduce_bytes(
+        &self,
+        n: usize,
+        n_params: usize,
+        comp: Compression,
+        strategy: ReduceStrategy,
+    ) -> u64 {
+        self.allreduce_bytes(n, comp.payload_bytes(n_params), strategy)
     }
 
     /// Bytes crossing the network for one allreduce (per participant,

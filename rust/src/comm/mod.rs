@@ -9,6 +9,10 @@
 //!   over `exec::WorkerPool`).  All engines compute the identical
 //!   arithmetic mean (summation order is fixed), so training dynamics are
 //!   exact and engine choice is a pure throughput knob.
+//! - [`compress`] — *what bytes move*: an optional payload transform
+//!   (top-k / random-k sparsification, 8/4-bit linear quantization) with
+//!   per-learner error-feedback residuals; `--compress none` builds no
+//!   wrapper at all, keeping the dense path byte-for-byte legacy.
 //! - [`reduce`] — *what a reduction does to the run*: in-place group
 //!   averaging plus aggregate and per-hierarchy-level accounting.
 //! - [`cost`] — *what a reduction costs*: an α–β model with distinct
@@ -19,11 +23,13 @@
 //!   gather+broadcast, binary tree, ring).
 
 pub mod collective;
+pub mod compress;
 pub mod cost;
 pub mod reduce;
 
 pub use collective::{
     Collective, CollectiveKind, PooledCollective, ShardedCollective, SimulatedCollective,
 };
+pub use compress::{CompressedCollective, Compression, EfState};
 pub use cost::{CommStats, CostModel, LevelStats, ReduceStrategy};
 pub use reduce::Reducer;

@@ -10,6 +10,7 @@
 //! [`CommStats`], and per-hierarchy-level [`LevelStats`].
 
 use crate::comm::collective::{Collective, SimulatedCollective};
+use crate::comm::compress::Compression;
 use crate::comm::cost::{CommStats, CostModel, LevelStats, ReduceStrategy};
 use crate::params::FlatParams;
 use crate::topology::{HierTopology, LinkClass, Topology};
@@ -18,6 +19,16 @@ pub struct Reducer {
     pub cost: CostModel,
     pub strategy: ReduceStrategy,
     pub stats: CommStats,
+    /// Payload compression used for *pricing* full-group barriers.  The
+    /// matching value transform lives in the collective (a
+    /// `CompressedCollective` wrapper installed by the engine); the
+    /// reducer only needs the wire format for the α–β model.  `None`
+    /// prices the exact legacy `4·n_params` payload.
+    pub compression: Compression,
+    /// What the same reduction events would have moved densely — the
+    /// savings denominator for the run record's compression block.
+    /// Equals the charged totals when `compression` is `None`.
+    pub dense_bytes: u64,
     collective: Box<dyn Collective>,
     scratch: Vec<f32>,
     level_stats: Vec<LevelStats>,
@@ -39,6 +50,8 @@ impl Reducer {
             cost,
             strategy,
             stats: CommStats::default(),
+            compression: Compression::None,
+            dense_bytes: 0,
             collective,
             scratch: vec![0.0; n_params],
             level_stats: Vec::new(),
@@ -72,10 +85,14 @@ impl Reducer {
     ) -> (f64, u64) {
         let n = group.len();
         debug_assert!(n >= 1);
-        let bytes = self.scratch.len() * 4;
+        // Priced under the compression's wire format; with `None` this is
+        // the exact legacy `4·n_params` integer, so seconds/bytes are
+        // bit-identical to every pre-compression golden.
+        let bytes = self.compression.payload_bytes(self.scratch.len());
         self.collective.average_group(replicas, group, &mut self.scratch);
         let secs = self.cost.allreduce_seconds(n, bytes, link, self.strategy);
         let moved = self.cost.allreduce_bytes(n, bytes, self.strategy);
+        self.dense_bytes += self.cost.allreduce_bytes(n, self.scratch.len() * 4, self.strategy);
         (secs, moved)
     }
 
@@ -174,7 +191,11 @@ impl Reducer {
     /// sum is deterministic and identical across all collectives by
     /// construction, which keeps the fault layer's parameter math a
     /// single documented rule rather than three.  Priced and charged as
-    /// an `n_part`-way allreduce on `link`.
+    /// an `n_part`-way allreduce on `link`.  Compression is deliberately
+    /// *not* applied here: a degraded barrier is a rare recovery event
+    /// and transmits dense, which keeps the elastic math and its pricing
+    /// a single rule (the error-feedback references re-sync at the next
+    /// full barrier regardless).
     fn survivor_group(
         &mut self,
         replicas: &mut [FlatParams],
@@ -208,6 +229,7 @@ impl Reducer {
         }
         let secs = self.cost.allreduce_seconds(n_part, bytes, link, self.strategy);
         let moved = self.cost.allreduce_bytes(n_part, bytes, self.strategy);
+        self.dense_bytes += moved;
         self.charge_to_link(link, secs, moved);
         (secs, moved)
     }

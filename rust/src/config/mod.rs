@@ -5,7 +5,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::algorithms::{policy, HierAvgSchedule, HierSchedule, PolicyKind};
-use crate::comm::{CollectiveKind, CostModel, ReduceStrategy};
+use crate::comm::{CollectiveKind, Compression, CostModel, ReduceStrategy};
 use crate::optimizer::LrSchedule;
 use crate::sim::{parse_faults, ExecKind, FaultPlan, HetSpec};
 use crate::topology::{HierTopology, LinkClass, Topology};
@@ -52,6 +52,12 @@ pub struct RunConfig {
     pub schedule_policy: PolicyKind,
     /// Which collective engine executes reductions.
     pub collective: CollectiveKind,
+    /// Payload compression applied at full-group barriers
+    /// (`--compress none|topk:RATIO|randk:RATIO|q8|q4[:ef|:noef]`):
+    /// top-k / random-k sparsification or 8/4-bit linear quantization with
+    /// per-learner error-feedback residuals (`comm::compress`).  `None`
+    /// builds no wrapper and is bit-identical to pre-compression builds.
+    pub compress: Compression,
     /// Execution slots of the persistent worker pool the pooled collective
     /// and the native backend's lane fan-out dispatch onto (0 = available
     /// parallelism).  Oversubscription is allowed and never changes
@@ -125,6 +131,7 @@ impl RunConfig {
             ks: Vec::new(),
             schedule_policy: PolicyKind::Static,
             collective: CollectiveKind::Simulated,
+            compress: Compression::None,
             pool_threads: 0,
             links: Vec::new(),
             exec: ExecKind::Lockstep,
@@ -389,6 +396,7 @@ impl RunConfig {
                     self.set_ks(ks);
                 }
                 "collective" => self.collective = CollectiveKind::parse(v.as_str()?)?,
+                "compress" => self.compress = Compression::parse(v.as_str()?)?,
                 "pool_threads" => self.pool_threads = v.as_usize()?,
                 "links" => {
                     self.links = v
@@ -476,6 +484,9 @@ impl RunConfig {
         }
         if let Some(c) = args.get("collective") {
             cfg.collective = CollectiveKind::parse(c)?;
+        }
+        if let Some(c) = args.get("compress") {
+            cfg.compress = Compression::parse(c)?;
         }
         cfg.pool_threads = args.parse_or("pool-threads", cfg.pool_threads)?;
         if let Some(ls) = args.get("links") {
@@ -881,6 +892,35 @@ mod tests {
         let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
         let err = RunConfig::from_args(&args).unwrap_err().to_string();
         assert!(err.contains("PROB"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn compress_via_json_and_args() {
+        let mut c = RunConfig::defaults("m");
+        let j = Json::parse(r#"{"compress": "topk:0.05", "backend": "native"}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.compress, Compression::TopK { ratio: 0.05, ef: true });
+        c.validate().unwrap();
+
+        use crate::util::cli::Args;
+        let argv: Vec<String> = [
+            "train", "--model", "quickstart", "--backend", "native", "--compress", "q4:noef",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.compress, Compression::Q4 { ef: false });
+
+        // bad specs are rejected with context through both entry points
+        let bad = Json::parse(r#"{"compress": "topk:2"}"#).unwrap();
+        assert!(RunConfig::defaults("m").apply_json(&bad).is_err());
+        let argv: Vec<String> =
+            ["train", "--compress", "zip"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+        let err = RunConfig::from_args(&args).unwrap_err().to_string();
+        assert!(err.contains("compression"), "unhelpful error: {err}");
     }
 
     #[test]

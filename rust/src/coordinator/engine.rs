@@ -14,9 +14,11 @@
 
 use anyhow::Result;
 
+use std::sync::{Arc, Mutex};
+
 use crate::algorithms::{HierSchedule, SchedulePolicy};
 use crate::backend::{StepBackend, StepOut};
-use crate::comm::Reducer;
+use crate::comm::{CompressedCollective, EfState, Reducer};
 use crate::config::RunConfig;
 use crate::data::{BatchBuf, DataSource};
 use crate::optimizer::Sgd;
@@ -148,6 +150,10 @@ pub struct Engine<'a> {
     /// With it None the step path is exactly the legacy code, so
     /// fault-free runs stay bit-identical to pre-fault builds.
     faults: Option<FaultRuntime>,
+    /// Error-feedback residual state, Some only when `cfg.compress` is
+    /// set (shared with the `CompressedCollective` inside the reducer;
+    /// read at end of run for the record's `compression` block).
+    ef_state: Option<Arc<Mutex<EfState>>>,
     batch: BatchBuf,
     t: u64,
 }
@@ -170,8 +176,19 @@ impl<'a> Engine<'a> {
         // landing on the same process-wide pool the native backend's lane
         // fan-out uses (exec::shared_pool), so one run never oversubscribes
         // the host with two thread sets.
-        let collective = cfg.collective.build_for(cfg.pool_threads);
+        let mut collective = cfg.collective.build_for(cfg.pool_threads);
+        // `--compress` wraps the chosen engine with the payload transform
+        // (top-k / rand-k / quantization + error feedback); with `none` no
+        // wrapper exists and the path is byte-for-byte the legacy one.
+        let ef_state = if cfg.compress.is_none() {
+            None
+        } else {
+            let (wrapped, state) = CompressedCollective::new(collective, cfg.compress, cfg.seed);
+            collective = Box::new(wrapped);
+            Some(state)
+        };
         let mut reducer = Reducer::with_collective(cfg.cost, cfg.strategy, n_params, collective);
+        reducer.compression = cfg.compress;
         reducer.reserve_levels(topo.n_levels());
         let mut timeline = cfg.exec.build(cfg.p, topo.n_levels(), step_seconds, &cfg.het_spec());
         let faults = cfg.faults.as_ref().map(|plan| {
@@ -180,11 +197,23 @@ impl<'a> Engine<'a> {
             // those, so the two stay in lockstep without any channel
             // between them.
             timeline.install_faults(cfg.seed, plan);
+            // A policy restored from a checkpoint may carry migration
+            // decisions from the saved run: re-apply the detachments so a
+            // warm restart keeps its degraded membership instead of
+            // silently re-attaching stalled learners.  Counters are NOT
+            // re-bumped — the counts block reports this run's events.
+            let mut detached = vec![false; cfg.p];
+            for l in policy.migrated_learners() {
+                if l < cfg.p {
+                    detached[l] = true;
+                    timeline.set_detached(l);
+                }
+            }
             FaultRuntime {
                 membership: MembershipModel::new(cfg.p, cfg.seed, plan),
                 down_prev: vec![false; cfg.p],
                 alive: vec![true; cfg.p],
-                detached: vec![false; cfg.p],
+                detached,
                 cache: init.clone(),
                 counts: FaultCounts::default(),
             }
@@ -199,9 +228,16 @@ impl<'a> Engine<'a> {
             policy,
             realized,
             faults,
+            ef_state,
             batch: BatchBuf::default(),
             t: 0,
         })
+    }
+
+    /// L2 norm of the un-transmitted error-feedback mass across all
+    /// learners, Some only when `--compress` is active.
+    pub fn residual_l2(&self) -> Option<f64> {
+        self.ef_state.as_ref().map(|s| s.lock().expect("compression state poisoned").residual_l2())
     }
 
     /// Completed step count (1-based after the first step).

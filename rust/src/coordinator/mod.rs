@@ -210,6 +210,24 @@ impl<'a> Trainer<'a> {
                 membership_epoch: counts.membership_epoch,
             });
         }
+        // The compression block: the wire format's byte accounting (the
+        // `comm` totals already reflect compressed pricing; the dense
+        // shadow alongside is the savings denominator) plus the
+        // error-feedback mass still held locally at end of run.
+        if !cfg.compress.is_none() {
+            let total_bytes =
+                engine.reducer.stats.local_bytes
+                    + engine.reducer.stats.global_bytes
+                    + engine.reducer.stats.rack_bytes;
+            record.compression = Some(crate::metrics::CompressionSummary {
+                spec: cfg.compress.spec(),
+                payload_bytes: cfg.compress.payload_bytes(n_params) as u64,
+                dense_payload_bytes: (n_params * 4) as u64,
+                compressed_bytes: total_bytes,
+                dense_bytes: engine.reducer.dense_bytes,
+                residual_l2: engine.residual_l2().unwrap_or(0.0),
+            });
+        }
         if cfg.keep_final_params {
             let mut final_params = Vec::new();
             engine.mean_params(&mut final_params);
@@ -434,6 +452,45 @@ mod tests {
         assert!(f.lost_seconds > 0.0, "lost_seconds={}", f.lost_seconds);
         // One preemption + one re-entry bump the membership epoch twice.
         assert_eq!(f.membership_epoch, 2);
+    }
+
+    #[test]
+    fn compressed_training_learns_and_accounts_bytes() {
+        // A sparse-global run must still train (error feedback carries the
+        // untransmitted mass), and the comm account must shrink relative
+        // to the dense shadow recorded next to it.
+        let mut cfg = quick_cfg();
+        cfg.compress = crate::comm::Compression::parse("topk:0.1").unwrap();
+        let rec = make_trainer(&cfg).run().unwrap();
+        for e in &rec.epochs {
+            assert!(e.train_loss.is_finite());
+        }
+        assert!(rec.epochs.last().unwrap().train_loss < rec.epochs[0].train_loss);
+        let c = rec.compression.expect("compression block present");
+        assert_eq!(c.spec, "topk:0.1");
+        assert!(c.payload_bytes < c.dense_payload_bytes);
+        assert!(c.compressed_bytes < c.dense_bytes, "{} vs {}", c.compressed_bytes, c.dense_bytes);
+        assert!(c.residual_l2 > 0.0, "top-k leaves untransmitted mass in the residuals");
+        // the comm account is the compressed one
+        let total = rec.comm.local_bytes + rec.comm.global_bytes + rec.comm.rack_bytes;
+        assert_eq!(total, c.compressed_bytes);
+        // ... and a dense run's record carries no block at all
+        let dense = make_trainer(&quick_cfg()).run().unwrap();
+        assert!(dense.compression.is_none());
+    }
+
+    #[test]
+    fn quantized_training_matches_dense_closely() {
+        // q8 is near-lossless: the training curve should track the dense
+        // run tightly while the byte account shrinks ~4x.
+        let dense = make_trainer(&quick_cfg()).run().unwrap();
+        let mut cfg = quick_cfg();
+        cfg.compress = crate::comm::Compression::parse("q8").unwrap();
+        let q = make_trainer(&cfg).run().unwrap();
+        let (a, b) = (dense.epochs.last().unwrap(), q.epochs.last().unwrap());
+        assert!((a.train_loss - b.train_loss).abs() < 0.05, "{} vs {}", a.train_loss, b.train_loss);
+        let c = q.compression.unwrap();
+        assert!(c.compressed_bytes * 3 < c.dense_bytes, "q8 moves ~1/4 the bytes");
     }
 
     #[test]

@@ -20,6 +20,7 @@ USAGE:
                   [--schedule static|adaptive[:target[:gain]]|warmup[:k]]
                   [--exec lockstep|event] [--het F] [--straggler P[:M]]
                   [--faults PROB[:mttr] | trace:STEP@LEARNERxDOWN,..]
+                  [--compress none|topk:R|randk:R|q8|q4[:ef|:noef]]
                   [--train-n N] [--test-n N] [--lr SCHED] [--seed N]
                   [--noise F] [--radius F] [--strategy ring|tree|naive]
                   [--out results/run.json] [--record-steps]
@@ -35,7 +36,7 @@ USAGE:
                   [--strategy ring|tree|naive] [--no-rack] [--no-local]
                   [--schedule static|adaptive[:target[:gain]]|warmup[:k]]
                   [--het F] [--straggler P[:M]] [--faults PROB[:mttr]]
-                  [--seed N]
+                  [--compress SPEC[,SPEC..]] [--seed N]
                   [--validate-top N] [--collective simulated|sharded|pooled]
                   [--timeline-only] [--top N] [--out SWEEP_<p>.json]
   hier-avg list                      # models in the artifact manifest
@@ -91,6 +92,21 @@ so fault runs replay bit-identically — and --faults 0 (armed layer,
 zero events) is bit-identical to the plain event run.  sweep --faults
 takes only the PROB[:mttr] form and prices every candidate against the
 seeded outage regime (DESIGN.md section "Fault model").
+
+Compression: --compress sparsifies or quantizes full-group reduction
+payloads.  topk:R keeps the ceil(R*n) largest-magnitude entries of each
+learner's delta-from-reference (deterministic, ties toward the lower
+index); randk:R keeps a seeded random R fraction; q8/q4 transmit 8/4-bit
+linear quantizations.  Error feedback is on by default (:noef disables
+it): what a round leaves untransmitted is carried in a per-learner
+residual and re-injected next round, so nothing is silently dropped.
+Sparse payloads ride an index-exchange wire format (count + row indexes
++ values) and every compressed message is capped at its dense size.
+Degraded survivor barriers under --faults always reduce densely.
+--compress none builds no wrapper and is bit-identical to
+pre-compression runs.  sweep --compress SPEC[,SPEC..] enumerates each
+spec as a variant next to every dense candidate and ranks them jointly
+(DESIGN.md section \"Compression\").
 
 Sweep: enumerates hierarchy shapes for P learners (level counts
 --levels-min..--levels-max, divisor fan-outs, optional rack-tier
@@ -161,7 +177,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     args.check_known(&[
         "p", "model", "steps", "strategy", "levels-min", "levels-max", "k2-max", "k1-grid",
         "no-rack", "no-local", "top", "validate-top", "collective", "out", "het",
-        "straggler", "faults", "seed", "schedule", "timeline-only",
+        "straggler", "faults", "seed", "schedule", "timeline-only", "compress",
     ])?;
     if args.positional.len() > 1 {
         bail!(
@@ -204,6 +220,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if let Some(s) = args.get("schedule") {
         space.policy = hier_avg::algorithms::PolicyKind::parse(s)?;
+    }
+    if let Some(specs) = args.get("compress") {
+        use hier_avg::comm::Compression;
+        space.compress = specs
+            .split(',')
+            .map(|s| Compression::parse(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
     }
 
     let mut ctx = ScoreCtx::for_model(model, p, steps, strategy, CostModel::default())?;
@@ -326,8 +349,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "model", "backend", "p", "s", "k1", "k2", "levels", "ks", "links",
         "collective", "pool-threads", "schedule", "exec", "het", "straggler", "faults",
-        "epochs", "train-n", "test-n", "lr", "seed", "noise", "radius", "momentum", "strategy",
-        "record-steps", "init-params", "save-params", "trace", "out", "help",
+        "compress", "epochs", "train-n", "test-n", "lr", "seed", "noise", "radius", "momentum",
+        "strategy", "record-steps", "init-params", "save-params", "trace", "out", "help",
     ])?;
     let cfg = RunConfig::from_args(args)?;
     let topo = cfg.hierarchy()?;
@@ -407,6 +430,19 @@ fn cmd_train(args: &Args) -> Result<()> {
             f.survivor_reductions,
             f.lost_seconds,
             f.membership_epoch
+        );
+    }
+    if let Some(c) = &rec.compression {
+        println!(
+            "compress {}: payload {} bytes (dense {})  moved {} bytes (dense {})  \
+             saved {:.1}%  residual_l2 {:.3e}",
+            c.spec,
+            c.payload_bytes,
+            c.dense_payload_bytes,
+            c.compressed_bytes,
+            c.dense_bytes,
+            100.0 * (1.0 - c.compressed_bytes as f64 / c.dense_bytes.max(1) as f64),
+            c.residual_l2
         );
     }
     if let Some(out) = args.get("out") {

@@ -61,6 +61,32 @@ pub struct FaultSummary {
     pub membership_epoch: u64,
 }
 
+/// What payload compression (`--compress`) did over a run: the wire
+/// format's per-message byte count, the on-wire vs dense totals, and the
+/// error-feedback mass still held locally at end of run (the JSON
+/// `compression` block; absent when compression is off, which keeps
+/// dense records byte-identical to pre-compression builds).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CompressionSummary {
+    /// Canonical `--compress` spec (`comm::Compression::spec`).
+    pub spec: String,
+    /// Bytes one learner's compressed message occupies on the wire
+    /// (`Compression::payload_bytes`; the dense equivalent is
+    /// `4 · n_params`).
+    pub payload_bytes: u64,
+    /// Dense per-message bytes (`4 · n_params`), the savings baseline.
+    pub dense_payload_bytes: u64,
+    /// Total bytes the run's reductions moved under compression (equals
+    /// the `comm` block's byte totals; repeated here next to its
+    /// denominator).
+    pub compressed_bytes: u64,
+    /// What the same reduction events would have moved densely.
+    pub dense_bytes: u64,
+    /// L2 norm of the error-feedback residuals across all learners at end
+    /// of run: the un-transmitted mass (0 exactly when `ef` is off).
+    pub residual_l2: f64,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct RunRecord {
     pub label: String,
@@ -112,6 +138,10 @@ pub struct RunRecord {
     /// when `--faults` is off, so fault-free JSON is byte-identical to
     /// pre-fault builds).
     pub faults: Option<FaultSummary>,
+    /// What payload compression did (filled by the trainer; `None` when
+    /// `--compress` is off, so dense JSON is byte-identical to
+    /// pre-compression builds).
+    pub compression: Option<CompressionSummary>,
 }
 
 /// Above this learner count, `RunRecord` JSON replaces the per-learner
@@ -265,6 +295,16 @@ impl RunRecord {
                 .set("lost_seconds", Json::from(f.lost_seconds))
                 .set("membership_epoch", Json::from(f.membership_epoch as usize));
             o.set("faults", fb);
+        }
+        if let Some(c) = &self.compression {
+            let mut cb = Json::obj();
+            cb.set("spec", Json::from(c.spec.as_str()))
+                .set("payload_bytes", Json::from(c.payload_bytes as usize))
+                .set("dense_payload_bytes", Json::from(c.dense_payload_bytes as usize))
+                .set("compressed_bytes", Json::from(c.compressed_bytes as usize))
+                .set("dense_bytes", Json::from(c.dense_bytes as usize))
+                .set("residual_l2", Json::from(c.residual_l2));
+            o.set("compression", cb);
         }
         o.set("total_steps", Json::from(self.total_steps as usize))
             .set("sim_compute_seconds", Json::from(self.sim_compute_seconds))
@@ -569,6 +609,36 @@ mod tests {
         }
         // Clearing the block restores the byte-identical fault-free form.
         r.faults = None;
+        assert_eq!(r.to_json().pretty(), plain);
+    }
+
+    #[test]
+    fn compression_block_serializes_and_absence_changes_nothing() {
+        let mut r = record("c", 1);
+        // No compression: the block is absent and the JSON is what a
+        // pre-compression build emitted.
+        let plain = r.to_json().pretty();
+        assert!(r.to_json().get("compression").is_none());
+        r.compression = Some(CompressionSummary {
+            spec: "topk:0.05".into(),
+            payload_bytes: 404,
+            dense_payload_bytes: 4000,
+            compressed_bytes: 80_800,
+            dense_bytes: 800_000,
+            residual_l2: 1.5,
+        });
+        for j in [r.to_json(), r.to_golden_json()] {
+            let parsed = Json::parse(&j.pretty()).unwrap();
+            let c = parsed.req("compression").unwrap();
+            assert_eq!(c.req("spec").unwrap().as_str().unwrap(), "topk:0.05");
+            assert_eq!(c.req("payload_bytes").unwrap().as_usize().unwrap(), 404);
+            assert_eq!(c.req("dense_payload_bytes").unwrap().as_usize().unwrap(), 4000);
+            assert_eq!(c.req("compressed_bytes").unwrap().as_usize().unwrap(), 80_800);
+            assert_eq!(c.req("dense_bytes").unwrap().as_usize().unwrap(), 800_000);
+            assert_eq!(c.req("residual_l2").unwrap().as_f64().unwrap(), 1.5);
+        }
+        // Clearing the block restores the byte-identical dense form.
+        r.compression = None;
         assert_eq!(r.to_json().pretty(), plain);
     }
 

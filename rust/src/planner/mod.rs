@@ -42,7 +42,7 @@ pub mod report;
 use anyhow::{bail, Result};
 
 use crate::algorithms::{policy::K2_CLAMP_CAP, HierSchedule, PolicyKind};
-use crate::comm::{CollectiveKind, CostModel, ReduceStrategy};
+use crate::comm::{CollectiveKind, Compression, CostModel, ReduceStrategy};
 use crate::config::{BackendKind, RunConfig};
 use crate::coordinator::{self, Trainer};
 use crate::data::ClassifyData;
@@ -83,6 +83,13 @@ pub struct SweepSpace {
     /// (the default) adds nothing — the space and its ranking stay
     /// bit-stable with the pre-policy planner.
     pub policy: PolicyKind,
+    /// Compressed-payload variants to enumerate *next to* every dense
+    /// candidate (`sweep --compress`): each spec gets a twin per (shape ×
+    /// schedule × policy) entry, priced by the compressed wire bytes
+    /// ([`Compression::payload_bytes`]) exactly as the engine's reducer
+    /// prices a compressed run.  Empty (the default) adds nothing — the
+    /// space and its ranking stay bit-stable with the dense planner.
+    pub compress: Vec<Compression>,
 }
 
 impl SweepSpace {
@@ -99,6 +106,7 @@ impl SweepSpace {
             use_rack: true,
             local_averaging: true,
             policy: PolicyKind::Static,
+            compress: Vec::new(),
         })
     }
 
@@ -133,6 +141,12 @@ impl SweepSpace {
             bail!("k2-max must be >= 1");
         }
         self.policy.validate()?;
+        if self.compress.iter().any(|c| c.is_none()) {
+            bail!(
+                "sweep --compress enumerates compressed variants *next to* the dense \
+                 entries; listing \"none\" would duplicate every dense candidate"
+            );
+        }
         Ok(())
     }
 
@@ -248,19 +262,31 @@ pub struct Candidate {
     /// How the intervals are realized at run time: static (the closed
     /// form scores it exactly) or a non-static policy (scored by replay).
     pub policy: PolicyKind,
+    /// Payload transform the candidate's collectives apply
+    /// (`Compression::None` for a dense candidate).
+    pub compress: Compression,
 }
 
 impl Candidate {
     /// A candidate under the topology's default link assignment
     /// (innermost intra-node, outer levels inter-node) and the static
-    /// schedule policy.
+    /// schedule policy, dense payloads.
     pub fn with_default_links(levels: Vec<usize>, ks: Vec<u64>) -> Result<Candidate> {
         let topo = HierTopology::new(levels.clone())?;
         let links = (0..topo.n_levels()).map(|l| topo.link(l)).collect();
-        Ok(Candidate { levels, links, ks, policy: PolicyKind::Static })
+        Ok(Candidate {
+            levels,
+            links,
+            ks,
+            policy: PolicyKind::Static,
+            compress: Compression::None,
+        })
     }
 
-    /// Stable identifier: `h<sizes>-k<intervals>[-rack][-<policy>]`.
+    /// Stable identifier:
+    /// `h<sizes>-k<intervals>[-rack][-<policy>][-<compression>]` (the
+    /// compression suffix is the canonical spec with its `:` separators
+    /// dropped, e.g. `-topk0.05`).
     pub fn label(&self) -> String {
         let sizes: Vec<String> = self.levels.iter().map(|s| s.to_string()).collect();
         let ks: Vec<String> = self.ks.iter().map(|k| k.to_string()).collect();
@@ -271,6 +297,10 @@ impl Candidate {
         if self.policy != PolicyKind::Static {
             s.push('-');
             s.push_str(self.policy.name());
+        }
+        if !self.compress.is_none() {
+            s.push('-');
+            s.push_str(&self.compress.spec().replace(':', ""));
         }
         s
     }
@@ -297,6 +327,7 @@ impl Candidate {
         cfg.set_ks(self.ks.clone());
         cfg.links = self.links.clone();
         cfg.schedule_policy = self.policy;
+        cfg.compress = self.compress;
         cfg
     }
 }
@@ -440,6 +471,21 @@ pub fn enumerate(space: &SweepSpace, ctx: &ScoreCtx) -> Vec<Candidate> {
             .collect();
         out.extend(variants);
     }
+    // Compressed payloads ride next to *every* dense entry (policy
+    // variants included): same shape, same schedule, smaller wire
+    // payload — the joint (topology × schedule × compression) space the
+    // ranking orders.
+    if !space.compress.is_empty() {
+        let dense: Vec<Candidate> = out.clone();
+        for &comp in &space.compress {
+            if comp.is_none() {
+                continue; // validate() rejects this; belt and braces
+            }
+            out.extend(
+                dense.iter().map(|c| Candidate { compress: comp, ..c.clone() }),
+            );
+        }
+    }
     out
 }
 
@@ -510,7 +556,13 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
             topo.n_levels()
         );
     }
-    let msg = ctx.n_params * 4;
+    // The candidate's wire payload: dense gradients move 4·n_params
+    // bytes; a compressed candidate moves `Compression::payload_bytes`
+    // — the same quantity the engine's reducer prices a compressed run
+    // with, so modelled-vs-measured parity holds for compressed
+    // candidates too (`Compression::None` is exactly 4·n_params, keeping
+    // dense scores bit-stable).
+    let msg = cand.compress.payload_bytes(ctx.n_params);
     // Per-level unit costs under the engine's reduce_level conventions:
     // size-1 levels below the top are no-ops; otherwise every group
     // counts its event and bytes, but symmetric groups run concurrently
@@ -627,6 +679,13 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
         // A fault regime always prices through the timeline: preempted
         // learners charge lost time the closed form cannot see.
         (None, Some(spec)) => {
+            // Degraded groups are repriced at the survivor participant
+            // count over the *dense* payload — the engine's
+            // `Reducer::survivor_group` never compresses a degraded
+            // barrier, and the replay mirrors that rule exactly.
+            let survivor = |level: usize, n_part: usize| {
+                ctx.cost.allreduce_seconds(n_part, ctx.n_params * 4, topo.link(level), ctx.strategy)
+            };
             sim::replay_timeline_stats_faults(
                 &topo,
                 &sched,
@@ -635,6 +694,7 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
                 &sec_per_events,
                 &ctx.het,
                 &FaultPlan::Sampled(spec),
+                &survivor,
             )
             .makespan_seconds
         }
@@ -1221,8 +1281,10 @@ mod tests {
             baseline.makespan_seconds
         );
         // ... deterministically (same seed, same bits), and without
-        // touching the communication account (the closed form still
-        // prices full groups — see replay_timeline_stats_faults).
+        // touching the communication account: the comm seconds/bytes
+        // columns keep the closed-form full-group totals, while only the
+        // makespan reprices degraded barriers at the survivor count (see
+        // replay_timeline_stats_faults).
         let s2 = score(&cand, &fctx).unwrap();
         assert_eq!(s.makespan_seconds.to_bits(), s2.makespan_seconds.to_bits());
         assert_eq!(s.comm_seconds.to_bits(), baseline.comm_seconds.to_bits());
@@ -1251,6 +1313,137 @@ mod tests {
         for r in &ranked {
             assert!(r.score.makespan_seconds.is_finite() && r.score.makespan_seconds > 0.0);
         }
+    }
+
+    #[test]
+    fn fault_aware_validation_matches_the_survivor_priced_engine() {
+        // Modelled-vs-measured parity under an armed fault regime: the
+        // replay reprices degraded barriers at the survivor participant
+        // count, which is exactly what the engine's
+        // `reduce_level_survivors` charges — so the fault-armed makespan
+        // the ranking orders by is the makespan a run measures, not an
+        // upper bound of it.
+        let mut ctx = ctx16();
+        ctx.het = HetSpec { het: 0.3, straggler_prob: 0.05, straggler_mult: 4.0, seed: 13 };
+        ctx.faults = Some(FaultSpec { prob: 0.02, mttr: 10 });
+        let cand = Candidate::with_default_links(vec![4, 16], vec![2, 8]).unwrap();
+        let v = validate(&cand, &ctx, "quickstart", CollectiveKind::Simulated).unwrap();
+        let rel = v.makespan_delta_seconds.abs() / v.measured_makespan_seconds.max(1e-30);
+        assert!(
+            rel < 1e-9,
+            "fault-armed makespan drift: modelled {} vs measured {}",
+            v.modelled_makespan_seconds,
+            v.measured_makespan_seconds
+        );
+        assert_eq!(v.modelled_comm_bytes, v.measured_comm_bytes);
+        // The trace must actually have degraded some barriers, or the
+        // parity above would be vacuous: replay the same seeded trace at
+        // the measured horizon and count survivor-priced groups.
+        let topo = cand.topology().unwrap();
+        let sched = cand.schedule().unwrap();
+        let msg = ctx.n_params * 4;
+        let secs: Vec<f64> = (0..topo.n_levels())
+            .map(|l| ctx.cost.allreduce_seconds(topo.size(l), msg, topo.link(l), ctx.strategy))
+            .collect();
+        let survivor = |level: usize, n_part: usize| {
+            ctx.cost.allreduce_seconds(n_part, msg, topo.link(level), ctx.strategy)
+        };
+        let plan = FaultPlan::Sampled(ctx.faults.unwrap());
+        let stats = sim::replay_timeline_stats_faults(
+            &topo,
+            &sched,
+            v.total_steps,
+            ctx.step_seconds,
+            &secs,
+            &ctx.het,
+            &plan,
+            &survivor,
+        );
+        assert!(stats.preemptions > 0, "fault regime drew no outages at this seed");
+        assert!(
+            stats.degraded_group_barriers > 0,
+            "no barrier was survivor-priced — the parity check proves nothing"
+        );
+        assert_eq!(stats.makespan_seconds.to_bits(), v.modelled_makespan_seconds.to_bits());
+    }
+
+    #[test]
+    fn compressed_variants_ride_next_to_dense_and_outrank_them() {
+        let mut space = SweepSpace::new(16).unwrap();
+        space.compress = vec![Compression::parse("topk:0.05").unwrap()];
+        let ctx = ctx16();
+        let cands = enumerate(&space, &ctx);
+        let n_dense = cands.iter().filter(|c| c.compress.is_none()).count();
+        assert_eq!(cands.len(), 2 * n_dense, "every dense entry needs a compressed twin");
+        let comp = cands.iter().find(|c| !c.compress.is_none()).unwrap();
+        assert!(comp.label().ends_with("-topk0.05"), "{}", comp.label());
+        // The twin moves fewer bytes and takes less comm time, and —
+        // because the convergence bound ignores compression noise — must
+        // outrank its dense sibling in time_to_target.
+        let ranked = rank(&space, &ctx).unwrap();
+        let find = |label: &str| {
+            ranked
+                .iter()
+                .position(|r| r.candidate.label() == label)
+                .unwrap_or_else(|| panic!("{label} not ranked"))
+        };
+        for r in &ranked {
+            if r.candidate.compress.is_none() {
+                continue;
+            }
+            let dense_label =
+                r.candidate.label().trim_end_matches("-topk0.05").to_string();
+            let d = &ranked[find(&dense_label)];
+            assert!(r.score.comm_bytes < d.score.comm_bytes, "{}", r.candidate.label());
+            assert!(r.score.comm_seconds < d.score.comm_seconds);
+            assert_eq!(r.score.bound.to_bits(), d.score.bound.to_bits());
+            assert!(
+                r.score.time_to_target < d.score.time_to_target,
+                "{} did not outrank its dense twin",
+                r.candidate.label()
+            );
+        }
+        // An empty compress list leaves the space bit-stable.
+        let plain = SweepSpace::new(16).unwrap();
+        let a = rank(&plain, &ctx).unwrap();
+        space.compress.clear();
+        let b = rank(&space, &ctx).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.candidate, y.candidate);
+            assert_eq!(x.score.time_to_target.to_bits(), y.score.time_to_target.to_bits());
+        }
+        // Listing "none" is a contradiction, not a silent duplicate.
+        let mut bad = SweepSpace::new(16).unwrap();
+        bad.compress = vec![Compression::None];
+        assert!(rank(&bad, &ctx).is_err());
+    }
+
+    #[test]
+    fn compressed_validation_measures_the_compressed_account() {
+        // The engine's reducer prices a compressed run with the same
+        // payload_bytes the planner scores with: modelled-vs-measured
+        // parity must hold for a compressed candidate, and the measured
+        // bytes must sit below the candidate's own dense score.
+        let ctx = ctx16();
+        let mut cand = Candidate::with_default_links(vec![4, 16], vec![2, 8]).unwrap();
+        cand.compress = Compression::parse("topk:0.05").unwrap();
+        let v = validate(&cand, &ctx, "quickstart", CollectiveKind::Simulated).unwrap();
+        assert_eq!(v.modelled_comm_bytes, v.measured_comm_bytes);
+        let rel = v.delta_seconds.abs() / v.measured_comm_seconds.max(1e-30);
+        assert!(rel < 1e-9, "compressed comm drift {rel}");
+        let vctx = ScoreCtx { horizon: v.total_steps, ..ctx };
+        let dense_at_measured = score(
+            &Candidate { compress: Compression::None, ..cand.clone() },
+            &vctx,
+        )
+        .unwrap();
+        assert!(
+            v.measured_comm_bytes < dense_at_measured.comm_bytes,
+            "compressed run moved {} bytes vs dense {}",
+            v.measured_comm_bytes,
+            dense_at_measured.comm_bytes
+        );
     }
 
     #[test]

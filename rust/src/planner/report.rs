@@ -13,12 +13,13 @@
 //!           "seed": 42},
 //!   "space": {"min_levels": 2, "max_levels": 4, "k1_grid": [1,2,4],
 //!             "k2_max": 256, "use_rack": true, "local_averaging": true,
-//!             "policy": "static"},
+//!             "policy": "static", "compress": ["topk:0.05"]},
 //!   "k2_cap_condition_35": 199,
 //!   "candidates": [
 //!     {"rank": 0, "label": "h4x16-k2_8", "policy": "static",
 //!      "levels": [4,16], "ks": [2,8],
 //!      "links": ["intra","inter"], "k1": 2, "k2": 8, "s": 4,
+//!      "compress": "topk:0.05", "payload_bytes": 1108,
 //!      "score": {"time_to_target": 1.2, "comm_seconds": 0.3,
 //!                "comm_bytes": 123, "compute_seconds": 0.9,
 //!                "makespan_seconds": 1.2,
@@ -67,7 +68,7 @@ fn validation_json(v: &Validation) -> Json {
     o
 }
 
-fn candidate_json(rank: usize, r: &Ranked, validation: Option<&Validation>) -> Json {
+fn candidate_json(rank: usize, r: &Ranked, n_params: usize, validation: Option<&Validation>) -> Json {
     let c = &r.candidate;
     let s = &r.score;
     let (k1, k2, cluster_s) = c.k1k2s();
@@ -105,6 +106,11 @@ fn candidate_json(rank: usize, r: &Ranked, validation: Option<&Validation>) -> J
         .set("k1", Json::from(k1 as usize))
         .set("k2", Json::from(k2 as usize))
         .set("s", Json::from(cluster_s as usize))
+        // Canonical compression spec ("none" for dense entries) plus the
+        // per-message wire bytes it prices to — so a report diff shows
+        // exactly what a compressed twin saved.
+        .set("compress", Json::from(c.compress.spec()))
+        .set("payload_bytes", Json::from(c.compress.payload_bytes(n_params)))
         .set("score", score)
         .set("cost_levels", Json::Arr(cost_levels));
     if let Some(v) = validation {
@@ -132,11 +138,15 @@ pub fn sweep_json(
         .set("k2_max", Json::from(space.k2_max as usize))
         .set("use_rack", Json::from(space.use_rack))
         .set("local_averaging", Json::from(space.local_averaging))
-        .set("policy", Json::from(space.policy.spec()));
+        .set("policy", Json::from(space.policy.spec()))
+        .set(
+            "compress",
+            Json::Arr(space.compress.iter().map(|c| Json::from(c.spec())).collect()),
+        );
     let candidates: Vec<Json> = ranked
         .iter()
         .enumerate()
-        .map(|(i, r)| candidate_json(i, r, validations.get(i)))
+        .map(|(i, r)| candidate_json(i, r, ctx.n_params, validations.get(i)))
         .collect();
     // The heterogeneity regime the makespans were priced against — a
     // report is not reproducible without it.
@@ -216,6 +226,47 @@ mod tests {
                 c.req("levels").unwrap().as_arr().unwrap().len(),
                 c.req("cost_levels").unwrap().as_arr().unwrap().len()
             );
+            // dense entries carry the canonical "none" spec and the dense
+            // per-message size
+            assert_eq!(c.req("compress").unwrap().as_str().unwrap(), "none");
+            assert_eq!(c.req("payload_bytes").unwrap().as_usize().unwrap(), ctx.n_params * 4);
         }
+    }
+
+    #[test]
+    fn report_carries_compression_fields() {
+        use crate::comm::Compression;
+        let mut space = SweepSpace::new(16).unwrap();
+        space.compress = vec![Compression::parse("topk:0.05").unwrap()];
+        let ctx = ScoreCtx::for_model(
+            "quickstart",
+            16,
+            2_000,
+            ReduceStrategy::Ring,
+            CostModel::default(),
+        )
+        .unwrap();
+        let ranked = planner::rank(&space, &ctx).unwrap();
+        let j = sweep_json(&space, &ctx, "quickstart", &ranked, &[]);
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        let specs = parsed.req("space").unwrap().req("compress").unwrap().as_arr().unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].as_str().unwrap(), "topk:0.05");
+        let spec = Compression::parse("topk:0.05").unwrap();
+        let cands = parsed.req("candidates").unwrap().as_arr().unwrap();
+        let mut seen_compressed = 0usize;
+        for c in cands {
+            let cspec = c.req("compress").unwrap().as_str().unwrap();
+            let payload = c.req("payload_bytes").unwrap().as_usize().unwrap();
+            if cspec == "none" {
+                assert_eq!(payload, ctx.n_params * 4);
+            } else {
+                assert_eq!(cspec, "topk:0.05");
+                assert_eq!(payload, spec.payload_bytes(ctx.n_params));
+                assert!(payload < ctx.n_params * 4);
+                seen_compressed += 1;
+            }
+        }
+        assert_eq!(seen_compressed * 2, cands.len());
     }
 }

@@ -23,7 +23,7 @@ use std::collections::BinaryHeap;
 use crate::algorithms::{HierSchedule, SchedulePolicy, StaticPolicy};
 use crate::topology::HierTopology;
 
-use super::{EventModel, ExecBreakdown, ExecModel, FaultPlan, HetSpec};
+use super::{EventModel, ExecBreakdown, ExecModel, FaultPlan, HetSpec, MembershipModel};
 
 /// Merged per-level event calendar of a static schedule: a min-heap of
 /// `(step, level)` nodes, one live node per level, each re-armed at its
@@ -184,6 +184,10 @@ pub struct TimelineStats {
     /// Checkpoint re-entries observed on the timeline (0 without a fault
     /// layer).
     pub reentries: u64,
+    /// Barrier groups priced at a survivor subset because one or more
+    /// members were down when the barrier fired (0 without a fault
+    /// layer).  Mirrors the engine's `survivor_reductions` counter.
+    pub degraded_group_barriers: u64,
 }
 
 impl TimelineStats {
@@ -219,13 +223,18 @@ pub fn replay_timeline_stats(
 /// like any heterogeneous replay — `sweep --faults` keeps its existing P
 /// bounds rather than riding the O(1) homogeneous fast path.
 ///
-/// One deliberate approximation: each barrier is charged the full-group
-/// collective cost even when preemptions shrink it to a survivor subset
-/// (a live engine run reprices degraded groups to the survivor count via
-/// `reduce_level_survivors`).  The replay therefore upper-bounds the
-/// engine's fault-mode makespan slightly; the ranking only needs the
-/// relative ordering, and the pessimism lands on exactly the shapes that
-/// lean hardest on wide barriers.
+/// Barriers are priced the way the engine prices them: a group with
+/// every member up charges exactly `level_seconds[level]`, a group
+/// shrunk to a survivor subset charges `survivor_seconds(level,
+/// n_part)` — the caller's hook into the cost model, mirroring
+/// `Reducer::reduce_level_survivors` (which reprices degraded groups at
+/// the survivor participant count over the *dense* payload; degraded
+/// barriers never compress).  An all-down group charges nothing, and the
+/// step's barrier charge is the max over its non-empty groups, exactly
+/// the engine's serialized-group convention.  The survivor trace comes
+/// from an independent [`MembershipModel`] forked from the same
+/// `spec.seed` the timeline's fault layer uses, so the pricing and the
+/// clock charging see the identical outage schedule.
 pub fn replay_timeline_stats_faults(
     topo: &HierTopology,
     sched: &HierSchedule,
@@ -234,8 +243,17 @@ pub fn replay_timeline_stats_faults(
     level_seconds: &[f64],
     spec: &HetSpec,
     plan: &FaultPlan,
+    survivor_seconds: &dyn Fn(usize, usize) -> f64,
 ) -> TimelineStats {
-    replay_stats_inner(topo, sched, horizon, step_seconds, level_seconds, spec, Some(plan))
+    replay_stats_inner(
+        topo,
+        sched,
+        horizon,
+        step_seconds,
+        level_seconds,
+        spec,
+        Some((plan, survivor_seconds)),
+    )
 }
 
 fn replay_stats_inner(
@@ -245,20 +263,60 @@ fn replay_stats_inner(
     step_seconds: f64,
     level_seconds: &[f64],
     spec: &HetSpec,
-    plan: Option<&FaultPlan>,
+    faults: Option<(&FaultPlan, &dyn Fn(usize, usize) -> f64)>,
 ) -> TimelineStats {
     debug_assert_eq!(level_seconds.len(), topo.n_levels());
     let mut model = EventModel::new(topo.p(), topo.n_levels(), step_seconds, spec);
-    if let Some(plan) = plan {
+    // Independent survivor trace for barrier *pricing*; the timeline's own
+    // fault layer (same seed, same stream) does the clock charging.  Kept
+    // None when the trace can't fire so the no-fault walk below stays
+    // structurally identical to the fault-free path — bit-identical
+    // makespans for `prob: 0` plans.
+    let mut pricing = None;
+    if let Some((plan, pricer)) = faults {
         model.install_faults(spec.seed, plan);
+        let membership = MembershipModel::new(topo.p(), spec.seed, plan);
+        if !membership.is_empty() {
+            pricing = Some((membership, pricer));
+        }
     }
     let mut cal = EventCalendar::new(sched, horizon);
     let mut done = 0u64;
     let mut reduction_events = 0u64;
+    let mut degraded_group_barriers = 0u64;
     while let Some((t, level)) = cal.next() {
         model.on_steps(t - done);
         done = t;
-        model.on_reduction(topo, level, level_seconds[level]);
+        let secs = match &mut pricing {
+            None => level_seconds[level],
+            Some((membership, pricer)) => {
+                // Survivor-aware pricing, mirroring reduce_level_survivors:
+                // max over non-empty groups; full groups keep the exact
+                // closed-form charge.  Size-1 groups below the top are
+                // no-op barriers (the model ignores them too).
+                let mut max_secs = 0.0f64;
+                if topo.size(level) > 1 || level + 1 == topo.n_levels() {
+                    for g in 0..topo.n_groups(level) {
+                        let members = topo.group_members(level, g);
+                        let total = members.len();
+                        let n_part = members.filter(|&j| !membership.is_down(j, t)).count();
+                        let secs = if n_part == total {
+                            level_seconds[level]
+                        } else if n_part == 0 {
+                            continue;
+                        } else {
+                            degraded_group_barriers += 1;
+                            pricer(level, n_part)
+                        };
+                        if secs > max_secs {
+                            max_secs = secs;
+                        }
+                    }
+                }
+                max_secs
+            }
+        };
+        model.on_reduction(topo, level, secs);
         reduction_events += 1;
     }
     model.on_steps(horizon - done);
@@ -275,6 +333,7 @@ fn replay_stats_inner(
         lost_seconds_total: model.lost_seconds_total(),
         preemptions,
         reentries,
+        degraded_group_barriers,
     }
 }
 
@@ -339,21 +398,62 @@ mod tests {
         let sched = HierSchedule::new(vec![4, 16]).unwrap();
         let spec = HetSpec { het: 0.3, straggler_prob: 0.05, straggler_mult: 4.0, seed: 17 };
         let secs = [1e-4, 1e-3];
+        // proportional survivor pricing: a degraded group is cheaper
+        let pricer =
+            |level: usize, n_part: usize| secs[level] * n_part as f64 / topo.size(level) as f64;
         let plan = FaultPlan::Sampled(FaultSpec { prob: 0.01, mttr: 10 });
-        let a = replay_timeline_stats_faults(&topo, &sched, 256, 1e-3, &secs, &spec, &plan);
-        let b = replay_timeline_stats_faults(&topo, &sched, 256, 1e-3, &secs, &spec, &plan);
+        let a = replay_timeline_stats_faults(&topo, &sched, 256, 1e-3, &secs, &spec, &plan, &pricer);
+        let b = replay_timeline_stats_faults(&topo, &sched, 256, 1e-3, &secs, &spec, &plan, &pricer);
         assert_eq!(a.makespan_seconds.to_bits(), b.makespan_seconds.to_bits());
         assert_eq!((a.preemptions, a.reentries), (b.preemptions, b.reentries));
         assert!(a.preemptions > 0, "hazard 0.01 over 16×256 learner-steps fired nothing");
         assert!(a.reentries > 0);
         assert!(a.lost_seconds_total > 0.0);
+        // a down interval always straddles a barrier here (mttr 10 > k1 4,
+        // and the horizon itself is a global boundary), so some group was
+        // priced at its survivor count
+        assert!(a.degraded_group_barriers > 0);
+        // survivor pricing never charges *more* than the old full-group rule
+        let full = |level: usize, _n_part: usize| secs[level];
+        let pessimistic =
+            replay_timeline_stats_faults(&topo, &sched, 256, 1e-3, &secs, &spec, &plan, &full);
+        assert!(a.makespan_seconds <= pessimistic.makespan_seconds);
+        assert_eq!(a.degraded_group_barriers, pessimistic.degraded_group_barriers);
+        assert_eq!(a.lost_seconds_total.to_bits(), pessimistic.lost_seconds_total.to_bits());
         // an armed-but-empty fault layer prices identically to no layer
         let empty = FaultPlan::Sampled(FaultSpec { prob: 0.0, mttr: 10 });
-        let z = replay_timeline_stats_faults(&topo, &sched, 256, 1e-3, &secs, &spec, &empty);
+        let z =
+            replay_timeline_stats_faults(&topo, &sched, 256, 1e-3, &secs, &spec, &empty, &pricer);
         let plain = replay_timeline_stats(&topo, &sched, 256, 1e-3, &secs, &spec);
         assert_eq!(z.makespan_seconds.to_bits(), plain.makespan_seconds.to_bits());
         assert_eq!(z.blocked_seconds_total.to_bits(), plain.blocked_seconds_total.to_bits());
         assert_eq!(z.lost_seconds_total, 0.0);
         assert_eq!((z.preemptions, z.reentries), (0, 0));
+        assert_eq!(z.degraded_group_barriers, 0);
+    }
+
+    #[test]
+    fn scripted_outage_degrades_exactly_the_barriers_it_straddles() {
+        use super::super::{FaultEvent, FaultPlan};
+        let topo = HierTopology::new(vec![4, 16]).unwrap();
+        let sched = HierSchedule::new(vec![4, 16]).unwrap();
+        let spec = HetSpec { het: 0.0, straggler_prob: 0.0, straggler_mult: 1.0, seed: 7 };
+        let secs = [1e-4, 1e-3];
+        // learner 0 down for steps 14..18: among the barrier nodes
+        // {4, 8, 12, 16, 20, ...} the interval straddles only the global
+        // barrier at t = 16, so exactly one group is survivor-priced.
+        let plan = FaultPlan::Scripted(vec![FaultEvent { step: 14, learner: 0, down_steps: 4 }]);
+        let pricer =
+            |level: usize, n_part: usize| secs[level] * n_part as f64 / topo.size(level) as f64;
+        let s = replay_timeline_stats_faults(&topo, &sched, 32, 1e-3, &secs, &spec, &plan, &pricer);
+        assert_eq!((s.preemptions, s.reentries), (1, 1));
+        assert_eq!(s.degraded_group_barriers, 1);
+        // the survivor charge for 15/16 participants is what the barrier
+        // must have cost: repricing it at the full-group rate can only
+        // raise the makespan
+        let full = |level: usize, _n_part: usize| secs[level];
+        let f = replay_timeline_stats_faults(&topo, &sched, 32, 1e-3, &secs, &spec, &plan, &full);
+        assert_eq!(f.degraded_group_barriers, 1);
+        assert!(s.makespan_seconds <= f.makespan_seconds);
     }
 }

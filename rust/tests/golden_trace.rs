@@ -327,6 +327,63 @@ fn straggler_run_training_numerics_match_lockstep() {
     assert!(strag.level_stall_seconds.iter().sum::<f64>() > 0.0);
 }
 
+/// The compression layer's determinism contract: an explicit
+/// `--compress none` builds no wrapper and reproduces the committed dense
+/// goldens byte for byte — across all three collectives and both
+/// execution models.  (Pinned against the in-process baseline rather
+/// than the files so the guarantee holds even before a golden is
+/// committed; `check_golden` above covers the file half.)
+#[test]
+fn compress_none_is_bit_identical_to_dense() {
+    use hier_avg::comm::Compression;
+    for collective in [
+        CollectiveKind::Simulated,
+        CollectiveKind::Sharded { threads: 3 },
+        CollectiveKind::Pooled { threads: 2 },
+    ] {
+        for exec in [ExecKind::Lockstep, ExecKind::Event] {
+            let dense = run_with_exec(collective, exec);
+            let mut cfg =
+                planner::validation_config(&golden_candidate(), "quickstart", collective)
+                    .unwrap();
+            cfg.exec = exec;
+            cfg.compress = Compression::parse("none").unwrap();
+            cfg.validate().unwrap();
+            let none = planner::validation_record(&cfg).unwrap();
+            assert!(none.compression.is_none(), "--compress none emitted a compression block");
+            assert_eq!(
+                dense.to_golden_json().pretty(),
+                none.to_golden_json().pretty(),
+                "--compress none perturbed the dense run ({collective:?}, {exec:?})"
+            );
+        }
+    }
+}
+
+/// ... and a *non*-none spec moves strictly fewer bytes while still
+/// training to finite losses under the golden scenario — so the dense
+/// identity above is not vacuous.
+#[test]
+fn compressed_golden_scenario_trains_and_saves_bytes() {
+    use hier_avg::comm::Compression;
+    let mut cfg = planner::validation_config(
+        &golden_candidate(),
+        "quickstart",
+        CollectiveKind::Simulated,
+    )
+    .unwrap();
+    cfg.compress = Compression::parse("topk:0.1").unwrap();
+    cfg.validate().unwrap();
+    let rec = planner::validation_record(&cfg).unwrap();
+    let c = rec.compression.as_ref().expect("compressed run must carry a compression block");
+    assert_eq!(c.spec, "topk:0.1");
+    assert!(c.compressed_bytes < c.dense_bytes);
+    assert!(c.payload_bytes < c.dense_payload_bytes);
+    for e in &rec.epochs {
+        assert!(e.train_loss.is_finite() && e.test_loss.is_finite(), "loss diverged");
+    }
+}
+
 /// The three collectives must produce the same golden bytes — the
 /// cross-engine half of the regression holds even before any file is
 /// committed, and proves the planner's validation runs are bit-identical

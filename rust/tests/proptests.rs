@@ -485,6 +485,52 @@ fn prop_thm34_bound_finite_positive() {
 }
 
 #[test]
+fn prop_compressed_bytes_monotone_in_ratio_and_capped_at_dense() {
+    // The planner ranks compressed twins by these numbers: a larger keep
+    // ratio never shrinks the wire payload, and no spec ever prices above
+    // its dense equivalent — for every strategy, link tier, participant
+    // count, and parameter count, on both the byte and the seconds axes.
+    use hier_avg::comm::Compression;
+    let mut rng = Pcg32::seeded(0xC0_4412);
+    let cm = CostModel::default();
+    for case in 0..CASES {
+        let n = 2 + rng.next_below(255) as usize;
+        let n_params = 1 + rng.next_below(1 << 20) as usize;
+        let r1 = (1 + rng.next_below(499)) as f64 / 1000.0; // 0.001 .. 0.499
+        let r2 = (r1 + (1 + rng.next_below(500)) as f64 / 1000.0).min(1.0); // r1 < r2 <= 1
+        let dense = Compression::None;
+        let sparse_lo = Compression::TopK { ratio: r1, ef: true };
+        let sparse_hi = Compression::TopK { ratio: r2, ef: true };
+        assert!(sparse_lo.payload_bytes(n_params) <= sparse_hi.payload_bytes(n_params));
+        assert_eq!(dense.payload_bytes(n_params), n_params * 4);
+        for comp in [
+            sparse_lo,
+            sparse_hi,
+            Compression::RandK { ratio: r1, ef: true },
+            Compression::Q8 { ef: true },
+            Compression::Q4 { ef: false },
+        ] {
+            assert!(comp.payload_bytes(n_params) <= n_params * 4, "case {case}: {comp:?}");
+            for s in STRATEGIES {
+                let cb = cm.compressed_allreduce_bytes(n, n_params, comp, s);
+                let db = cm.compressed_allreduce_bytes(n, n_params, dense, s);
+                assert!(cb <= db, "case {case}: {comp:?} {s:?}: {cb} > dense {db}");
+                assert_eq!(db, cm.allreduce_bytes(n, n_params * 4, s));
+                for link in LINKS {
+                    let cs = cm.compressed_allreduce_seconds(n, n_params, comp, link, s);
+                    let ds = cm.compressed_allreduce_seconds(n, n_params, dense, link, s);
+                    assert!(cs.is_finite() && cs >= 0.0);
+                    assert!(cs <= ds + 1e-15, "case {case}: {comp:?} {link:?} {s:?}");
+                }
+            }
+            let lo = cm.compressed_allreduce_bytes(n, n_params, sparse_lo, ReduceStrategy::Ring);
+            let hi = cm.compressed_allreduce_bytes(n, n_params, sparse_hi, ReduceStrategy::Ring);
+            assert!(lo <= hi, "case {case}: ratio {r1} priced above {r2}");
+        }
+    }
+}
+
+#[test]
 fn prop_cost_model_strategy_orderings() {
     // For any payload/participants: ring ≤ naive on bytes-dominated
     // payloads; tree ≤ naive always on rounds.
