@@ -3,10 +3,12 @@
 //! `CompressedCollective` wrapper adds on top of the dense simulated
 //! engine for a full 8-learner group barrier.
 //!
-//! Top-k carries the O(n log n) magnitude sort, rand-k the partial
-//! Fisher–Yates, q8/q4 a pure per-coordinate pass — the `dense` rows
-//! (spec `none`) are the floor the lossy variants are judged against
-//! (`BENCH_compress.json`).
+//! Top-k carries the O(n) magnitude selection (select_nth over the
+//! (-|v|, index) order), rand-k the partial Fisher–Yates, q8/q4 a pure
+//! per-coordinate pass — the `dense` rows (spec `none`) are the floor
+//! the lossy variants are judged against (`BENCH_compress.json`).  The
+//! trailing simd/scalar pairs record the AVX2 speedup of the quantizer
+//! and top-k scan (bit-identical by util::simd's dispatch contract).
 
 mod benchkit;
 
@@ -35,6 +37,47 @@ fn main() {
             b.bench_with_throughput(&label, n * 4, || {
                 std::hint::black_box(compress_split(spec, &acc, &mut t, &mut e, &mut rng));
             });
+        }
+    }
+    // SIMD vs forced-scalar split on the larger payload: the quantizer
+    // (max_abs scan + round/clamp pass) and top-k magnitude scan carry
+    // the vector work.  Bit-identical by the dispatch contract — asserted
+    // before timing — so the pair is pure speed.  HIER_FORCE_SCALAR is
+    // read per call, so the env toggle flips the dispatch in-process.
+    {
+        let n = 262_144usize;
+        let acc: Vec<f32> = {
+            let mut rng = Pcg32::seeded(0xACC);
+            (0..n).map(|_| rng.next_normal()).collect()
+        };
+        let mut t = vec![0.0f32; n];
+        let mut e = vec![0.0f32; n];
+        for spec_str in ["topk:0.05", "q8", "q4"] {
+            let spec = Compression::parse(spec_str).unwrap();
+            {
+                let (mut ts, mut es) = (vec![0.0f32; n], vec![0.0f32; n]);
+                let mut rng = Pcg32::seeded(0x5EED);
+                compress_split(spec, &acc, &mut t, &mut e, &mut rng);
+                std::env::set_var("HIER_FORCE_SCALAR", "1");
+                let mut rng = Pcg32::seeded(0x5EED);
+                compress_split(spec, &acc, &mut ts, &mut es, &mut rng);
+                std::env::remove_var("HIER_FORCE_SCALAR");
+                assert_eq!(t, ts, "{spec_str}: SIMD split must be bit-identical to scalar");
+                assert_eq!(e, es, "{spec_str}: SIMD residual must be bit-identical to scalar");
+            }
+            for &(case, force) in &[("simd", false), ("scalar", true)] {
+                let label = format!("split/{}/n{n}/{case}", spec_str.replace(':', ""));
+                let mut rng = Pcg32::seeded(0x5EED);
+                if force {
+                    std::env::set_var("HIER_FORCE_SCALAR", "1");
+                }
+                b.bench_with_throughput(&label, n * 4, || {
+                    std::hint::black_box(compress_split(spec, &acc, &mut t, &mut e, &mut rng));
+                });
+                if force {
+                    std::env::remove_var("HIER_FORCE_SCALAR");
+                }
+            }
         }
     }
     // A full group barrier through the wrapper vs the bare dense engine:

@@ -156,6 +156,44 @@ fn main() {
         }
     }
 
+    // SIMD vs forced-scalar mean kernel on one large shape.  The dispatch
+    // contract (util::simd) makes the two bit-identical — asserted before
+    // timing — so the pair is pure speed: the committed baseline records
+    // this host's AVX2 speedup on the reduction hot path, and the CI
+    // smoke prints the ratio.  HIER_FORCE_SCALAR is read per call, so
+    // toggling the env var between cases flips the dispatch in-process.
+    {
+        let n = 3_400_000usize;
+        let s = 8usize;
+        let topo = Topology::new(s, s).unwrap();
+        let base = replicas(s, n, &mut rng);
+        let bytes = 2 * s * n * 4;
+        {
+            let mut with_simd = base.clone();
+            let mut forced = base.clone();
+            let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
+            red.global_average(&mut with_simd, &topo);
+            std::env::set_var("HIER_FORCE_SCALAR", "1");
+            let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
+            red.global_average(&mut forced, &topo);
+            std::env::remove_var("HIER_FORCE_SCALAR");
+            assert_eq!(with_simd, forced, "SIMD mean kernel must be bit-identical to scalar");
+        }
+        for &(case, force) in &[("simd", false), ("scalar", true)] {
+            let mut r = base.clone();
+            let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
+            if force {
+                std::env::set_var("HIER_FORCE_SCALAR", "1");
+            }
+            b.bench_with_throughput(&format!("native/group_avg/3.4M/s8/{case}"), bytes, || {
+                red.global_average(&mut r, &topo);
+            });
+            if force {
+                std::env::remove_var("HIER_FORCE_SCALAR");
+            }
+        }
+    }
+
     // The Pallas group-average + SGD-update artifacts (XLA path), if built.
     if let Ok(m) = Manifest::load_default() {
         if let Ok(mut avg) = XlaGroupAvg::load(&m, 4) {

@@ -70,6 +70,38 @@ fn main() {
         );
     }
 
+    // SIMD vs forced-scalar matmul microkernels on the serial native
+    // step (the same shape as native/resnet18_sim/p16 above, which runs
+    // the default dispatch).  Bit-identical by the summation-order
+    // contract (util::simd / native::linalg), so the pair is pure speed;
+    // HIER_FORCE_SCALAR is read per call, so the env toggle flips the
+    // dispatch in-process.
+    {
+        let (name, p) = ("resnet18_sim", 16usize);
+        let (dims, batch, eval_b) = driver::model_dims(name).unwrap();
+        let mut backend = NativeMlp::new(dims, batch, eval_b).unwrap();
+        let init = backend.init(&mut Pcg32::seeded(1));
+        let dim = dims[0];
+        let classes = *dims.last().unwrap();
+        for &(case, force) in &[("simd", false), ("scalar", true)] {
+            if force {
+                std::env::set_var("HIER_FORCE_SCALAR", "1");
+            }
+            bench_backend(
+                &mut b,
+                &format!("native/{name}/p{p}/{case}"),
+                &mut backend,
+                p,
+                dim,
+                classes,
+                &init,
+            );
+            if force {
+                std::env::remove_var("HIER_FORCE_SCALAR");
+            }
+        }
+    }
+
     // Parallel native backend: lane fan-out over the persistent worker
     // pool (what the driver uses at P >= 8).  Compared against the serial
     // native/p16 case above, this isolates the per-step dispatch overhead

@@ -33,6 +33,7 @@ use anyhow::{bail, Result};
 
 use crate::exec::{self, WorkerPool};
 use crate::params::FlatParams;
+use crate::util::simd;
 
 /// How a group of replicas is averaged in place.  Implementations must
 /// preserve the fixed learner-index-ascending summation order so results
@@ -341,22 +342,18 @@ pub(crate) fn mean_range(
         blk.copy_from_slice(&replicas[first][gs..ge]);
         let mut rest = first + 1..group.end;
         // Pairs of sources per pass: halves the accumulator re-reads.
+        // The vector kernels keep the exact scalar op sequence per
+        // element — `(x + y)` then the accumulate, then one scale — see
+        // util::simd's summation-order contract.
         while rest.len() >= 2 {
             let a = rest.next().unwrap();
             let b = rest.next().unwrap();
-            let (sa, sb) = (&replicas[a][gs..ge], &replicas[b][gs..ge]);
-            for ((o, x), y) in blk.iter_mut().zip(sa).zip(sb) {
-                *o += *x + *y;
-            }
+            simd::add_pair_assign(blk, &replicas[a][gs..ge], &replicas[b][gs..ge]);
         }
         if let Some(a) = rest.next() {
-            for (o, x) in blk.iter_mut().zip(&replicas[a][gs..ge]) {
-                *o += *x;
-            }
+            simd::add_assign(blk, &replicas[a][gs..ge]);
         }
-        for o in blk.iter_mut() {
-            *o *= inv;
-        }
+        simd::scale_assign(blk, inv);
         start = end;
     }
 }

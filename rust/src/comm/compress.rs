@@ -69,6 +69,7 @@ use anyhow::{bail, Result};
 use crate::comm::collective::Collective;
 use crate::params::FlatParams;
 use crate::util::rng::Pcg32;
+use crate::util::simd;
 
 /// Dedicated RNG stream for random-k index draws (disjoint from the
 /// dataset/init/fault streams).
@@ -192,6 +193,39 @@ impl Compression {
             Compression::Q4 { .. } => dense.min(8 + n_params.div_ceil(2)),
         }
     }
+
+    /// Multiplicative inflation applied to the gradient second-moment `M`
+    /// in the Thm 3.4 budget bound when this compression is active — the
+    /// accuracy side of the compression trade the planner scores (the
+    /// bytes side is [`Compression::payload_bytes`]).
+    ///
+    /// Heuristic grounded in the EF-SGD analysis (Stich, Cordonnier &
+    /// Jaggi, 2018): a δ-contraction compressor leaves a `(1 − δ)`
+    /// fraction of the update in the residual each round.  With error
+    /// feedback that mass is re-offered later and only inflates the
+    /// variance-driven term — factor `1 + (1 − δ)/2`; without EF it is
+    /// dropped outright and hits the bound harder — `1 + 2(1 − δ)`.
+    /// Contraction per spec: sparse variants δ = keep ratio; linear
+    /// quantization δ = 1 − 1/(2L) with L levels (127 for q8, 7 for q4).
+    ///
+    /// Guarantees relied on by the planner and its property tests:
+    /// `None` returns *exactly* 1.0 (dense candidates score bit-identically
+    /// whether or not a compression sweep rides along), q4 ≥ q8, `topk:R`
+    /// strictly decreasing in R, and `noef` ≥ `ef` for any lossy spec.
+    pub fn variance_inflation(&self) -> f64 {
+        let (delta, ef) = match *self {
+            Compression::None => return 1.0,
+            Compression::TopK { ratio, ef } | Compression::RandK { ratio, ef } => (ratio, ef),
+            Compression::Q8 { ef } => (1.0 - 1.0 / 254.0, ef),
+            Compression::Q4 { ef } => (1.0 - 1.0 / 14.0, ef),
+        };
+        let lost = (1.0 - delta).max(0.0);
+        if ef {
+            1.0 + 0.5 * lost
+        } else {
+            1.0 + 2.0 * lost
+        }
+    }
 }
 
 /// One learner's compression pass: split `acc` into the transmitted
@@ -220,14 +254,21 @@ pub fn compress_split(
         }
         Compression::TopK { .. } => {
             let k = spec.k_of(n);
-            // Select the k largest |acc|, ties toward the lower index:
-            // sort indexes by (-|v|, i).  O(n log n) per barrier; fine for
-            // the simulated scale and deterministic by construction.
+            // Select the k largest |acc|, ties toward the lower index —
+            // the total order (-|v|, i).  A partial selection
+            // (`select_nth_unstable_by`) replaces the previous full sort:
+            // because the comparator is a total order the k-smallest *set*
+            // is unique, and only set membership feeds t/e below, so the
+            // output is bit-identical to the sorted formulation at O(n)
+            // average instead of O(n log n).
             let mut idx: Vec<u32> = (0..n as u32).collect();
-            idx.sort_by(|&a, &b| {
-                let (ma, mb) = (acc[a as usize].abs(), acc[b as usize].abs());
-                mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
-            });
+            let cmp = |a: &u32, b: &u32| {
+                let (ma, mb) = (acc[*a as usize].abs(), acc[*b as usize].abs());
+                mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(b))
+            };
+            if k < n {
+                idx.select_nth_unstable_by(k - 1, cmp);
+            }
             t.fill(0.0);
             e.copy_from_slice(acc);
             for &i in &idx[..k] {
@@ -255,18 +296,17 @@ pub fn compress_split(
         }
         Compression::Q8 { .. } | Compression::Q4 { .. } => {
             let levels: f32 = if matches!(spec, Compression::Q8 { .. }) { 127.0 } else { 7.0 };
-            let max_abs = acc.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            // Magnitude scan + per-coordinate split on the vector kernels
+            // (util::simd): lanes are coordinates, rounding semantics are
+            // f32::round's exactly, so both dispatch paths agree bitwise.
+            let max_abs = simd::max_abs(acc);
             if max_abs == 0.0 {
                 t.fill(0.0);
                 e.fill(0.0);
             } else {
                 let scale = max_abs / levels;
                 let inv = 1.0 / scale;
-                for i in 0..n {
-                    let q = (acc[i] * inv).round().clamp(-levels, levels);
-                    t[i] = q * scale;
-                    e[i] = acc[i] - t[i];
-                }
+                simd::quantize_split(acc, t, e, inv, scale, levels);
             }
             n
         }
@@ -379,12 +419,12 @@ impl Collective for CompressedCollective {
                 st.residuals[j] = vec![0.0; n];
             }
             // acc_j = (x_j − ref_j) + e_j
-            {
-                let (x, r, e) = (&replicas[j], &st.refs[j], &st.residuals[j]);
-                for i in 0..n {
-                    st.acc[i] = (x[i] - r[i]) + e[i];
-                }
-            }
+            simd::delta_plus_residual(
+                &mut st.acc,
+                &replicas[j][..n],
+                &st.refs[j][..n],
+                &st.residuals[j][..n],
+            );
             let mut rng = Pcg32::new(
                 self.seed ^ (j as u64).wrapping_mul(0x9e3779b97f4a7c15),
                 COMPRESS_STREAM ^ st.rounds[j],
@@ -395,14 +435,10 @@ impl Collective for CompressedCollective {
             st.residuals[j] = residual;
             st.coords_sent += sent as u64;
             st.rounds[j] += 1;
-            for i in 0..n {
-                scratch[i] += st.refs[j][i];
-                st.tx_mean[i] += st.tx[i];
-            }
+            simd::add_assign(scratch, &st.refs[j][..n]);
+            simd::add_assign(&mut st.tx_mean, &st.tx);
         }
-        for i in 0..n {
-            scratch[i] = scratch[i] * inv + st.tx_mean[i] * inv;
-        }
+        simd::scaled_sum(scratch, &st.tx_mean, inv);
         for j in group {
             replicas[j].copy_from_slice(scratch);
             st.refs[j].copy_from_slice(scratch);
@@ -450,6 +486,35 @@ mod tests {
         assert_eq!(Compression::parse("q8").unwrap().payload_bytes(1), 4);
         // k floors at one coordinate
         assert_eq!(Compression::parse("topk:0.001").unwrap().k_of(10), 1);
+    }
+
+    #[test]
+    fn variance_inflation_orderings() {
+        let f = |s: &str| Compression::parse(s).unwrap().variance_inflation();
+        // Dense is exactly neutral — bit-stable planner scores depend on it.
+        assert_eq!(f("none"), 1.0);
+        // Keeping everything loses nothing.
+        assert_eq!(f("topk:1"), 1.0);
+        // Coarser quantization is penalized at least as much.
+        assert!(f("q4") >= f("q8"), "q4 {} < q8 {}", f("q4"), f("q8"));
+        assert!(f("q8") > 1.0 && f("q4") > 1.0);
+        // topk:R penalty is monotone decreasing in R.
+        let mut prev = f64::INFINITY;
+        for r in ["0.01", "0.05", "0.1", "0.25", "0.5", "0.9"] {
+            let v = f(&format!("topk:{r}"));
+            assert!(v < prev, "topk:{r} inflation {v} not decreasing (prev {prev})");
+            assert!(v >= 1.0);
+            prev = v;
+        }
+        // Dropping the residual is never cheaper than keeping it.
+        for s in ["topk:0.05", "randk:0.05", "q8", "q4"] {
+            assert!(
+                f(&format!("{s}:noef")) >= f(s),
+                "noef should not be cheaper than ef for {s}"
+            );
+        }
+        // randk and topk share the contraction model at equal ratio.
+        assert_eq!(f("topk:0.05"), f("randk:0.05"));
     }
 
     #[test]

@@ -28,6 +28,17 @@ pub struct CostModel {
 }
 
 impl Default for CostModel {
+    /// Provenance: these are *literature* constants for the paper's
+    /// platform (IBM Minsky, Zhou & Cong 2019 §4 — NVLink ≈ 40 GB/s
+    /// intra-node, EDR InfiniBand ≈ 10 GB/s inter-node, with typical
+    /// small-message latencies of ~5 µs / ~20 µs; the rack tier is a
+    /// conventional ~5 GB/s / ~50 µs oversubscribed spine), not
+    /// measurements of this host.  To re-derive constants from *this*
+    /// machine's measured reduction throughput, run the benchkit suite
+    /// (`scripts/bless_bench.sh`) and then
+    /// `scripts/calibrate_cost_model.py`, which reads BENCH_*.json and
+    /// prints suggested α/β overrides (JSON config keys `alpha_intra` …
+    /// `beta_rack`) plus a suggested `sim_step_seconds` device constant.
     fn default() -> Self {
         CostModel {
             alpha_intra: 5e-6,

@@ -14,6 +14,7 @@ use crate::comm::compress::Compression;
 use crate::comm::cost::{CommStats, CostModel, LevelStats, ReduceStrategy};
 use crate::params::FlatParams;
 use crate::topology::{HierTopology, LinkClass, Topology};
+use crate::util::simd;
 
 pub struct Reducer {
     pub cost: CostModel,
@@ -210,18 +211,16 @@ impl Reducer {
         for x in self.scratch.iter_mut() {
             *x = 0.0;
         }
+        // One vectorized pass per survivor, member index still ascending
+        // and one source per pass — the exact scalar op sequence the
+        // degraded-group test pins operation for operation.
         for j in members.clone() {
             if part[j] {
-                let r = &replicas[j];
-                for i in 0..n {
-                    self.scratch[i] += r[i];
-                }
+                simd::add_assign(&mut self.scratch[..n], &replicas[j][..n]);
             }
         }
         let inv = 1.0 / n_part as f32;
-        for x in self.scratch.iter_mut() {
-            *x *= inv;
-        }
+        simd::scale_assign(&mut self.scratch, inv);
         for j in members {
             if part[j] {
                 replicas[j].copy_from_slice(&self.scratch);

@@ -63,6 +63,13 @@ pub struct RunConfig {
     /// parallelism).  Oversubscription is allowed and never changes
     /// results (the pool's static assignment is deterministic).
     pub pool_threads: usize,
+    /// Pin each pool slot to CPU `slot % host_cpus` (`--pool-pin`).
+    /// Combined with the pool's stable shard→slot affinity and first-touch
+    /// page placement this keeps every shard's pages, worker, and CPU on
+    /// one NUMA node.  Best-effort: a no-op (with a notice) on targets
+    /// without `sched_setaffinity`.  Never changes results — only where
+    /// the deterministic work runs.
+    pub pool_pin: bool,
     /// Per-level link-class overrides matching `levels` (innermost first):
     /// `intra` / `inter` / `rack`.  Empty = the default assignment
     /// (innermost intra-node, every outer level inter-node).
@@ -133,6 +140,7 @@ impl RunConfig {
             collective: CollectiveKind::Simulated,
             compress: Compression::None,
             pool_threads: 0,
+            pool_pin: false,
             links: Vec::new(),
             exec: ExecKind::Lockstep,
             het: 0.0,
@@ -398,6 +406,7 @@ impl RunConfig {
                 "collective" => self.collective = CollectiveKind::parse(v.as_str()?)?,
                 "compress" => self.compress = Compression::parse(v.as_str()?)?,
                 "pool_threads" => self.pool_threads = v.as_usize()?,
+                "pool_pin" => self.pool_pin = v.as_bool()?,
                 "links" => {
                     self.links = v
                         .as_arr()?
@@ -489,6 +498,9 @@ impl RunConfig {
             cfg.compress = Compression::parse(c)?;
         }
         cfg.pool_threads = args.parse_or("pool-threads", cfg.pool_threads)?;
+        if args.has("pool-pin") {
+            cfg.pool_pin = true;
+        }
         if let Some(ls) = args.get("links") {
             cfg.links = ls
                 .split(',')
@@ -676,13 +688,14 @@ mod tests {
         let mut c = RunConfig::defaults("m");
         let j = Json::parse(
             r#"{"levels": [2, 8, 32], "ks": [2, 8, 32], "collective": "pooled:4",
-                "pool_threads": 3, "links": ["intra", "inter", "rack"],
+                "pool_threads": 3, "pool_pin": true, "links": ["intra", "inter", "rack"],
                 "alpha_rack": 1e-4, "beta_rack": 1e-9, "backend": "native"}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
         assert_eq!(c.collective, CollectiveKind::Pooled { threads: 4 });
         assert_eq!(c.pool_threads, 3);
+        assert!(c.pool_pin);
         assert_eq!(c.cost.alpha_rack, 1e-4);
         c.validate().unwrap();
         let h = c.hierarchy().unwrap();
@@ -717,15 +730,16 @@ mod tests {
         let argv: Vec<String> = [
             "train", "--model", "quickstart", "--backend", "native", "--levels", "2,4,8",
             "--ks", "2,4,8", "--collective", "pooled", "--pool-threads", "5",
-            "--links", "intra,inter,rack", "--epochs", "2",
+            "--pool-pin", "--links", "intra,inter,rack", "--epochs", "2",
         ]
         .iter()
         .map(|s| s.to_string())
         .collect();
-        let args = Args::parse(argv, &["record-steps", "help"]).unwrap();
+        let args = Args::parse(argv, &["record-steps", "pool-pin", "help"]).unwrap();
         let cfg = RunConfig::from_args(&args).unwrap();
         assert_eq!(cfg.collective, CollectiveKind::Pooled { threads: 0 });
         assert_eq!(cfg.pool_threads, 5);
+        assert!(cfg.pool_pin);
         assert_eq!(
             cfg.links,
             vec![LinkClass::IntraNode, LinkClass::InterNode, LinkClass::RackFabric]

@@ -219,11 +219,39 @@ impl<'a> Engine<'a> {
             }
         });
         let realized = vec![0u64; topo.n_levels()];
+        let mut learners = LearnerSet::new(cfg, n_params, init);
+        // NUMA locality (pure placement — never changes parameter values):
+        // `--pool-pin` pins each pool slot to a CPU so the pool's stable
+        // shard→slot affinity becomes physical; with the pooled collective
+        // we additionally fault each replica's pages in from the slot that
+        // will keep reducing that shard (first-touch page placement), using
+        // the same ceil-div shard math as `PooledCollective::mean_of`.
+        let pool = match cfg.collective {
+            crate::comm::CollectiveKind::Pooled { threads } if threads > 0 => {
+                crate::exec::shared_pool(threads)
+            }
+            _ => crate::exec::shared_pool(cfg.pool_threads),
+        };
+        if cfg.pool_pin {
+            if crate::exec::pin_supported() {
+                let pinned = pool.pin_threads();
+                eprintln!("[engine] --pool-pin: pinned {pinned}/{} pool slots", pool.threads());
+            } else {
+                eprintln!("[engine] --pool-pin: sched_setaffinity unavailable on this target (no-op)");
+            }
+        }
+        if matches!(cfg.collective, crate::comm::CollectiveKind::Pooled { .. }) {
+            let t = pool.threads().clamp(1, n_params.max(1));
+            let shard = n_params.div_ceil(t);
+            for r in learners.replicas.iter_mut() {
+                pool.first_touch(r, shard);
+            }
+        }
         Ok(Engine {
             cfg,
             topo,
             reducer,
-            learners: LearnerSet::new(cfg, n_params, init),
+            learners,
             timeline,
             policy,
             realized,

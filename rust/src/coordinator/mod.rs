@@ -50,6 +50,13 @@ pub use engine::{Engine, FaultCounts, LearnerSet, ReduceOutcome, StepOutcome};
 /// P100-class device (DESIGN.md §1: modelled, not measured).  Shared by
 /// the trainer's epoch clock and the sweep planner's time-to-target
 /// scoring so both tick against the same device model.
+///
+/// Provenance: `DEVICE_FLOPS` is the paper platform's datasheet number
+/// (Tesla P100 fp32 peak, Zhou & Cong 2019 §4), not a measurement of
+/// this host.  `scripts/calibrate_cost_model.py` derives the equivalent
+/// constant from this machine's measured step throughput
+/// (BENCH_step.json, written by `scripts/bless_bench.sh`) if you want
+/// the simulated clock to track local hardware instead.
 pub fn sim_step_seconds(batch: usize, n_params: usize) -> f64 {
     const DEVICE_FLOPS: f64 = 10.6e12; // P100 fp32 peak
     6.0 * batch as f64 * n_params as f64 / DEVICE_FLOPS

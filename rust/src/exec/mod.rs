@@ -77,6 +77,43 @@ fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
+/// The shard-range plan for one `(len, chunk_len)` split on a pool of a
+/// given size: the boundaries `run_chunks_mut` dispatches and the static
+/// chunk→slot affinity implied by the pool's `index % slots` assignment.
+/// Cached on the pool (single entry, keyed by `(len, chunk_len, slots)`)
+/// so the engine's per-step fan-out, the collectives' reductions, and
+/// first-touch initialization all reuse *identical* ranges without
+/// re-deriving them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkPlan {
+    pub len: usize,
+    pub chunk_len: usize,
+    pub slots: usize,
+    /// Chunk `i` covers `ranges[i].0 .. ranges[i].1` — the same
+    /// boundaries as `slice::chunks_mut(chunk_len)`.
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl ChunkPlan {
+    fn build(len: usize, chunk_len: usize, slots: usize) -> ChunkPlan {
+        let n_chunks = len.div_ceil(chunk_len);
+        let ranges = (0..n_chunks)
+            .map(|i| {
+                let start = i * chunk_len;
+                (start, (start + chunk_len).min(len))
+            })
+            .collect();
+        ChunkPlan { len, chunk_len, slots, ranges }
+    }
+
+    /// The execution slot chunk `i` always runs on (slot 0 = the calling
+    /// thread).  Stable across dispatches for a fixed plan — the basis of
+    /// the shard→slot affinity and of first-touch placement.
+    pub fn slot_of(&self, chunk: usize) -> usize {
+        chunk % self.slots
+    }
+}
+
 /// A fixed-size pool of parked OS threads executing indexed task batches.
 pub struct WorkerPool {
     shared: Arc<Shared>,
@@ -84,6 +121,9 @@ pub struct WorkerPool {
     /// Serializes whole dispatches so a pool can be shared across callers.
     run_lock: Mutex<()>,
     slots: usize,
+    /// Single-entry [`ChunkPlan`] cache (hot paths re-split the same
+    /// buffer length every step/reduction).
+    plan: Mutex<Option<Arc<ChunkPlan>>>,
 }
 
 impl WorkerPool {
@@ -115,7 +155,25 @@ impl WorkerPool {
                     .expect("spawning pool worker")
             })
             .collect();
-        WorkerPool { shared, handles, run_lock: Mutex::new(()), slots }
+        WorkerPool { shared, handles, run_lock: Mutex::new(()), slots, plan: Mutex::new(None) }
+    }
+
+    /// The cached shard-range plan for splitting `len` elements into
+    /// `chunk_len`-sized chunks on this pool.  Rebuilt only when the key
+    /// `(len, chunk_len, slots)` changes; `run_chunks_mut` and
+    /// [`WorkerPool::first_touch`] both dispatch from it, so affinity and
+    /// page placement always agree on the boundaries.
+    pub fn chunk_plan(&self, len: usize, chunk_len: usize) -> Arc<ChunkPlan> {
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        let mut cached = lock_ignore_poison(&self.plan);
+        if let Some(p) = cached.as_ref() {
+            if p.len == len && p.chunk_len == chunk_len && p.slots == self.slots {
+                return Arc::clone(p);
+            }
+        }
+        let plan = Arc::new(ChunkPlan::build(len, chunk_len, self.slots));
+        *cached = Some(Arc::clone(&plan));
+        plan
     }
 
     /// Total execution slots (worker threads + the caller).
@@ -189,7 +247,12 @@ impl WorkerPool {
     /// `f(chunk_index, chunk)` for each on the pool.  Chunk `i` covers
     /// `data[i*chunk_len .. min((i+1)*chunk_len, len)]` — the same
     /// boundaries as `slice::chunks_mut`, so callers keep the exact chunk
-    /// math of the old scoped-thread paths.
+    /// math of the old scoped-thread paths.  Boundaries come from the
+    /// cached [`ChunkPlan`], and the static `i % slots` assignment gives
+    /// every chunk a stable slot across dispatches with the same plan
+    /// (shard→slot affinity: a shard's pages are always touched by the
+    /// same thread, which keeps them node-local under first-touch NUMA
+    /// placement).
     pub fn run_chunks_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
     where
         T: Send,
@@ -200,11 +263,10 @@ impl WorkerPool {
         if len == 0 {
             return;
         }
-        let n_chunks = len.div_ceil(chunk_len);
+        let plan = self.chunk_plan(len, chunk_len);
         let base = data.as_mut_ptr() as usize;
-        self.run(n_chunks, &|i| {
-            let start = i * chunk_len;
-            let end = (start + chunk_len).min(len);
+        self.run(plan.ranges.len(), &|i| {
+            let (start, end) = plan.ranges[i];
             // SAFETY: chunks are pairwise disjoint across task indices and
             // `run` does not return until every task has finished, so the
             // caller's exclusive borrow of `data` outlives all of them.
@@ -214,6 +276,94 @@ impl WorkerPool {
             f(i, chunk);
         });
     }
+
+    /// First-touch page initialization: fault in each chunk's pages from
+    /// the slot that will own that chunk in later `run_chunks_mut`
+    /// dispatches with the same `(len, chunk_len)` plan.  On NUMA hosts
+    /// with the default first-touch policy this places every shard's
+    /// pages on the socket of the worker that will keep reducing it.
+    /// Value-preserving (each probed element is written back to itself
+    /// volatilely, so fresh `calloc` zero pages become resident without
+    /// disturbing already-initialized buffers); one store per 4 KiB page
+    /// suffices to fault it in.
+    pub fn first_touch(&self, data: &mut [f32], chunk_len: usize) {
+        const PAGE_F32: usize = 4096 / std::mem::size_of::<f32>();
+        if data.is_empty() {
+            return;
+        }
+        self.run_chunks_mut(data, chunk_len, |_, chunk| {
+            let mut i = 0;
+            while i < chunk.len() {
+                // SAFETY: in-bounds element of this task's exclusive chunk;
+                // volatile so the self-store is not elided.
+                unsafe {
+                    let p = chunk.as_mut_ptr().add(i);
+                    std::ptr::write_volatile(p, std::ptr::read(p));
+                }
+                i += PAGE_F32;
+            }
+        });
+    }
+
+    /// Pin each pool slot to CPU `slot % host_cpus` (opt-in via
+    /// `--pool-pin`): slot 0 is the calling thread, slots 1.. the pool
+    /// workers.  Combined with shard→slot affinity and first-touch this
+    /// keeps a shard's pages, its worker, and its CPU on one NUMA node.
+    /// Best-effort — returns how many slots were actually pinned (0 on
+    /// non-Linux targets or when the syscall is denied).
+    pub fn pin_threads(&self) -> usize {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pinned = AtomicUsize::new(0);
+        self.run(self.slots, &|i| {
+            if pin_current_thread(i) {
+                pinned.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        pinned.load(Ordering::Relaxed)
+    }
+}
+
+/// Whether thread pinning can do anything on this target (`--pool-pin`
+/// logs a no-op notice when it cannot).
+pub fn pin_supported() -> bool {
+    cfg!(all(target_os = "linux", target_arch = "x86_64"))
+}
+
+/// Best-effort pin of the calling thread to `cpu` (mod the host's CPU
+/// count).  Implemented as a raw `sched_setaffinity` syscall — the crate
+/// deliberately has no libc dependency — on Linux x86_64; a `false`
+/// no-op elsewhere.  Failure is benign (the scheduler keeps balancing).
+pub fn pin_current_thread(cpu: usize) -> bool {
+    pin_impl(cpu)
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn pin_impl(cpu: usize) -> bool {
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cpu = cpu % ncpu;
+    let mut mask = [0u64; 16]; // 1024 CPUs is plenty for one host
+    mask[(cpu / 64) % 16] = 1u64 << (cpu % 64);
+    let ret: i64;
+    // SAFETY: sched_setaffinity(pid = 0 → calling thread, size, *mask)
+    // only reads `mask`; the syscall ABI clobbers rcx/r11.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203i64 => ret, // __NR_sched_setaffinity
+            in("rdi") 0usize,
+            in("rsi") std::mem::size_of_val(&mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+fn pin_impl(_cpu: usize) -> bool {
+    false
 }
 
 impl Drop for WorkerPool {
@@ -403,6 +553,88 @@ mod tests {
             }
         });
         assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 8);
+    }
+
+    #[test]
+    fn chunk_plan_is_cached_and_matches_chunks_mut() {
+        let pool = WorkerPool::new(3);
+        let p1 = pool.chunk_plan(23, 5);
+        let p2 = pool.chunk_plan(23, 5);
+        assert!(Arc::ptr_eq(&p1, &p2), "same key reuses the cached plan");
+        let expect: Vec<(usize, usize)> =
+            vec![(0, 5), (5, 10), (10, 15), (15, 20), (20, 23)];
+        assert_eq!(p1.ranges, expect);
+        assert_eq!(p1.slot_of(0), 0);
+        assert_eq!(p1.slot_of(4), 1);
+        // A different key rebuilds; re-asking for the first key rebuilds
+        // again (single-entry cache) but with identical boundaries.
+        let p3 = pool.chunk_plan(24, 5);
+        assert_eq!(p3.ranges.len(), 5);
+        assert_eq!(p3.ranges[4], (20, 24));
+        let p4 = pool.chunk_plan(23, 5);
+        assert_eq!(p4.ranges, expect);
+    }
+
+    #[test]
+    fn chunk_slot_affinity_is_stable_across_dispatches() {
+        let pool = WorkerPool::new(4);
+        let run_once = || {
+            let ids: Vec<Mutex<Option<std::thread::ThreadId>>> =
+                (0..10).map(|_| Mutex::new(None)).collect();
+            let mut data = vec![0u8; 10];
+            pool.run_chunks_mut(&mut data, 1, |i, _| {
+                *ids[i].lock().unwrap() = Some(std::thread::current().id());
+            });
+            ids.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect::<Vec<_>>()
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a, b, "each chunk must run on the same thread every dispatch");
+        // And the assignment follows the plan's slot_of: chunks i and
+        // i + slots share a thread.
+        assert_eq!(a[0], a[4]);
+        assert_eq!(a[1], a[5]);
+    }
+
+    #[test]
+    fn first_touch_preserves_values() {
+        let pool = WorkerPool::new(3);
+        // Fresh zeroed buffer stays zeroed…
+        let mut fresh = vec![0.0f32; 10_000];
+        pool.first_touch(&mut fresh, 2048);
+        assert!(fresh.iter().all(|&v| v == 0.0));
+        // …and an initialized buffer is untouched bit-for-bit.
+        let mut init: Vec<f32> = (0..10_000).map(|i| (i as f32).sin()).collect();
+        let before = init.clone();
+        pool.first_touch(&mut init, 2048);
+        assert_eq!(init, before);
+    }
+
+    #[test]
+    fn pinning_is_best_effort_and_harmless() {
+        // On Linux x86_64 pinning the current thread to CPU 0 must
+        // succeed; elsewhere it must report a clean no-op.
+        if pin_supported() {
+            assert!(pin_current_thread(0));
+            // Out-of-range CPUs wrap onto the host range instead of
+            // failing with EINVAL.
+            assert!(pin_current_thread(100_000));
+        } else {
+            assert!(!pin_current_thread(0));
+        }
+        let pool = WorkerPool::new(2);
+        let pinned = pool.pin_threads();
+        if pin_supported() {
+            assert_eq!(pinned, 2);
+        } else {
+            assert_eq!(pinned, 0);
+        }
+        // The pool still dispatches normally afterwards.
+        let n = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8);
     }
 
     #[test]

@@ -16,7 +16,7 @@ USAGE:
                   [--levels S1,S2,..,P] [--ks K1,K2,..,KL]
                   [--links intra,inter,rack]
                   [--collective simulated|sharded[:N]|pooled[:N]]
-                  [--pool-threads N]
+                  [--pool-threads N] [--pool-pin]
                   [--schedule static|adaptive[:target[:gain]]|warmup[:k]]
                   [--exec lockstep|event] [--het F] [--straggler P[:M]]
                   [--faults PROB[:mttr] | trace:STEP@LEARNERxDOWN,..]
@@ -68,6 +68,13 @@ resume under a different --schedule.
 Execution: --collective pooled reduces over the persistent worker pool
 (no per-reduction thread spawn); --pool-threads sizes the pool shared by
 reductions and the native backend's lane fan-out (0 = all cores).
+--pool-pin pins pool slot i to CPU i (sched_setaffinity; no-op with a
+notice on non-Linux hosts) — with the pool's stable shard->slot affinity
+and first-touch page placement a shard's pages, worker, and CPU stay on
+one NUMA node.  Pinning never changes results, only where they run.
+Hot per-element loops (matmul microkernels, reductions, quantizers) use
+AVX2 SIMD when the CPU has it, bit-identical to the portable scalar
+path; set HIER_FORCE_SCALAR=1 to force the scalar path.
 --exec selects the virtual-time model: lockstep (one shared clock,
 default) or event (per-learner clocks, group-local barriers — a level
 reduction blocks only its group at max arrival + collective cost).
@@ -139,7 +146,9 @@ fn main() {
 }
 
 fn real_main() -> Result<()> {
-    let args = Args::from_env(&["record-steps", "help", "no-rack", "no-local", "timeline-only"])?;
+    let args = Args::from_env(&[
+        "record-steps", "help", "no-rack", "no-local", "timeline-only", "pool-pin",
+    ])?;
     if args.has("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -348,7 +357,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     // would train a different configuration than asked.
     args.check_known(&[
         "config", "model", "backend", "p", "s", "k1", "k2", "levels", "ks", "links",
-        "collective", "pool-threads", "schedule", "exec", "het", "straggler", "faults",
+        "collective", "pool-threads", "pool-pin", "schedule", "exec", "het", "straggler", "faults",
         "compress", "epochs", "train-n", "test-n", "lr", "seed", "noise", "radius", "momentum",
         "strategy", "record-steps", "init-params", "save-params", "trace", "out", "help",
     ])?;

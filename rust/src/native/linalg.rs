@@ -1,35 +1,69 @@
 //! Dense f32 kernels for the native backend: row-major matmuls in the three
-//! orientations backprop needs, written as register-blocked microkernels
-//! (MR×NR accumulator tiles + k-blocking) in plain safe Rust, relying on
-//! auto-vectorization of the fixed-size inner loops.
+//! orientations backprop needs.  Each orientation has two implementations
+//! sharing one contract: a register-blocked scalar microkernel (MR×NR
+//! accumulator tiles + k-blocking, plain safe Rust — the portable fallback
+//! and the executable reference), and an explicit AVX2 microkernel with a
+//! wider tile (MR×16, two 8-lane registers per output row) selected at run
+//! time.  Dispatch is `util::simd::simd_enabled()`: AVX2 detected via
+//! `is_x86_feature_detected!` and `HIER_FORCE_SCALAR` not set.
 //!
-//! ## Bit-exactness contract
+//! ## Bit-exactness contract (summation order)
 //!
-//! Every kernel keeps the *naive* formulation's per-element summation
-//! order: each output element is a single accumulator folded over the
-//! reduction index in strictly ascending order.  Tiling only changes
-//! *which* elements are in flight together (and round-trips accumulators
-//! through memory at k-block boundaries, which is exact for f32), never
-//! the order of adds into any one element — so results are bit-identical
-//! to the straightforward triple loop, and everything downstream (grads,
-//! training curves, repro outputs) is unchanged.  Enforced by the
-//! `*_bit_identical_to_naive` tests below across odd shapes.
+//! Every kernel — scalar or SIMD — keeps the *naive* formulation's
+//! per-element summation order: each output element is a single
+//! accumulator folded over the reduction index in strictly ascending
+//! order.  Tiling only changes *which* elements are in flight together
+//! (and round-trips accumulators through memory at k-block boundaries,
+//! which is exact for f32), never the order of adds into any one element.
+//! The SIMD kernels extend the same argument: lanes are *distinct output
+//! elements* (consecutive output columns), so widening the tile from NR=8
+//! to 16 changes scheduling, not any element's reduction order; and they
+//! use separate `vmulps` + `vaddps` rather than fused multiply-add,
+//! because `vfmadd` rounds once where scalar `acc + a*b` rounds twice and
+//! would flip last-bit results.  The Bᵀ orientation (whose reduction index
+//! is the contiguous one) packs a transposed b panel first — a pure copy,
+//! no arithmetic — so its SIMD inner loop also walks the reduction index
+//! in the scalar order.  Results are therefore bit-identical to the
+//! straightforward triple loop under BOTH dispatch paths, and everything
+//! downstream (grads, training curves, goldens, repro outputs) is
+//! unchanged.  Enforced by the `*_bit_identical_to_naive` tests below and
+//! by `rust/tests/linalg_simd.rs` (SIMD ≡ scalar across odd shapes and
+//! unaligned sub-slices; CI repeats the suites under
+//! `HIER_FORCE_SCALAR=1`).
 //!
-//! §Perf: the previous unblocked ikj loops streamed the full B (or C)
-//! panel from cache for every row at ~3 memory ops per FMA; the MR×NR
-//! tiles amortize MR+NR loads over MR·NR FMAs (see DESIGN.md
+//! §Perf: the scalar MR×NR tiles amortize MR+NR loads over MR·NR FMAs
+//! versus the old unblocked ikj loops; the AVX2 tiles then cut instruction
+//! count ~8x on the j-contiguous orientations (measured ≥2x wall-clock on
+//! the large bench shapes — see `BENCH_step.json` and DESIGN.md
 //! §Performance).
+
+use crate::util::simd;
 
 /// Accumulator tile rows (output rows held in registers per microkernel).
 const MR: usize = 4;
-/// Accumulator tile columns; 8 f32 = one AVX2 register per row.
+/// Scalar accumulator tile columns; 8 f32 = one AVX2 register per row.
 const NR: usize = 8;
+/// SIMD accumulator tile columns: two 8-lane registers per row (8 ymm
+/// accumulators + 2 b-panel loads + 1 broadcast stays well inside 16).
+const NR_S: usize = 16;
 /// k-block length: a KC×NR panel of b (8 KiB) stays L1-resident while a
 /// tile row of accumulators round-trips through c.
 const KC: usize = 256;
 
 /// c[n,fo] = a[n,fi] @ b[fi,fo]   (all row-major)
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo: usize) {
+    debug_assert!(a.len() >= n * fi && b.len() >= fi * fo && c.len() >= n * fo);
+    #[cfg(target_arch = "x86_64")]
+    if simd::simd_enabled() {
+        unsafe { avx2::matmul(a, b, c, n, fi, fo) };
+        return;
+    }
+    matmul_scalar(a, b, c, n, fi, fo);
+}
+
+/// The portable scalar microkernel (also the SIMD path's executable
+/// reference; `rust/tests/linalg_simd.rs` pins the two bit-identical).
+pub fn matmul_scalar(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo: usize) {
     debug_assert!(a.len() >= n * fi && b.len() >= fi * fo && c.len() >= n * fo);
     c[..n * fo].fill(0.0);
     let mut k0 = 0;
@@ -89,6 +123,16 @@ pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo: usiz
 /// c[fi,fo] = a[n,fi]^T @ b[n,fo]   (wgrad; the reduction runs over n)
 pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo: usize) {
     debug_assert!(a.len() >= n * fi && b.len() >= n * fo && c.len() >= fi * fo);
+    #[cfg(target_arch = "x86_64")]
+    if simd::simd_enabled() {
+        unsafe { avx2::matmul_at_b(a, b, c, n, fi, fo) };
+        return;
+    }
+    matmul_at_b_scalar(a, b, c, n, fi, fo);
+}
+
+pub fn matmul_at_b_scalar(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo: usize) {
+    debug_assert!(a.len() >= n * fi && b.len() >= n * fo && c.len() >= fi * fo);
     c[..fi * fo].fill(0.0);
     let mut i0 = 0;
     while i0 < n {
@@ -139,14 +183,24 @@ pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo:
     }
 }
 
-/// Accumulator tile columns for the Bᵀ orientation (output columns index
-/// rows of b, so loads are strided; a narrower tile keeps register
+/// Accumulator tile columns for the scalar Bᵀ orientation (output columns
+/// index rows of b, so loads are strided; a narrower tile keeps register
 /// pressure down while still amortizing the a-row loads).
 const NR_T: usize = 4;
 
 /// c[n,fi] = a[n,fo] @ b[fi,fo]^T   (dgrad; b is the row-major weight;
 /// the reduction runs over fo)
 pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fo: usize, fi: usize) {
+    debug_assert!(a.len() >= n * fo && b.len() >= fi * fo && c.len() >= n * fi);
+    #[cfg(target_arch = "x86_64")]
+    if simd::simd_enabled() {
+        unsafe { avx2::matmul_a_bt(a, b, c, n, fo, fi) };
+        return;
+    }
+    matmul_a_bt_scalar(a, b, c, n, fo, fi);
+}
+
+pub fn matmul_a_bt_scalar(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fo: usize, fi: usize) {
     debug_assert!(a.len() >= n * fo && b.len() >= fi * fo && c.len() >= n * fi);
     c[..n * fi].fill(0.0);
     let mut j0 = 0;
@@ -205,9 +259,242 @@ pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fo: usize, fi:
 /// z[n,fo] += broadcast bias[fo]
 pub fn add_bias(z: &mut [f32], bias: &[f32], n: usize, fo: usize) {
     for i in 0..n {
-        let row = &mut z[i * fo..(i + 1) * fo];
-        for (zv, &bv) in row.iter_mut().zip(bias) {
-            *zv += bv;
+        simd::add_assign(&mut z[i * fo..(i + 1) * fo], bias);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 microkernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{KC, MR, NR_S};
+    use std::arch::x86_64::*;
+
+    /// SIMD twin of [`super::matmul_scalar`]: same loop nest, MR×NR_S tile
+    /// (two ymm accumulators per output row).  Lanes are output columns;
+    /// each element still folds k ascending with separate mul + add, so
+    /// per-element rounding equals the scalar kernel exactly.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo: usize) {
+        c[..n * fo].fill(0.0);
+        let (ap, bp, cp) = (a.as_ptr(), b.as_ptr(), c.as_mut_ptr());
+        let mut k0 = 0;
+        while k0 < fi {
+            let kend = (k0 + KC).min(fi);
+            let mut i0 = 0;
+            while i0 < n {
+                let iend = (i0 + MR).min(n);
+                let mut j0 = 0;
+                while j0 + NR_S <= fo {
+                    if iend - i0 == MR {
+                        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+                        for (r, row) in acc.iter_mut().enumerate() {
+                            row[0] = _mm256_loadu_ps(cp.add((i0 + r) * fo + j0));
+                            row[1] = _mm256_loadu_ps(cp.add((i0 + r) * fo + j0 + 8));
+                        }
+                        for k in k0..kend {
+                            let b0 = _mm256_loadu_ps(bp.add(k * fo + j0));
+                            let b1 = _mm256_loadu_ps(bp.add(k * fo + j0 + 8));
+                            for (r, row) in acc.iter_mut().enumerate() {
+                                let av = _mm256_set1_ps(*ap.add((i0 + r) * fi + k));
+                                // mul then add, never fmadd: two roundings,
+                                // exactly the scalar `acc += aik * bv`.
+                                row[0] = _mm256_add_ps(row[0], _mm256_mul_ps(av, b0));
+                                row[1] = _mm256_add_ps(row[1], _mm256_mul_ps(av, b1));
+                            }
+                        }
+                        for (r, row) in acc.iter().enumerate() {
+                            _mm256_storeu_ps(cp.add((i0 + r) * fo + j0), row[0]);
+                            _mm256_storeu_ps(cp.add((i0 + r) * fo + j0 + 8), row[1]);
+                        }
+                    } else {
+                        // Short row block (< MR rows): one row at a time,
+                        // same two ymm columns.
+                        for i in i0..iend {
+                            let mut c0 = _mm256_loadu_ps(cp.add(i * fo + j0));
+                            let mut c1 = _mm256_loadu_ps(cp.add(i * fo + j0 + 8));
+                            for k in k0..kend {
+                                let av = _mm256_set1_ps(*ap.add(i * fi + k));
+                                c0 = _mm256_add_ps(
+                                    c0,
+                                    _mm256_mul_ps(av, _mm256_loadu_ps(bp.add(k * fo + j0))),
+                                );
+                                c1 = _mm256_add_ps(
+                                    c1,
+                                    _mm256_mul_ps(av, _mm256_loadu_ps(bp.add(k * fo + j0 + 8))),
+                                );
+                            }
+                            _mm256_storeu_ps(cp.add(i * fo + j0), c0);
+                            _mm256_storeu_ps(cp.add(i * fo + j0 + 8), c1);
+                        }
+                    }
+                    j0 += NR_S;
+                }
+                // Column remainder (< NR_S): scalar, identical k-ascending
+                // per-element order.
+                if j0 < fo {
+                    for i in i0..iend {
+                        for k in k0..kend {
+                            let aik = *ap.add(i * fi + k);
+                            for j in j0..fo {
+                                *cp.add(i * fo + j) += aik * *bp.add(k * fo + j);
+                            }
+                        }
+                    }
+                }
+                i0 = iend;
+            }
+            k0 = kend;
+        }
+    }
+
+    /// SIMD twin of [`super::matmul_at_b_scalar`]: reduction over i, output
+    /// rows indexed by k.  Same structure as `matmul` with roles swapped;
+    /// the reduction index i ascends identically per element.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fi: usize, fo: usize) {
+        c[..fi * fo].fill(0.0);
+        let (ap, bp, cp) = (a.as_ptr(), b.as_ptr(), c.as_mut_ptr());
+        let mut i0 = 0;
+        while i0 < n {
+            let iend = (i0 + KC).min(n);
+            let mut k0 = 0;
+            while k0 < fi {
+                let kend = (k0 + MR).min(fi);
+                let mut j0 = 0;
+                while j0 + NR_S <= fo {
+                    if kend - k0 == MR {
+                        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+                        for (r, row) in acc.iter_mut().enumerate() {
+                            row[0] = _mm256_loadu_ps(cp.add((k0 + r) * fo + j0));
+                            row[1] = _mm256_loadu_ps(cp.add((k0 + r) * fo + j0 + 8));
+                        }
+                        for i in i0..iend {
+                            let b0 = _mm256_loadu_ps(bp.add(i * fo + j0));
+                            let b1 = _mm256_loadu_ps(bp.add(i * fo + j0 + 8));
+                            for (r, row) in acc.iter_mut().enumerate() {
+                                let av = _mm256_set1_ps(*ap.add(i * fi + k0 + r));
+                                row[0] = _mm256_add_ps(row[0], _mm256_mul_ps(av, b0));
+                                row[1] = _mm256_add_ps(row[1], _mm256_mul_ps(av, b1));
+                            }
+                        }
+                        for (r, row) in acc.iter().enumerate() {
+                            _mm256_storeu_ps(cp.add((k0 + r) * fo + j0), row[0]);
+                            _mm256_storeu_ps(cp.add((k0 + r) * fo + j0 + 8), row[1]);
+                        }
+                    } else {
+                        for r in 0..kend - k0 {
+                            let mut c0 = _mm256_loadu_ps(cp.add((k0 + r) * fo + j0));
+                            let mut c1 = _mm256_loadu_ps(cp.add((k0 + r) * fo + j0 + 8));
+                            for i in i0..iend {
+                                let av = _mm256_set1_ps(*ap.add(i * fi + k0 + r));
+                                c0 = _mm256_add_ps(
+                                    c0,
+                                    _mm256_mul_ps(av, _mm256_loadu_ps(bp.add(i * fo + j0))),
+                                );
+                                c1 = _mm256_add_ps(
+                                    c1,
+                                    _mm256_mul_ps(av, _mm256_loadu_ps(bp.add(i * fo + j0 + 8))),
+                                );
+                            }
+                            _mm256_storeu_ps(cp.add((k0 + r) * fo + j0), c0);
+                            _mm256_storeu_ps(cp.add((k0 + r) * fo + j0 + 8), c1);
+                        }
+                    }
+                    j0 += NR_S;
+                }
+                if j0 < fo {
+                    for i in i0..iend {
+                        for k in k0..kend {
+                            let aik = *ap.add(i * fi + k);
+                            for j in j0..fo {
+                                *cp.add(k * fo + j) += aik * *bp.add(i * fo + j);
+                            }
+                        }
+                    }
+                }
+                k0 = kend;
+            }
+            i0 = iend;
+        }
+    }
+
+    /// SIMD twin of [`super::matmul_a_bt_scalar`]: the reduction index j
+    /// is the contiguous one, so lanes = 8 output columns (rows of b) and
+    /// the strided b panel is packed transposed once per (j-block,
+    /// k-block) — a pure copy — making the inner loads contiguous while
+    /// each element's j order stays exactly the scalar one.  Widened from
+    /// the scalar NR_T=4 to 8 output columns per pass.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], n: usize, fo: usize, fi: usize) {
+        c[..n * fi].fill(0.0);
+        let (ap, bp, cp) = (a.as_ptr(), b.as_ptr(), c.as_mut_ptr());
+        // KC j-values × 8 k-columns of b, transposed: 8 KiB, L1-resident.
+        let mut packed = [0.0f32; KC * 8];
+        let mut j0 = 0;
+        while j0 < fo {
+            let jend = (j0 + KC).min(fo);
+            let jlen = jend - j0;
+            let mut k0 = 0;
+            while k0 + 8 <= fi {
+                for jj in 0..jlen {
+                    for q in 0..8 {
+                        packed[jj * 8 + q] = *bp.add((k0 + q) * fo + j0 + jj);
+                    }
+                }
+                let pp = packed.as_ptr();
+                let mut i0 = 0;
+                while i0 < n {
+                    let iend = (i0 + MR).min(n);
+                    if iend - i0 == MR {
+                        let mut acc = [_mm256_setzero_ps(); MR];
+                        for (r, av) in acc.iter_mut().enumerate() {
+                            *av = _mm256_loadu_ps(cp.add((i0 + r) * fi + k0));
+                        }
+                        for jj in 0..jlen {
+                            let bv = _mm256_loadu_ps(pp.add(jj * 8));
+                            for (r, accr) in acc.iter_mut().enumerate() {
+                                let av = _mm256_set1_ps(*ap.add((i0 + r) * fo + j0 + jj));
+                                *accr = _mm256_add_ps(*accr, _mm256_mul_ps(av, bv));
+                            }
+                        }
+                        for (r, av) in acc.iter().enumerate() {
+                            _mm256_storeu_ps(cp.add((i0 + r) * fi + k0), *av);
+                        }
+                    } else {
+                        for i in i0..iend {
+                            let mut accv = _mm256_loadu_ps(cp.add(i * fi + k0));
+                            for jj in 0..jlen {
+                                let av = _mm256_set1_ps(*ap.add(i * fo + j0 + jj));
+                                accv = _mm256_add_ps(
+                                    accv,
+                                    _mm256_mul_ps(av, _mm256_loadu_ps(pp.add(jj * 8))),
+                                );
+                            }
+                            _mm256_storeu_ps(cp.add(i * fi + k0), accv);
+                        }
+                    }
+                    i0 = iend;
+                }
+                k0 += 8;
+            }
+            if k0 < fi {
+                // k remainder (< 8 output columns): scalar dot-products,
+                // j ascending within the block exactly as the scalar
+                // remainder path.
+                for i in 0..n {
+                    for k in k0..fi {
+                        let mut acc = *cp.add(i * fi + k);
+                        for j in j0..jend {
+                            acc += *ap.add(i * fo + j) * *bp.add(k * fo + j);
+                        }
+                        *cp.add(i * fi + k) = acc;
+                    }
+                }
+            }
+            j0 = jend;
         }
     }
 }
@@ -259,7 +546,7 @@ mod tests {
     }
 
     /// Shapes chosen to hit every remainder path: below/at/above MR, NR,
-    /// NR_T, and straddling KC.
+    /// NR_S, NR_T, and straddling KC.
     const SHAPES: &[(usize, usize, usize)] = &[
         (1, 1, 1),
         (2, 3, 5),
@@ -272,6 +559,8 @@ mod tests {
         (9, 300, 31),
         (300, 5, 7),
         (5, 40, 300),
+        (6, 19, 16),
+        (11, 16, 23),
     ];
 
     #[test]
@@ -282,6 +571,9 @@ mod tests {
             let mut c = vec![0.0; n * fo];
             matmul(&a, &b, &mut c, n, fi, fo);
             assert_eq!(c, naive(&a, &b, n, fi, fo), "shape ({n},{fi},{fo})");
+            let mut cs = vec![0.0; n * fo];
+            matmul_scalar(&a, &b, &mut cs, n, fi, fo);
+            assert_eq!(cs, c, "scalar twin, shape ({n},{fi},{fo})");
         }
     }
 
@@ -293,6 +585,9 @@ mod tests {
             let mut c = vec![0.0; fi * fo];
             matmul_at_b(&a, &b, &mut c, n, fi, fo);
             assert_eq!(c, naive_at_b(&a, &b, n, fi, fo), "shape ({n},{fi},{fo})");
+            let mut cs = vec![0.0; fi * fo];
+            matmul_at_b_scalar(&a, &b, &mut cs, n, fi, fo);
+            assert_eq!(cs, c, "scalar twin, shape ({n},{fi},{fo})");
         }
     }
 
@@ -304,6 +599,9 @@ mod tests {
             let mut c = vec![0.0; n * fi];
             matmul_a_bt(&a, &b, &mut c, n, fo, fi);
             assert_eq!(c, naive_a_bt(&a, &b, n, fo, fi), "shape ({n},{fo},{fi})");
+            let mut cs = vec![0.0; n * fi];
+            matmul_a_bt_scalar(&a, &b, &mut cs, n, fo, fi);
+            assert_eq!(cs, c, "scalar twin, shape ({n},{fo},{fi})");
         }
     }
 

@@ -658,7 +658,16 @@ pub fn score(cand: &Candidate, ctx: &ScoreCtx) -> Result<Score> {
         Some(iv) => (iv[0], *iv.last().unwrap()),
         None => (k1, k2),
     };
-    let bound = theory::thm34_budget_bound(&ctx.bound, ctx.horizon, k1, k2, s.max(1));
+    // Compression noise inflates the bound's gradient-variance term M:
+    // what a lossy payload drops each round re-enters Thm 3.4 as extra
+    // stochastic noise (δ-contraction model, `Compression::
+    // variance_inflation`), so a `sweep --compress` variant pays its
+    // accuracy cost in the ranking instead of riding the dense bound with
+    // a smaller payload.  `Compression::None` inflates by exactly 1.0,
+    // keeping dense scores bit-stable.
+    let mut bp = ctx.bound;
+    bp.m *= cand.compress.variance_inflation();
+    let bound = theory::thm34_budget_bound(&bp, ctx.horizon, k1, k2, s.max(1));
     let compute_seconds = ctx.horizon as f64 * ctx.step_seconds;
     // Static + homogeneous compute keeps the exact closed form
     // (bit-stable with the pre-event-engine ranking) unless the context
@@ -1377,9 +1386,13 @@ mod tests {
         assert_eq!(cands.len(), 2 * n_dense, "every dense entry needs a compressed twin");
         let comp = cands.iter().find(|c| !c.compress.is_none()).unwrap();
         assert!(comp.label().ends_with("-topk0.05"), "{}", comp.label());
-        // The twin moves fewer bytes and takes less comm time, and —
-        // because the convergence bound ignores compression noise — must
-        // outrank its dense sibling in time_to_target.
+        // The twin moves fewer bytes and takes less comm time, but pays
+        // for its lossiness in the convergence bound: the score inflates
+        // the gradient-variance term M by the spec's
+        // `variance_inflation`, so the compressed bound is strictly
+        // looser and the ranking weighs bytes saved against noise added
+        // (instead of letting every compressed twin ride the dense bound
+        // to an unearned win).
         let ranked = rank(&space, &ctx).unwrap();
         let find = |label: &str| {
             ranked
@@ -1396,12 +1409,12 @@ mod tests {
             let d = &ranked[find(&dense_label)];
             assert!(r.score.comm_bytes < d.score.comm_bytes, "{}", r.candidate.label());
             assert!(r.score.comm_seconds < d.score.comm_seconds);
-            assert_eq!(r.score.bound.to_bits(), d.score.bound.to_bits());
             assert!(
-                r.score.time_to_target < d.score.time_to_target,
-                "{} did not outrank its dense twin",
+                r.score.bound > d.score.bound,
+                "{} must pay a convergence penalty over its dense twin",
                 r.candidate.label()
             );
+            assert!(r.score.makespan_seconds < d.score.makespan_seconds);
         }
         // An empty compress list leaves the space bit-stable.
         let plain = SweepSpace::new(16).unwrap();
@@ -1417,6 +1430,36 @@ mod tests {
         let mut bad = SweepSpace::new(16).unwrap();
         bad.compress = vec![Compression::None];
         assert!(rank(&bad, &ctx).is_err());
+    }
+
+    #[test]
+    fn compression_noise_penalty_orders_bounds() {
+        // The Thm 3.4 penalty must order by information lost: coarser
+        // quantization (q4 > q8) and smaller kept ratios (topk:R,
+        // decreasing R) pay strictly more; error feedback halves the
+        // exposure; keeping everything (topk:1) pays exactly nothing.
+        let ctx = ctx16();
+        let base = Candidate::with_default_links(vec![4, 16], vec![2, 8]).unwrap();
+        let bound_of = |spec: Option<&str>| {
+            let mut c = base.clone();
+            if let Some(s) = spec {
+                c.compress = Compression::parse(s).unwrap();
+            }
+            score(&c, &ctx).unwrap().bound
+        };
+        let dense = bound_of(None);
+        assert!(bound_of(Some("q8")) > dense);
+        assert!(bound_of(Some("q4")) > bound_of(Some("q8")), "q4 loses more than q8");
+        assert!(bound_of(Some("q8:noef")) > bound_of(Some("q8")), "no error feedback costs more");
+        let mut prev = f64::INFINITY;
+        for r in ["0.01", "0.05", "0.25", "0.9"] {
+            let b = bound_of(Some(&format!("topk:{r}")));
+            assert!(b < prev, "topk penalty must decrease as R grows (R={r})");
+            assert!(b > dense, "lossy topk:{r} must cost something");
+            prev = b;
+        }
+        // topk:1 transmits every coordinate: bit-identical to the dense bound.
+        assert_eq!(bound_of(Some("topk:1")).to_bits(), dense.to_bits());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod simd;
 
 pub use cli::Args;
 pub use json::Json;

@@ -1,0 +1,516 @@
+//! Shared SIMD dispatch policy plus the per-element vector kernels used
+//! by the comm hot loops (`comm::collective`'s mean kernel, `Reducer::
+//! survivor_group`, `compress_split`).  The matmul microkernels in
+//! `native::linalg` consult the same dispatch decision.
+//!
+//! ## Summation-order contract (why the vector paths are bit-exact)
+//!
+//! Every kernel here assigns SIMD *lanes to distinct output elements* and
+//! never vectorizes across a reduction index: each element's value is
+//! produced by exactly the scalar sequence of rounded operations (one f32
+//! multiply rounding + one f32 add rounding per term, reduction index
+//! strictly ascending).  Fused multiply-add is deliberately NOT used —
+//! `vfmadd` rounds once where scalar `acc + a * b` rounds twice, which
+//! would flip last-bit results and invalidate every golden.  The
+//! quantization kernel emulates `f32::round`'s half-away-from-zero rule
+//! exactly (truncate, then bump by ±1 on an exact fractional remainder of
+//! ≥ 0.5) because `vroundps`'s nearest mode is half-to-even.  The one
+//! documented deviation class: reductions over NaN inputs (`max_abs`,
+//! quantized NaN coordinates) may differ between paths — parameter
+//! vectors are NaN-free by construction, and training is already lost if
+//! they are not.
+//!
+//! Consequently every golden trace, EF-conservation pin and
+//! cross-collective equality pin holds bit-for-bit under both dispatch
+//! paths; `rust/tests/linalg_simd.rs` and the `HIER_FORCE_SCALAR=1` CI
+//! job enforce exactly that.
+//!
+//! ## Dispatch
+//!
+//! [`simd_enabled`] = AVX2 detected (cached `is_x86_feature_detected!`)
+//! and the `HIER_FORCE_SCALAR` env override not set.  The override is
+//! re-read on every call — cheap against the granularity of these kernels
+//! (whole-vector passes, never per-element), and it lets the bench
+//! harness time `simd` vs `scalar` cases inside one process.  Non-x86_64
+//! targets compile the scalar path only; every `*_scalar` twin stays
+//! `pub` as the portable executable reference.
+
+/// True when the host supports the AVX2 vector path (cached after the
+/// first query; `is_x86_feature_detected!` is itself cheap but this keeps
+/// the dispatch branch a single load).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::OnceLock;
+        static AVX2: OnceLock<bool> = OnceLock::new();
+        *AVX2.get_or_init(|| std::is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Pure parse of the `HIER_FORCE_SCALAR` override value: set and not
+/// `"0"`/empty forces the scalar path.  Split out so the rule is testable
+/// without mutating the process environment.
+pub fn scalar_forced_from(val: Option<&str>) -> bool {
+    matches!(val, Some(v) if !v.is_empty() && v != "0")
+}
+
+/// `HIER_FORCE_SCALAR=1` forces the portable scalar path at every
+/// dispatch point (CI's dual-dispatch equality job, bench `scalar` cases).
+pub fn force_scalar() -> bool {
+    scalar_forced_from(std::env::var("HIER_FORCE_SCALAR").ok().as_deref())
+}
+
+/// The single dispatch decision every vector kernel in the crate uses.
+pub fn simd_enabled() -> bool {
+    avx2_available() && !force_scalar()
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise kernels: dispatchers + scalar references
+// ---------------------------------------------------------------------------
+
+/// `dst[i] += src[i]` — the survivor-sum / reference-mean accumulation.
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        unsafe { avx2::add_assign(dst, src) };
+        return;
+    }
+    add_assign_scalar(dst, src);
+}
+
+pub fn add_assign_scalar(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// `dst[i] += x[i] + y[i]` — the mean kernel's paired-source pass.
+pub fn add_pair_assign(dst: &mut [f32], x: &[f32], y: &[f32]) {
+    debug_assert_eq!(dst.len(), x.len());
+    debug_assert_eq!(dst.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        unsafe { avx2::add_pair_assign(dst, x, y) };
+        return;
+    }
+    add_pair_assign_scalar(dst, x, y);
+}
+
+pub fn add_pair_assign_scalar(dst: &mut [f32], x: &[f32], y: &[f32]) {
+    for ((d, &a), &b) in dst.iter_mut().zip(x).zip(y) {
+        *d += a + b;
+    }
+}
+
+/// `dst[i] *= c` — the reciprocal-multiply averaging pass.
+pub fn scale_assign(dst: &mut [f32], c: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        unsafe { avx2::scale_assign(dst, c) };
+        return;
+    }
+    scale_assign_scalar(dst, c);
+}
+
+pub fn scale_assign_scalar(dst: &mut [f32], c: f32) {
+    for d in dst.iter_mut() {
+        *d *= c;
+    }
+}
+
+/// `dst[i] = (x[i] - r[i]) + e[i]` — the compressed barrier's
+/// delta-from-reference + residual accumulation (parenthesization is part
+/// of the contract).
+pub fn delta_plus_residual(dst: &mut [f32], x: &[f32], r: &[f32], e: &[f32]) {
+    debug_assert_eq!(dst.len(), x.len());
+    debug_assert_eq!(dst.len(), r.len());
+    debug_assert_eq!(dst.len(), e.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        unsafe { avx2::delta_plus_residual(dst, x, r, e) };
+        return;
+    }
+    delta_plus_residual_scalar(dst, x, r, e);
+}
+
+pub fn delta_plus_residual_scalar(dst: &mut [f32], x: &[f32], r: &[f32], e: &[f32]) {
+    for i in 0..dst.len() {
+        dst[i] = (x[i] - r[i]) + e[i];
+    }
+}
+
+/// `dst[i] = dst[i] * c + src[i] * c` — the compressed barrier's
+/// two-stream mean combine (each stream scaled before the add, exactly as
+/// the scalar formulation).
+pub fn scaled_sum(dst: &mut [f32], src: &[f32], c: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        unsafe { avx2::scaled_sum(dst, src, c) };
+        return;
+    }
+    scaled_sum_scalar(dst, src, c);
+}
+
+pub fn scaled_sum_scalar(dst: &mut [f32], src: &[f32], c: f32) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = *d * c + s * c;
+    }
+}
+
+/// `max_i |v[i]|` — the quantizer's magnitude scan.  Order-independent
+/// (hence vectorizable across the reduction) because max over
+/// non-negative reals is associative and commutative; NaN inputs are the
+/// documented exception (see module docs).
+pub fn max_abs(v: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        return unsafe { avx2::max_abs(v) };
+    }
+    max_abs_scalar(v)
+}
+
+pub fn max_abs_scalar(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// The q8/q4 per-coordinate split: `q = round(acc*inv).clamp(-levels,
+/// levels); t = q*scale; e = acc - t`, with `f32::round`'s
+/// half-away-from-zero semantics preserved exactly.
+pub fn quantize_split(acc: &[f32], t: &mut [f32], e: &mut [f32], inv: f32, scale: f32, levels: f32) {
+    debug_assert_eq!(acc.len(), t.len());
+    debug_assert_eq!(acc.len(), e.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        unsafe { avx2::quantize_split(acc, t, e, inv, scale, levels) };
+        return;
+    }
+    quantize_split_scalar(acc, t, e, inv, scale, levels);
+}
+
+pub fn quantize_split_scalar(
+    acc: &[f32],
+    t: &mut [f32],
+    e: &mut [f32],
+    inv: f32,
+    scale: f32,
+    levels: f32,
+) {
+    for i in 0..acc.len() {
+        let q = (acc[i] * inv).round().clamp(-levels, levels);
+        t[i] = q * scale;
+        e[i] = acc[i] - t[i];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 implementations
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(dst: &mut [f32], src: &[f32]) {
+        let n = dst.len();
+        let (dp, sp) = (dst.as_mut_ptr(), src.as_ptr());
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dp.add(i));
+            let s = _mm256_loadu_ps(sp.add(i));
+            _mm256_storeu_ps(dp.add(i), _mm256_add_ps(d, s));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) += *sp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_pair_assign(dst: &mut [f32], x: &[f32], y: &[f32]) {
+        let n = dst.len();
+        let (dp, xp, yp) = (dst.as_mut_ptr(), x.as_ptr(), y.as_ptr());
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dp.add(i));
+            // (x + y) first, then the accumulate — two roundings, exactly
+            // the scalar `*d += x + y`.
+            let s = _mm256_add_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(dp.add(i), _mm256_add_ps(d, s));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) += *xp.add(i) + *yp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_assign(dst: &mut [f32], c: f32) {
+        let n = dst.len();
+        let dp = dst.as_mut_ptr();
+        let vc = _mm256_set1_ps(c);
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dp.add(i));
+            _mm256_storeu_ps(dp.add(i), _mm256_mul_ps(d, vc));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) *= c;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn delta_plus_residual(dst: &mut [f32], x: &[f32], r: &[f32], e: &[f32]) {
+        let n = dst.len();
+        let (dp, xp, rp, ep) = (dst.as_mut_ptr(), x.as_ptr(), r.as_ptr(), e.as_ptr());
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(rp.add(i)));
+            _mm256_storeu_ps(dp.add(i), _mm256_add_ps(d, _mm256_loadu_ps(ep.add(i))));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = (*xp.add(i) - *rp.add(i)) + *ep.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scaled_sum(dst: &mut [f32], src: &[f32], c: f32) {
+        let n = dst.len();
+        let (dp, sp) = (dst.as_mut_ptr(), src.as_ptr());
+        let vc = _mm256_set1_ps(c);
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_mul_ps(_mm256_loadu_ps(dp.add(i)), vc);
+            let s = _mm256_mul_ps(_mm256_loadu_ps(sp.add(i)), vc);
+            _mm256_storeu_ps(dp.add(i), _mm256_add_ps(d, s));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = *dp.add(i) * c + *sp.add(i) * c;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max_abs(v: &[f32]) -> f32 {
+        let n = v.len();
+        let vp = v.as_ptr();
+        let sign = _mm256_set1_ps(-0.0);
+        let mut m = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_andnot_ps(sign, _mm256_loadu_ps(vp.add(i)));
+            m = _mm256_max_ps(m, x);
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), m);
+        let mut out = 0.0f32;
+        for &l in &lanes {
+            out = out.max(l);
+        }
+        while i < n {
+            out = out.max((*vp.add(i)).abs());
+            i += 1;
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_split(
+        acc: &[f32],
+        t: &mut [f32],
+        e: &mut [f32],
+        inv: f32,
+        scale: f32,
+        levels: f32,
+    ) {
+        let n = acc.len();
+        let (ap, tp, ep) = (acc.as_ptr(), t.as_mut_ptr(), e.as_mut_ptr());
+        let vinv = _mm256_set1_ps(inv);
+        let vscale = _mm256_set1_ps(scale);
+        let vlev = _mm256_set1_ps(levels);
+        let vneg = _mm256_set1_ps(-levels);
+        let half = _mm256_set1_ps(0.5);
+        let nhalf = _mm256_set1_ps(-0.5);
+        let one = _mm256_set1_ps(1.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(ap.add(i));
+            let x = _mm256_mul_ps(v, vinv);
+            // f32::round is half-away-from-zero; vroundps nearest is
+            // half-to-even.  Emulate exactly: truncate, take the (exact)
+            // fractional remainder, bump by ±1 when it reaches 0.5.
+            let tr = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(x);
+            let frac = _mm256_sub_ps(x, tr);
+            let up = _mm256_and_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(frac, half), one);
+            let down = _mm256_and_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(frac, nhalf), one);
+            let q = _mm256_sub_ps(_mm256_add_ps(tr, up), down);
+            let q = _mm256_min_ps(_mm256_max_ps(q, vneg), vlev);
+            let tv = _mm256_mul_ps(q, vscale);
+            _mm256_storeu_ps(tp.add(i), tv);
+            _mm256_storeu_ps(ep.add(i), _mm256_sub_ps(v, tv));
+            i += 8;
+        }
+        while i < n {
+            let q = (*ap.add(i) * inv).round().clamp(-levels, levels);
+            *tp.add(i) = q * scale;
+            *ep.add(i) = *ap.add(i) - *tp.add(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn noisy(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| rng.next_normal()).collect()
+    }
+
+    /// Lengths straddling the 8-lane width and its remainders.
+    const LENS: &[usize] = &[0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 100, 1000];
+
+    #[test]
+    fn scalar_override_parse_rule() {
+        assert!(!scalar_forced_from(None));
+        assert!(!scalar_forced_from(Some("")));
+        assert!(!scalar_forced_from(Some("0")));
+        assert!(scalar_forced_from(Some("1")));
+        assert!(scalar_forced_from(Some("true")));
+    }
+
+    #[test]
+    fn dispatch_matches_scalar_bitwise() {
+        // On an AVX2 host (and without HIER_FORCE_SCALAR) this pins the
+        // vector path against the scalar reference bit for bit; elsewhere
+        // it degenerates to scalar ≡ scalar, and the CI scalar-forced job
+        // covers the other branch.
+        for &n in LENS {
+            let x = noisy(n, 1);
+            let y = noisy(n, 2);
+            let base = noisy(n, 3);
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            add_assign(&mut a, &x);
+            add_assign_scalar(&mut b, &x);
+            assert_eq!(a, b, "add_assign n={n}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            add_pair_assign(&mut a, &x, &y);
+            add_pair_assign_scalar(&mut b, &x, &y);
+            assert_eq!(a, b, "add_pair_assign n={n}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            scale_assign(&mut a, 1.0 / 3.0);
+            scale_assign_scalar(&mut b, 1.0 / 3.0);
+            assert_eq!(a, b, "scale_assign n={n}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            delta_plus_residual(&mut a, &x, &y, &base);
+            delta_plus_residual_scalar(&mut b, &x, &y, &base);
+            assert_eq!(a, b, "delta_plus_residual n={n}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            scaled_sum(&mut a, &x, 0.25);
+            scaled_sum_scalar(&mut b, &x, 0.25);
+            assert_eq!(a, b, "scaled_sum n={n}");
+
+            assert_eq!(max_abs(&x).to_bits(), max_abs_scalar(&x).to_bits(), "max_abs n={n}");
+
+            let (mut t1, mut e1) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let (mut t2, mut e2) = (vec![0.0f32; n], vec![0.0f32; n]);
+            quantize_split(&x, &mut t1, &mut e1, 31.0, 1.0 / 31.0, 7.0);
+            quantize_split_scalar(&x, &mut t2, &mut e2, 31.0, 1.0 / 31.0, 7.0);
+            assert_eq!(t1, t2, "quantize t n={n}");
+            assert_eq!(e1, e2, "quantize e n={n}");
+        }
+    }
+
+    #[test]
+    fn unaligned_offsets_match_scalar_bitwise() {
+        // Sub-slicing at every lane offset exercises the unaligned loads.
+        let x = noisy(64, 10);
+        let base = noisy(64, 11);
+        for off in 0..9 {
+            let mut a = base.clone();
+            let mut b = base.clone();
+            add_assign(&mut a[off..], &x[off..]);
+            add_assign_scalar(&mut b[off..], &x[off..]);
+            assert_eq!(a, b, "offset {off}");
+        }
+    }
+
+    #[test]
+    fn quantize_rounds_half_away_from_zero() {
+        // Exact .5 multiples are where half-to-even (vroundps nearest)
+        // would diverge from f32::round; the emulation must not.
+        let acc = [2.5f32, -2.5, 0.5, -0.5, 1.5, -1.5, 2.499_999_8, -2.499_999_8];
+        let (mut t, mut e) = (vec![0.0f32; 8], vec![0.0f32; 8]);
+        quantize_split(&acc, &mut t, &mut e, 1.0, 1.0, 127.0);
+        assert_eq!(t, vec![3.0, -3.0, 1.0, -1.0, 2.0, -2.0, 2.0, -2.0]);
+        for i in 0..8 {
+            assert_eq!(e[i], acc[i] - t[i]);
+        }
+        // Clamp engages past the level count.
+        let acc = [200.0f32, -200.0];
+        let (mut t, mut e) = (vec![0.0f32; 2], vec![0.0f32; 2]);
+        quantize_split(&acc, &mut t, &mut e, 1.0, 1.0, 127.0);
+        let _ = &e;
+        assert_eq!(t, vec![127.0, -127.0]);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_path_directly_matches_scalar() {
+        // Pin the vector implementations themselves (not the dispatcher),
+        // so the equality holds even when HIER_FORCE_SCALAR is set for
+        // the whole test process.
+        if !avx2_available() {
+            return;
+        }
+        for &n in LENS {
+            let x = noisy(n, 21);
+            let base = noisy(n, 22);
+            let mut a = base.clone();
+            let mut b = base.clone();
+            unsafe { avx2::add_assign(&mut a, &x) };
+            add_assign_scalar(&mut b, &x);
+            assert_eq!(a, b, "avx2 add_assign n={n}");
+
+            assert_eq!(
+                unsafe { avx2::max_abs(&x) }.to_bits(),
+                max_abs_scalar(&x).to_bits(),
+                "avx2 max_abs n={n}"
+            );
+
+            let (mut t1, mut e1) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let (mut t2, mut e2) = (vec![0.0f32; n], vec![0.0f32; n]);
+            unsafe { avx2::quantize_split(&x, &mut t1, &mut e1, 63.0, 1.0 / 63.0, 127.0) };
+            quantize_split_scalar(&x, &mut t2, &mut e2, 63.0, 1.0 / 63.0, 127.0);
+            assert_eq!(t1, t2, "avx2 quantize t n={n}");
+            assert_eq!(e1, e2, "avx2 quantize e n={n}");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! SIMD ≡ scalar-reference equality pins for the vectorized compute core
+//! (ISSUE 9 tentpole): the three matmul orientations, the elementwise
+//! comm kernels, and the quantizer — exact (`assert_eq!` on f32, i.e.
+//! bitwise for non-NaN) across odd shapes, unaligned sub-slice offsets,
+//! and both dispatch paths.
+//!
+//! The dispatched entry points (`matmul`, `add_assign`, …) follow
+//! `util::simd::simd_enabled()`, so on an AVX2 host this suite pins the
+//! vector path against the scalar reference; under `HIER_FORCE_SCALAR=1`
+//! (the CI dual-dispatch job) it pins scalar ≡ scalar trivially while the
+//! direct-AVX2 tests below keep exercising the vector code regardless of
+//! the override.  See DESIGN.md §Performance for the summation-order
+//! contract these tests enforce.
+
+use hier_avg::native::linalg;
+use hier_avg::util::rng::Pcg32;
+use hier_avg::util::simd;
+
+fn noisy(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| rng.next_normal()).collect()
+}
+
+/// Odd shapes straddling every tile boundary: scalar MR=4/NR=8/NR_T=4,
+/// SIMD NR_S=16 and the Bᵀ pack width 8, and the KC=256 k-block.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (3, 5, 7),
+    (4, 16, 16),
+    (5, 17, 31),
+    (8, 64, 48),
+    (13, 300, 33),
+    (2, 257, 19),
+    (37, 23, 129),
+    (6, 40, 272),
+];
+
+#[test]
+fn matmul_simd_equals_scalar_reference() {
+    for &(n, fi, fo) in SHAPES {
+        let a = noisy(n * fi, 0x11 + n as u64);
+        let b = noisy(fi * fo, 0x22 + fo as u64);
+        let mut c = vec![0.0f32; n * fo];
+        let mut cs = vec![0.0f32; n * fo];
+        linalg::matmul(&a, &b, &mut c, n, fi, fo);
+        linalg::matmul_scalar(&a, &b, &mut cs, n, fi, fo);
+        assert_eq!(c, cs, "matmul shape ({n},{fi},{fo})");
+    }
+}
+
+#[test]
+fn matmul_at_b_simd_equals_scalar_reference() {
+    for &(n, fi, fo) in SHAPES {
+        let a = noisy(n * fi, 0x33 + n as u64);
+        let b = noisy(n * fo, 0x44 + fo as u64);
+        let mut c = vec![0.0f32; fi * fo];
+        let mut cs = vec![0.0f32; fi * fo];
+        linalg::matmul_at_b(&a, &b, &mut c, n, fi, fo);
+        linalg::matmul_at_b_scalar(&a, &b, &mut cs, n, fi, fo);
+        assert_eq!(c, cs, "at_b shape ({n},{fi},{fo})");
+    }
+}
+
+#[test]
+fn matmul_a_bt_simd_equals_scalar_reference() {
+    for &(n, fi, fo) in SHAPES {
+        let a = noisy(n * fo, 0x55 + n as u64);
+        let b = noisy(fi * fo, 0x66 + fi as u64);
+        let mut c = vec![0.0f32; n * fi];
+        let mut cs = vec![0.0f32; n * fi];
+        linalg::matmul_a_bt(&a, &b, &mut c, n, fo, fi);
+        linalg::matmul_a_bt_scalar(&a, &b, &mut cs, n, fo, fi);
+        assert_eq!(c, cs, "a_bt shape ({n},{fo},{fi})");
+    }
+}
+
+#[test]
+fn unaligned_operand_offsets_stay_exact() {
+    // Sub-slice the operand buffers at every offset 0..8 so the SIMD
+    // loads/stores hit all misalignments relative to a 32-byte boundary.
+    let (n, fi, fo) = (5, 21, 35);
+    let abuf = noisy(n * fi + 8, 0x77);
+    let bbuf = noisy(fi * fo + 8, 0x88);
+    for off in 0..8usize {
+        let a = &abuf[off..off + n * fi];
+        let b = &bbuf[off..off + fi * fo];
+        let mut c = vec![0.0f32; n * fo];
+        let mut cs = vec![0.0f32; n * fo];
+        linalg::matmul(a, b, &mut c, n, fi, fo);
+        linalg::matmul_scalar(a, b, &mut cs, n, fi, fo);
+        assert_eq!(c, cs, "matmul offset {off}");
+        let mut c = vec![0.0f32; n * fi];
+        let mut cs = vec![0.0f32; n * fi];
+        // (reinterpret the same buffers in the Bᵀ orientation)
+        let a2 = &abuf[off..off + n * fi];
+        let b2 = &bbuf[off..off + fi * fi];
+        linalg::matmul_a_bt(a2, b2, &mut c, n, fi, fi);
+        linalg::matmul_a_bt_scalar(a2, b2, &mut cs, n, fi, fi);
+        assert_eq!(c, cs, "a_bt offset {off}");
+    }
+}
+
+#[test]
+fn elementwise_kernels_match_scalar_across_offsets() {
+    let x = noisy(300, 0x99);
+    let base = noisy(300, 0xAA);
+    for off in 0..9usize {
+        let mut a = base.clone();
+        let mut b = base.clone();
+        simd::add_assign(&mut a[off..], &x[off..]);
+        simd::add_assign_scalar(&mut b[off..], &x[off..]);
+        assert_eq!(a, b, "add_assign offset {off}");
+
+        let mut a = base.clone();
+        let mut b = base.clone();
+        simd::scale_assign(&mut a[off..], 0.125);
+        simd::scale_assign_scalar(&mut b[off..], 0.125);
+        assert_eq!(a, b, "scale_assign offset {off}");
+
+        assert_eq!(
+            simd::max_abs(&x[off..]).to_bits(),
+            simd::max_abs_scalar(&x[off..]).to_bits(),
+            "max_abs offset {off}"
+        );
+    }
+}
+
+#[test]
+fn quantizer_matches_scalar_on_adversarial_values() {
+    // Exact half-step multiples are where vroundps's half-to-even would
+    // diverge from f32::round's half-away-from-zero; the emulation and
+    // the scalar path must agree bitwise on them.
+    let mut acc: Vec<f32> = noisy(1000, 0xBB);
+    for (i, v) in acc.iter_mut().enumerate().take(64) {
+        *v = (i as f32 - 32.0) * 0.5; // …, -0.5, 0.0, 0.5, 1.0, 1.5, …
+    }
+    for levels in [127.0f32, 7.0] {
+        let max_abs = simd::max_abs_scalar(&acc);
+        let scale = max_abs / levels;
+        let inv = 1.0 / scale;
+        let (mut t1, mut e1) = (vec![0.0f32; acc.len()], vec![0.0f32; acc.len()]);
+        let (mut t2, mut e2) = (vec![0.0f32; acc.len()], vec![0.0f32; acc.len()]);
+        simd::quantize_split(&acc, &mut t1, &mut e1, inv, scale, levels);
+        simd::quantize_split_scalar(&acc, &mut t2, &mut e2, inv, scale, levels);
+        assert_eq!(t1, t2, "levels {levels}");
+        assert_eq!(e1, e2, "levels {levels}");
+    }
+}
+
+#[test]
+fn dispatch_is_consistent_within_a_process() {
+    // Whatever path simd_enabled() picks, repeated calls give identical
+    // bits — determinism does not depend on the dispatch decision because
+    // both paths share one summation order.
+    let (n, fi, fo) = (9, 48, 37);
+    let a = noisy(n * fi, 0xCC);
+    let b = noisy(fi * fo, 0xDD);
+    let mut c1 = vec![0.0f32; n * fo];
+    let mut c2 = vec![0.0f32; n * fo];
+    linalg::matmul(&a, &b, &mut c1, n, fi, fo);
+    linalg::matmul(&a, &b, &mut c2, n, fi, fo);
+    assert_eq!(c1, c2);
+    // And the dispatch decision itself is well-formed: forced-scalar mode
+    // reports SIMD off.
+    if simd::force_scalar() {
+        assert!(!simd::simd_enabled());
+    }
+}

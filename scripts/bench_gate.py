@@ -2,15 +2,21 @@
 """Bench regression gate: fresh BENCH_<group>.json vs committed baselines.
 
 Usage:
-    python3 scripts/bench_gate.py <baseline_dir> BENCH_a.json [BENCH_b.json ...]
+    python3 scripts/bench_gate.py [--expect-armed] <baseline_dir> \\
+        BENCH_a.json [BENCH_b.json ...]
 
 For each fresh report, the committed copy stashed under <baseline_dir> is
 the baseline.  A group is *unarmed* (skipped with a notice) while its
 committed file is still a schema placeholder — a `note` key and/or an
 empty `benches` object, as emitted by the seed tree before the first real
-bless.  Once a maintainer commits a real BENCH_<group>.json (run the bench
-locally at full fidelity and commit the output), the gate arms itself for
-that group automatically.
+bless.  Once a maintainer commits a real BENCH_<group>.json (run
+`scripts/bless_bench.sh` on a representative host and commit the output),
+the gate arms itself for that group automatically.
+
+With `--expect-armed`, an unarmed group is a *failure*, not a skip: use it
+once the repo's baselines have been blessed, so a regression can no longer
+hide behind an accidentally re-placeholder'd baseline (or a renamed
+BENCH file that silently never matches its committed copy).
 
 Armed groups fail the build when any bench shared between baseline and
 fresh run regresses by more than REGRESSION_FRAC in median ns/iter
@@ -37,19 +43,25 @@ def load(path):
         return json.load(f)
 
 
-def gate_group(fresh_path, baseline_dir):
+def gate_group(fresh_path, baseline_dir, expect_armed=False):
     name = os.path.basename(fresh_path)
     base_path = os.path.join(baseline_dir, name)
     fresh = load(fresh_path)
     group = fresh.get("group", name)
-    if not os.path.exists(base_path):
-        print(f"[{group}] no committed baseline ({name}) — gate unarmed")
+
+    def unarmed(why):
+        if expect_armed:
+            print(f"::error::[{group}] {why} but --expect-armed was given")
+            return [(f"{group} ({why})", 0.0, 0.0, float("inf"))]
+        print(f"[{group}] {why} — gate unarmed")
         return []
+
+    if not os.path.exists(base_path):
+        return unarmed(f"no committed baseline ({name})")
     base = load(base_path)
     base_benches = base.get("benches") or {}
     if "note" in base or not base_benches:
-        print(f"[{group}] committed baseline is a schema placeholder — gate unarmed")
-        return []
+        return unarmed("committed baseline is a schema placeholder")
 
     failures = []
     fresh_benches = fresh.get("benches") or {}
@@ -74,13 +86,16 @@ def gate_group(fresh_path, baseline_dir):
 
 
 def main(argv):
-    if len(argv) < 3:
+    args = list(argv[1:])
+    expect_armed = "--expect-armed" in args
+    args = [a for a in args if a != "--expect-armed"]
+    if len(args) < 2:
         print(__doc__)
         return 2
-    baseline_dir = argv[1]
+    baseline_dir = args[0]
     all_failures = []
-    for fresh_path in argv[2:]:
-        all_failures += gate_group(fresh_path, baseline_dir)
+    for fresh_path in args[1:]:
+        all_failures += gate_group(fresh_path, baseline_dir, expect_armed)
     if all_failures:
         print()
         for bench, base_ns, fresh_ns, ratio in all_failures:

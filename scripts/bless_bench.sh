@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# Bless the committed bench baselines: run the full benchkit suite at full
+# sampling fidelity on the current host and stage the refreshed
+# BENCH_<group>.json files for commit.
+#
+# Run this on a representative machine (NOT a shared CI runner) whenever
+# the perf trajectory legitimately moves — a kernel rewrite, a new bench
+# case, a hardware change.  Committing the output arms scripts/bench_gate.py
+# for every group that gained real numbers: from then on CI fails any
+# >20% median regression against these files, and can be run with
+# `--expect-armed` so a group can never silently slip back to placeholder.
+#
+# Usage:
+#     scripts/bless_bench.sh            # run everything, stage BENCH_*.json
+#     scripts/bless_bench.sh --no-stage # run everything, leave git alone
+#
+# After blessing, optionally re-derive the analytic cost-model constants
+# from the fresh numbers:
+#     python3 scripts/calibrate_cost_model.py
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+STAGE=1
+if [[ "${1:-}" == "--no-stage" ]]; then
+    STAGE=0
+fi
+
+# Full fidelity: benchkit's defaults (15 samples, 80 ms target) apply when
+# the CI-smoke knobs are unset.  A stray BENCHKIT_FILTER would suppress
+# the JSON rewrite entirely, so clear it too.
+unset BENCHKIT_SAMPLES BENCHKIT_TARGET_MS BENCHKIT_FILTER
+
+# Baselines must record the default dispatch; a leftover scalar override
+# would bless scalar-speed numbers and make every later SIMD run look
+# like a (nonexistent) improvement.
+unset HIER_FORCE_SCALAR
+
+echo "== building release benches =="
+cargo build --release --benches
+
+# Each bench binary writes BENCH_<group>.json at the repo root on finish().
+# `figures` and `theory` are analysis/plot harnesses, not perf groups —
+# they do not feed the gate.
+for bench in reduction step_throughput event_loop schedule_policy compress; do
+    echo "== cargo bench --bench $bench =="
+    cargo bench --bench "$bench"
+done
+
+echo
+echo "== refreshed baselines =="
+ls -l BENCH_*.json
+
+if [[ "$STAGE" == "1" ]]; then
+    git add BENCH_*.json
+    echo "staged; commit with e.g.:"
+    echo "    git commit -m 'Bless bench baselines on <host description>'"
+else
+    echo "(--no-stage: not touching the git index)"
+fi

@@ -1,0 +1,164 @@
+#!/usr/bin/env python3
+"""Derive simulation cost-model constants from measured bench baselines.
+
+Usage:
+    python3 scripts/calibrate_cost_model.py [repo_root]
+
+Reads `BENCH_step.json` and `BENCH_reduction.json` (as written by
+`scripts/bless_bench.sh`) and prints suggested replacements for the two
+places the simulator hard-codes literature constants:
+
+  * `sim_step_seconds` in rust/src/coordinator/mod.rs — the per-step
+    compute time model `6·B·n / DEVICE_FLOPS`.  From the measured
+    single-replica native step (`native/resnet18_sim/p1`) we solve for
+    the DEVICE_FLOPS this host actually sustains on the MLP hot path,
+    and print the equivalent constant.
+
+  * The α/β link parameters in rust/src/comm/cost.rs (`CostModel::
+    default`).  The native group-average benches sweep group size and
+    payload, so a least-squares fit of the ring-allreduce cost form
+        T(s, n) ≈ 2(s-1)·α + 2·((s-1)/s)·(4n)·β
+    over the measured `native/group_avg/<label>/s<s>` points yields the
+    host's effective latency (α) and per-byte (β) terms.  A simulation
+    host can only observe its own memory fabric, so the fit calibrates
+    the *intra-node* tier directly; the inter-node and rack tiers are
+    suggested by scaling the fitted values by the default model's
+    literature ratios (NVLink : EDR IB : rack uplink).
+
+The printed JSON snippet uses the config keys the run loader already
+accepts (`alpha_intra` … `beta_rack`), so it can be pasted into a run
+config verbatim.  On a tree whose baselines are still schema
+placeholders (no toolchain has blessed them yet) the script says so and
+exits 0 — it never invents numbers.
+"""
+
+import json
+import os
+import re
+import sys
+
+# Shapes encoded in the bench labels (benchkit JSON does not carry them).
+# Keep in sync with rust/benches/{step_throughput,reduction}.rs and
+# driver::MODEL_DIMS.
+STEP_BENCH = "native/resnet18_sim/p1"
+STEP_BATCH = 16
+STEP_N_PARAMS = 101_386  # MLP [128, 256, 256, 10]
+STEP_REPLICAS = 1
+
+GROUP_AVG_RE = re.compile(r"^native/group_avg/(100k|3\.4M)/s(\d+)$")
+PAYLOAD = {"100k": 101_386, "3.4M": 3_400_000}
+
+# CostModel::default literature constants (rust/src/comm/cost.rs) — used
+# only for the inter/rack tier *ratios* relative to intra.
+DEFAULT = {
+    "alpha_intra": 5e-6, "beta_intra": 1.0 / 40e9,
+    "alpha_inter": 20e-6, "beta_inter": 1.0 / 10e9,
+    "alpha_rack": 50e-6, "beta_rack": 1.0 / 5e9,
+}
+
+
+def load(root, name):
+    path = os.path.join(root, name)
+    if not os.path.exists(path):
+        return None, f"{name}: not found"
+    with open(path) as f:
+        rep = json.load(f)
+    benches = rep.get("benches") or {}
+    if "note" in rep or not benches:
+        return None, (f"{name}: still a schema placeholder — run "
+                      "scripts/bless_bench.sh on a host with a Rust "
+                      "toolchain first")
+    return benches, None
+
+
+def fit_alpha_beta(points):
+    """Least-squares fit T = a·x + b·y with x=2(s-1), y=2((s-1)/s)·bytes."""
+    sxx = sxy = syy = sxt = syt = 0.0
+    for s, n, t in points:
+        x = 2.0 * (s - 1)
+        y = 2.0 * ((s - 1) / s) * (4.0 * n)
+        sxx += x * x
+        sxy += x * y
+        syy += y * y
+        sxt += x * t
+        syt += y * t
+    det = sxx * syy - sxy * sxy
+    if det <= 0.0:
+        return None
+    alpha = (sxt * syy - syt * sxy) / det
+    beta = (syt * sxx - sxt * sxy) / det
+    return alpha, beta
+
+
+def main(argv):
+    root = argv[1] if len(argv) > 1 else os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..")
+
+    step, step_err = load(root, "BENCH_step.json")
+    red, red_err = load(root, "BENCH_reduction.json")
+    for err in (step_err, red_err):
+        if err:
+            print(f"calibrate_cost_model: {err}")
+    if step is None and red is None:
+        print("calibrate_cost_model: nothing to calibrate from; keeping "
+              "the literature defaults in rust/src/comm/cost.rs and "
+              "rust/src/coordinator/mod.rs")
+        return 0
+
+    print("calibrate_cost_model: suggested constants from committed "
+          "baselines\n")
+
+    if step is not None:
+        b = step.get(STEP_BENCH)
+        if b is None:
+            print(f"  (step: bench '{STEP_BENCH}' missing; skipping "
+                  "compute calibration)")
+        else:
+            # ns for one grads() call over STEP_REPLICAS replicas.
+            step_s = b["ns_per_iter"] * 1e-9 / STEP_REPLICAS
+            flops = 6.0 * STEP_BATCH * STEP_N_PARAMS
+            device_flops = flops / step_s
+            print("  # rust/src/coordinator/mod.rs :: sim_step_seconds")
+            print(f"  #   measured {STEP_BENCH}: {step_s * 1e6:.1f} us/step "
+                  f"(B={STEP_BATCH}, n={STEP_N_PARAMS})")
+            print(f"  const DEVICE_FLOPS: f64 = {device_flops:.3e}; "
+                  "// this host, native MLP hot path")
+            print(f"  # -> sim_step_seconds(B, n) = 6*B*n / DEVICE_FLOPS "
+                  f"= {step_s:.3e} s at the bench shape\n")
+
+    if red is not None:
+        points = []
+        for name, b in red.items():
+            m = GROUP_AVG_RE.match(name)
+            if m:
+                points.append((int(m.group(2)), PAYLOAD[m.group(1)],
+                               b["ns_per_iter"] * 1e-9))
+        fitted = fit_alpha_beta(points) if len(points) >= 2 else None
+        if fitted is None:
+            print("  (reduction: too few native/group_avg points for an "
+                  "alpha/beta fit; skipping link calibration)")
+        else:
+            alpha, beta = fitted
+            alpha = max(alpha, 0.0)  # tiny negative intercept = pure-bw host
+            suggestion = {
+                "alpha_intra": alpha,
+                "beta_intra": beta,
+                "alpha_inter": alpha * DEFAULT["alpha_inter"] / DEFAULT["alpha_intra"],
+                "beta_inter": beta * DEFAULT["beta_inter"] / DEFAULT["beta_intra"],
+                "alpha_rack": alpha * DEFAULT["alpha_rack"] / DEFAULT["alpha_intra"],
+                "beta_rack": beta * DEFAULT["beta_rack"] / DEFAULT["beta_intra"],
+            }
+            print("  # rust/src/comm/cost.rs :: CostModel (intra fitted "
+                  f"from {len(points)} group_avg points; inter/rack scaled "
+                  "by the literature ratios)")
+            print("  " + json.dumps(
+                {k: float(f"{v:.4e}") for k, v in suggestion.items()},
+                indent=2).replace("\n", "\n  "))
+            eff_bw = 1.0 / beta if beta > 0 else float("inf")
+            print(f"  # fitted: alpha={alpha * 1e6:.2f} us, "
+                  f"beta -> {eff_bw / 1e9:.1f} GB/s effective")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -102,6 +102,40 @@ class GateGroupTests(unittest.TestCase):
         fresh = report("t", {"a": bench(100.0), "fresh_case": bench(1e9)})
         self.assertEqual(self.gate(fresh, base), [])
 
+    def test_expect_armed_turns_placeholder_into_failure(self):
+        base = report("t", {"a": bench(1.0)}, note="schema placeholder")
+        self.write(self.baseline_dir, "BENCH_t.json", base)
+        fresh = self.write(self.dir, "BENCH_t.json", report("t", {"a": bench(1.0)}))
+        failures = bench_gate.gate_group(fresh, self.baseline_dir, expect_armed=True)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("placeholder", failures[0][0])
+        # ... and a missing baseline fails the same way.
+        os.remove(os.path.join(self.baseline_dir, "BENCH_t.json"))
+        failures = bench_gate.gate_group(fresh, self.baseline_dir, expect_armed=True)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("no committed baseline", failures[0][0])
+
+    def test_expect_armed_flag_through_main(self):
+        base = report("t", {"a": bench(1.0)}, note="schema placeholder")
+        self.write(self.baseline_dir, "BENCH_t.json", base)
+        fresh = self.write(self.dir, "BENCH_t.json", report("t", {"a": bench(1.0)}))
+        self.assertEqual(
+            bench_gate.main(["bench_gate.py", self.baseline_dir, fresh]), 0
+        )
+        self.assertEqual(
+            bench_gate.main(
+                ["bench_gate.py", "--expect-armed", self.baseline_dir, fresh]
+            ),
+            1,
+        )
+        # An armed, non-regressed group passes under --expect-armed.
+        self.write(self.baseline_dir, "BENCH_t.json", report("t", {"a": bench(100.0)}))
+        ok = self.write(self.dir, "BENCH_t.json", report("t", {"a": bench(90.0)}))
+        self.assertEqual(
+            bench_gate.main(["bench_gate.py", "--expect-armed", self.baseline_dir, ok]),
+            0,
+        )
+
     def test_main_exit_codes(self):
         base = report("t", {"a": bench(100.0)})
         self.write(self.baseline_dir, "BENCH_t.json", base)
