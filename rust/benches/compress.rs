@@ -14,7 +14,7 @@ mod benchkit;
 
 use hier_avg::comm::compress::compress_split;
 use hier_avg::comm::{Collective, CompressedCollective, Compression, SimulatedCollective};
-use hier_avg::params::FlatParams;
+use hier_avg::params::ParamArena;
 use hier_avg::util::rng::Pcg32;
 
 const SPECS: [&str; 5] = ["none", "topk:0.05", "randk:0.05", "q8", "q4"];
@@ -83,15 +83,17 @@ fn main() {
     // A full group barrier through the wrapper vs the bare dense engine:
     // the wrapper's delta/reference bookkeeping plus P splits.
     let (p, n) = (8usize, 4096usize);
-    let base: Vec<FlatParams> = {
+    let base: ParamArena = {
         let mut rng = Pcg32::seeded(0xF1EE7);
-        (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect()
+        let rows: Vec<Vec<f32>> =
+            (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+        ParamArena::from_rows(&rows)
     };
     let mut scratch = vec![0.0f32; n];
     {
         let mut replicas = base.clone();
         b.bench(&format!("group/dense/p{p}/n{n}"), || {
-            SimulatedCollective.average_group(&mut replicas, 0..p, &mut scratch);
+            SimulatedCollective.average_group(replicas.view_mut(), 0..p, &mut scratch);
             std::hint::black_box(&replicas);
         });
     }
@@ -101,7 +103,7 @@ fn main() {
         let mut replicas = base.clone();
         let label = format!("group/{}/p{p}/n{n}", spec_str.replace(':', ""));
         b.bench(&label, || {
-            cc.average_group(&mut replicas, 0..p, &mut scratch);
+            cc.average_group(replicas.view_mut(), 0..p, &mut scratch);
             std::hint::black_box(&replicas);
         });
     }

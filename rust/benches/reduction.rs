@@ -10,13 +10,16 @@
 mod benchkit;
 
 use hier_avg::comm::{Collective, CostModel, PooledCollective, ReduceStrategy, Reducer, ShardedCollective};
+use hier_avg::params::ParamArena;
 use hier_avg::runtime::xla_backend::XlaGroupAvg;
 use hier_avg::runtime::Manifest;
 use hier_avg::topology::Topology;
 use hier_avg::util::rng::Pcg32;
 
-fn replicas(p: usize, n: usize, rng: &mut Pcg32) -> Vec<Vec<f32>> {
-    (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect()
+fn replicas(p: usize, n: usize, rng: &mut Pcg32) -> ParamArena {
+    let rows: Vec<Vec<f32>> =
+        (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+    ParamArena::from_rows(&rows)
 }
 
 fn main() {
@@ -32,7 +35,7 @@ fn main() {
             // bytes touched per reduction: read S + write S buffers
             let bytes = 2 * s * n * 4;
             b.bench_with_throughput(&format!("native/group_avg/{label}/s{s}"), bytes, || {
-                red.global_average(&mut r, &topo);
+                red.global_average(r.view_mut(), &topo);
             });
         }
     }
@@ -44,10 +47,10 @@ fn main() {
         let topo = Topology::new(64, 4).unwrap();
         let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
         b.bench_with_throughput("native/global_avg/100k/p64", 2 * 64 * n * 4, || {
-            red.global_average(&mut r, &topo);
+            red.global_average(r.view_mut(), &topo);
         });
         b.bench_with_throughput("native/local_avg/100k/p64s4", 2 * 64 * n * 4, || {
-            red.local_average(&mut r, &topo);
+            red.local_average(r.view_mut(), &topo);
         });
     }
 
@@ -66,14 +69,14 @@ fn main() {
             let mut simulated = base.clone();
             let mut sharded = base.clone();
             let mut sim_red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
-            sim_red.global_average(&mut simulated, &topo);
+            sim_red.global_average(simulated.view_mut(), &topo);
             let mut sh_red = Reducer::with_collective(
                 CostModel::default(),
                 ReduceStrategy::Ring,
                 n,
                 Box::new(ShardedCollective::new(0)),
             );
-            sh_red.global_average(&mut sharded, &topo);
+            sh_red.global_average(sharded.view_mut(), &topo);
             assert_eq!(simulated, sharded, "sharded collective must be bit-identical");
         }
         for &threads in &[1usize, 2, 4, 8] {
@@ -86,7 +89,7 @@ fn main() {
             );
             let bytes = 2 * p * n * 4;
             b.bench_with_throughput(&format!("native/group_avg_sharded/3.4M/p8/t{threads}"), bytes, || {
-                red.global_average(&mut r, &topo);
+                red.global_average(r.view_mut(), &topo);
             });
         }
         for &threads in &[2usize, 4, 8] {
@@ -99,7 +102,7 @@ fn main() {
             );
             let bytes = 2 * p * n * 4;
             b.bench_with_throughput(&format!("native/group_avg_pooled/3.4M/p8/t{threads}"), bytes, || {
-                red.global_average(&mut r, &topo);
+                red.global_average(r.view_mut(), &topo);
             });
         }
     }
@@ -119,8 +122,8 @@ fn main() {
                     let mut b0 = base.clone();
                     let mut sa = vec![0.0f32; n];
                     let mut sb = vec![0.0f32; n];
-                    ShardedCollective::new(2).average_group(&mut a, 0..s, &mut sa);
-                    PooledCollective::new(2).average_group(&mut b0, 0..s, &mut sb);
+                    ShardedCollective::new(2).average_group(a.view_mut(), 0..s, &mut sa);
+                    PooledCollective::new(2).average_group(b0.view_mut(), 0..s, &mut sb);
                     assert_eq!(a, b0, "pooled collective must be bit-identical");
                 }
                 let mut r = base.clone();
@@ -135,7 +138,7 @@ fn main() {
                     &format!("native/group_avg_sharded/{label}/s{s}"),
                     bytes,
                     || {
-                        red.global_average(&mut r, &topo);
+                        red.global_average(r.view_mut(), &topo);
                     },
                 );
                 let mut r = base.clone();
@@ -149,7 +152,7 @@ fn main() {
                     &format!("native/group_avg_pooled/{label}/s{s}"),
                     bytes,
                     || {
-                        red.global_average(&mut r, &topo);
+                        red.global_average(r.view_mut(), &topo);
                     },
                 );
             }
@@ -172,10 +175,10 @@ fn main() {
             let mut with_simd = base.clone();
             let mut forced = base.clone();
             let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
-            red.global_average(&mut with_simd, &topo);
+            red.global_average(with_simd.view_mut(), &topo);
             std::env::set_var("HIER_FORCE_SCALAR", "1");
             let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
-            red.global_average(&mut forced, &topo);
+            red.global_average(forced.view_mut(), &topo);
             std::env::remove_var("HIER_FORCE_SCALAR");
             assert_eq!(with_simd, forced, "SIMD mean kernel must be bit-identical to scalar");
         }
@@ -186,7 +189,7 @@ fn main() {
                 std::env::set_var("HIER_FORCE_SCALAR", "1");
             }
             b.bench_with_throughput(&format!("native/group_avg/3.4M/s8/{case}"), bytes, || {
-                red.global_average(&mut r, &topo);
+                red.global_average(r.view_mut(), &topo);
             });
             if force {
                 std::env::remove_var("HIER_FORCE_SCALAR");
@@ -199,7 +202,7 @@ fn main() {
         if let Ok(mut avg) = XlaGroupAvg::load(&m, 4) {
             let n = 101_386;
             let shards = replicas(4, n, &mut rng);
-            let refs: Vec<&[f32]> = shards.iter().map(|s| s.as_slice()).collect();
+            let refs: Vec<&[f32]> = (0..shards.rows()).map(|j| shards.row(j)).collect();
             let mut out = vec![0.0f32; n];
             b.bench_with_throughput("xla/pallas_group_avg/100k/s4", 2 * 4 * n * 4, || {
                 avg.average(&refs, &mut out).unwrap();

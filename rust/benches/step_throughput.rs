@@ -9,6 +9,7 @@ use hier_avg::data::{BatchBuf, ClassifyData, DataSource, MixtureSpec};
 use hier_avg::driver;
 use hier_avg::native::{NativeMlp, ParallelNativeMlp};
 use hier_avg::optimizer::Sgd;
+use hier_avg::params::ParamArena;
 use hier_avg::runtime::{Manifest, XlaBackend};
 use hier_avg::util::rng::Pcg32;
 
@@ -41,11 +42,11 @@ fn bench_backend(
     for _ in 0..p {
         data.fill_train(&mut rng, backend.train_batch(), &mut batch);
     }
-    let replicas = vec![init.to_vec(); p];
-    let mut grads = vec![vec![0.0f32; backend.n_params()]; p];
+    let replicas = ParamArena::replicated(init, p);
+    let mut grads = ParamArena::zeroed(p, backend.n_params());
     let mut outs = vec![StepOut::default(); p];
     b.bench(label, || {
-        backend.grads(&replicas, &batch, &mut grads, &mut outs).unwrap();
+        backend.grads(replicas.view(), &batch, grads.view_mut(), &mut outs).unwrap();
     });
 }
 
@@ -173,11 +174,11 @@ fn main() {
                 for _ in 0..4 {
                     data.fill_train(&mut rng, backend.train_batch(), &mut batch);
                 }
-                let replicas = vec![init.clone(); 4];
-                let mut grads = vec![vec![0.0f32; backend.n_params()]; 4];
+                let replicas = ParamArena::replicated(&init, 4);
+                let mut grads = ParamArena::zeroed(4, backend.n_params());
                 let mut outs = vec![StepOut::default(); 4];
                 b.bench("xla/lm_small/p4", || {
-                    backend.grads(&replicas, &batch, &mut grads, &mut outs).unwrap();
+                    backend.grads(replicas.view(), &batch, grads.view_mut(), &mut outs).unwrap();
                 });
             }
         }

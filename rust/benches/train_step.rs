@@ -1,0 +1,108 @@
+//! End-to-end `Engine::step` throughput (learner-steps/sec) across the
+//! P scaling curve, arena-pooled pipeline vs the serial reference path.
+//!
+//! The pooled pipeline (`--pool-threads >= 2`, P >= POOL_STEP_MIN_P) runs
+//! batch fill, the fused SGD apply, and the loss tree-reduction on the
+//! persistent worker pool over the flat learner arena; the serial case
+//! (`pool_threads = 0`) is the executable bit-exact reference
+//! (DESIGN.md §Memory layout).  Bit-identity between the two is asserted
+//! before timing, so the pooled/serial pairs at each P are pure speed —
+//! `units_per_sec` (learner-steps/sec) is the gated throughput axis in
+//! `BENCH_train.json` (scripts/bench_gate.py).
+
+mod benchkit;
+
+use hier_avg::backend::StepBackend;
+use hier_avg::config::{BackendKind, RunConfig};
+use hier_avg::coordinator::{sim_step_seconds, Engine};
+use hier_avg::data::{ClassifyData, MixtureSpec};
+use hier_avg::native::NativeMlp;
+use hier_avg::params::FlatParams;
+use hier_avg::util::rng::Pcg32;
+
+const DIMS: &[usize] = &[24, 48, 6];
+const BATCH: usize = 8;
+const LR: f32 = 0.05;
+
+fn mk_cfg(p: usize, pool_threads: usize) -> RunConfig {
+    let mut cfg = RunConfig::defaults("native-train-bench");
+    cfg.backend = BackendKind::Native;
+    cfg.p = p;
+    cfg.s = 4.min(p);
+    cfg.k1 = 2;
+    cfg.k2 = 8;
+    cfg.seed = 7;
+    cfg.momentum = 0.9;
+    cfg.weight_decay = 1e-4;
+    cfg.pool_threads = pool_threads;
+    cfg.quiet = true;
+    cfg
+}
+
+fn mk_data() -> ClassifyData {
+    ClassifyData::generate(MixtureSpec {
+        dim: DIMS[0],
+        classes: *DIMS.last().unwrap(),
+        train_n: 4096,
+        test_n: 256,
+        radius: 1.0,
+        noise: 1.2,
+        subclusters: 1,
+        label_noise: 0.0,
+        seed: 3,
+    })
+}
+
+/// Run `steps` engine steps under `cfg` and return the mean parameters.
+fn run_steps(cfg: &RunConfig, data: &ClassifyData, steps: usize) -> FlatParams {
+    let mut backend = NativeMlp::new(DIMS, BATCH, 64).unwrap();
+    let init = backend.init(&mut Pcg32::seeded(1));
+    let n_params = backend.n_params();
+    let step_secs = sim_step_seconds(BATCH, n_params);
+    let policy = cfg.schedule_policy.build(cfg.k2_clamp(BATCH), step_secs, cfg.p);
+    let mut engine = Engine::new(cfg, n_params, &init, step_secs, policy).unwrap();
+    let sched = cfg.hier_schedule_at(0).unwrap();
+    for _ in 0..steps {
+        engine.step(&mut backend, data, LR, &sched).unwrap();
+    }
+    let mut mean = vec![0.0f32; n_params];
+    engine.mean_params(&mut mean);
+    mean
+}
+
+fn main() {
+    let mut b = benchkit::Bench::new("train");
+    let data = mk_data();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let pool_threads = hw.max(2);
+
+    // The pooled pipeline must be bit-identical to the serial reference
+    // before any timing: same trajectory through fill + grads + apply +
+    // reduce over a K1/K2 cadence that fires both reduction levels.
+    {
+        let serial = run_steps(&mk_cfg(16, 0), &data, 17);
+        let pooled = run_steps(&mk_cfg(16, pool_threads), &data, 17);
+        assert_eq!(serial, pooled, "pooled step pipeline must be bit-identical");
+    }
+
+    for &p in &[4usize, 16, 64, 256] {
+        for &(case, threads) in &[("serial", 0usize), ("pooled", pool_threads)] {
+            let cfg = mk_cfg(p, threads);
+            let mut backend = NativeMlp::new(DIMS, BATCH, 64).unwrap();
+            let init = backend.init(&mut Pcg32::seeded(1));
+            let n_params = backend.n_params();
+            let step_secs = sim_step_seconds(BATCH, n_params);
+            let policy =
+                cfg.schedule_policy.build(cfg.k2_clamp(BATCH), step_secs, cfg.p);
+            let mut engine =
+                Engine::new(&cfg, n_params, &init, step_secs, policy).unwrap();
+            let sched = cfg.hier_schedule_at(0).unwrap();
+            // units = learner-steps: one engine step advances P learners.
+            b.bench_units(&format!("step/p{p}/{case}"), p as u64, || {
+                engine.step(&mut backend, &data, LR, &sched).unwrap();
+            });
+        }
+    }
+
+    b.finish();
+}

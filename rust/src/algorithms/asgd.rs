@@ -22,7 +22,7 @@ use crate::config::RunConfig;
 use crate::data::{BatchBuf, DataSource};
 use crate::metrics::{EpochStats, RunRecord};
 use crate::optimizer::Sgd;
-use crate::params::FlatParams;
+use crate::params::{FlatParams, Rows, RowsMut};
 use crate::topology::LinkClass;
 use crate::util::rng::Pcg32;
 
@@ -93,7 +93,7 @@ impl<'a> AsgdTrainer<'a> {
         let msg_secs = 2.0 * (cost.alpha_inter + msg_bytes as f64 * cost.beta_inter);
 
         let mut batch = BatchBuf::default();
-        let mut grads = vec![vec![0.0f32; n]];
+        let mut grads = vec![0.0f32; n];
         let mut outs = vec![StepOut::default()];
         let units = self.backend.units_per_row() as f64;
         let started = Instant::now();
@@ -108,10 +108,14 @@ impl<'a> AsgdTrainer<'a> {
                 batch.clear();
                 self.data.fill_train(&mut rngs[j], b, &mut batch);
                 // Gradient at the STALE snapshot (fetched ~P-1 ticks ago).
-                let replicas = std::slice::from_ref(&snapshots[j]);
-                self.backend.grads(replicas, &batch, &mut grads, &mut outs)?;
+                self.backend.grads(
+                    Rows::single(&snapshots[j]),
+                    &batch,
+                    RowsMut::single(&mut grads),
+                    &mut outs,
+                )?;
                 // Server applies, worker pulls fresh params.
-                opt.apply(&mut server, &grads[0], lr);
+                opt.apply(&mut server, &grads, lr);
                 snapshots[j].copy_from_slice(&server);
                 ticks += 1;
                 record.comm.global_reductions += 1;

@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 use crate::data::BatchBuf;
-use crate::params::FlatParams;
+use crate::params::{FlatParams, Rows, RowsMut};
 
 /// Per-learner outputs of one training step.
 #[derive(Debug, Clone, Copy, Default)]
@@ -35,12 +35,15 @@ pub trait StepBackend {
     fn n_params(&self) -> usize;
 
     /// Compute gradients for all P learners.  `batch` holds P·B rows in
-    /// learner order; `grads_out[j]` receives learner j's flat gradient.
+    /// learner order; `grads_out` row j receives learner j's flat
+    /// gradient.  Views are arena rows (`params::Rows`/`RowsMut`) so
+    /// backends read replicas and write gradients zero-copy out of the
+    /// trainer's flat learner arenas.
     fn grads(
         &mut self,
-        replicas: &[FlatParams],
+        replicas: Rows<'_>,
         batch: &BatchBuf,
-        grads_out: &mut [FlatParams],
+        grads_out: RowsMut<'_>,
         outs: &mut [StepOut],
     ) -> Result<()>;
 

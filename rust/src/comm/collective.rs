@@ -32,21 +32,24 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::exec::{self, WorkerPool};
-use crate::params::FlatParams;
+use crate::params::{Rows, RowsMut};
 use crate::util::simd;
 
-/// How a group of replicas is averaged in place.  Implementations must
-/// preserve the fixed learner-index-ascending summation order so results
-/// are identical across engines.
+/// How a group of replicas is averaged in place.  Replicas are rows of the
+/// trainer's flat learner arena (`params::Rows`/`RowsMut`) — a group is a
+/// contiguous row range, so broadcasts and shard math work on one flat
+/// slice.  Implementations must preserve the fixed learner-index-ascending
+/// summation order so results are identical across engines.
 pub trait Collective: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Average `replicas[group]` and write the mean back into every member.
-    /// `scratch` (len = n_params) is the caller-owned mean buffer.
-    fn average_group(&self, replicas: &mut [FlatParams], group: Range<usize>, scratch: &mut [f32]);
+    /// Average rows `group` of `replicas` and write the mean back into
+    /// every member.  `scratch` (len = n_params) is the caller-owned mean
+    /// buffer.
+    fn average_group(&self, replicas: RowsMut<'_>, group: Range<usize>, scratch: &mut [f32]);
 
-    /// Mean of `replicas[group]` into `out` without touching the replicas.
-    fn mean_of(&self, replicas: &[FlatParams], group: Range<usize>, out: &mut [f32]);
+    /// Mean of rows `group` into `out` without touching the replicas.
+    fn mean_of(&self, replicas: Rows<'_>, group: Range<usize>, out: &mut [f32]);
 }
 
 /// Which collective a run uses; the config-level selector.
@@ -127,17 +130,17 @@ impl Collective for SimulatedCollective {
         "simulated"
     }
 
-    fn average_group(&self, replicas: &mut [FlatParams], group: Range<usize>, scratch: &mut [f32]) {
-        mean_range(scratch, replicas, group.clone(), 0);
+    fn average_group(&self, mut replicas: RowsMut<'_>, group: Range<usize>, scratch: &mut [f32]) {
+        mean_range(scratch, replicas.as_shared(), group.clone(), 0);
         // Broadcast the mean back to every member.  §Perf note: a threaded
         // fan-out was tried here and reverted on single-hardware-thread
         // hosts; the sharded collective covers multi-core machines.
         for j in group {
-            replicas[j].copy_from_slice(scratch);
+            replicas.row_mut(j).copy_from_slice(scratch);
         }
     }
 
-    fn mean_of(&self, replicas: &[FlatParams], group: Range<usize>, out: &mut [f32]) {
+    fn mean_of(&self, replicas: Rows<'_>, group: Range<usize>, out: &mut [f32]) {
         mean_range(out, replicas, group, 0);
     }
 }
@@ -176,24 +179,27 @@ impl Collective for ShardedCollective {
         "sharded"
     }
 
-    fn average_group(&self, replicas: &mut [FlatParams], group: Range<usize>, scratch: &mut [f32]) {
-        self.mean_of(replicas, group.clone(), scratch);
-        // All-gather: split the members across threads; each copies the
-        // full mean into its members.
-        let members = &mut replicas[group];
-        if members.len() <= 1 {
-            if let Some(m) = members.first_mut() {
-                m.copy_from_slice(scratch);
+    fn average_group(&self, mut replicas: RowsMut<'_>, group: Range<usize>, scratch: &mut [f32]) {
+        self.mean_of(replicas.as_shared(), group.clone(), scratch);
+        // All-gather: split the member rows across threads; each copies
+        // the full mean into its members.  A group is a contiguous row
+        // range of the arena, so the members are one flat slice.
+        let stride = replicas.stride();
+        let members = group.len();
+        let flat = replicas.range_mut(group);
+        if members <= 1 {
+            if !flat.is_empty() {
+                flat.copy_from_slice(scratch);
             }
             return;
         }
         let mean: &[f32] = scratch;
-        let t = self.resolve_threads(members.len());
-        let per = members.len().div_ceil(t);
+        let t = self.resolve_threads(members);
+        let per = members.div_ceil(t);
         std::thread::scope(|scope| {
-            for chunk in members.chunks_mut(per) {
+            for chunk in flat.chunks_mut(per * stride) {
                 scope.spawn(move || {
-                    for r in chunk {
+                    for r in chunk.chunks_exact_mut(stride) {
                         r.copy_from_slice(mean);
                     }
                 });
@@ -201,7 +207,7 @@ impl Collective for ShardedCollective {
         });
     }
 
-    fn mean_of(&self, replicas: &[FlatParams], group: Range<usize>, out: &mut [f32]) {
+    fn mean_of(&self, replicas: Rows<'_>, group: Range<usize>, out: &mut [f32]) {
         let n = out.len();
         if n == 0 {
             return;
@@ -262,29 +268,32 @@ impl Collective for PooledCollective {
         "pooled"
     }
 
-    fn average_group(&self, replicas: &mut [FlatParams], group: Range<usize>, scratch: &mut [f32]) {
-        self.mean_of(replicas, group.clone(), scratch);
-        let members = &mut replicas[group];
+    fn average_group(&self, mut replicas: RowsMut<'_>, group: Range<usize>, scratch: &mut [f32]) {
+        self.mean_of(replicas.as_shared(), group.clone(), scratch);
+        let stride = replicas.stride();
+        let members = group.len();
+        let flat = replicas.range_mut(group);
         let n = scratch.len();
-        if members.len() * n < POOL_MIN_ELEMENT_OPS || members.len() <= 1 {
-            for r in members.iter_mut() {
+        if members * n < POOL_MIN_ELEMENT_OPS || members <= 1 {
+            for r in flat.chunks_exact_mut(stride) {
                 r.copy_from_slice(scratch);
             }
             return;
         }
-        // All-gather: members are chunked across the pool; each task
-        // copies the full mean into its members.
+        // All-gather: member rows are chunked across the pool (the group
+        // is one contiguous arena slice, so chunk boundaries are row
+        // multiples); each task copies the full mean into its members.
         let mean: &[f32] = scratch;
-        let t = self.pool.threads().clamp(1, members.len());
-        let per = members.len().div_ceil(t);
-        self.pool.run_chunks_mut(members, per, |_, chunk| {
-            for r in chunk {
+        let t = self.pool.threads().clamp(1, members);
+        let per = members.div_ceil(t);
+        self.pool.run_chunks_mut(flat, per * stride, |_, chunk| {
+            for r in chunk.chunks_exact_mut(stride) {
                 r.copy_from_slice(mean);
             }
         });
     }
 
-    fn mean_of(&self, replicas: &[FlatParams], group: Range<usize>, out: &mut [f32]) {
+    fn mean_of(&self, replicas: Rows<'_>, group: Range<usize>, out: &mut [f32]) {
         let n = out.len();
         if n == 0 {
             return;
@@ -317,19 +326,14 @@ const MEAN_BLOCK: usize = 4096;
 /// within the flat vector; per-element arithmetic is independent of both
 /// `base` and `MEAN_BLOCK` boundaries, which is what makes the sharded
 /// collective bit-identical to the simulated one.
-pub(crate) fn mean_range(
-    out: &mut [f32],
-    replicas: &[FlatParams],
-    group: Range<usize>,
-    base: usize,
-) {
+pub(crate) fn mean_range(out: &mut [f32], replicas: Rows<'_>, group: Range<usize>, base: usize) {
     let n = group.len();
     let first = group.start;
     if out.is_empty() || n == 0 {
         return;
     }
     if n == 1 {
-        out.copy_from_slice(&replicas[first][base..base + out.len()]);
+        out.copy_from_slice(&replicas.row(first)[base..base + out.len()]);
         return;
     }
     let inv = 1.0 / n as f32;
@@ -339,7 +343,7 @@ pub(crate) fn mean_range(
         let end = (start + MEAN_BLOCK).min(len);
         let blk = &mut out[start..end];
         let (gs, ge) = (base + start, base + end);
-        blk.copy_from_slice(&replicas[first][gs..ge]);
+        blk.copy_from_slice(&replicas.row(first)[gs..ge]);
         let mut rest = first + 1..group.end;
         // Pairs of sources per pass: halves the accumulator re-reads.
         // The vector kernels keep the exact scalar op sequence per
@@ -348,10 +352,10 @@ pub(crate) fn mean_range(
         while rest.len() >= 2 {
             let a = rest.next().unwrap();
             let b = rest.next().unwrap();
-            simd::add_pair_assign(blk, &replicas[a][gs..ge], &replicas[b][gs..ge]);
+            simd::add_pair_assign(blk, &replicas.row(a)[gs..ge], &replicas.row(b)[gs..ge]);
         }
         if let Some(a) = rest.next() {
-            simd::add_assign(blk, &replicas[a][gs..ge]);
+            simd::add_assign(blk, &replicas.row(a)[gs..ge]);
         }
         simd::scale_assign(blk, inv);
         start = end;
@@ -361,23 +365,27 @@ pub(crate) fn mean_range(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::params::ParamArena;
     use crate::util::rng::Pcg32;
 
-    fn replicas(p: usize, n: usize, seed: u64) -> Vec<FlatParams> {
+    fn replicas(p: usize, n: usize, seed: u64) -> ParamArena {
         let mut rng = Pcg32::seeded(seed);
-        (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect()
+        let rows: Vec<Vec<f32>> =
+            (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+        ParamArena::from_rows(&rows)
     }
 
     #[test]
     fn simulated_group_mean_exact() {
-        let mut r: Vec<FlatParams> =
+        let rows: Vec<Vec<f32>> =
             (0..4).map(|j| (0..8).map(|i| (j * 8 + i) as f32).collect()).collect();
+        let mut r = ParamArena::from_rows(&rows);
         let expect: Vec<f32> =
             (0..8).map(|i| (0..4).map(|j| (j * 8 + i) as f32).sum::<f32>() / 4.0).collect();
         let mut scratch = vec![0.0f32; 8];
-        SimulatedCollective.average_group(&mut r, 0..4, &mut scratch);
+        SimulatedCollective.average_group(r.view_mut(), 0..4, &mut scratch);
         for j in 0..4 {
-            assert_eq!(r[j], expect);
+            assert_eq!(r.row(j), &expect[..]);
         }
     }
 
@@ -391,16 +399,16 @@ mod tests {
             let mut b = base.clone();
             let mut sa = vec![0.0f32; n];
             let mut sb = vec![0.0f32; n];
-            SimulatedCollective.average_group(&mut a, 0..p, &mut sa);
-            ShardedCollective::new(threads).average_group(&mut b, 0..p, &mut sb);
+            SimulatedCollective.average_group(a.view_mut(), 0..p, &mut sa);
+            ShardedCollective::new(threads).average_group(b.view_mut(), 0..p, &mut sb);
             assert_eq!(a, b, "p={p} n={n} threads={threads}");
             assert_eq!(sa, sb);
             // subgroup averaging too
             if p >= 4 {
                 let mut a = base.clone();
                 let mut b = base.clone();
-                SimulatedCollective.average_group(&mut a, 1..3, &mut sa);
-                ShardedCollective::new(threads).average_group(&mut b, 1..3, &mut sb);
+                SimulatedCollective.average_group(a.view_mut(), 1..3, &mut sa);
+                ShardedCollective::new(threads).average_group(b.view_mut(), 1..3, &mut sb);
                 assert_eq!(a, b);
             }
         }
@@ -413,9 +421,9 @@ mod tests {
         let mut out_a = vec![0.0f32; 64];
         let mut out_b = vec![0.0f32; 64];
         let mut out_c = vec![0.0f32; 64];
-        SimulatedCollective.mean_of(&r, 0..3, &mut out_a);
-        ShardedCollective::new(2).mean_of(&r, 0..3, &mut out_b);
-        PooledCollective::new(2).mean_of(&r, 0..3, &mut out_c);
+        SimulatedCollective.mean_of(r.view(), 0..3, &mut out_a);
+        ShardedCollective::new(2).mean_of(r.view(), 0..3, &mut out_b);
+        PooledCollective::new(2).mean_of(r.view(), 0..3, &mut out_c);
         assert_eq!(r, before);
         assert_eq!(out_a, out_b);
         assert_eq!(out_a, out_c);
@@ -439,15 +447,15 @@ mod tests {
             let mut b = base.clone();
             let mut sa = vec![0.0f32; n];
             let mut sb = vec![0.0f32; n];
-            SimulatedCollective.average_group(&mut a, 0..p, &mut sa);
-            PooledCollective::new(threads).average_group(&mut b, 0..p, &mut sb);
+            SimulatedCollective.average_group(a.view_mut(), 0..p, &mut sa);
+            PooledCollective::new(threads).average_group(b.view_mut(), 0..p, &mut sb);
             assert_eq!(a, b, "p={p} n={n} threads={threads}");
             assert_eq!(sa, sb);
             if p >= 4 {
                 let mut a = base.clone();
                 let mut b = base.clone();
-                SimulatedCollective.average_group(&mut a, 1..3, &mut sa);
-                PooledCollective::new(threads).average_group(&mut b, 1..3, &mut sb);
+                SimulatedCollective.average_group(a.view_mut(), 1..3, &mut sa);
+                PooledCollective::new(threads).average_group(b.view_mut(), 1..3, &mut sb);
                 assert_eq!(a, b);
             }
         }

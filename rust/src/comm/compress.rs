@@ -67,7 +67,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::comm::collective::Collective;
-use crate::params::FlatParams;
+use crate::params::{FlatParams, Rows, RowsMut};
 use crate::util::rng::Pcg32;
 use crate::util::simd;
 
@@ -393,7 +393,7 @@ impl Collective for CompressedCollective {
         self.inner.name()
     }
 
-    fn average_group(&self, replicas: &mut [FlatParams], group: Range<usize>, scratch: &mut [f32]) {
+    fn average_group(&self, mut replicas: RowsMut<'_>, group: Range<usize>, scratch: &mut [f32]) {
         let n = scratch.len();
         let members = group.len();
         if members == 0 {
@@ -401,7 +401,7 @@ impl Collective for CompressedCollective {
         }
         let mut st = self.state.lock().expect("compression state poisoned");
         let st = &mut *st;
-        st.ensure(replicas.len());
+        st.ensure(replicas.rows());
         st.acc.resize(n, 0.0);
         st.tx.resize(n, 0.0);
         st.tx_mean.resize(n, 0.0);
@@ -413,7 +413,7 @@ impl Collective for CompressedCollective {
         let inv = 1.0 / members as f32;
         for j in group.clone() {
             if st.refs[j].is_empty() {
-                st.refs[j] = replicas[j].clone();
+                st.refs[j] = replicas.row(j)[..n].to_vec();
             }
             if st.residuals[j].is_empty() {
                 st.residuals[j] = vec![0.0; n];
@@ -421,7 +421,7 @@ impl Collective for CompressedCollective {
             // acc_j = (x_j − ref_j) + e_j
             simd::delta_plus_residual(
                 &mut st.acc,
-                &replicas[j][..n],
+                &replicas.row(j)[..n],
                 &st.refs[j][..n],
                 &st.residuals[j][..n],
             );
@@ -440,12 +440,12 @@ impl Collective for CompressedCollective {
         }
         simd::scaled_sum(scratch, &st.tx_mean, inv);
         for j in group {
-            replicas[j].copy_from_slice(scratch);
+            replicas.row_mut(j)[..n].copy_from_slice(scratch);
             st.refs[j].copy_from_slice(scratch);
         }
     }
 
-    fn mean_of(&self, replicas: &[FlatParams], group: Range<usize>, out: &mut [f32]) {
+    fn mean_of(&self, replicas: Rows<'_>, group: Range<usize>, out: &mut [f32]) {
         self.inner.mean_of(replicas, group, out);
     }
 }
@@ -454,10 +454,13 @@ impl Collective for CompressedCollective {
 mod tests {
     use super::*;
     use crate::comm::collective::SimulatedCollective;
+    use crate::params::ParamArena;
 
-    fn vecs(p: usize, n: usize, seed: u64) -> Vec<FlatParams> {
+    fn vecs(p: usize, n: usize, seed: u64) -> ParamArena {
         let mut rng = Pcg32::seeded(seed);
-        (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect()
+        let rows: Vec<Vec<f32>> =
+            (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+        ParamArena::from_rows(&rows)
     }
 
     #[test]
@@ -601,31 +604,34 @@ mod tests {
         let mut comp = base.clone();
         let mut s1 = vec![0.0f32; 64];
         let mut s2 = vec![0.0f32; 64];
-        SimulatedCollective.average_group(&mut dense, 0..4, &mut s1);
+        SimulatedCollective.average_group(dense.view_mut(), 0..4, &mut s1);
         let (cc, state) = CompressedCollective::new(
             Box::new(SimulatedCollective),
             Compression::parse("topk:0.05").unwrap(),
             42,
         );
-        cc.average_group(&mut comp, 0..4, &mut s2);
+        cc.average_group(comp.view_mut(), 0..4, &mut s2);
         for j in 0..4 {
             for i in 0..64 {
-                assert!((comp[j][i] - dense[j][i]).abs() < 1e-6, "first barrier ≈ dense mean");
+                assert!(
+                    (comp.row(j)[i] - dense.row(j)[i]).abs() < 1e-6,
+                    "first barrier ≈ dense mean"
+                );
             }
         }
         assert_eq!(state.lock().unwrap().residual_l2(), 0.0, "nothing untransmitted yet");
         // Drift one learner and fire again: top-k keeps the big coords,
         // the rest lands in its residual.
         for i in 0..64 {
-            comp[2][i] += (i as f32 + 1.0) * 0.01;
+            comp.row_mut(2)[i] += (i as f32 + 1.0) * 0.01;
         }
-        cc.average_group(&mut comp, 0..4, &mut s2);
+        cc.average_group(comp.view_mut(), 0..4, &mut s2);
         assert!(state.lock().unwrap().residual_l2() > 0.0);
         // EF conservation end-to-end: transmitted mean + residual account
         // for the whole drift.  With one drifted learner the group mean
         // moved by mean(t_2)/1, and e_2 = drift − t_2.
         for j in [0, 1, 3] {
-            assert_eq!(comp[j], comp[2], "barrier leaves members in agreement");
+            assert_eq!(comp.row(j), comp.row(2), "barrier leaves members in agreement");
         }
     }
 
@@ -637,23 +643,26 @@ mod tests {
         let mut dense = base.clone();
         let mut comp = base.clone();
         let mut s = vec![0.0f32; 40];
-        SimulatedCollective.average_group(&mut dense, 0..2, &mut s);
+        SimulatedCollective.average_group(dense.view_mut(), 0..2, &mut s);
         let (cc, state) = CompressedCollective::new(
             Box::new(SimulatedCollective),
             Compression::parse("topk:0.2").unwrap(),
             42,
         );
-        cc.average_group(&mut comp, 0..2, &mut s); // exact (lazy refs)
+        cc.average_group(comp.view_mut(), 0..2, &mut s); // exact (lazy refs)
         for i in 0..40 {
-            comp[0][i] += 1.0; // drift
+            comp.row_mut(0)[i] += 1.0; // drift
         }
         for _ in 0..8 {
-            cc.average_group(&mut comp, 0..2, &mut s);
+            cc.average_group(comp.view_mut(), 0..2, &mut s);
         }
         // 20% per barrier × 8 barriers ≥ full coverage: residual drained
         assert!(state.lock().unwrap().residual_l2() < 1e-4);
         for i in 0..40 {
-            assert!((comp[0][i] - (dense[0][i] + 0.5)).abs() < 1e-4, "mean caught up with drift");
+            assert!(
+                (comp.row(0)[i] - (dense.row(0)[i] + 0.5)).abs() < 1e-4,
+                "mean caught up with drift"
+            );
         }
     }
 }

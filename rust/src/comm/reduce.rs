@@ -12,7 +12,7 @@
 use crate::comm::collective::{Collective, SimulatedCollective};
 use crate::comm::compress::Compression;
 use crate::comm::cost::{CommStats, CostModel, LevelStats, ReduceStrategy};
-use crate::params::FlatParams;
+use crate::params::{FlatParams, Rows, RowsMut};
 use crate::topology::{HierTopology, LinkClass, Topology};
 use crate::util::simd;
 
@@ -80,7 +80,7 @@ impl Reducer {
     /// touching any statistics.
     fn group_once(
         &mut self,
-        replicas: &mut [FlatParams],
+        replicas: RowsMut<'_>,
         group: std::ops::Range<usize>,
         link: LinkClass,
     ) -> (f64, u64) {
@@ -100,7 +100,7 @@ impl Reducer {
     /// One group reduction charged to the aggregate stats.
     fn charged_group(
         &mut self,
-        replicas: &mut [FlatParams],
+        replicas: RowsMut<'_>,
         group: std::ops::Range<usize>,
         link: LinkClass,
     ) -> (f64, u64) {
@@ -109,11 +109,11 @@ impl Reducer {
         (secs, moved)
     }
 
-    /// Average the replicas in `group` (indices into `replicas`) and write
-    /// the mean back into every member.  Returns the modelled seconds.
+    /// Average the replica rows in `group` and write the mean back into
+    /// every member.  Returns the modelled seconds.
     pub fn average_group(
         &mut self,
-        replicas: &mut [FlatParams],
+        replicas: RowsMut<'_>,
         group: std::ops::Range<usize>,
         link: LinkClass,
     ) -> f64 {
@@ -130,7 +130,7 @@ impl Reducer {
     /// for the degenerate P=1 run (legacy `global_average` behaviour).
     pub fn reduce_level(
         &mut self,
-        replicas: &mut [FlatParams],
+        mut replicas: RowsMut<'_>,
         topo: &HierTopology,
         level: usize,
     ) -> f64 {
@@ -144,7 +144,8 @@ impl Reducer {
         let mut reductions = 0u64;
         let mut bytes = 0u64;
         for g in 0..topo.n_groups(level) {
-            let (secs, moved) = self.charged_group(replicas, topo.group_members(level, g), link);
+            let (secs, moved) =
+                self.charged_group(replicas.reborrow(), topo.group_members(level, g), link);
             max_secs = max_secs.max(secs);
             total_secs += secs;
             reductions += 1;
@@ -199,7 +200,7 @@ impl Reducer {
     /// full barrier regardless).
     fn survivor_group(
         &mut self,
-        replicas: &mut [FlatParams],
+        mut replicas: RowsMut<'_>,
         members: std::ops::Range<usize>,
         n_part: usize,
         part: &[bool],
@@ -216,14 +217,14 @@ impl Reducer {
         // degraded-group test pins operation for operation.
         for j in members.clone() {
             if part[j] {
-                simd::add_assign(&mut self.scratch[..n], &replicas[j][..n]);
+                simd::add_assign(&mut self.scratch[..n], &replicas.row(j)[..n]);
             }
         }
         let inv = 1.0 / n_part as f32;
         simd::scale_assign(&mut self.scratch, inv);
         for j in members {
             if part[j] {
-                replicas[j].copy_from_slice(&self.scratch);
+                replicas.row_mut(j)[..n].copy_from_slice(&self.scratch);
             }
         }
         let secs = self.cost.allreduce_seconds(n_part, bytes, link, self.strategy);
@@ -248,7 +249,7 @@ impl Reducer {
     /// groups fired over a strict subset of their members.
     pub fn reduce_level_survivors(
         &mut self,
-        replicas: &mut [FlatParams],
+        mut replicas: RowsMut<'_>,
         topo: &HierTopology,
         level: usize,
         part: &[bool],
@@ -271,10 +272,10 @@ impl Reducer {
                 continue; // whole group down: no barrier fires
             }
             let (secs, moved) = if n_part == members.len() {
-                self.charged_group(replicas, members, link)
+                self.charged_group(replicas.reborrow(), members, link)
             } else {
                 degraded += 1;
-                self.survivor_group(replicas, members, n_part, part, link)
+                self.survivor_group(replicas.reborrow(), members, n_part, part, link)
             };
             max_secs = max_secs.max(secs);
             total_secs += secs;
@@ -298,21 +299,21 @@ impl Reducer {
 
     /// Local averaging step: average within every cluster of the two-level
     /// topology (level 0 of the hierarchy).
-    pub fn local_average(&mut self, replicas: &mut [FlatParams], topo: &Topology) -> f64 {
+    pub fn local_average(&mut self, replicas: RowsMut<'_>, topo: &Topology) -> f64 {
         self.reduce_level(replicas, &topo.to_hier(), 0)
     }
 
     /// Global averaging: one allreduce over all P learners (inter-node
     /// fabric; the outermost hierarchy level).
-    pub fn global_average(&mut self, replicas: &mut [FlatParams], topo: &Topology) -> f64 {
+    pub fn global_average(&mut self, replicas: RowsMut<'_>, topo: &Topology) -> f64 {
         self.reduce_level(replicas, &topo.to_hier(), 1)
     }
 
-    /// Compute the mean across ALL replicas into `out` without touching the
-    /// replicas (used to evaluate the paper's w̃ mid-interval).
-    pub fn mean_of(&self, replicas: &[FlatParams], out: &mut FlatParams) {
+    /// Compute the mean across ALL replica rows into `out` without touching
+    /// the rows (used to evaluate the paper's w̃ mid-interval).
+    pub fn mean_of(&self, replicas: Rows<'_>, out: &mut FlatParams) {
         out.resize(self.scratch.len(), 0.0);
-        self.collective.mean_of(replicas, 0..replicas.len(), out);
+        self.collective.mean_of(replicas, 0..replicas.rows(), out);
     }
 }
 
@@ -320,9 +321,12 @@ impl Reducer {
 mod tests {
     use super::*;
     use crate::comm::collective::ShardedCollective;
+    use crate::params::ParamArena;
 
-    fn replicas(p: usize, n: usize) -> Vec<FlatParams> {
-        (0..p).map(|j| (0..n).map(|i| (j * n + i) as f32).collect()).collect()
+    fn replicas(p: usize, n: usize) -> ParamArena {
+        let rows: Vec<Vec<f32>> =
+            (0..p).map(|j| (0..n).map(|i| (j * n + i) as f32).collect()).collect();
+        ParamArena::from_rows(&rows)
     }
 
     #[test]
@@ -332,9 +336,9 @@ mod tests {
             (0..8).map(|i| (0..4).map(|j| (j * 8 + i) as f32).sum::<f32>() / 4.0).collect();
         let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 8);
         let topo = Topology::new(4, 4).unwrap();
-        red.global_average(&mut r, &topo);
+        red.global_average(r.view_mut(), &topo);
         for j in 0..4 {
-            assert_eq!(r[j], expect);
+            assert_eq!(r.row(j), &expect[..]);
         }
         assert_eq!(red.stats.global_reductions, 1);
         assert!(red.stats.global_seconds > 0.0);
@@ -345,10 +349,10 @@ mod tests {
         let mut r = replicas(4, 4);
         let topo = Topology::new(4, 2).unwrap();
         let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Tree, 4);
-        red.local_average(&mut r, &topo);
-        assert_eq!(r[0], r[1]);
-        assert_eq!(r[2], r[3]);
-        assert_ne!(r[0], r[2]);
+        red.local_average(r.view_mut(), &topo);
+        assert_eq!(r.row(0), r.row(1));
+        assert_eq!(r.row(2), r.row(3));
+        assert_ne!(r.row(0), r.row(2));
         assert_eq!(red.stats.local_reductions, 2);
     }
 
@@ -358,7 +362,7 @@ mod tests {
         let before = r.clone();
         let topo = Topology::new(3, 1).unwrap();
         let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 4);
-        let secs = red.local_average(&mut r, &topo);
+        let secs = red.local_average(r.view_mut(), &topo);
         assert_eq!(secs, 0.0);
         assert_eq!(r, before);
         assert_eq!(red.stats.local_reductions, 0);
@@ -371,8 +375,8 @@ mod tests {
         for s in [ReduceStrategy::Naive, ReduceStrategy::Tree, ReduceStrategy::Ring] {
             let mut r = replicas(8, 16);
             let mut red = Reducer::new(CostModel::default(), s, 16);
-            red.local_average(&mut r, &topo);
-            red.global_average(&mut r, &topo);
+            red.local_average(r.view_mut(), &topo);
+            red.global_average(r.view_mut(), &topo);
             outs.push(r);
         }
         assert_eq!(outs[0], outs[1]);
@@ -391,10 +395,10 @@ mod tests {
             4099,
             Box::new(ShardedCollective::new(3)),
         );
-        sim.local_average(&mut a, &topo);
-        sim.global_average(&mut a, &topo);
-        sh.local_average(&mut b, &topo);
-        sh.global_average(&mut b, &topo);
+        sim.local_average(a.view_mut(), &topo);
+        sim.global_average(a.view_mut(), &topo);
+        sh.local_average(b.view_mut(), &topo);
+        sh.global_average(b.view_mut(), &topo);
         assert_eq!(a, b);
         assert_eq!(sim.stats, sh.stats);
         assert_eq!(sim.level_stats(), sh.level_stats());
@@ -407,7 +411,7 @@ mod tests {
         let before = r.clone();
         let red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 4);
         let mut out = Vec::new();
-        red.mean_of(&r, &mut out);
+        red.mean_of(r.view(), &mut out);
         assert_eq!(r, before);
         assert_eq!(out[0], (0.0 + 4.0 + 8.0) / 3.0);
     }
@@ -417,7 +421,7 @@ mod tests {
         let topo = Topology::new(8, 4).unwrap();
         let mut r = replicas(8, 1024);
         let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 1024);
-        let secs = red.local_average(&mut r, &topo);
+        let secs = red.local_average(r.view_mut(), &topo);
         // Two symmetric clusters run concurrently: charged time equals one
         // cluster's allreduce, not two.
         assert!((red.stats.local_seconds - secs).abs() < 1e-12);
@@ -434,9 +438,9 @@ mod tests {
         let mut r = replicas(8, 64);
         let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 64);
         red.reserve_levels(topo.n_levels());
-        red.reduce_level(&mut r, &topo, 0);
-        red.reduce_level(&mut r, &topo, 1);
-        red.reduce_level(&mut r, &topo, 2);
+        red.reduce_level(r.view_mut(), &topo, 0);
+        red.reduce_level(r.view_mut(), &topo, 1);
+        red.reduce_level(r.view_mut(), &topo, 2);
         assert_eq!(red.stats.local_reductions, 4);
         assert_eq!(red.stats.global_reductions, 2);
         assert_eq!(red.stats.rack_reductions, 1);
@@ -455,9 +459,9 @@ mod tests {
         let mut r = replicas(8, 16);
         let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 16);
         red.reserve_levels(topo.n_levels());
-        red.reduce_level(&mut r, &topo, 0); // 4 groups of 2, intra
-        red.reduce_level(&mut r, &topo, 1); // 2 groups of 4, inter
-        red.reduce_level(&mut r, &topo, 2); // 1 group of 8, inter
+        red.reduce_level(r.view_mut(), &topo, 0); // 4 groups of 2, intra
+        red.reduce_level(r.view_mut(), &topo, 1); // 2 groups of 4, inter
+        red.reduce_level(r.view_mut(), &topo, 2); // 1 group of 8, inter
         let ls = red.level_stats();
         assert_eq!(ls.len(), 3);
         assert_eq!(ls[0].reductions, 4);
@@ -467,7 +471,7 @@ mod tests {
         assert_eq!(red.stats.global_reductions, 3);
         // after the top-level reduction all replicas agree
         for j in 1..8 {
-            assert_eq!(r[0], r[j]);
+            assert_eq!(r.row(0), r.row(j));
         }
         // concurrent-group convention: aggregate seconds equal the per-level maxima
         let total: f64 = ls.iter().map(|l| l.seconds).sum();
@@ -484,8 +488,8 @@ mod tests {
         let mut rb = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 16);
         let all = vec![true; 8];
         for level in 0..3 {
-            let legacy = ra.reduce_level(&mut a, &topo, level);
-            let (surv, degraded) = rb.reduce_level_survivors(&mut b, &topo, level, &all);
+            let legacy = ra.reduce_level(a.view_mut(), &topo, level);
+            let (surv, degraded) = rb.reduce_level_survivors(b.view_mut(), &topo, level, &all);
             assert_eq!(legacy.to_bits(), surv.to_bits());
             assert_eq!(degraded, 0);
         }
@@ -505,26 +509,28 @@ mod tests {
         part[1] = false; // group {0..4} degrades to {0,2,3}
         part[4] = false;
         part[5] = false; // group {4..8} degrades to {6,7}
-        let (secs, degraded) = red.reduce_level_survivors(&mut r, &topo, 0, &part);
+        let (secs, degraded) = red.reduce_level_survivors(r.view_mut(), &topo, 0, &part);
         assert!(secs > 0.0);
         assert_eq!(degraded, 2);
         // Survivor mean: serial index-ascending sum times 1/|survivors| —
         // the documented reweighted-averaging rule, reproduced here
         // operation for operation.
         let inv3 = 1.0f32 / 3.0;
-        let expect0: Vec<f32> =
-            (0..4).map(|i| (before[0][i] + before[2][i] + before[3][i]) * inv3).collect();
+        let expect0: Vec<f32> = (0..4)
+            .map(|i| (before.row(0)[i] + before.row(2)[i] + before.row(3)[i]) * inv3)
+            .collect();
         for j in [0, 2, 3] {
-            assert_eq!(r[j], expect0, "survivor {j}");
+            assert_eq!(r.row(j), &expect0[..], "survivor {j}");
         }
-        assert_eq!(r[1], before[1], "absentee keeps frozen parameters");
+        assert_eq!(r.row(1), before.row(1), "absentee keeps frozen parameters");
         let inv2 = 1.0f32 / 2.0;
-        let expect1: Vec<f32> = (0..4).map(|i| (before[6][i] + before[7][i]) * inv2).collect();
+        let expect1: Vec<f32> =
+            (0..4).map(|i| (before.row(6)[i] + before.row(7)[i]) * inv2).collect();
         for j in [6, 7] {
-            assert_eq!(r[j], expect1, "survivor {j}");
+            assert_eq!(r.row(j), &expect1[..], "survivor {j}");
         }
-        assert_eq!(r[4], before[4]);
-        assert_eq!(r[5], before[5]);
+        assert_eq!(r.row(4), before.row(4));
+        assert_eq!(r.row(5), before.row(5));
         // priced as 3-way and 2-way allreduces on the intra-node tier
         assert_eq!(red.stats.local_reductions, 2);
     }
@@ -540,10 +546,10 @@ mod tests {
         for p in part.iter_mut().take(4) {
             *p = false;
         }
-        let (_, degraded) = red.reduce_level_survivors(&mut r, &topo, 0, &part);
+        let (_, degraded) = red.reduce_level_survivors(r.view_mut(), &topo, 0, &part);
         assert_eq!(degraded, 0, "the surviving group is full, not degraded");
         for j in 0..4 {
-            assert_eq!(r[j], before[j], "dead group left untouched");
+            assert_eq!(r.row(j), before.row(j), "dead group left untouched");
         }
         assert_eq!(red.stats.local_reductions, 1);
     }

@@ -70,6 +70,10 @@ pub struct RunConfig {
     /// without `sched_setaffinity`.  Never changes results — only where
     /// the deterministic work runs.
     pub pool_pin: bool,
+    /// Suppress engine status notices on stderr (`--quiet`), e.g. the
+    /// `--pool-pin` pin report, so JSON consumers and log-grepping CI
+    /// smokes see clean streams.  Never changes results.
+    pub quiet: bool,
     /// Per-level link-class overrides matching `levels` (innermost first):
     /// `intra` / `inter` / `rack`.  Empty = the default assignment
     /// (innermost intra-node, every outer level inter-node).
@@ -141,6 +145,7 @@ impl RunConfig {
             compress: Compression::None,
             pool_threads: 0,
             pool_pin: false,
+            quiet: false,
             links: Vec::new(),
             exec: ExecKind::Lockstep,
             het: 0.0,
@@ -407,6 +412,7 @@ impl RunConfig {
                 "compress" => self.compress = Compression::parse(v.as_str()?)?,
                 "pool_threads" => self.pool_threads = v.as_usize()?,
                 "pool_pin" => self.pool_pin = v.as_bool()?,
+                "quiet" => self.quiet = v.as_bool()?,
                 "links" => {
                     self.links = v
                         .as_arr()?
@@ -500,6 +506,9 @@ impl RunConfig {
         cfg.pool_threads = args.parse_or("pool-threads", cfg.pool_threads)?;
         if args.has("pool-pin") {
             cfg.pool_pin = true;
+        }
+        if args.has("quiet") {
+            cfg.quiet = true;
         }
         if let Some(ls) = args.get("links") {
             cfg.links = ls
@@ -688,7 +697,8 @@ mod tests {
         let mut c = RunConfig::defaults("m");
         let j = Json::parse(
             r#"{"levels": [2, 8, 32], "ks": [2, 8, 32], "collective": "pooled:4",
-                "pool_threads": 3, "pool_pin": true, "links": ["intra", "inter", "rack"],
+                "pool_threads": 3, "pool_pin": true, "quiet": true,
+                "links": ["intra", "inter", "rack"],
                 "alpha_rack": 1e-4, "beta_rack": 1e-9, "backend": "native"}"#,
         )
         .unwrap();
@@ -696,6 +706,7 @@ mod tests {
         assert_eq!(c.collective, CollectiveKind::Pooled { threads: 4 });
         assert_eq!(c.pool_threads, 3);
         assert!(c.pool_pin);
+        assert!(c.quiet);
         assert_eq!(c.cost.alpha_rack, 1e-4);
         c.validate().unwrap();
         let h = c.hierarchy().unwrap();
@@ -730,16 +741,17 @@ mod tests {
         let argv: Vec<String> = [
             "train", "--model", "quickstart", "--backend", "native", "--levels", "2,4,8",
             "--ks", "2,4,8", "--collective", "pooled", "--pool-threads", "5",
-            "--pool-pin", "--links", "intra,inter,rack", "--epochs", "2",
+            "--pool-pin", "--quiet", "--links", "intra,inter,rack", "--epochs", "2",
         ]
         .iter()
         .map(|s| s.to_string())
         .collect();
-        let args = Args::parse(argv, &["record-steps", "pool-pin", "help"]).unwrap();
+        let args = Args::parse(argv, &["record-steps", "pool-pin", "quiet", "help"]).unwrap();
         let cfg = RunConfig::from_args(&args).unwrap();
         assert_eq!(cfg.collective, CollectiveKind::Pooled { threads: 0 });
         assert_eq!(cfg.pool_threads, 5);
         assert!(cfg.pool_pin);
+        assert!(cfg.quiet);
         assert_eq!(
             cfg.links,
             vec![LinkClass::IntraNode, LinkClass::InterNode, LinkClass::RackFabric]

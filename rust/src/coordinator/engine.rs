@@ -21,19 +21,72 @@ use crate::backend::{StepBackend, StepOut};
 use crate::comm::{CompressedCollective, EfState, Reducer};
 use crate::config::RunConfig;
 use crate::data::{BatchBuf, DataSource};
-use crate::optimizer::Sgd;
-use crate::params::FlatParams;
+use crate::exec::WorkerPool;
+use crate::optimizer::SgdPool;
+use crate::params::{FlatParams, ParamArena};
 use crate::sim::{ExecModel, MembershipModel};
 use crate::topology::HierTopology;
 use crate::util::rng::Pcg32;
+use crate::util::simd;
 
-/// Replicated per-learner training state (parameters, gradients, optimizer
-/// state, PRNG streams) plus the shared step-output scratch.
+/// Minimum fleet size for the pool-parallel step pipeline.  Below it the
+/// per-learner loops cost less than the pool dispatch, so the engine runs
+/// the literal serial reference loops; the same serial loops also run when
+/// `--pool-threads` is unset/0/1, which is what keeps every golden (all
+/// recorded at the default) on the executable reference path.
+pub const POOL_STEP_MIN_P: usize = 4;
+
+/// Fixed block width of the loss/ncorrect tree reduction.  Both the serial
+/// and the pooled step paths sum through [`tree_sum`] with this shape, so
+/// the result is a pure function of the values — independent of thread
+/// count and identical between the two pipelines.  For P ≤ LOSS_BLOCK the
+/// tree degenerates to the single ascending left fold the pre-arena engine
+/// used, which is what keeps existing goldens (P ≤ 256) byte-stable.
+const LOSS_BLOCK: usize = 256;
+
+/// Fixed-shape blocked sum: ascending left fold within each LOSS_BLOCK
+/// block, then an ascending left fold over the block partials.  With a
+/// pool the block partials are computed concurrently (each partial is the
+/// same serial fold either way), so pooled and serial calls agree bitwise.
+pub fn tree_sum(vals: &[f64], pool: Option<&WorkerPool>) -> f64 {
+    if vals.len() <= LOSS_BLOCK {
+        return vals.iter().sum();
+    }
+    let n_blocks = vals.len().div_ceil(LOSS_BLOCK);
+    let mut partials = vec![0.0f64; n_blocks];
+    let fill = |i: usize, out: &mut [f64]| {
+        let s = i * LOSS_BLOCK;
+        let e = (s + LOSS_BLOCK).min(vals.len());
+        out[0] = vals[s..e].iter().sum();
+    };
+    match pool {
+        Some(pool) => pool.run_chunks_mut(&mut partials, 1, fill),
+        None => {
+            for i in 0..n_blocks {
+                fill(i, &mut partials[i..i + 1]);
+            }
+        }
+    }
+    partials.iter().sum()
+}
+
+/// Raw base pointer that may cross into pool workers.  Each worker derives
+/// a slice over a *disjoint* region from it (disjointness is the caller's
+/// SAFETY obligation at each use site).
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Replicated per-learner training state — parameters, gradients, and
+/// optimizer state each live in one contiguous [`ParamArena`] (rows =
+/// learners, stride = n_params) — plus the per-learner PRNG streams and
+/// the shared step-output scratch.  One allocation per field means the
+/// pool's row→slot affinity (and `--pool-pin`) can be made physical via
+/// first-touch for *all* learner state, not just replicas.
 pub struct LearnerSet {
-    pub replicas: Vec<FlatParams>,
-    pub grads: Vec<FlatParams>,
+    pub replicas: ParamArena,
+    pub grads: ParamArena,
     pub outs: Vec<StepOut>,
-    pub opts: Vec<Sgd>,
+    pub opt: SgdPool,
     pub rngs: Vec<Pcg32>,
 }
 
@@ -42,16 +95,16 @@ impl LearnerSet {
         let p = cfg.p;
         let mut root = Pcg32::new(cfg.seed, 0x48494552); // "HIER"
         LearnerSet {
-            replicas: vec![init.clone(); p],
-            grads: vec![vec![0.0; n_params]; p],
+            replicas: ParamArena::replicated(init, p),
+            grads: ParamArena::zeroed(p, n_params),
             outs: vec![StepOut::default(); p],
-            opts: (0..p).map(|_| Sgd::new(cfg.momentum, cfg.weight_decay, n_params)).collect(),
+            opt: SgdPool::new(cfg.momentum, cfg.weight_decay, p, n_params),
             rngs: (0..p).map(|j| root.fork(j as u64)).collect(),
         }
     }
 
     pub fn p(&self) -> usize {
-        self.replicas.len()
+        self.replicas.rows()
     }
 }
 
@@ -154,6 +207,13 @@ pub struct Engine<'a> {
     /// set (shared with the `CompressedCollective` inside the reducer;
     /// read at end of run for the record's `compression` block).
     ef_state: Option<Arc<Mutex<EfState>>>,
+    /// The shared worker pool (same registry entry the pooled collective
+    /// and the native backend's lane fan-out resolve to, so one run never
+    /// oversubscribes the host with two thread sets).
+    pool: Arc<WorkerPool>,
+    /// Run the pool-parallel step pipeline (batch fill, SGD apply, loss
+    /// tree-sum)?  False ⇒ the literal serial reference loops.
+    pooled_step: bool,
     batch: BatchBuf,
     t: u64,
 }
@@ -233,18 +293,46 @@ impl<'a> Engine<'a> {
             _ => crate::exec::shared_pool(cfg.pool_threads),
         };
         if cfg.pool_pin {
+            // Status goes to stderr and only when not --quiet, so JSON
+            // consumers and log-grepping smokes see clean streams.
             if crate::exec::pin_supported() {
                 let pinned = pool.pin_threads();
-                eprintln!("[engine] --pool-pin: pinned {pinned}/{} pool slots", pool.threads());
-            } else {
-                eprintln!("[engine] --pool-pin: sched_setaffinity unavailable on this target (no-op)");
+                if !cfg.quiet {
+                    eprintln!(
+                        "[engine] --pool-pin: pinned {pinned}/{} pool slots",
+                        pool.threads()
+                    );
+                }
+            } else if !cfg.quiet {
+                eprintln!(
+                    "[engine] --pool-pin: sched_setaffinity unavailable on this target (no-op)"
+                );
             }
         }
-        if matches!(cfg.collective, crate::comm::CollectiveKind::Pooled { .. }) {
+        // The pooled step pipeline needs an explicit worker budget (≥ 2)
+        // and enough learners to amortize the dispatch; otherwise every
+        // per-learner loop below stays on the serial reference path.
+        let pooled_step = cfg.pool_threads >= 2 && cfg.p >= POOL_STEP_MIN_P;
+        if pooled_step {
+            // First-touch every learner-state arena row-granular from the
+            // pool slot that will own that row in `run_chunks_mut`, making
+            // the pool's stable row→slot affinity (and `--pool-pin`)
+            // physical page placement for replicas, grads, and velocity.
+            let stride = learners.replicas.stride().max(1);
+            pool.first_touch(learners.replicas.as_mut_slice(), stride);
+            pool.first_touch(learners.grads.as_mut_slice(), stride);
+            if let Some(vel) = learners.opt.velocity_mut() {
+                pool.first_touch(vel.as_mut_slice(), stride);
+            }
+        } else if matches!(cfg.collective, crate::comm::CollectiveKind::Pooled { .. }) {
+            // Serial step path with a pooled collective: fault each
+            // replica row's pages in shard-granular from the slot that
+            // keeps reducing that shard (same ceil-div shard math as
+            // `PooledCollective::mean_of`).
             let t = pool.threads().clamp(1, n_params.max(1));
             let shard = n_params.div_ceil(t);
-            for r in learners.replicas.iter_mut() {
-                pool.first_touch(r, shard);
+            for j in 0..learners.replicas.rows() {
+                pool.first_touch(learners.replicas.row_mut(j), shard);
             }
         }
         Ok(Engine {
@@ -257,6 +345,8 @@ impl<'a> Engine<'a> {
             realized,
             faults,
             ef_state,
+            pool,
+            pooled_step,
             batch: BatchBuf::default(),
             t: 0,
         })
@@ -290,27 +380,103 @@ impl<'a> Engine<'a> {
             self.resolve_membership();
         }
         let b = backend.train_batch();
+        let n = self.learners.replicas.stride();
         self.batch.clear();
         // Every learner draws its batch even while down: the per-learner
         // data streams must stay aligned with the fault-free run so that
         // `--faults 0` (and any two runs differing only in outages) see
         // identical sample sequences.
-        for rng in self.learners.rngs.iter_mut() {
-            data.fill_train(rng, b, &mut self.batch);
+        if self.pooled_step {
+            // Pool-parallel fill: the stacked batch is carved into
+            // disjoint per-learner regions (the exact element counts one
+            // `fill_train` call appends) and each pool slot fills its rows
+            // with that learner's own RNG fork — byte-identical to the
+            // serial append loop, including RNG consumption.
+            let (nf, ni, ny) = data.train_region(b);
+            self.batch.xf.resize(p * nf, 0.0);
+            self.batch.xi.resize(p * ni, 0);
+            self.batch.y.resize(p * ny, 0);
+            self.batch.rows = p * b;
+            let xf = SendPtr(self.batch.xf.as_mut_ptr());
+            let xi = SendPtr(self.batch.xi.as_mut_ptr());
+            let y = SendPtr(self.batch.y.as_mut_ptr());
+            self.pool.run_chunks_mut(&mut self.learners.rngs, 1, |j, rng| {
+                // SAFETY: chunk j owns exactly rng j, and the three region
+                // slices [j·len, (j+1)·len) are disjoint across chunks and
+                // in-bounds of the vectors resized to p·len above.
+                let (xf, xi, y) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(xf.0.add(j * nf), nf),
+                        std::slice::from_raw_parts_mut(xi.0.add(j * ni), ni),
+                        std::slice::from_raw_parts_mut(y.0.add(j * ny), ny),
+                    )
+                };
+                data.fill_train_region(&mut rng[0], b, xf, xi, y);
+            });
+        } else {
+            for rng in self.learners.rngs.iter_mut() {
+                data.fill_train(rng, b, &mut self.batch);
+            }
         }
         backend.grads(
-            &self.learners.replicas,
+            self.learners.replicas.view(),
             &self.batch,
-            &mut self.learners.grads,
+            self.learners.grads.view_mut(),
             &mut self.learners.outs,
         )?;
-        for j in 0..p {
-            if let Some(fs) = &self.faults {
-                if !fs.alive[j] {
-                    continue; // down: parameters freeze until re-entry
+        // Local SGD apply: one fused momentum+weight-decay pass per arena
+        // row.  Rows are independent, and the pooled path runs the same
+        // `util::simd` kernels per row as `SgdPool::apply_row`, so the
+        // result is bit-identical to the serial reference at any thread
+        // count.
+        if self.pooled_step {
+            let mu = self.learners.opt.momentum;
+            let wd = self.learners.opt.weight_decay;
+            let grads = self.learners.grads.view();
+            let alive = self.faults.as_ref().map(|fs| fs.alive.as_slice());
+            match self.learners.opt.velocity_mut() {
+                Some(vel) => {
+                    let vbase = SendPtr(vel.as_mut_slice().as_mut_ptr());
+                    self.pool.run_chunks_mut(self.learners.replicas.as_mut_slice(), n, |j, w| {
+                        if alive.is_some_and(|a| !a[j]) {
+                            return; // down: parameters freeze until re-entry
+                        }
+                        // SAFETY: chunk j is replica row j, so velocity row
+                        // j ([j·n, (j+1)·n) of an arena with the same
+                        // geometry) is touched by exactly one worker.
+                        let v = unsafe {
+                            std::slice::from_raw_parts_mut(vbase.0.add(j * n), n)
+                        };
+                        simd::sgd_step_momentum(w, grads.row(j), v, lr, mu, wd);
+                    });
+                }
+                None => {
+                    self.pool.run_chunks_mut(self.learners.replicas.as_mut_slice(), n, |j, w| {
+                        if alive.is_some_and(|a| !a[j]) {
+                            return; // down: parameters freeze until re-entry
+                        }
+                        if wd == 0.0 {
+                            simd::sgd_step_plain(w, grads.row(j), lr);
+                        } else {
+                            simd::sgd_step_wd(w, grads.row(j), lr, wd);
+                        }
+                    });
                 }
             }
-            self.learners.opts[j].apply(&mut self.learners.replicas[j], &self.learners.grads[j], lr);
+        } else {
+            for j in 0..p {
+                if let Some(fs) = &self.faults {
+                    if !fs.alive[j] {
+                        continue; // down: parameters freeze until re-entry
+                    }
+                }
+                self.learners.opt.apply_row(
+                    j,
+                    self.learners.replicas.row_mut(j),
+                    self.learners.grads.row(j),
+                    lr,
+                );
+            }
         }
         self.t += 1;
         self.timeline.on_step();
@@ -329,7 +495,7 @@ impl<'a> Engine<'a> {
                             .map(|j| fs.alive[j] && (top || !fs.detached[j]))
                             .collect();
                         let (secs, degraded) = self.reducer.reduce_level_survivors(
-                            &mut self.learners.replicas,
+                            self.learners.replicas.view_mut(),
                             &self.topo,
                             level,
                             &part,
@@ -337,9 +503,11 @@ impl<'a> Engine<'a> {
                         fs.counts.survivor_reductions += degraded;
                         secs
                     }
-                    None => {
-                        self.reducer.reduce_level(&mut self.learners.replicas, &self.topo, level)
-                    }
+                    None => self.reducer.reduce_level(
+                        self.learners.replicas.view_mut(),
+                        &self.topo,
+                        level,
+                    ),
                 };
                 // Symmetric groups at one level cost the same, so the
                 // reducer's max-over-groups is also each group's barrier
@@ -371,7 +539,7 @@ impl<'a> Engine<'a> {
                         // in-memory checkpoint from the first one.
                         let fs = self.faults.as_mut().expect("fault runtime present");
                         if let Some(src) = (0..p).find(|&j| fs.alive[j]) {
-                            fs.cache.copy_from_slice(&self.learners.replicas[src]);
+                            fs.cache.copy_from_slice(self.learners.replicas.row(src));
                         }
                     }
                 }
@@ -382,21 +550,27 @@ impl<'a> Engine<'a> {
         // Mean loss averages the *live* fleet (a preempted machine reports
         // nothing); `ncorrect` keeps the full-fleet sum because the
         // trainer's accuracy denominator is the fixed `p·b` per step.
+        // Both accumulate through the fixed-shape `tree_sum`, which the
+        // pooled path parallelizes over blocks — for P ≤ LOSS_BLOCK that
+        // is exactly the legacy ascending left fold on either path.
+        let sum_pool = if self.pooled_step { Some(&*self.pool) } else { None };
         let mean_loss = match &self.faults {
             Some(fs) if fs.alive.iter().any(|&a| a) => {
-                let mut n = 0u64;
-                let mut sum = 0.0f64;
-                for j in 0..p {
-                    if fs.alive[j] {
-                        n += 1;
-                        sum += self.learners.outs[j].loss as f64;
-                    }
-                }
-                sum / n as f64
+                let vals: Vec<f64> = (0..p)
+                    .filter(|&j| fs.alive[j])
+                    .map(|j| self.learners.outs[j].loss as f64)
+                    .collect();
+                tree_sum(&vals, sum_pool) / vals.len() as f64
             }
-            _ => self.learners.outs.iter().map(|o| o.loss as f64).sum::<f64>() / p as f64,
+            _ => {
+                let vals: Vec<f64> =
+                    self.learners.outs.iter().map(|o| o.loss as f64).collect();
+                tree_sum(&vals, sum_pool) / p as f64
+            }
         };
-        let ncorrect = self.learners.outs.iter().map(|o| o.ncorrect as f64).sum::<f64>();
+        let corr: Vec<f64> =
+            self.learners.outs.iter().map(|o| o.ncorrect as f64).collect();
+        let ncorrect = tree_sum(&corr, sum_pool);
         Ok(StepOutcome { mean_loss, ncorrect, reduce })
     }
 
@@ -431,7 +605,7 @@ impl<'a> Engine<'a> {
             fs.counts.reentries += 1;
             fs.counts.checkpoint_restores += 1;
             fs.counts.membership_epoch += 1;
-            self.learners.replicas[j].copy_from_slice(&fs.cache);
+            self.learners.replicas.row_mut(j).copy_from_slice(&fs.cache);
             let g = self.topo.group_of(0, j);
             let peers: Vec<usize> = self
                 .topo
@@ -441,16 +615,17 @@ impl<'a> Engine<'a> {
             if peers.is_empty() {
                 continue; // no live peer: the checkpoint is the best state
             }
-            let mut acc = std::mem::take(&mut self.learners.replicas[j]);
-            acc.iter_mut().for_each(|x| *x = 0.0);
+            // Same op order as the pre-arena code: zeroed accumulator,
+            // ascending live peers, reciprocal multiply, write-back.
+            let mut acc = vec![0.0f32; self.learners.replicas.stride()];
             for &i in &peers {
-                for (a, &v) in acc.iter_mut().zip(self.learners.replicas[i].iter()) {
+                for (a, &v) in acc.iter_mut().zip(self.learners.replicas.row(i).iter()) {
                     *a += v;
                 }
             }
             let inv = 1.0 / peers.len() as f32;
             acc.iter_mut().for_each(|x| *x *= inv);
-            self.learners.replicas[j] = acc;
+            self.learners.replicas.row_mut(j).copy_from_slice(&acc);
         }
     }
 
@@ -461,6 +636,6 @@ impl<'a> Engine<'a> {
 
     /// The paper's w̃: the mean of all replicas, without perturbing them.
     pub fn mean_params(&self, out: &mut FlatParams) {
-        self.reducer.mean_of(&self.learners.replicas, out);
+        self.reducer.mean_of(self.learners.replicas.view(), out);
     }
 }

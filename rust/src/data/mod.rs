@@ -43,6 +43,22 @@ pub trait DataSource: Send + Sync {
     fn kind(&self) -> DataKind;
     /// Append `b` i.i.d. training samples drawn with `rng`.
     fn fill_train(&self, rng: &mut Pcg32, b: usize, out: &mut BatchBuf);
+    /// Element counts `(xf, xi, y)` that one `fill_train(rng, b, _)` call
+    /// appends — the per-learner region layout of a stacked batch.
+    fn train_region(&self, b: usize) -> (usize, usize, usize);
+    /// Write exactly the samples `fill_train(rng, b, _)` would append into
+    /// pre-sized regions (same RNG consumption, same values, same order) —
+    /// the engine's pool-parallel batch fill carves a stacked `BatchBuf`
+    /// into disjoint per-learner regions and fills them concurrently,
+    /// byte-identical to the serial append loop.
+    fn fill_train_region(
+        &self,
+        rng: &mut Pcg32,
+        b: usize,
+        xf: &mut [f32],
+        xi: &mut [i32],
+        y: &mut [i32],
+    );
     /// Size of the held-out evaluation set.
     fn eval_n(&self) -> usize;
     /// Append evaluation samples `[start, start+b)` (clamped); returns the
@@ -172,6 +188,28 @@ impl DataSource for ClassifyData {
         out.rows += b;
     }
 
+    fn train_region(&self, b: usize) -> (usize, usize, usize) {
+        (b * self.spec.dim, 0, b)
+    }
+
+    fn fill_train_region(
+        &self,
+        rng: &mut Pcg32,
+        b: usize,
+        xf: &mut [f32],
+        _xi: &mut [i32],
+        y: &mut [i32],
+    ) {
+        let d = self.spec.dim;
+        debug_assert_eq!(xf.len(), b * d);
+        debug_assert_eq!(y.len(), b);
+        for k in 0..b {
+            let i = rng.next_below(self.spec.train_n as u32) as usize;
+            xf[k * d..(k + 1) * d].copy_from_slice(&self.train_x[i * d..(i + 1) * d]);
+            y[k] = self.train_y[i];
+        }
+    }
+
     fn eval_n(&self) -> usize {
         self.spec.test_n
     }
@@ -288,6 +326,26 @@ impl DataSource for TokenData {
         out.rows += b;
     }
 
+    fn train_region(&self, b: usize) -> (usize, usize, usize) {
+        (0, b * self.spec.seq_len, b * self.spec.seq_len)
+    }
+
+    fn fill_train_region(
+        &self,
+        rng: &mut Pcg32,
+        b: usize,
+        _xf: &mut [f32],
+        xi: &mut [i32],
+        y: &mut [i32],
+    ) {
+        let t = self.spec.seq_len;
+        debug_assert_eq!(xi.len(), b * t);
+        debug_assert_eq!(y.len(), b * t);
+        for i in 0..b {
+            Self::fill_seq(&self.spec, rng, &mut xi[i * t..(i + 1) * t], &mut y[i * t..(i + 1) * t]);
+        }
+    }
+
     fn eval_n(&self) -> usize {
         self.spec.test_n
     }
@@ -377,6 +435,43 @@ mod tests {
         assert_eq!(buf.rows, 8);
         assert_eq!(buf.xf.len(), 8 * 8);
         assert_eq!(buf.y.len(), 8);
+    }
+
+    #[test]
+    fn region_fill_matches_append_fill() {
+        // The pool-parallel batch fill depends on region fills being
+        // byte-identical (values AND RNG consumption) to the append path.
+        let sources: [&dyn DataSource; 2] = [
+            &small_mixture(),
+            &TokenData::generate(TokenSpec::tiny_corpus(64, 16)),
+        ];
+        for d in sources {
+            let b = 6;
+            let mut appended = BatchBuf::default();
+            let mut rng_a = Pcg32::seeded(41);
+            d.fill_train(&mut rng_a, b, &mut appended);
+            d.fill_train(&mut rng_a, b, &mut appended);
+
+            let (nxf, nxi, ny) = d.train_region(b);
+            let mut xf = vec![0.0f32; 2 * nxf];
+            let mut xi = vec![0i32; 2 * nxi];
+            let mut y = vec![0i32; 2 * ny];
+            let mut rng_b = Pcg32::seeded(41);
+            for k in 0..2 {
+                d.fill_train_region(
+                    &mut rng_b,
+                    b,
+                    &mut xf[k * nxf..(k + 1) * nxf],
+                    &mut xi[k * nxi..(k + 1) * nxi],
+                    &mut y[k * ny..(k + 1) * ny],
+                );
+            }
+            assert_eq!(appended.xf, xf);
+            assert_eq!(appended.xi, xi);
+            assert_eq!(appended.y, y);
+            // Streams stay aligned: both paths consumed the same draws.
+            assert_eq!(rng_a.next_f32().to_bits(), rng_b.next_f32().to_bits());
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@ USAGE:
                   [--levels S1,S2,..,P] [--ks K1,K2,..,KL]
                   [--links intra,inter,rack]
                   [--collective simulated|sharded[:N]|pooled[:N]]
-                  [--pool-threads N] [--pool-pin]
+                  [--pool-threads N] [--pool-pin] [--quiet]
                   [--schedule static|adaptive[:target[:gain]]|warmup[:k]]
                   [--exec lockstep|event] [--het F] [--straggler P[:M]]
                   [--faults PROB[:mttr] | trace:STEP@LEARNERxDOWN,..]
@@ -147,7 +147,7 @@ fn main() {
 
 fn real_main() -> Result<()> {
     let args = Args::from_env(&[
-        "record-steps", "help", "no-rack", "no-local", "timeline-only", "pool-pin",
+        "record-steps", "help", "no-rack", "no-local", "timeline-only", "pool-pin", "quiet",
     ])?;
     if args.has("help") || args.positional.is_empty() {
         print!("{USAGE}");
@@ -357,24 +357,27 @@ fn cmd_train(args: &Args) -> Result<()> {
     // would train a different configuration than asked.
     args.check_known(&[
         "config", "model", "backend", "p", "s", "k1", "k2", "levels", "ks", "links",
-        "collective", "pool-threads", "pool-pin", "schedule", "exec", "het", "straggler", "faults",
-        "compress", "epochs", "train-n", "test-n", "lr", "seed", "noise", "radius", "momentum",
-        "strategy", "record-steps", "init-params", "save-params", "trace", "out", "help",
+        "collective", "pool-threads", "pool-pin", "quiet", "schedule", "exec", "het", "straggler",
+        "faults", "compress", "epochs", "train-n", "test-n", "lr", "seed", "noise", "radius",
+        "momentum", "strategy", "record-steps", "init-params", "save-params", "trace", "out",
+        "help",
     ])?;
     let cfg = RunConfig::from_args(args)?;
     let topo = cfg.hierarchy()?;
-    eprintln!(
-        "[train] {} backend={:?} P={} levels={:?} K={:?} schedule={} collective={} exec={} epochs={}",
-        cfg.model,
-        cfg.backend,
-        cfg.p,
-        topo.sizes(),
-        cfg.base_intervals(),
-        cfg.schedule_policy.spec(),
-        cfg.collective.name(),
-        cfg.exec.name(),
-        cfg.epochs
-    );
+    if !cfg.quiet {
+        eprintln!(
+            "[train] {} backend={:?} P={} levels={:?} K={:?} schedule={} collective={} exec={} epochs={}",
+            cfg.model,
+            cfg.backend,
+            cfg.p,
+            topo.sizes(),
+            cfg.base_intervals(),
+            cfg.schedule_policy.spec(),
+            cfg.collective.name(),
+            cfg.exec.name(),
+            cfg.epochs
+        );
+    }
     let rec = driver::run(&cfg)?;
     for e in &rec.epochs {
         println!(

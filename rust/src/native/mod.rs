@@ -18,7 +18,7 @@ use anyhow::{bail, Result};
 
 use crate::backend::{StepBackend, StepOut};
 use crate::data::BatchBuf;
-use crate::params::{FlatParams, ParamEntry, ParamLayout};
+use crate::params::{FlatParams, ParamEntry, ParamLayout, Rows, RowsMut};
 use crate::util::rng::Pcg32;
 
 use linalg::{add_bias, matmul, matmul_at_b, matmul_a_bt};
@@ -267,12 +267,12 @@ impl StepBackend for NativeMlp {
 
     fn grads(
         &mut self,
-        replicas: &[FlatParams],
+        replicas: Rows<'_>,
         batch: &BatchBuf,
-        grads_out: &mut [FlatParams],
+        mut grads_out: RowsMut<'_>,
         outs: &mut [StepOut],
     ) -> Result<()> {
-        let p = replicas.len();
+        let p = replicas.rows();
         let b = self.batch;
         let d = self.dims[0];
         if batch.rows != p * b {
@@ -281,7 +281,7 @@ impl StepBackend for NativeMlp {
         for j in 0..p {
             let x = &batch.xf[j * b * d..(j + 1) * b * d];
             let y = &batch.y[j * b..(j + 1) * b];
-            outs[j] = self.grads_single(&replicas[j], x, y, b, &mut grads_out[j]);
+            outs[j] = self.grads_single(replicas.row(j), x, y, b, grads_out.row_mut(j));
         }
         Ok(())
     }

@@ -17,7 +17,7 @@ use anyhow::{bail, Result};
 use crate::backend::{StepBackend, StepOut};
 use crate::data::BatchBuf;
 use crate::exec::{self, WorkerPool};
-use crate::params::FlatParams;
+use crate::params::{FlatParams, Rows, RowsMut};
 
 use super::NativeMlp;
 
@@ -30,12 +30,13 @@ pub struct ParallelNativeMlp {
 }
 
 /// One lane's share of a `grads` dispatch: its scratch backend plus the
-/// disjoint output chunks it owns.  Wrapped in a `Mutex` per task so the
-/// shared `Fn(usize)` pool closure can take the mutable borrows; each
-/// mutex is locked exactly once, uncontended.
+/// disjoint output chunks it owns (gradient rows as a split-off arena
+/// view).  Wrapped in a `Mutex` per task so the shared `Fn(usize)` pool
+/// closure can take the mutable borrows; each mutex is locked exactly
+/// once, uncontended.
 struct GradTask<'a> {
     lane: &'a mut NativeMlp,
-    gchunk: &'a mut [FlatParams],
+    gchunk: RowsMut<'a>,
     ochunk: &'a mut [StepOut],
     start: usize,
 }
@@ -102,12 +103,12 @@ impl StepBackend for ParallelNativeMlp {
 
     fn grads(
         &mut self,
-        replicas: &[FlatParams],
+        replicas: Rows<'_>,
         batch: &BatchBuf,
-        grads_out: &mut [FlatParams],
+        grads_out: RowsMut<'_>,
         outs: &mut [StepOut],
     ) -> Result<()> {
-        let p = replicas.len();
+        let p = replicas.rows();
         let b = self.batch;
         let d = self.dims[0];
         if batch.rows != p * b {
@@ -115,19 +116,20 @@ impl StepBackend for ParallelNativeMlp {
         }
         let n_lanes = self.lanes.len().min(p).max(1);
         let per_lane = p.div_ceil(n_lanes);
-        // Split the output slices into per-lane chunks (same ceil-div
-        // boundaries as the old scoped-thread fan-out) and dispatch.
+        // Split the outputs into per-lane chunks (same ceil-div boundaries
+        // as the old scoped-thread fan-out; gradient rows split straight
+        // out of the arena view) and dispatch.
         let mut tasks: Vec<Mutex<GradTask>> = Vec::with_capacity(n_lanes);
         {
-            let mut gs = &mut grads_out[..p];
+            let mut gs = grads_out;
             let mut os = &mut outs[..p];
             let mut lanes = self.lanes.iter_mut();
             let mut start = 0usize;
             while start < p {
                 let take = per_lane.min(p - start);
-                let (gchunk, grest) = std::mem::take(&mut gs).split_at_mut(take);
-                let (ochunk, orest) = std::mem::take(&mut os).split_at_mut(take);
+                let (gchunk, grest) = gs.split_rows_at(take);
                 gs = grest;
+                let (ochunk, orest) = std::mem::take(&mut os).split_at_mut(take);
                 os = orest;
                 let lane = lanes.next().expect("at least one lane per chunk");
                 tasks.push(Mutex::new(GradTask { lane, gchunk, ochunk, start }));
@@ -139,11 +141,11 @@ impl StepBackend for ParallelNativeMlp {
         self.pool.run(tasks.len(), &|ti| {
             let mut guard = tasks[ti].lock().expect("grad task lock");
             let t = &mut *guard;
-            for (i, (g, o)) in t.gchunk.iter_mut().zip(t.ochunk.iter_mut()).enumerate() {
+            for i in 0..t.gchunk.rows() {
                 let j = t.start + i;
                 let x = &xf[j * b * d..(j + 1) * b * d];
                 let ys = &y[j * b..(j + 1) * b];
-                *o = t.lane.grads_single(&replicas[j], x, ys, b, g);
+                t.ochunk[i] = t.lane.grads_single(replicas.row(j), x, ys, b, t.gchunk.row_mut(i));
             }
         });
         Ok(())
@@ -198,6 +200,7 @@ impl StepBackend for ParallelNativeMlp {
 mod tests {
     use super::*;
     use crate::data::{ClassifyData, DataSource, MixtureSpec};
+    use crate::params::ParamArena;
     use crate::util::rng::Pcg32;
 
     #[test]
@@ -234,16 +237,17 @@ mod tests {
         }
 
         let n = serial.n_params();
-        let mut gs = vec![vec![0.0f32; n]; p];
+        let reps = ParamArena::from_rows(&replicas);
+        let mut gs = ParamArena::zeroed(p, n);
         let mut os = vec![StepOut::default(); p];
-        serial.grads(&replicas, &batch, &mut gs, &mut os).unwrap();
+        serial.grads(reps.view(), &batch, gs.view_mut(), &mut os).unwrap();
 
-        let mut gp = vec![vec![0.0f32; n]; p];
+        let mut gp = ParamArena::zeroed(p, n);
         let mut op = vec![StepOut::default(); p];
-        par.grads(&replicas, &batch, &mut gp, &mut op).unwrap();
+        par.grads(reps.view(), &batch, gp.view_mut(), &mut op).unwrap();
 
         for j in 0..p {
-            assert_eq!(gs[j], gp[j], "learner {j} grads");
+            assert_eq!(gs.row(j), gp.row(j), "learner {j} grads");
             assert_eq!(os[j].loss, op[j].loss);
             assert_eq!(os[j].ncorrect, op[j].ncorrect);
         }
@@ -280,17 +284,18 @@ mod tests {
             data.fill_train(&mut brng, b, &mut batch);
         }
         let n = serial.n_params();
-        let mut gs = vec![vec![0.0f32; n]; p];
+        let reps = ParamArena::from_rows(&replicas);
+        let mut gs = ParamArena::zeroed(p, n);
         let mut os = vec![StepOut::default(); p];
-        serial.grads(&replicas, &batch, &mut gs, &mut os).unwrap();
-        let mut gp = vec![vec![0.0f32; n]; p];
+        serial.grads(reps.view(), &batch, gs.view_mut(), &mut os).unwrap();
+        let mut gp = ParamArena::zeroed(p, n);
         let mut op = vec![StepOut::default(); p];
-        par.grads(&replicas, &batch, &mut gp, &mut op).unwrap();
+        par.grads(reps.view(), &batch, gp.view_mut(), &mut op).unwrap();
         assert_eq!(gs, gp);
         // Dispatching twice is deterministic.
-        let mut gp2 = vec![vec![0.0f32; n]; p];
+        let mut gp2 = ParamArena::zeroed(p, n);
         let mut op2 = vec![StepOut::default(); p];
-        par.grads(&replicas, &batch, &mut gp2, &mut op2).unwrap();
+        par.grads(reps.view(), &batch, gp2.view_mut(), &mut op2).unwrap();
         assert_eq!(gp, gp2);
         let _ = (os, op, op2);
     }

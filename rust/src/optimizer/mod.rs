@@ -8,6 +8,9 @@
 
 use anyhow::{bail, Result};
 
+use crate::params::ParamArena;
+use crate::util::simd;
+
 /// Plain SGD with optional Polyak momentum and decoupled weight decay.
 /// Momentum buffers are per-learner (they are NOT averaged by reductions —
 /// only parameters are exchanged, as in the paper and standard local-SGD
@@ -55,6 +58,60 @@ impl Sgd {
                 }
             }
         }
+    }
+}
+
+/// The fleet's optimizer state as one flat arena: all learners share the
+/// hyperparameters (the trainer constructs identical `Sgd`s per learner
+/// anyway), and the per-learner momentum buffers live in a single
+/// `ParamArena` row-aligned with the replica/grad arenas — so first-touch
+/// page placement and row-granular pool chunking cover optimizer state
+/// too, and the velocity allocation happens once instead of P times.
+///
+/// `apply_row(j, ..)` performs exactly `Sgd::apply`'s operation sequence
+/// on row `j` via the `util::simd` fused kernels (bit-identical to the
+/// scalar loops by the summation-order contract), so a fleet stepped
+/// through `SgdPool` matches a fleet of per-learner `Sgd`s bit for bit.
+#[derive(Debug, Clone)]
+pub struct SgdPool {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: Option<ParamArena>,
+}
+
+impl SgdPool {
+    pub fn new(momentum: f32, weight_decay: f32, rows: usize, n_params: usize) -> SgdPool {
+        let velocity =
+            if momentum != 0.0 { Some(ParamArena::zeroed(rows, n_params)) } else { None };
+        SgdPool { momentum, weight_decay, velocity }
+    }
+
+    /// One update on learner `j`'s row, matching `Sgd::apply` bitwise.
+    pub fn apply_row(&mut self, j: usize, params: &mut [f32], grads: &[f32], lr: f32) {
+        let wd = self.weight_decay;
+        match &mut self.velocity {
+            None => {
+                if wd == 0.0 {
+                    simd::sgd_step_plain(params, grads, lr);
+                } else {
+                    simd::sgd_step_wd(params, grads, lr, wd);
+                }
+            }
+            Some(v) => {
+                simd::sgd_step_momentum(params, grads, v.row_mut(j), lr, self.momentum, wd);
+            }
+        }
+    }
+
+    /// The momentum arena, if this configuration carries one (engine
+    /// first-touch and the pool-parallel apply path reach rows through
+    /// this).
+    pub fn velocity_mut(&mut self) -> Option<&mut ParamArena> {
+        self.velocity.as_mut()
+    }
+
+    pub fn velocity(&self) -> Option<&ParamArena> {
+        self.velocity.as_ref()
     }
 }
 
@@ -183,6 +240,34 @@ mod tests {
         let mut w = vec![10.0];
         opt.apply(&mut w, &[0.0], 0.5);
         assert!((w[0] - 9.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pool_matches_per_learner_sgd_bitwise() {
+        use crate::util::rng::Pcg32;
+        let (rows, n) = (5usize, 37usize);
+        for &(mu, wd) in &[(0.0f32, 0.0f32), (0.0, 1e-4), (0.9, 0.0), (0.9, 1e-4)] {
+            let mut rng = Pcg32::seeded(7);
+            let init: Vec<Vec<f32>> =
+                (0..rows).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+            let grads: Vec<Vec<f32>> = (0..rows)
+                .map(|_| (0..n).map(|_| rng.next_normal() * 0.01).collect())
+                .collect();
+            let mut singles: Vec<Sgd> = (0..rows).map(|_| Sgd::new(mu, wd, n)).collect();
+            let mut legacy = init.clone();
+            let mut arena = ParamArena::from_rows(&init);
+            let mut pool = SgdPool::new(mu, wd, rows, n);
+            for _ in 0..3 {
+                for j in 0..rows {
+                    singles[j].apply(&mut legacy[j], &grads[j], 0.05);
+                    pool.apply_row(j, arena.row_mut(j), &grads[j], 0.05);
+                }
+            }
+            assert_eq!(arena.to_vecs(), legacy, "mu={mu} wd={wd}");
+            if mu != 0.0 {
+                assert!(pool.velocity().is_some());
+            }
+        }
     }
 
     #[test]

@@ -73,6 +73,187 @@ impl ParamLayout {
 /// One learner's parameters as a dense vector.
 pub type FlatParams = Vec<f32>;
 
+/// A flat per-learner arena: `rows` dense vectors of `stride` f32s in ONE
+/// contiguous allocation (`row j` lives at `data[j*stride .. (j+1)*stride]`).
+///
+/// This is the data-oriented replacement for `Vec<FlatParams>` learner
+/// state: a contiguous range of rows is a contiguous `&mut [f32]`, so the
+/// executor pool can chunk replicas/grads/optimizer state at row
+/// granularity (`WorkerPool::run_chunks_mut` with `chunk_len = stride`),
+/// and first-touch page placement covers *all* learner state, not just
+/// collective shards.  Row views expose exactly the same `&[f32]` /
+/// `&mut [f32]` slices the `Vec<Vec<f32>>` path handed out, so every
+/// consumer performs the same IEEE ops in the same order — the arena is a
+/// layout change, never a numerics change.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamArena {
+    data: Vec<f32>,
+    stride: usize,
+    rows: usize,
+}
+
+impl ParamArena {
+    /// `rows` zeroed rows of `stride` elements.
+    pub fn zeroed(rows: usize, stride: usize) -> ParamArena {
+        ParamArena { data: vec![0.0; rows * stride], stride, rows }
+    }
+
+    /// `rows` copies of `init` (the replicated-initialization pattern).
+    pub fn replicated(init: &[f32], rows: usize) -> ParamArena {
+        let stride = init.len();
+        let mut data = Vec::with_capacity(rows * stride);
+        for _ in 0..rows {
+            data.extend_from_slice(init);
+        }
+        ParamArena { data, stride, rows }
+    }
+
+    /// Pack per-learner vectors into an arena (all rows must share a
+    /// length).  Test/bench helper for converting legacy `Vec<Vec<f32>>`.
+    pub fn from_rows(rows: &[Vec<f32>]) -> ParamArena {
+        let stride = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(rows.len() * stride);
+        for r in rows {
+            assert_eq!(r.len(), stride, "arena rows must share a length");
+            data.extend_from_slice(r);
+        }
+        ParamArena { data, stride, rows: rows.len() }
+    }
+
+    /// Unpack back into per-learner vectors (test/bench helper).
+    pub fn to_vecs(&self) -> Vec<Vec<f32>> {
+        (0..self.rows).map(|j| self.row(j).to_vec()).collect()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn row(&self, j: usize) -> &[f32] {
+        &self.data[j * self.stride..(j + 1) * self.stride]
+    }
+
+    pub fn row_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.data[j * self.stride..(j + 1) * self.stride]
+    }
+
+    /// The whole arena as one flat slice (row-granular pool chunking and
+    /// first-touch placement dispatch over this).
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Shared view over all rows.
+    pub fn view(&self) -> Rows<'_> {
+        Rows { data: &self.data, stride: self.stride, rows: self.rows }
+    }
+
+    /// Mutable view over all rows.
+    pub fn view_mut(&mut self) -> RowsMut<'_> {
+        RowsMut { data: &mut self.data, stride: self.stride, rows: self.rows }
+    }
+}
+
+/// A shared (read-only) view of arena rows: `Copy`, so parallel readers —
+/// pool tasks, scoped threads — can each capture the whole view and slice
+/// out the rows they need.
+#[derive(Clone, Copy, Debug)]
+pub struct Rows<'a> {
+    data: &'a [f32],
+    stride: usize,
+    rows: usize,
+}
+
+impl<'a> Rows<'a> {
+    /// View a single standalone vector as a one-row arena (adapter for
+    /// callers holding a plain `&[f32]`, e.g. ASGD snapshots).
+    pub fn single(row: &'a [f32]) -> Rows<'a> {
+        Rows { data: row, stride: row.len(), rows: 1 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn row(&self, j: usize) -> &'a [f32] {
+        &self.data[j * self.stride..(j + 1) * self.stride]
+    }
+}
+
+/// A mutable view of arena rows.  Reborrowable (`reborrow`) so one view
+/// can be threaded through per-group reduction calls, and splittable at a
+/// row boundary (`split_rows_at`) so per-lane backends can own disjoint
+/// row ranges by value.
+#[derive(Debug)]
+pub struct RowsMut<'a> {
+    data: &'a mut [f32],
+    stride: usize,
+    rows: usize,
+}
+
+impl<'a> RowsMut<'a> {
+    /// View a single standalone vector as a one-row mutable arena.
+    pub fn single(row: &'a mut [f32]) -> RowsMut<'a> {
+        let stride = row.len();
+        RowsMut { data: row, stride, rows: 1 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn row(&self, j: usize) -> &[f32] {
+        &self.data[j * self.stride..(j + 1) * self.stride]
+    }
+
+    pub fn row_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.data[j * self.stride..(j + 1) * self.stride]
+    }
+
+    /// A shorter-lived mutable view of the same rows (lets `&mut self`
+    /// callers hand the view to a callee without giving it up).
+    pub fn reborrow(&mut self) -> RowsMut<'_> {
+        RowsMut { data: self.data, stride: self.stride, rows: self.rows }
+    }
+
+    /// Shared view of the same rows.
+    pub fn as_shared(&self) -> Rows<'_> {
+        Rows { data: self.data, stride: self.stride, rows: self.rows }
+    }
+
+    /// The contiguous flat slice covering rows `r` (group broadcasts and
+    /// row-granular pool chunking go through this).
+    pub fn range_mut(&mut self, r: std::ops::Range<usize>) -> &mut [f32] {
+        &mut self.data[r.start * self.stride..r.end * self.stride]
+    }
+
+    /// Split into two disjoint views at row `mid` (by value — each half
+    /// keeps the full lifetime, for per-lane ownership).
+    pub fn split_rows_at(self, mid: usize) -> (RowsMut<'a>, RowsMut<'a>) {
+        let (lo, hi) = self.data.split_at_mut(mid * self.stride);
+        (
+            RowsMut { data: lo, stride: self.stride, rows: mid },
+            RowsMut { data: hi, stride: self.stride, rows: self.rows - mid },
+        )
+    }
+}
+
 /// Load an `<name>.init.bin` blob (little-endian f32) and validate its
 /// length against the layout.
 pub fn load_init_blob(path: &std::path::Path, layout: &ParamLayout) -> Result<FlatParams> {
@@ -138,6 +319,45 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ParamLayout::from_json(&j).unwrap(), layout2());
+    }
+
+    #[test]
+    fn arena_roundtrip_and_views() {
+        let rows: Vec<Vec<f32>> =
+            (0..4).map(|j| (0..3).map(|i| (j * 3 + i) as f32).collect()).collect();
+        let mut a = ParamArena::from_rows(&rows);
+        assert_eq!((a.rows(), a.stride()), (4, 3));
+        assert_eq!(a.to_vecs(), rows);
+        assert_eq!(a.row(2), &[6.0, 7.0, 8.0]);
+        // Views hand out the same slices the Vec<Vec<f32>> path did.
+        let v = a.view();
+        for j in 0..4 {
+            assert_eq!(v.row(j), rows[j].as_slice());
+        }
+        let mut m = a.view_mut();
+        m.row_mut(1)[0] = 99.0;
+        // range_mut covers contiguous row ranges.
+        assert_eq!(m.range_mut(1..3).len(), 6);
+        assert_eq!(m.range_mut(1..3)[0], 99.0);
+        // split_rows_at yields disjoint halves with arena geometry.
+        let (lo, hi) = m.split_rows_at(1);
+        assert_eq!((lo.rows(), hi.rows()), (1, 3));
+        assert_eq!(hi.row(0)[0], 99.0); // old row 1
+        assert_eq!(a.row(1)[0], 99.0);
+
+        let z = ParamArena::zeroed(2, 5);
+        assert_eq!(z.as_slice(), &[0.0; 10][..]);
+        let r = ParamArena::replicated(&[1.0, 2.0], 3);
+        assert_eq!(r.as_slice(), &[1.0, 2.0, 1.0, 2.0, 1.0, 2.0][..]);
+
+        // Single-row adapters wrap a standalone vector in arena geometry.
+        let mut one = vec![5.0f32, 6.0];
+        assert_eq!(Rows::single(&one).row(0), &[5.0, 6.0]);
+        let mut w = RowsMut::single(&mut one);
+        assert_eq!((w.rows(), w.stride()), (1, 2));
+        w.row_mut(0)[1] = 7.0;
+        assert_eq!(w.as_shared().row(0), &[5.0, 7.0]);
+        assert_eq!(one, vec![5.0, 7.0]);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::backend::{StepBackend, StepOut};
 use crate::data::BatchBuf;
-use crate::params::FlatParams;
+use crate::params::{FlatParams, Rows, RowsMut};
 use crate::runtime::manifest::{Manifest, ModelEntry, ModelKind};
 
 thread_local! {
@@ -140,7 +140,7 @@ impl XlaBackend {
     /// `chunk_start..chunk_start+pc`.
     fn pack_param(
         &mut self,
-        replicas: &[FlatParams],
+        replicas: Rows<'_>,
         chunk_start: usize,
         pc: usize,
         i: usize,
@@ -148,7 +148,7 @@ impl XlaBackend {
         let e = &self.entry.layout.entries[i];
         self.pack.clear();
         for j in chunk_start..chunk_start + pc {
-            self.pack.extend_from_slice(&replicas[j][e.offset..e.offset + e.size]);
+            self.pack.extend_from_slice(&replicas.row(j)[e.offset..e.offset + e.size]);
         }
         let mut dims: Vec<usize> = Vec::with_capacity(e.shape.len() + 1);
         if pc > 1 || self.train_p > 1 {
@@ -196,11 +196,11 @@ impl XlaBackend {
     /// Execute one stacked chunk and scatter outputs.
     fn run_chunk(
         &mut self,
-        replicas: &[FlatParams],
+        replicas: Rows<'_>,
         batch: &BatchBuf,
         chunk_start: usize,
         pc: usize,
-        grads_out: &mut [FlatParams],
+        grads_out: &mut RowsMut<'_>,
         outs: &mut [StepOut],
     ) -> Result<()> {
         let n_tensors = self.entry.layout.n_tensors();
@@ -227,7 +227,8 @@ impl XlaBackend {
                 bail!("grad {} has {} values, expected {}", e.name, vals.len(), pc * e.size);
             }
             for (c, chunk) in vals.chunks_exact(e.size).enumerate() {
-                grads_out[chunk_start + c][e.offset..e.offset + e.size].copy_from_slice(chunk);
+                grads_out.row_mut(chunk_start + c)[e.offset..e.offset + e.size]
+                    .copy_from_slice(chunk);
             }
         }
         let losses = parts[n_tensors].to_vec::<f32>()?;
@@ -259,12 +260,12 @@ impl StepBackend for XlaBackend {
 
     fn grads(
         &mut self,
-        replicas: &[FlatParams],
+        replicas: Rows<'_>,
         batch: &BatchBuf,
-        grads_out: &mut [FlatParams],
+        mut grads_out: RowsMut<'_>,
         outs: &mut [StepOut],
     ) -> Result<()> {
-        let p = replicas.len();
+        let p = replicas.rows();
         if p % self.train_p != 0 {
             bail!("P={p} not a multiple of the loaded stacked variant ({})", self.train_p);
         }
@@ -272,7 +273,14 @@ impl StepBackend for XlaBackend {
             bail!("batch rows {} != P*B = {}", batch.rows, p * self.entry.batch);
         }
         for chunk in 0..p / self.train_p {
-            self.run_chunk(replicas, batch, chunk * self.train_p, self.train_p, grads_out, outs)?;
+            self.run_chunk(
+                replicas,
+                batch,
+                chunk * self.train_p,
+                self.train_p,
+                &mut grads_out,
+                outs,
+            )?;
         }
         Ok(())
     }

@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 
 use crate::backend::{StepBackend, StepOut};
 use crate::data::BatchBuf;
-use crate::params::FlatParams;
+use crate::params::{FlatParams, Rows, RowsMut};
 use crate::runtime::manifest::Manifest;
 
 const UNAVAILABLE: &str = "built without the `xla` feature: the PJRT runtime is unavailable \
@@ -63,9 +63,9 @@ impl StepBackend for XlaBackend {
 
     fn grads(
         &mut self,
-        _replicas: &[FlatParams],
+        _replicas: Rows<'_>,
         _batch: &BatchBuf,
-        _grads_out: &mut [FlatParams],
+        _grads_out: RowsMut<'_>,
         _outs: &mut [StepOut],
     ) -> Result<()> {
         bail!(UNAVAILABLE)

@@ -209,6 +209,74 @@ pub fn quantize_split_scalar(
     }
 }
 
+/// Plain SGD step: `w[i] -= lr * g[i]` — exactly `Sgd::apply`'s
+/// no-momentum, no-weight-decay loop (one multiply rounding, one subtract
+/// rounding per element).
+pub fn sgd_step_plain(w: &mut [f32], g: &[f32], lr: f32) {
+    debug_assert_eq!(w.len(), g.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        unsafe { avx2::sgd_step_plain(w, g, lr) };
+        return;
+    }
+    sgd_step_plain_scalar(w, g, lr);
+}
+
+pub fn sgd_step_plain_scalar(w: &mut [f32], g: &[f32], lr: f32) {
+    for (w, &g) in w.iter_mut().zip(g) {
+        *w -= lr * g;
+    }
+}
+
+/// Weight-decay SGD step: `w[i] -= lr * (g[i] + wd * w[i])` — exactly
+/// `Sgd::apply`'s no-momentum weight-decay loop (wd-multiply, add,
+/// lr-multiply, subtract: four roundings in that order).
+pub fn sgd_step_wd(w: &mut [f32], g: &[f32], lr: f32, wd: f32) {
+    debug_assert_eq!(w.len(), g.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        unsafe { avx2::sgd_step_wd(w, g, lr, wd) };
+        return;
+    }
+    sgd_step_wd_scalar(w, g, lr, wd);
+}
+
+pub fn sgd_step_wd_scalar(w: &mut [f32], g: &[f32], lr: f32, wd: f32) {
+    for (w, &g) in w.iter_mut().zip(g) {
+        *w -= lr * (g + wd * *w);
+    }
+}
+
+/// Momentum SGD step: `eff = g + wd*w; v = mu*v + eff; w -= lr*v` —
+/// exactly `Sgd::apply`'s momentum loop, including the unconditional
+/// `wd * w` multiply (even at wd = 0, so the rounding sequence matches the
+/// scalar reference at every parameter setting).
+pub fn sgd_step_momentum(w: &mut [f32], g: &[f32], v: &mut [f32], lr: f32, mu: f32, wd: f32) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), v.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        unsafe { avx2::sgd_step_momentum(w, g, v, lr, mu, wd) };
+        return;
+    }
+    sgd_step_momentum_scalar(w, g, v, lr, mu, wd);
+}
+
+pub fn sgd_step_momentum_scalar(
+    w: &mut [f32],
+    g: &[f32],
+    v: &mut [f32],
+    lr: f32,
+    mu: f32,
+    wd: f32,
+) {
+    for ((w, &g), vel) in w.iter_mut().zip(g).zip(v.iter_mut()) {
+        let eff = g + wd * *w;
+        *vel = mu * *vel + eff;
+        *w -= lr * *vel;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // AVX2 implementations
 // ---------------------------------------------------------------------------
@@ -300,6 +368,77 @@ mod avx2 {
         }
         while i < n {
             *dp.add(i) = *dp.add(i) * c + *sp.add(i) * c;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sgd_step_plain(w: &mut [f32], g: &[f32], lr: f32) {
+        let n = w.len();
+        let (wp, gp) = (w.as_mut_ptr(), g.as_ptr());
+        let vlr = _mm256_set1_ps(lr);
+        let mut i = 0;
+        while i + 8 <= n {
+            let wv = _mm256_loadu_ps(wp.add(i));
+            // lr*g rounds, then the subtract rounds — never vfmadd.
+            let step = _mm256_mul_ps(vlr, _mm256_loadu_ps(gp.add(i)));
+            _mm256_storeu_ps(wp.add(i), _mm256_sub_ps(wv, step));
+            i += 8;
+        }
+        while i < n {
+            *wp.add(i) -= lr * *gp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sgd_step_wd(w: &mut [f32], g: &[f32], lr: f32, wd: f32) {
+        let n = w.len();
+        let (wp, gp) = (w.as_mut_ptr(), g.as_ptr());
+        let vlr = _mm256_set1_ps(lr);
+        let vwd = _mm256_set1_ps(wd);
+        let mut i = 0;
+        while i + 8 <= n {
+            let wv = _mm256_loadu_ps(wp.add(i));
+            // g + wd*w, then lr*(..), then the subtract: four roundings in
+            // scalar order, no contraction.
+            let eff = _mm256_add_ps(_mm256_loadu_ps(gp.add(i)), _mm256_mul_ps(vwd, wv));
+            _mm256_storeu_ps(wp.add(i), _mm256_sub_ps(wv, _mm256_mul_ps(vlr, eff)));
+            i += 8;
+        }
+        while i < n {
+            *wp.add(i) -= lr * (*gp.add(i) + wd * *wp.add(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sgd_step_momentum(
+        w: &mut [f32],
+        g: &[f32],
+        v: &mut [f32],
+        lr: f32,
+        mu: f32,
+        wd: f32,
+    ) {
+        let n = w.len();
+        let (wp, gp, vp) = (w.as_mut_ptr(), g.as_ptr(), v.as_mut_ptr());
+        let vlr = _mm256_set1_ps(lr);
+        let vmu = _mm256_set1_ps(mu);
+        let vwd = _mm256_set1_ps(wd);
+        let mut i = 0;
+        while i + 8 <= n {
+            let wv = _mm256_loadu_ps(wp.add(i));
+            let eff = _mm256_add_ps(_mm256_loadu_ps(gp.add(i)), _mm256_mul_ps(vwd, wv));
+            let vel = _mm256_add_ps(_mm256_mul_ps(vmu, _mm256_loadu_ps(vp.add(i))), eff);
+            _mm256_storeu_ps(vp.add(i), vel);
+            _mm256_storeu_ps(wp.add(i), _mm256_sub_ps(wv, _mm256_mul_ps(vlr, vel)));
+            i += 8;
+        }
+        while i < n {
+            let eff = *gp.add(i) + wd * *wp.add(i);
+            *vp.add(i) = mu * *vp.add(i) + eff;
+            *wp.add(i) -= lr * *vp.add(i);
             i += 1;
         }
     }
@@ -445,6 +584,27 @@ mod tests {
             quantize_split_scalar(&x, &mut t2, &mut e2, 31.0, 1.0 / 31.0, 7.0);
             assert_eq!(t1, t2, "quantize t n={n}");
             assert_eq!(e1, e2, "quantize e n={n}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            sgd_step_plain(&mut a, &x, 0.1);
+            sgd_step_plain_scalar(&mut b, &x, 0.1);
+            assert_eq!(a, b, "sgd_step_plain n={n}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            sgd_step_wd(&mut a, &x, 0.1, 1e-4);
+            sgd_step_wd_scalar(&mut b, &x, 0.1, 1e-4);
+            assert_eq!(a, b, "sgd_step_wd n={n}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            let mut va = y.clone();
+            let mut vb = y.clone();
+            sgd_step_momentum(&mut a, &x, &mut va, 0.1, 0.9, 1e-4);
+            sgd_step_momentum_scalar(&mut b, &x, &mut vb, 0.1, 0.9, 1e-4);
+            assert_eq!(a, b, "sgd_step_momentum w n={n}");
+            assert_eq!(va, vb, "sgd_step_momentum v n={n}");
         }
     }
 

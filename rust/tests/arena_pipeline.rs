@@ -1,0 +1,206 @@
+//! Arena step-pipeline invariants: the pool-parallel step path (flat
+//! learner arena + pooled fill/apply/loss-reduction) must be bit-identical
+//! to the serial reference path (`pool_threads = 0`) across topologies,
+//! collectives, exec models, compression, and the fault layer — the
+//! executable form of the "no golden re-bless" contract (DESIGN.md
+//! §Memory layout).
+
+use hier_avg::backend::StepBackend;
+use hier_avg::comm::{CollectiveKind, Compression};
+use hier_avg::config::{BackendKind, RunConfig};
+use hier_avg::coordinator::{engine::tree_sum, sim_step_seconds, Engine, Trainer};
+use hier_avg::data::{ClassifyData, MixtureSpec};
+use hier_avg::exec::shared_pool;
+use hier_avg::metrics::RunRecord;
+use hier_avg::native::NativeMlp;
+use hier_avg::optimizer::LrSchedule;
+use hier_avg::sim::{parse_faults, ExecKind};
+use hier_avg::util::rng::Pcg32;
+
+const DIMS: &[usize] = &[8, 12, 4];
+const BATCH: usize = 4;
+
+fn base_cfg(p: usize, s: usize) -> RunConfig {
+    let mut cfg = RunConfig::defaults("arena-test");
+    cfg.backend = BackendKind::Native;
+    cfg.p = p;
+    cfg.s = s;
+    cfg.k1 = 2;
+    cfg.k2 = 4;
+    cfg.epochs = 2;
+    cfg.train_n = 256;
+    cfg.test_n = 64;
+    cfg.lr = LrSchedule::Constant(0.1);
+    cfg.momentum = 0.9;
+    cfg.weight_decay = 1e-4;
+    cfg.noise = 0.8;
+    cfg.keep_final_params = true;
+    cfg.quiet = true;
+    cfg
+}
+
+fn run(cfg: &RunConfig) -> RunRecord {
+    let backend = NativeMlp::new(DIMS, BATCH, 32).unwrap();
+    let data = ClassifyData::generate(MixtureSpec {
+        dim: DIMS[0],
+        classes: *DIMS.last().unwrap(),
+        train_n: cfg.train_n,
+        test_n: cfg.test_n,
+        radius: cfg.radius,
+        noise: cfg.noise,
+        subclusters: 1,
+        label_noise: 0.0,
+        seed: cfg.seed ^ 0x5eed,
+    });
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let init = backend.init(&mut rng);
+    Trainer::new(cfg, Box::new(backend), Box::new(data), init).unwrap().run().unwrap()
+}
+
+/// Pooled run == serial-reference run, bit for bit (losses, accuracies,
+/// and final mean parameters), across the full config matrix the goldens
+/// span: topology shapes × all three collectives × both exec models.
+#[test]
+fn pooled_step_pipeline_bit_identical_across_matrix() {
+    let mut seed_rng = Pcg32::seeded(0xA11E7);
+    for &(p, s) in &[(4usize, 2usize), (8, 4), (16, 4)] {
+        for collective in [
+            CollectiveKind::Simulated,
+            CollectiveKind::Sharded { threads: 2 },
+            CollectiveKind::Pooled { threads: 0 },
+        ] {
+            for exec in [ExecKind::Lockstep, ExecKind::Event] {
+                let mut cfg = base_cfg(p, s);
+                cfg.seed = 1 + (seed_rng.next_u32() as u64 % 1000);
+                cfg.collective = collective;
+                cfg.exec = exec;
+                cfg.pool_threads = 0;
+                let serial = run(&cfg);
+                cfg.pool_threads = 4;
+                let pooled = run(&cfg);
+                let label = format!("p{p}/s{s}/{collective:?}/{exec:?}");
+                for (a, b) in serial.epochs.iter().zip(&pooled.epochs) {
+                    assert_eq!(a.train_loss, b.train_loss, "{label}: train_loss");
+                    assert_eq!(a.test_acc, b.test_acc, "{label}: test_acc");
+                }
+                assert_eq!(
+                    serial.final_params, pooled.final_params,
+                    "{label}: final params must match bitwise"
+                );
+            }
+        }
+    }
+}
+
+/// Compression (error feedback carries state across barriers) composes
+/// with the pooled pipeline without perturbing a single bit.
+#[test]
+fn pooled_pipeline_bit_identical_under_compression() {
+    let mut cfg = base_cfg(8, 4);
+    cfg.compress = Compression::parse("q8").unwrap();
+    cfg.pool_threads = 0;
+    let serial = run(&cfg);
+    cfg.pool_threads = 4;
+    let pooled = run(&cfg);
+    for (a, b) in serial.epochs.iter().zip(&pooled.epochs) {
+        assert_eq!(a.train_loss, b.train_loss, "compressed: train_loss");
+    }
+    assert_eq!(serial.final_params, pooled.final_params, "compressed: final params");
+}
+
+/// Build an engine + backend pair for direct step-level driving.
+fn mk_engine<'a>(
+    cfg: &'a RunConfig,
+) -> (Engine<'a>, NativeMlp, ClassifyData) {
+    let backend = NativeMlp::new(DIMS, BATCH, 32).unwrap();
+    let data = ClassifyData::generate(MixtureSpec {
+        dim: DIMS[0],
+        classes: *DIMS.last().unwrap(),
+        train_n: 256,
+        test_n: 64,
+        radius: 1.0,
+        noise: 0.8,
+        subclusters: 1,
+        label_noise: 0.0,
+        seed: 0x5eed,
+    });
+    let init = backend.init(&mut Pcg32::seeded(cfg.seed));
+    let n_params = backend.n_params();
+    let step_secs = sim_step_seconds(BATCH, n_params);
+    let policy = cfg.schedule_policy.build(cfg.k2_clamp(BATCH), step_secs, cfg.p);
+    let engine = Engine::new(cfg, n_params, &init, step_secs, policy).unwrap();
+    (engine, backend, data)
+}
+
+/// While a learner is preempted, its arena row is frozen: pooled steps
+/// must not move a single byte of it (the apply loop skips dead rows, and
+/// no reduction fires inside the outage window under K1 = 8).
+#[test]
+fn preempted_rows_byte_stable_across_pooled_steps() {
+    let mut cfg = base_cfg(8, 4);
+    cfg.k1 = 8;
+    cfg.k2 = 64;
+    cfg.pool_threads = 4;
+    // Learner 1 goes down at step 3 for 4 steps (down through steps 3..7).
+    cfg.faults = Some(parse_faults("trace:3@1x4").unwrap());
+    let (mut engine, mut backend, data) = mk_engine(&cfg);
+    let sched = cfg.hier_schedule_at(0).unwrap();
+    for _ in 0..4 {
+        engine.step(&mut backend, &data, 0.1, &sched).unwrap();
+    }
+    // After step index 3 (the 4th step) the outage is active.
+    let frozen: Vec<u32> =
+        engine.learners.replicas.row(1).iter().map(|v| v.to_bits()).collect();
+    for _ in 0..3 {
+        engine.step(&mut backend, &data, 0.1, &sched).unwrap();
+        let now: Vec<u32> =
+            engine.learners.replicas.row(1).iter().map(|v| v.to_bits()).collect();
+        assert_eq!(frozen, now, "preempted learner's arena row moved during outage");
+    }
+}
+
+/// A scripted outage + re-entry restore produces the same bits under the
+/// pooled pipeline as under the serial reference.
+#[test]
+fn reentry_restore_bit_identical_pooled_vs_serial() {
+    let run_faulty = |pool_threads: usize| {
+        let mut cfg = base_cfg(8, 4);
+        cfg.pool_threads = pool_threads;
+        cfg.faults = Some(parse_faults("trace:3@1x4").unwrap());
+        let (mut engine, mut backend, data) = mk_engine(&cfg);
+        let sched = cfg.hier_schedule_at(0).unwrap();
+        for _ in 0..16 {
+            engine.step(&mut backend, &data, 0.1, &sched).unwrap();
+        }
+        let mut mean = vec![0.0f32; backend.n_params()];
+        engine.mean_params(&mut mean);
+        (mean, engine.learners.replicas.clone())
+    };
+    let (serial_mean, serial_arena) = run_faulty(0);
+    let (pooled_mean, pooled_arena) = run_faulty(4);
+    assert_eq!(serial_mean, pooled_mean, "post-outage mean params diverged");
+    assert_eq!(serial_arena, pooled_arena, "post-outage learner arenas diverged");
+}
+
+/// `tree_sum` is the one summation shape both step paths share: at or
+/// below the block width it IS the legacy ascending fold, and above it
+/// the pooled call agrees bitwise with the serial call (fixed-shape
+/// blocks, thread-count-independent).
+#[test]
+fn tree_sum_matches_legacy_fold_and_is_pool_invariant() {
+    let mut rng = Pcg32::seeded(9);
+    for &n in &[0usize, 1, 17, 255, 256] {
+        let vals: Vec<f64> =
+            (0..n).map(|_| rng.next_normal() as f64 * 3.7).collect();
+        let legacy: f64 = vals.iter().sum();
+        assert_eq!(legacy.to_bits(), tree_sum(&vals, None).to_bits(), "n={n}");
+    }
+    let pool = shared_pool(4);
+    for &n in &[257usize, 1000, 4096, 5000] {
+        let vals: Vec<f64> =
+            (0..n).map(|_| rng.next_normal() as f64 * 3.7).collect();
+        let serial = tree_sum(&vals, None);
+        let pooled = tree_sum(&vals, Some(&*pool));
+        assert_eq!(serial.to_bits(), pooled.to_bits(), "n={n}");
+    }
+}

@@ -24,6 +24,7 @@ use hier_avg::data::{ClassifyData, MixtureSpec};
 use hier_avg::metrics::RunRecord;
 use hier_avg::native::NativeMlp;
 use hier_avg::optimizer::LrSchedule;
+use hier_avg::params::ParamArena;
 use hier_avg::topology::{HierTopology, LinkClass, Topology};
 use hier_avg::util::cli::Args;
 use hier_avg::util::rng::Pcg32;
@@ -105,13 +106,14 @@ fn prop_sharded_collective_bit_identical() {
         let n = 1 + rng.next_below(10_000) as usize;
         let threads = 1 + rng.next_below(6) as usize;
         let topo = Topology::new(p, s).unwrap();
-        let base: Vec<Vec<f32>> =
+        let rows: Vec<Vec<f32>> =
             (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+        let base = ParamArena::from_rows(&rows);
 
         let mut a = base.clone();
         let mut sim = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
-        sim.local_average(&mut a, &topo);
-        sim.global_average(&mut a, &topo);
+        sim.local_average(a.view_mut(), &topo);
+        sim.global_average(a.view_mut(), &topo);
 
         let mut b = base.clone();
         let mut sh = Reducer::with_collective(
@@ -120,8 +122,8 @@ fn prop_sharded_collective_bit_identical() {
             n,
             Box::new(ShardedCollective::new(threads)),
         );
-        sh.local_average(&mut b, &topo);
-        sh.global_average(&mut b, &topo);
+        sh.local_average(b.view_mut(), &topo);
+        sh.global_average(b.view_mut(), &topo);
 
         assert_eq!(a, b, "case {case}: p={p} s={s} n={n} threads={threads}");
         assert_eq!(sim.stats, sh.stats, "case {case}");
@@ -129,8 +131,8 @@ fn prop_sharded_collective_bit_identical() {
         // mean_of parity as well
         let mut ma = Vec::new();
         let mut mb = Vec::new();
-        sim.mean_of(&base, &mut ma);
-        sh.mean_of(&base, &mut mb);
+        sim.mean_of(base.view(), &mut ma);
+        sh.mean_of(base.view(), &mut mb);
         assert_eq!(ma, mb, "case {case}");
     }
 }
@@ -152,13 +154,14 @@ fn prop_pooled_collective_bit_identical() {
         let n = 1 + rng.next_below(60_000) as usize;
         let threads = 1 + rng.next_below(8) as usize;
         let topo = Topology::new(p, s).unwrap();
-        let base: Vec<Vec<f32>> =
+        let rows: Vec<Vec<f32>> =
             (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+        let base = ParamArena::from_rows(&rows);
 
         let mut a = base.clone();
         let mut sim = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
-        sim.local_average(&mut a, &topo);
-        sim.global_average(&mut a, &topo);
+        sim.local_average(a.view_mut(), &topo);
+        sim.global_average(a.view_mut(), &topo);
 
         let mut b = base.clone();
         let mut po = Reducer::with_collective(
@@ -167,16 +170,16 @@ fn prop_pooled_collective_bit_identical() {
             n,
             Box::new(PooledCollective::new(threads)),
         );
-        po.local_average(&mut b, &topo);
-        po.global_average(&mut b, &topo);
+        po.local_average(b.view_mut(), &topo);
+        po.global_average(b.view_mut(), &topo);
 
         assert_eq!(a, b, "case {case}: p={p} s={s} n={n} threads={threads}");
         assert_eq!(sim.stats, po.stats, "case {case}");
 
         let mut ma = Vec::new();
         let mut mb = Vec::new();
-        sim.mean_of(&base, &mut ma);
-        po.mean_of(&base, &mut mb);
+        sim.mean_of(base.view(), &mut ma);
+        po.mean_of(base.view(), &mut mb);
         assert_eq!(ma, mb, "case {case}");
     }
 }
@@ -190,8 +193,9 @@ fn pooled_collective_deterministic_under_oversubscription() {
     let p = 8;
     let n = 200_003; // odd, well above the serial-fallback threshold
     let mut rng = Pcg32::seeded(0x0E5B);
-    let base: Vec<Vec<f32>> =
+    let rows: Vec<Vec<f32>> =
         (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+    let base = ParamArena::from_rows(&rows);
     let topo = Topology::new(p, 4).unwrap();
 
     let run = |threads: usize| {
@@ -202,8 +206,8 @@ fn pooled_collective_deterministic_under_oversubscription() {
             n,
             Box::new(PooledCollective::new(threads)),
         );
-        red.local_average(&mut r, &topo);
-        red.global_average(&mut r, &topo);
+        red.local_average(r.view_mut(), &topo);
+        red.global_average(r.view_mut(), &topo);
         r
     };
     let first = run(threads);
@@ -212,8 +216,8 @@ fn pooled_collective_deterministic_under_oversubscription() {
     // ... and identical to the simulated engine.
     let mut sim_r = base.clone();
     let mut sim = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
-    sim.local_average(&mut sim_r, &topo);
-    sim.global_average(&mut sim_r, &topo);
+    sim.local_average(sim_r.view_mut(), &topo);
+    sim.global_average(sim_r.view_mut(), &topo);
     assert_eq!(first, sim_r);
 }
 
@@ -733,15 +737,16 @@ fn hier_topology_three_level_reduction_nests() {
     // level-2 reduction then synchronizes everything.
     let topo = HierTopology::new(vec![2, 4, 8]).unwrap();
     let mut rng = Pcg32::seeded(3);
-    let mut replicas: Vec<Vec<f32>> =
+    let rows: Vec<Vec<f32>> =
         (0..8).map(|_| (0..33).map(|_| rng.next_normal()).collect()).collect();
+    let mut replicas = ParamArena::from_rows(&rows);
     let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, 33);
-    red.reduce_level(&mut replicas, &topo, 1);
-    assert_eq!(replicas[0], replicas[3]);
-    assert_eq!(replicas[4], replicas[7]);
-    assert_ne!(replicas[0], replicas[4]);
-    red.reduce_level(&mut replicas, &topo, 2);
+    red.reduce_level(replicas.view_mut(), &topo, 1);
+    assert_eq!(replicas.row(0), replicas.row(3));
+    assert_eq!(replicas.row(4), replicas.row(7));
+    assert_ne!(replicas.row(0), replicas.row(4));
+    red.reduce_level(replicas.view_mut(), &topo, 2);
     for j in 1..8 {
-        assert_eq!(replicas[0], replicas[j]);
+        assert_eq!(replicas.row(0), replicas.row(j));
     }
 }

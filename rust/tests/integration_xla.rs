@@ -25,6 +25,7 @@ use hier_avg::data::{BatchBuf, ClassifyData, DataSource, MixtureSpec};
 use hier_avg::driver;
 use hier_avg::native::NativeMlp;
 use hier_avg::optimizer::LrSchedule;
+use hier_avg::params::{ParamArena, Rows, RowsMut};
 use hier_avg::runtime::{Manifest, XlaBackend};
 use hier_avg::runtime::xla_backend::XlaGroupAvg;
 use hier_avg::util::rng::Pcg32;
@@ -107,22 +108,22 @@ fn xla_and_native_gradients_agree() {
     data.fill_train(&mut rng, batch, &mut buf);
 
     // XLA grads (manifest layout).
-    let replicas = vec![blob.clone()];
-    let mut gx = vec![vec![0.0f32; entry.layout.total]];
+    let mut gx = vec![0.0f32; entry.layout.total];
     let mut outs = vec![StepOut::default()];
-    xla.grads(&replicas, &buf, &mut gx, &mut outs).unwrap();
+    xla.grads(Rows::single(&blob), &buf, RowsMut::single(&mut gx), &mut outs).unwrap();
 
     // Native grads (native layout).
-    let nreplicas = vec![native_init.clone()];
-    let mut gn = vec![vec![0.0f32; native.n_params()]];
+    let mut gn = vec![0.0f32; native.n_params()];
     let mut nouts = vec![StepOut::default()];
-    native.grads(&nreplicas, &buf, &mut gn, &mut nouts).unwrap();
+    native
+        .grads(Rows::single(&native_init), &buf, RowsMut::single(&mut gn), &mut nouts)
+        .unwrap();
 
     // Compare in the native layout.
-    let gx_native = driver::remap_by_name(&entry.layout, &gx[0], native.layout()).unwrap();
+    let gx_native = driver::remap_by_name(&entry.layout, &gx, native.layout()).unwrap();
     let mut max_abs = 0.0f32;
     let mut max_rel = 0.0f32;
-    for (a, b) in gx_native.iter().zip(&gn[0]) {
+    for (a, b) in gx_native.iter().zip(&gn) {
         let abs = (a - b).abs();
         max_abs = max_abs.max(abs);
         max_rel = max_rel.max(abs / (a.abs().max(b.abs()).max(1e-3)));
@@ -182,9 +183,9 @@ fn stacked_variant_matches_singleton() {
 
     let blob = m.load_init(&entry).unwrap();
     // Give each learner slightly different params.
-    let mut replicas = vec![blob.clone(); 4];
-    for (j, r) in replicas.iter_mut().enumerate() {
-        for v in r.iter_mut() {
+    let mut replicas = ParamArena::replicated(&blob, 4);
+    for j in 0..4 {
+        for v in replicas.row_mut(j).iter_mut() {
             *v += 0.01 * (j as f32);
         }
     }
@@ -205,20 +206,21 @@ fn stacked_variant_matches_singleton() {
         data.fill_train(&mut rng, batch, &mut buf);
     }
 
-    let mut g4 = vec![vec![0.0f32; entry.layout.total]; 4];
+    let mut g4 = ParamArena::zeroed(4, entry.layout.total);
     let mut o4 = vec![StepOut::default(); 4];
-    xla4.grads(&replicas, &buf, &mut g4, &mut o4).unwrap();
+    xla4.grads(replicas.view(), &buf, g4.view_mut(), &mut o4).unwrap();
 
-    let mut g1 = vec![vec![0.0f32; entry.layout.total]; 4];
+    let mut g1 = ParamArena::zeroed(4, entry.layout.total);
     let mut o1 = vec![StepOut::default(); 4];
     // Chunked through the P=1 artifact (XlaBackend loops 4 chunks).
-    xla1.grads(&replicas, &buf, &mut g1, &mut o1).unwrap();
+    xla1.grads(replicas.view(), &buf, g1.view_mut(), &mut o1).unwrap();
 
     for j in 0..4 {
         assert!((o4[j].loss - o1[j].loss).abs() < 1e-5, "learner {j} loss");
-        let max_abs = g4[j]
+        let max_abs = g4
+            .row(j)
             .iter()
-            .zip(&g1[j])
+            .zip(g1.row(j))
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_abs < 1e-4, "learner {j}: max grad diff {max_abs}");

@@ -6,7 +6,7 @@
 use hier_avg::algorithms::{HierAvgSchedule, ReduceEvent};
 use hier_avg::comm::{CommStats, CostModel, ReduceStrategy, Reducer};
 use hier_avg::optimizer::{LrSchedule, Sgd};
-use hier_avg::params::{ParamEntry, ParamLayout};
+use hier_avg::params::{ParamArena, ParamEntry, ParamLayout};
 use hier_avg::theory::{self, BoundParams};
 use hier_avg::topology::{LinkClass, Topology};
 use hier_avg::util::json::Json;
@@ -110,13 +110,13 @@ fn prop_group_average_preserves_global_sum() {
         let p = s * clusters;
         let n = 1 + rng.next_below(64) as usize;
         let topo = Topology::new(p, s).unwrap();
-        let mut replicas: Vec<Vec<f32>> = (0..p)
-            .map(|_| (0..n).map(|_| rng.next_normal()).collect())
-            .collect();
-        let before: f64 = replicas.iter().flatten().map(|&v| v as f64).sum();
+        let rows: Vec<Vec<f32>> =
+            (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+        let mut replicas = ParamArena::from_rows(&rows);
+        let before: f64 = replicas.as_slice().iter().map(|&v| v as f64).sum();
         let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Ring, n);
-        red.local_average(&mut replicas, &topo);
-        let after: f64 = replicas.iter().flatten().map(|&v| v as f64).sum();
+        red.local_average(replicas.view_mut(), &topo);
+        let after: f64 = replicas.as_slice().iter().map(|&v| v as f64).sum();
         assert!(
             (before - after).abs() < 1e-3 * (1.0 + before.abs()),
             "case {case}: {before} -> {after}"
@@ -131,16 +131,17 @@ fn prop_averaging_is_idempotent() {
         let p = 2 + rng.next_below(8) as usize;
         let n = 1 + rng.next_below(32) as usize;
         let topo = Topology::new(p, p).unwrap();
-        let mut replicas: Vec<Vec<f32>> =
+        let rows: Vec<Vec<f32>> =
             (0..p).map(|_| (0..n).map(|_| rng.next_normal()).collect()).collect();
+        let mut replicas = ParamArena::from_rows(&rows);
         let mut red = Reducer::new(CostModel::default(), ReduceStrategy::Tree, n);
-        red.global_average(&mut replicas, &topo);
+        red.global_average(replicas.view_mut(), &topo);
         let snapshot = replicas.clone();
-        red.global_average(&mut replicas, &topo);
+        red.global_average(replicas.view_mut(), &topo);
         // Idempotent up to one rounding step: the mean is computed as
         // sum * (1/n), and n·a * (1/n) can be one ulp off a for n not a
         // power of two.
-        for (r, s) in replicas.iter().flatten().zip(snapshot.iter().flatten()) {
+        for (r, s) in replicas.as_slice().iter().zip(snapshot.as_slice().iter()) {
             assert!(
                 (r - s).abs() <= 2.0 * f32::EPSILON * s.abs().max(1.0),
                 "{r} vs {s}"

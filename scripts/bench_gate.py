@@ -20,9 +20,15 @@ BENCH file that silently never matches its committed copy).
 
 Armed groups fail the build when any bench shared between baseline and
 fresh run regresses by more than REGRESSION_FRAC in median ns/iter
-(throughput drop > 20%).  Benches present only in the baseline are
-warnings (a rename silently un-gates a number); new benches pass — they
-become gated once the refreshed baseline is committed.
+(throughput drop > 20%).  Benches that declare a work-item axis
+(`units_per_sec`, from benchkit's `bench_units` — e.g. the event engine's
+events/sec curve or the train-step learner-steps/sec curve) are gated on
+that axis instead: a drop of more than REGRESSION_FRAC in median items/s
+fails, which stays meaningful even when `units_per_iter` is retuned
+between blesses (ns/iter is not comparable across such a retune; items/s
+is).  Benches present only in the baseline are warnings (a rename
+silently un-gates a number); new benches pass — they become gated once
+the refreshed baseline is committed.
 
 CI runs the benches with reduced sampling (BENCHKIT_SAMPLES/
 BENCHKIT_TARGET_MS), so the threshold is deliberately loose: it catches
@@ -52,7 +58,7 @@ def gate_group(fresh_path, baseline_dir, expect_armed=False):
     def unarmed(why):
         if expect_armed:
             print(f"::error::[{group}] {why} but --expect-armed was given")
-            return [(f"{group} ({why})", 0.0, 0.0, float("inf"))]
+            return [(f"{group} ({why})", 0.0, 0.0, float("inf"), "ns/iter")]
         print(f"[{group}] {why} — gate unarmed")
         return []
 
@@ -71,12 +77,23 @@ def gate_group(fresh_path, baseline_dir, expect_armed=False):
             print(f"::warning::[{group}] bench '{bench}' present in baseline "
                   f"but missing from the fresh run — renamed or removed?")
             continue
+        base_ups, fresh_ups = b.get("units_per_sec"), f.get("units_per_sec")
+        if base_ups is not None and fresh_ups is not None:
+            # Work-item throughput axis: slowdown = base/fresh items/s.
+            ratio = base_ups / fresh_ups if fresh_ups > 0 else float("inf")
+            status = "ok"
+            if ratio > 1.0 + REGRESSION_FRAC:
+                status = "REGRESSION"
+                failures.append((bench, base_ups, fresh_ups, ratio, "items/s"))
+            print(f"[{group}] {bench:<48} base {base_ups:>12.1f} it/s  "
+                  f"fresh {fresh_ups:>12.1f} it/s  x{ratio:.3f}  {status}")
+            continue
         base_ns, fresh_ns = b["ns_per_iter"], f["ns_per_iter"]
         ratio = fresh_ns / base_ns if base_ns > 0 else float("inf")
         status = "ok"
         if ratio > 1.0 + REGRESSION_FRAC:
             status = "REGRESSION"
-            failures.append((bench, base_ns, fresh_ns, ratio))
+            failures.append((bench, base_ns, fresh_ns, ratio, "ns/iter"))
         print(f"[{group}] {bench:<48} base {base_ns:>12.1f} ns  "
               f"fresh {fresh_ns:>12.1f} ns  x{ratio:.3f}  {status}")
     for bench in sorted(set(fresh_benches) - set(base_benches)):
@@ -98,9 +115,9 @@ def main(argv):
         all_failures += gate_group(fresh_path, baseline_dir, expect_armed)
     if all_failures:
         print()
-        for bench, base_ns, fresh_ns, ratio in all_failures:
+        for bench, base_v, fresh_v, ratio, unit in all_failures:
             print(f"::error::bench '{bench}' regressed x{ratio:.3f} "
-                  f"({base_ns:.1f} -> {fresh_ns:.1f} ns/iter, "
+                  f"({base_v:.1f} -> {fresh_v:.1f} {unit}, "
                   f"threshold x{1.0 + REGRESSION_FRAC:.2f})")
         return 1
     print("bench gate: no regressions above "

@@ -33,6 +33,15 @@ def bench(ns):
     return {"ns_per_iter": ns, "samples": 5}
 
 
+def units_bench(ns, units):
+    return {
+        "ns_per_iter": ns,
+        "samples": 5,
+        "units_per_iter": units,
+        "units_per_sec": units / ns * 1e9,
+    }
+
+
 class GateGroupTests(unittest.TestCase):
     def setUp(self):
         self._tmp = tempfile.TemporaryDirectory()
@@ -91,6 +100,40 @@ class GateGroupTests(unittest.TestCase):
         failures = self.gate(fresh, base)
         self.assertEqual(len(failures), 1)
         self.assertEqual(failures[0][3], float("inf"))
+
+    def test_units_axis_gates_on_items_per_sec(self):
+        frac = bench_gate.REGRESSION_FRAC
+        # items/s drop beyond the threshold fails even though ns/iter alone
+        # would look like a modest slowdown on a retuned units_per_iter.
+        base = report("t", {"a": units_bench(100.0, 64)})
+        slow_ns = 100.0 * (1.0 + frac) + 10.0
+        fresh = report("t", {"a": units_bench(slow_ns, 64)})
+        failures = self.gate(fresh, base)
+        self.assertEqual(len(failures), 1)
+        self.assertEqual(failures[0][0], "a")
+        self.assertEqual(failures[0][4], "items/s")
+
+    def test_units_axis_within_threshold_passes(self):
+        base = report("t", {"a": units_bench(100.0, 64)})
+        # 10% items/s drop: inside the 20% threshold.
+        fresh = report("t", {"a": units_bench(111.0, 64)})
+        self.assertEqual(self.gate(fresh, base), [])
+
+    def test_units_axis_survives_units_per_iter_retune(self):
+        # The curve was re-specified (P doubled per iteration) but items/s
+        # held: ns/iter doubled, which must NOT fail on the units axis.
+        base = report("t", {"a": units_bench(100.0, 64)})
+        fresh = report("t", {"a": units_bench(200.0, 128)})
+        self.assertEqual(self.gate(fresh, base), [])
+
+    def test_units_axis_falls_back_to_ns_when_baseline_lacks_units(self):
+        # Mixed schema (baseline pre-dates bench_units): ns/iter gates.
+        frac = bench_gate.REGRESSION_FRAC
+        base = report("t", {"a": bench(100.0)})
+        fresh = report("t", {"a": units_bench(100.0 * (1.0 + frac) + 1.0, 64)})
+        failures = self.gate(fresh, base)
+        self.assertEqual(len(failures), 1)
+        self.assertEqual(failures[0][4], "ns/iter")
 
     def test_bench_missing_from_fresh_run_warns_not_fails(self):
         base = report("t", {"renamed_away": bench(100.0)})
